@@ -1,0 +1,63 @@
+//! Quickstart: train a small residual MLP with Features Replay (K=4).
+//!
+//! ```sh
+//! make artifacts                       # once: AOT-compile the models
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole public API surface: load a manifest, build a trainer,
+//! drive the shared training loop, inspect memory + timing, and print the
+//! simulated K-device speedup over backward-locked BP.
+
+use anyhow::Result;
+
+use features_replay::coordinator::{
+    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::optim::StepDecay;
+use features_replay::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let dir = features_replay::default_artifacts_root().join("mlp_tiny_k4");
+    let manifest = Manifest::load(&dir)?;
+    println!("== Features Replay quickstart ==");
+    println!("model {} | K={} modules | {} params | pallas kernels: {}",
+             manifest.config, manifest.k, manifest.total_params(), manifest.use_pallas);
+
+    let engine = Engine::cpu()?;
+    let mut trainer = make_trainer(&engine, &dir, Algo::Fr, TrainConfig::default())?;
+    let mut data = DataSource::for_manifest(&manifest, 0)?;
+
+    let steps = std::env::var("FR_STEPS").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let opts = RunOptions {
+        steps,
+        eval_every: 10,
+        eval_batches: 4,
+        steps_per_epoch: 20,
+        verbose: true,
+        ..Default::default()
+    };
+    let res = coordinator::run_training(
+        trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+
+    println!("\nbest test error: {:.3}", res.curve.best_test_err());
+    let mem = &res.final_memory;
+    println!("memory held: activations {:.2} MB + replay history {:.2} MB + deltas {:.2} MB",
+             mem.activations as f64 / 1e6, mem.history as f64 / 1e6,
+             mem.deltas as f64 / 1e6);
+
+    // the headline: what K devices would buy at these measured module costs
+    let costs = pipeline_sim::MeasuredCosts::from_timings(
+        &res.timings[res.timings.len().saturating_sub(20)..],
+        coordinator::boundary_bytes(trainer.stack()),
+        coordinator::param_bytes(trainer.stack()));
+    let comm = pipeline_sim::CommModel::default();
+    println!("\nK-device pipeline model (measured costs):");
+    println!("  locked BP  : {:.2} ms/iter", pipeline_sim::bp_iteration_ms(&costs, &comm));
+    println!("  FR         : {:.2} ms/iter", pipeline_sim::decoupled_iteration_ms(&costs, &comm));
+    println!("  FR speedup : {:.2}x", pipeline_sim::fr_speedup(&costs, &comm));
+    Ok(())
+}

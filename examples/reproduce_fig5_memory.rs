@@ -1,0 +1,78 @@
+//! Fig 5: activation-memory consumption vs number of modules K.
+//!
+//! Paper: BP flat in K; FR almost indistinguishable from BP; DDG explodes
+//! (>2x BP at K=4). DNI omitted (diverges).
+//!
+//! The memory model is analytic from the manifests (DESIGN.md §Memory
+//! model) — it is also cross-checked against the *live* byte ledgers of the
+//! running trainers for one configuration.
+//!
+//! ```sh
+//! cargo run --release --example reproduce_fig5_memory
+//! ```
+
+use anyhow::Result;
+
+use features_replay::coordinator::{
+    make_trainer, memory::{predicted_bytes, Algo}, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::metrics::TablePrinter;
+use features_replay::runtime::{Engine, Manifest};
+use features_replay::util::json::{arr, num, obj, s, Json};
+
+fn main() -> Result<()> {
+    let root = features_replay::default_artifacts_root();
+    let mut report = Vec::new();
+
+    for model in ["resnet_s", "resnet_m", "resnet_l"] {
+        let ks: Vec<usize> = (1..=4)
+            .filter(|k| root.join(format!("{model}_k{k}")).exists())
+            .collect();
+        if ks.is_empty() {
+            println!("(skipping {model}: no artifacts)");
+            continue;
+        }
+        println!("\n== Fig 5 | {model}: predicted activation memory (MB) ==");
+        let table = TablePrinter::new(&["K", "BP", "FR", "DDG"], &[3, 9, 9, 9]);
+        for &k in &ks {
+            let m = Manifest::load(&root.join(format!("{model}_k{k}")))?;
+            let row: Vec<f64> = [Algo::Bp, Algo::Fr, Algo::Ddg].iter()
+                .map(|&a| predicted_bytes(&m, a) as f64 / 1e6)
+                .collect();
+            table.row(&[&k.to_string(), &format!("{:.2}", row[0]),
+                        &format!("{:.2}", row[1]), &format!("{:.2}", row[2])]);
+            report.push(obj(vec![
+                ("model", s(model)), ("k", num(k as f64)),
+                ("bp_mb", num(row[0])), ("fr_mb", num(row[1])),
+                ("ddg_mb", num(row[2])),
+            ]));
+        }
+    }
+
+    // live cross-check: run a few steps and compare the trainers' own ledgers
+    let dir = root.join("resnet_s_k4");
+    if dir.exists() {
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu()?;
+        println!("\nlive ledger cross-check (resnet_s K=4, 5 steps):");
+        for algo in [Algo::Bp, Algo::Fr, Algo::Ddg] {
+            let mut t = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
+            let mut data = DataSource::for_manifest(&manifest, 0)?;
+            for _ in 0..5 {
+                let b = data.train_batch();
+                t.train_step(&b, 0.01)?;
+            }
+            let live = t.memory();
+            let predicted = predicted_bytes(&manifest, algo);
+            println!("  {:4}  live {:8.2} MB   model {:8.2} MB",
+                     t.name(), live.total() as f64 / 1e6, predicted as f64 / 1e6);
+        }
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig5_memory.json", Json::Arr(report).to_string_pretty())?;
+    println!("\npaper shape to check: BP flat in K, FR ~ BP, DDG > 2x BP at K=4.");
+    println!("rows -> results/fig5_memory.json");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Fig 6 (supplementary B): FR at K=4 vs BP *with data parallelism* over
+//! 1-4 GPUs — time-axis convergence.
+//!
+//! Paper finding: even against its fastest data-parallel configuration,
+//! BP's time-to-loss is worse than FR's model-parallel pipeline on the same
+//! four devices.
+//!
+//! Testbed: BP's per-iteration cost under n-way DP and FR's pipelined cost
+//! both come from the measured-cost schedule model (subst. 1); the loss
+//! curves come from real training runs (DP-BP's per-step trajectory equals
+//! BP's — same gradients, bigger effective hardware).
+//!
+//! ```sh
+//! cargo run --release --example reproduce_fig6_dataparallel -- [steps]
+//! ```
+
+use anyhow::Result;
+
+use features_replay::coordinator::{
+    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::metrics::TablePrinter;
+use features_replay::optim::StepDecay;
+use features_replay::runtime::{Engine, Manifest};
+use features_replay::util::json::{num, obj, Json};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(30);
+    let root = features_replay::default_artifacts_root();
+    let dir = root.join("resnet_s_k4");
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let comm = pipeline_sim::CommModel::default();
+
+    // measure both methods' per-module costs on real runs
+    let mut per_algo = Vec::new();
+    for algo in [Algo::Bp, Algo::Fr] {
+        let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
+        let mut data = DataSource::for_manifest(&manifest, 0)?;
+        let opts = RunOptions {
+            steps,
+            eval_every: (steps / 5).max(1),
+            eval_batches: 2,
+            steps_per_epoch: (steps / 3).max(1),
+            ..Default::default()
+        };
+        let res = coordinator::run_training(
+            trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+        let costs = pipeline_sim::MeasuredCosts::from_timings(
+            &res.timings[res.timings.len() / 2..],
+            coordinator::boundary_bytes(trainer.stack()),
+            coordinator::param_bytes(trainer.stack()));
+        per_algo.push((algo, res, costs));
+    }
+
+    let (_, _, bp_costs) = &per_algo[0];
+    let (_, fr_res, fr_costs) = &per_algo[1];
+
+    println!("== Fig 6 | resnet_s: per-iteration time on 4 devices (ms) ==");
+    let table = TablePrinter::new(&["config", "ms/iter", "vs BP-DP1"], &[12, 10, 10]);
+    let dp1 = pipeline_sim::bp_data_parallel_ms(bp_costs, &comm, 1);
+    let mut rows = Vec::new();
+    for n in 1..=4 {
+        let t = pipeline_sim::bp_data_parallel_ms(bp_costs, &comm, n);
+        table.row(&[&format!("BP-DP x{n}"), &format!("{t:.2}"),
+                    &format!("{:.2}x", dp1 / t)]);
+        rows.push(obj(vec![(
+            "config", Json::Str(format!("bp_dp{n}"))), ("ms_per_iter", num(t))]));
+    }
+    let fr_t = pipeline_sim::decoupled_iteration_ms(fr_costs, &comm);
+    table.row(&[&"FR K=4".to_string(), &format!("{fr_t:.2}"),
+                &format!("{:.2}x", dp1 / fr_t)]);
+    rows.push(obj(vec![("config", Json::Str("fr_k4".into())),
+                       ("ms_per_iter", num(fr_t))]));
+
+    let best_dp = (1..=4)
+        .map(|n| pipeline_sim::bp_data_parallel_ms(bp_costs, &comm, n))
+        .fold(f64::INFINITY, f64::min);
+    println!("\nFR vs best BP-DP: {:.2}x faster per iteration", best_dp / fr_t);
+
+    // The paper's Fig 6 uses ResNet152 (~58M params): DP pays a ~230 MB
+    // gradient allreduce every step, which is what makes FR win. Rerun the
+    // schedule with paper-scale parameter volume over the same measured
+    // compute costs to show the crossover our scaled-down model hides.
+    let mut paper_costs = bp_costs.clone();
+    paper_costs.param_bytes = 58_000_000 * 4;
+    println!("\nwith ResNet152-scale gradients (232 MB allreduce/step):");
+    for n in 1..=4 {
+        println!("  BP-DP x{n}: {:8.2} ms/iter",
+                 pipeline_sim::bp_data_parallel_ms(&paper_costs, &comm, n));
+    }
+    let best_paper_dp = (1..=4)
+        .map(|n| pipeline_sim::bp_data_parallel_ms(&paper_costs, &comm, n))
+        .fold(f64::INFINITY, f64::min);
+    println!("  FR K=4  : {fr_t:8.2} ms/iter -> FR {:.2}x faster than best DP",
+             best_paper_dp / fr_t);
+    println!("(loss-per-step trajectories: DP-BP == BP; FR's own curve \
+              reached train loss {:.4})", fr_res.curve.final_train_loss());
+    println!("paper shape to check: FR K=4 beats every BP-DP width on time.");
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig6_dataparallel.json",
+                   Json::Arr(rows).to_string_pretty())?;
+    println!("rows -> results/fig6_dataparallel.json");
+    Ok(())
+}

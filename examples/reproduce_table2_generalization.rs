@@ -1,0 +1,85 @@
+//! Table 2: best test error rates of BP / DDG / FR at K=2 on CIFAR-10 and
+//! CIFAR-100 (DNI omitted — diverges).
+//!
+//! Paper finding: FR beats BP and DDG on every model/dataset pair (e.g.
+//! ResNet164 C-10: BP 6.40, DDG 6.45, FR 6.03).
+//!
+//! Testbed: resnet_s/m/l stand-ins on synthetic CIFAR-10/100; absolute
+//! error rates differ from the paper's (different data + budget), the
+//! *ordering* is the reproduced claim.
+//!
+//! ```sh
+//! cargo run --release --example reproduce_table2_generalization -- [steps]
+//! ```
+
+use anyhow::Result;
+
+use features_replay::coordinator::{
+    self, make_trainer, Algo, RunOptions, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::metrics::TablePrinter;
+use features_replay::optim::StepDecay;
+use features_replay::runtime::{Engine, Manifest};
+use features_replay::util::json::{num, obj, s, Json};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(60);
+    let root = features_replay::default_artifacts_root();
+    let engine = Engine::cpu()?;
+
+    println!("== Table 2 | best test error (%) at K=2, {steps} steps ==\n");
+    let table = TablePrinter::new(
+        &["model", "dataset", "BP", "DDG", "FR", "FR best?"],
+        &[10, 8, 7, 7, 7, 9]);
+
+    let mut rows = Vec::new();
+    for (model, dataset) in [
+        ("resnet_s", "C-10"), ("resnet_s_c100", "C-100"),
+        ("resnet_m", "C-10"), ("resnet_m_c100", "C-100"),
+        ("resnet_l", "C-10"), ("resnet_l_c100", "C-100"),
+    ] {
+        let dir = root.join(format!("{model}_k2"));
+        if !dir.exists() {
+            println!("(skipping {model}: artifacts not built)");
+            continue;
+        }
+        let manifest = Manifest::load(&dir)?;
+        let mut errs = Vec::new();
+        for algo in [Algo::Bp, Algo::Ddg, Algo::Fr] {
+            let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
+            let mut data = DataSource::for_manifest(&manifest, 0)?;
+            let opts = RunOptions {
+                steps,
+                eval_every: (steps / 8).max(1),
+                eval_batches: 4,
+                steps_per_epoch: (steps / 4).max(1),
+                ..Default::default()
+            };
+            let res = coordinator::run_training(
+                trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+            errs.push(res.curve.best_test_err() * 100.0);
+        }
+        let fr_best = errs[2] <= errs[0] && errs[2] <= errs[1];
+        table.row(&[
+            model.trim_end_matches("_c100"), dataset,
+            &format!("{:.2}", errs[0]), &format!("{:.2}", errs[1]),
+            &format!("{:.2}", errs[2]),
+            if fr_best { "yes" } else { "no" },
+        ]);
+        rows.push(obj(vec![
+            ("model", s(model)), ("dataset", s(dataset)),
+            ("bp", num(errs[0])), ("ddg", num(errs[1])), ("fr", num(errs[2])),
+        ]));
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/table2_generalization.json",
+                   Json::Arr(rows).to_string_pretty())?;
+    println!("\npaper shape to check: FR's best test error <= BP's and DDG's \
+              on most rows (paper: all rows, 300 epochs of real CIFAR).");
+    println!("rows -> results/table2_generalization.json");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Train the CIFAR-style ResNet with every method and compare — the
+//! intro-motivating workload (model-parallel CNN training across K devices).
+//!
+//! ```sh
+//! cargo run --release --example train_cifar -- [steps] [model]
+//! ```
+//! Defaults: 40 steps, resnet_s. Prints the Fig-4-style summary for one
+//! model and writes curves to results/train_cifar_<model>.json.
+
+use anyhow::Result;
+
+use features_replay::coordinator::{
+    self, make_trainer, Algo, RunOptions, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::metrics::{write_report, TablePrinter};
+use features_replay::optim::StepDecay;
+use features_replay::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let model = args.get(1).cloned().unwrap_or_else(|| "resnet_s".to_string());
+    let dir = features_replay::default_artifacts_root().join(format!("{model}_k4"));
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+
+    println!("== {model} (K=4) on synthetic CIFAR-10: {steps} steps/method ==");
+    let table = TablePrinter::new(
+        &["method", "final_loss", "best_err", "mem_MB", "diverged"],
+        &[8, 11, 9, 9, 9]);
+
+    let mut curves = Vec::new();
+    for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
+        let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
+        let mut data = DataSource::for_manifest(&manifest, 0)?;
+        let opts = RunOptions {
+            steps,
+            eval_every: (steps / 5).max(1),
+            eval_batches: 3,
+            steps_per_epoch: (steps / 4).max(1),
+            ..Default::default()
+        };
+        let res = coordinator::run_training(
+            trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+        table.row(&[
+            trainer.name(),
+            &format!("{:.4}", res.curve.final_train_loss()),
+            &format!("{:.3}", res.curve.best_test_err()),
+            &format!("{:.2}", res.final_memory.total() as f64 / 1e6),
+            if res.diverged { "YES" } else { "no" },
+        ]);
+        curves.push(res.curve);
+    }
+
+    let out = std::path::PathBuf::from(format!("results/train_cifar_{model}.json"));
+    write_report(&out, &format!("{model} k4 comparison"), &curves, vec![])?;
+    println!("\ncurves -> {}", out.display());
+    Ok(())
+}

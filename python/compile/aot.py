@@ -1,0 +1,216 @@
+"""AOT pipeline: lower every module function to HLO text + write the manifest.
+
+Interchange is HLO *text* — jax>=0.5 serializes HloModuleProto with 64-bit
+instruction ids that the runtime's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config `<name>_k<K>` this emits into <out>/<name>_k<K>/:
+    manifest.json
+    module<k>_fwd.hlo.txt / module<k>_bwd.hlo.txt
+    module<K-1>_loss.hlo.txt
+    synth<k>_pred.hlo.txt / synth<k>_train.hlo.txt   (DNI baselines, k<K-1)
+    params/module<k>_p<i>.bin, params/synth<k>_p<i>.bin  (f32 LE, C order)
+
+Python runs only here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelDef
+from .models import registry
+from .partition import partition_report
+from .synth import build_synth
+
+# The default suite covers every experiment harness on this testbed.
+DEFAULT_SUITE = [
+    ("mlp_tiny", 4),
+    ("resnet_s", 1), ("resnet_s", 2), ("resnet_s", 3), ("resnet_s", 4),
+    ("resnet_m", 2), ("resnet_m", 4),
+    ("resnet_l", 2), ("resnet_l", 4),
+    ("resnet_s_c100", 2), ("resnet_m_c100", 2), ("resnet_l_c100", 2),
+    ("transformer_tiny", 4),
+]
+
+FULL_EXTRA = [
+    ("mlp_wide", 4),
+    ("resnet_m", 1), ("resnet_m", 3), ("resnet_l", 1), ("resnet_l", 3),
+    ("transformer_small", 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, specs) -> str:
+    # keep_unused=True: the runtime feeds EVERY manifest param positionally,
+    # so args jax would prune (e.g. a bias whose value no gradient needs)
+    # must stay in the HLO signature.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _dump_params(dirpath: str, stem: str, params: Sequence[jax.Array]) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    for i, p in enumerate(params):
+        np.asarray(p, dtype=np.float32).tofile(os.path.join(dirpath, f"{stem}_p{i}.bin"))
+
+
+def build_config(name: str, k: int, out_root: str, *, seed: int = 0,
+                 with_synth: bool = True, verbose: bool = True) -> str:
+    """Lower one (config, K) pair; returns the artifact directory."""
+    model = registry.get(name, k, seed=seed)
+    cfg_dir = os.path.join(out_root, f"{name}_k{k}")
+    os.makedirs(cfg_dir, exist_ok=True)
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[aot {name}_k{k}] {msg}", flush=True)
+
+    modules_meta: List[dict] = []
+    for mk in range(k):
+        m = model.modules[mk]
+        files = {}
+        log(f"lower module {mk} fwd ({len(m.param_shapes)} params, "
+            f"in={m.in_shape}, out={m.out_shape})")
+        files["fwd"] = f"module{mk}_fwd.hlo.txt"
+        _write(os.path.join(cfg_dir, files["fwd"]),
+               _lower(model.fwd_fn(mk), model.fwd_specs(mk)))
+        log(f"lower module {mk} bwd")
+        files["bwd"] = f"module{mk}_bwd.hlo.txt"
+        _write(os.path.join(cfg_dir, files["bwd"]),
+               _lower(model.bwd_fn(mk), model.bwd_specs(mk)))
+        if mk == k - 1:
+            log("lower loss head")
+            files["loss"] = f"module{mk}_loss.hlo.txt"
+            _write(os.path.join(cfg_dir, files["loss"]),
+                   _lower(model.loss_fn(), model.loss_specs()))
+        _dump_params(os.path.join(cfg_dir, "params"), f"module{mk}",
+                     model.init_module_params(mk))
+        modules_meta.append({
+            "index": mk,
+            "layers": [l.name for l in m.layers],
+            "layer_act_bytes": [l.act_bytes for l in m.layers],
+            "param_shapes": [list(s) for s in m.param_shapes],
+            "in_shape": list(m.in_shape),
+            "in_dtype": m.in_dtype,
+            "out_shape": list(m.out_shape),
+            "flops": m.flops,
+            "act_bytes": m.act_bytes,
+            "files": files,
+        })
+
+    synth_meta: List[dict] = []
+    if with_synth:
+        for mk in range(k - 1):
+            bshape = model.modules[mk].out_shape
+            init, apply = build_synth(bshape)
+            key = jax.random.PRNGKey(seed + 1000 + mk)
+            sparams = init(key)
+            sspecs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in sparams]
+            hspec = jax.ShapeDtypeStruct(bshape, jnp.float32)
+
+            def pred_fn(*args):
+                *sp, h = args
+                return (apply(sp, h),)
+
+            def train_fn(*args):
+                *sp, h, dtrue = args
+
+                def f(p):
+                    dhat = apply(p, h)
+                    return jnp.mean(jnp.square(dhat - dtrue))
+
+                mse, vjp = jax.vjp(f, tuple(sp))
+                (gp,) = vjp(jnp.float32(1.0))
+                return (mse, *gp)
+
+            log(f"lower synth {mk} (boundary shape {bshape})")
+            pred_file = f"synth{mk}_pred.hlo.txt"
+            train_file = f"synth{mk}_train.hlo.txt"
+            _write(os.path.join(cfg_dir, pred_file), _lower(pred_fn, sspecs + [hspec]))
+            _write(os.path.join(cfg_dir, train_file),
+                   _lower(train_fn, sspecs + [hspec, hspec]))
+            _dump_params(os.path.join(cfg_dir, "params"), f"synth{mk}", sparams)
+            synth_meta.append({
+                "boundary": mk,
+                "param_shapes": [list(p.shape) for p in sparams],
+                "files": {"pred": pred_file, "train": train_file},
+            })
+
+    manifest = {
+        "config": name,
+        "k": k,
+        "seed": seed,
+        "model_type": name.split("_")[0],
+        "use_pallas": model.use_pallas,
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "label_shape": list(model.label_shape),
+        "num_classes": model.num_classes,
+        "logits_shape": list(model.logits_shape),
+        "num_layers": len(model.layers),
+        "total_flops": sum(l.flops for l in model.layers),
+        "partition_report": partition_report(
+            [l.flops for l in model.layers],
+            [[model.layers.index(l) for l in m.layers] for m in model.modules]),
+        "modules": modules_meta,
+        "synth": synth_meta,
+    }
+    with open(os.path.join(cfg_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log("manifest written")
+    return cfg_dir
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--suite", choices=["default", "full"], default="default")
+    ap.add_argument("--configs", default="",
+                    help="comma list of name:k pairs overriding the suite")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-synth", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if the manifest already exists")
+    args = ap.parse_args()
+
+    if args.configs:
+        suite = []
+        for item in args.configs.split(","):
+            nm, _, kk = item.partition(":")
+            suite.append((nm.strip(), int(kk or 4)))
+    else:
+        suite = list(DEFAULT_SUITE)
+        if args.suite == "full":
+            suite += FULL_EXTRA
+
+    for nm, kk in suite:
+        cfg_dir = os.path.join(args.out, f"{nm}_k{kk}")
+        if not args.force and os.path.exists(os.path.join(cfg_dir, "manifest.json")):
+            print(f"[aot] skip {nm}_k{kk} (exists)")
+            continue
+        build_config(nm, kk, args.out, seed=args.seed, with_synth=not args.no_synth)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles in `ref`.
+
+Public names are the `custom_vjp`-wrapped versions (differentiable, backward
+also Pallas-tiled); the raw `pallas_call` wrappers stay accessible with a
+`_raw` suffix for kernel-level tests.
+"""
+
+from .autodiff import fused_linear, layernorm, matmul, softmax_xent
+from .fused_linear import fused_linear as fused_linear_raw
+from .layernorm import layernorm as layernorm_raw
+from .matmul import matmul as matmul_raw
+from .softmax_xent import softmax_xent as softmax_xent_raw
+
+__all__ = [
+    "matmul", "fused_linear", "layernorm", "softmax_xent",
+    "matmul_raw", "fused_linear_raw", "layernorm_raw", "softmax_xent_raw",
+]

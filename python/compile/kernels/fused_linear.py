@@ -1,0 +1,61 @@
+"""Fused dense layer: tiled matmul with bias + optional ReLU epilogue.
+
+The epilogue runs on the last K-slab of each output tile while it is still
+VMEM-resident — the TPU analogue of a CUDA register-level epilogue fusion.
+One kernel instead of matmul → add → max means the (M, N) pre-activation
+never round-trips to HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import DEFAULT_BLOCK, _ceil_to
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, relu: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        o_ref[...] = jnp.maximum(out, 0.0) if relu else out
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "bk"))
+def fused_linear(x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = True,
+                 bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+                 bk: int = DEFAULT_BLOCK) -> jax.Array:
+    """relu?(x @ w + b) for x:(M,K), w:(K,N), b:(N,). Pads like `matmul`."""
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0] or b.shape != (w.shape[1],):
+        raise ValueError(f"fused_linear shape mismatch: {x.shape} @ {w.shape} + {b.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 8)), min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, nk=nk, relu=relu),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]

@@ -1,0 +1,58 @@
+"""Fused LayerNorm Pallas kernel (transformer block hot-spot).
+
+One VMEM pass per row-tile computes mean, variance, normalization and the
+affine transform — on GPU this is the classic fused-layernorm kernel; on TPU
+the row tile lives in VMEM and the reductions run on the VPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_to
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = 128) -> jax.Array:
+    """LayerNorm over the last axis. x: (..., D); gamma/beta: (D,).
+
+    Leading axes are flattened to rows; rows are processed in VMEM tiles of
+    `block_rows`. D is kept whole per tile (a row's statistics need the full
+    feature vector), which bounds D at ~VMEM/(4*block_rows) — plenty for the
+    model sizes here.
+    """
+    if gamma.shape != (x.shape[-1],) or beta.shape != (x.shape[-1],):
+        raise ValueError(f"layernorm affine shape mismatch: {x.shape} vs {gamma.shape}")
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, _ceil_to(rows, 8))
+    rp = _ceil_to(rows, br)
+    xp = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(xp, gamma.reshape(1, d), beta.reshape(1, d))
+    return out[:rows].reshape(orig_shape)

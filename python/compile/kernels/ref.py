@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness reference).
+
+Each function here is the mathematical specification of the kernel with the
+same name in this package. pytest/hypothesis compare the Pallas
+implementations against these under a tight `assert_allclose`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain f32 matmul: (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def fused_linear(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool) -> jax.Array:
+    """x @ w + b, optionally followed by ReLU (the dense-layer epilogue)."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis with affine parameters."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy.
+
+    logits: (B, C) f32, labels: (B,) i32. Returns a scalar — the mean over
+    the batch of -log softmax(logits)[label].
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(m, -1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - picked)

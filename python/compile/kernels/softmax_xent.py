@@ -1,0 +1,55 @@
+"""Fused softmax cross-entropy Pallas kernel (classifier-head hot-spot).
+
+Single pass per row-tile: max, log-sum-exp and the picked label logit are all
+computed while the logits tile is VMEM-resident, so the (B, C) softmax matrix
+is never materialized in HBM. The kernel emits per-row losses; the mean is a
+trivial reduction on top.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_to
+
+
+def _xent_kernel(logits_ref, labels_ref, o_ref):
+    logits = logits_ref[...]
+    labels = labels_ref[...]  # (br, 1) i32
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)) + m
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    picked = jnp.sum(jnp.where(cols == labels, logits, 0.0), axis=-1, keepdims=True)
+    o_ref[...] = lse - picked
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, block_rows: int = 128) -> jax.Array:
+    """Mean cross-entropy. logits: (B, C) f32, labels: (B,) i32 -> scalar.
+
+    Padded rows get label -1, which matches no column, making their "picked"
+    logit 0 and their loss = lse; padded losses are sliced away before the
+    mean, so padding never affects the result.
+    """
+    if logits.ndim != 2 or labels.shape != (logits.shape[0],):
+        raise ValueError(f"softmax_xent shape mismatch: {logits.shape} vs {labels.shape}")
+    b, c = logits.shape
+    br = min(block_rows, _ceil_to(b, 8))
+    bp = _ceil_to(b, br)
+    lp = jnp.pad(logits.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    yp = jnp.pad(labels.astype(jnp.int32), (0, bp - b), constant_values=-1).reshape(bp, 1)
+
+    per_row = pl.pallas_call(
+        _xent_kernel,
+        grid=(bp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=True,
+    )(lp, yp)
+    return jnp.mean(per_row[:b, 0])

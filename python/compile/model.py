@@ -1,0 +1,194 @@
+"""L2: module-partitioned model definitions and their AOT-lowerable functions.
+
+`ModelDef` ties a layer list (from `models/`) to a K-way balanced partition
+and exposes, per module, the exact pure functions the Rust coordinator needs:
+
+  fwd_fn(p_0..p_n, h_in)            -> (h_out,)
+  bwd_fn(p_0..p_n, h_in, delta)     -> (grad_p_0.., [delta_in])
+  loss_fn(p_0..p_n, h_in, labels)   -> (loss, grad_p_0.., [delta_in], logits)
+
+All signatures are flat positional arrays (HLO parameter order is positional)
+and `delta_in` is emitted only for modules k > 0 — module 0's input is data
+(possibly i32 tokens), which has no cotangent to propagate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+from .models.common import Layer
+from .partition import balanced_partition
+
+
+@dataclasses.dataclass
+class ModuleDef:
+    """One decoupling unit: a contiguous slice of layers assigned to device k."""
+
+    index: int
+    layers: List[Layer]
+    layer_param_counts: List[int]  # arrays per layer, for flat-list slicing
+    param_shapes: List[Tuple[int, ...]]
+    in_shape: Tuple[int, ...]
+    in_dtype: str  # "f32" | "i32"
+    out_shape: Tuple[int, ...]
+    flops: int
+    act_bytes: int
+
+
+class ModelDef:
+    """A model + its K-way partition + loss head, ready for AOT lowering."""
+
+    def __init__(self, *, name: str, layers: List[Layer],
+                 input_shape: Tuple[int, ...], input_dtype: str,
+                 num_classes: int, k: int, use_pallas: bool, seed: int = 0):
+        self.name = name
+        self.layers = layers
+        self.input_shape = tuple(int(s) for s in input_shape)
+        self.input_dtype = input_dtype
+        self.num_classes = num_classes
+        self.k = k
+        self.use_pallas = use_pallas
+        self.seed = seed
+
+        groups = balanced_partition([l.flops for l in layers], k)
+        self.modules: List[ModuleDef] = []
+        key = jax.random.PRNGKey(seed)
+        in_shape = self.input_shape
+        in_dtype = input_dtype
+        for gi, idxs in enumerate(groups):
+            glayers = [layers[i] for i in idxs]
+            counts, shapes = [], []
+            for li in idxs:
+                ps = layers[li].init(jax.random.fold_in(key, li))
+                counts.append(len(ps))
+                shapes.extend(tuple(int(d) for d in p.shape) for p in ps)
+            self.modules.append(ModuleDef(
+                index=gi, layers=glayers, layer_param_counts=counts,
+                param_shapes=shapes, in_shape=in_shape, in_dtype=in_dtype,
+                out_shape=glayers[-1].out_shape,
+                flops=sum(l.flops for l in glayers),
+                act_bytes=sum(l.act_bytes for l in glayers),
+            ))
+            in_shape = tuple(int(s) for s in glayers[-1].out_shape)
+            in_dtype = "f32"
+        # logits shape is the last layer's out_shape: (N, num_classes)
+        self.logits_shape = self.modules[-1].out_shape
+        self.label_shape = (self.logits_shape[0],)
+
+    # -- parameter initialization (same fold_in scheme as shape scan above) --
+
+    def init_module_params(self, k: int, seed: int | None = None) -> List[jax.Array]:
+        key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        flat: List[jax.Array] = []
+        base = sum(len(g.layers) for g in self.modules[:k])
+        offset = 0
+        for g in self.modules[:k]:
+            offset += len(g.layers)
+        li0 = offset
+        for j, layer in enumerate(self.modules[k].layers):
+            # global layer index for a stable RNG stream
+            flat.extend(layer.init(jax.random.fold_in(key, li0 + j)))
+        return flat
+
+    # -- pure functions per module -----------------------------------------
+
+    def _apply_module(self, k: int, params: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+        m = self.modules[k]
+        i = 0
+        for layer, n in zip(m.layers, m.layer_param_counts):
+            h = layer.apply(list(params[i:i + n]), h)
+            i += n
+        return h
+
+    def _xent(self, logits: jax.Array, labels: jax.Array) -> jax.Array:
+        if self.use_pallas:
+            return kernels.softmax_xent(logits, labels)
+        return kref.softmax_xent(logits, labels)
+
+    def fwd_fn(self, k: int) -> Callable:
+        def fwd(*args):
+            *params, h = args
+            return (self._apply_module(k, params, h),)
+        return fwd
+
+    def bwd_fn(self, k: int) -> Callable:
+        """VJP of module k. Module 0 emits no delta_in (data input)."""
+        if k == 0:
+            def bwd0(*args):
+                *params, h, delta = args
+                _, vjp = jax.vjp(lambda p: self._apply_module(k, p, h), tuple(params))
+                (gp,) = vjp(delta)
+                return tuple(gp)
+            return bwd0
+
+        def bwd(*args):
+            *params, h, delta = args
+            _, vjp = jax.vjp(lambda p, hh: self._apply_module(k, p, hh), tuple(params), h)
+            gp, gh = vjp(delta)
+            return (*gp, gh)
+        return bwd
+
+    def loss_fn(self) -> Callable:
+        """Fused last-module fwd + loss + full backward (one graph, no
+        recompute between loss value and gradients — see DESIGN.md §Perf L2)."""
+        k = self.k - 1
+
+        if k == 0:
+            def loss0(*args):
+                *params, h, labels = args
+
+                def f(p):
+                    logits = self._apply_module(k, p, h)
+                    return self._xent(logits, labels), logits
+
+                loss, vjp, logits = jax.vjp(f, tuple(params), has_aux=True)
+                (gp,) = vjp(jnp.float32(1.0))
+                return (loss, *gp, logits)
+            return loss0
+
+        def loss(*args):
+            *params, h, labels = args
+
+            def f(p, hh):
+                logits = self._apply_module(k, p, hh)
+                return self._xent(logits, labels), logits
+
+            loss_v, vjp, logits = jax.vjp(f, tuple(params), h, has_aux=True)
+            gp, gh = vjp(jnp.float32(1.0))
+            return (loss_v, *gp, gh, logits)
+        return loss
+
+    # -- shape specs for lowering -------------------------------------------
+
+    def _dtype(self, name: str):
+        return jnp.int32 if name == "i32" else jnp.float32
+
+    def fwd_specs(self, k: int):
+        m = self.modules[k]
+        return ([jax.ShapeDtypeStruct(s, jnp.float32) for s in m.param_shapes]
+                + [jax.ShapeDtypeStruct(m.in_shape, self._dtype(m.in_dtype))])
+
+    def bwd_specs(self, k: int):
+        m = self.modules[k]
+        return self.fwd_specs(k) + [jax.ShapeDtypeStruct(m.out_shape, jnp.float32)]
+
+    def loss_specs(self):
+        m = self.modules[self.k - 1]
+        return self.fwd_specs(self.k - 1) + [jax.ShapeDtypeStruct(self.label_shape, jnp.int32)]
+
+    # -- whole-model reference (for tests / sigma oracle) --------------------
+
+    def full_forward(self, all_params: Sequence[Sequence[jax.Array]], x: jax.Array) -> jax.Array:
+        h = x
+        for k in range(self.k):
+            h = self._apply_module(k, all_params[k], h)
+        return h
+
+    def full_loss(self, all_params, x, labels):
+        return self._xent(self.full_forward(all_params, x), labels)

@@ -1,0 +1,1 @@
+"""Model zoo: layer-list builders + the named-config registry."""

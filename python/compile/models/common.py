@@ -1,0 +1,149 @@
+"""Shared model-building blocks for the L2 JAX models.
+
+A model is a list of `Layer`s — pure functions with explicit flat parameter
+lists — so the AOT pipeline can regroup any contiguous range of layers into a
+"module" (the paper's unit of decoupling) and lower its fwd/bwd separately.
+
+Every layer records a FLOP estimate (used by the balanced partitioner) and an
+activation-byte estimate (used by the Fig 5 / Table 1 memory model in the
+Rust coordinator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels import ref as kref
+
+
+@dataclasses.dataclass
+class Layer:
+    """One partitionable unit: params live in a flat list of arrays."""
+
+    name: str
+    init: Callable[[jax.Array], List[jax.Array]]  # PRNGKey -> params
+    apply: Callable[[Sequence[jax.Array], jax.Array], jax.Array]
+    flops: int  # fwd FLOPs per batch (partition balancing weight)
+    act_bytes: int  # activation bytes stashed by a fwd pass of this layer
+    out_shape: Tuple[int, ...]  # per-batch output shape, incl. batch dim
+
+
+def _size(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def he_normal(key: jax.Array, shape: Sequence[int], fan_in: int) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def dense_layer(name: str, batch: int, d_in: int, d_out: int, *, relu: bool,
+                use_pallas: bool) -> Layer:
+    """Fully-connected layer; Pallas fused_linear or the jnp oracle."""
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        return [he_normal(key, (d_in, d_out), d_in), jnp.zeros((d_out,), jnp.float32)]
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        w, b = params
+        if use_pallas:
+            return kernels.fused_linear(x, w, b, relu=relu)
+        return kref.fused_linear(x, w, b, relu)
+
+    flops = 2 * batch * d_in * d_out
+    act = 4 * batch * d_out * 2  # pre-activation + output
+    return Layer(name, init, apply, flops, act, (batch, d_out))
+
+
+def residual_dense_pair(name: str, batch: int, d: int, *, use_pallas: bool) -> Layer:
+    """Two dense layers with a skip connection (MLP 'residual block')."""
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        k1, k2 = jax.random.split(key)
+        return [
+            he_normal(k1, (d, d), d), jnp.zeros((d,), jnp.float32),
+            he_normal(k2, (d, d), d), jnp.zeros((d,), jnp.float32),
+        ]
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        w1, b1, w2, b2 = params
+        if use_pallas:
+            h = kernels.fused_linear(x, w1, b1, relu=True)
+            h = kernels.fused_linear(h, w2, b2, relu=False)
+        else:
+            h = kref.fused_linear(x, w1, b1, True)
+            h = kref.fused_linear(h, w2, b2, False)
+        return jnp.maximum(h + x, 0.0)
+
+    flops = 4 * batch * d * d
+    act = 4 * batch * d * 4
+    return Layer(name, init, apply, flops, act, (batch, d))
+
+
+def group_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               groups: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over NHWC (BatchNorm substitute — see DESIGN.md §subst 4)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return xn * gamma + beta
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """NHWC x HWIO convolution (lowers to XLA conv → im2col+MXU on TPU)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_flops(batch: int, h: int, w: int, kh: int, kw: int, cin: int, cout: int,
+               stride: int) -> int:
+    return 2 * batch * (h // stride) * (w // stride) * kh * kw * cin * cout
+
+
+def flatten_layer(name: str, batch: int, in_shape: Tuple[int, ...]) -> Layer:
+    """Reshape NHWC -> (B, features); no params."""
+    feat = _size(in_shape[1:])
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        return []
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        return x.reshape(x.shape[0], -1)
+
+    return Layer(name, init, apply, 0, 4 * batch * feat, (batch, feat))
+
+
+def global_avg_pool_layer(name: str, batch: int, in_shape: Tuple[int, ...]) -> Layer:
+    """NHWC -> (B, C) global average pooling; no params."""
+    c = in_shape[-1]
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        return []
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        return jnp.mean(x, axis=(1, 2))
+
+    return Layer(name, init, apply, 0, 4 * batch * c, (batch, c))
+
+
+def count_params(layers: Sequence[Layer], key: jax.Array) -> int:
+    n = 0
+    for i, layer in enumerate(layers):
+        for p in layer.init(jax.random.fold_in(key, i)):
+            n += _size(p.shape)
+    return n

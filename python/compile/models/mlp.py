@@ -1,0 +1,32 @@
+"""Residual MLP classifier over flattened images.
+
+The smallest model family: used by the quickstart example, the Rust
+integration tests, and as the fastest workload for coordinator benchmarks.
+Exercises the Pallas fused_linear kernel end-to-end.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from .common import Layer, dense_layer, residual_dense_pair
+
+
+def build_mlp(*, batch: int, input_dim: int, hidden: int, depth: int,
+              num_classes: int, use_pallas: bool) -> Tuple[List[Layer], Tuple[int, ...]]:
+    """`depth` residual pairs between an input projection and the classifier.
+
+    Returns (layers, input_shape). Input is a pre-flattened f32 (B, input_dim)
+    image batch; the classifier head stays un-activated (logits).
+    """
+    layers: List[Layer] = [
+        dense_layer("stem", batch, input_dim, hidden, relu=True, use_pallas=use_pallas)
+    ]
+    for i in range(depth):
+        layers.append(
+            residual_dense_pair(f"res{i}", batch, hidden, use_pallas=use_pallas)
+        )
+    layers.append(
+        dense_layer("head", batch, hidden, num_classes, relu=False, use_pallas=use_pallas)
+    )
+    return layers, (batch, input_dim)

@@ -1,0 +1,110 @@
+"""Model-config registry: every workload the experiments use, by name.
+
+`get(name, k)` -> ModelDef. Scaled-down configs (suffix _s/_m/_l, _tiny) are
+the defaults on this 1-core CPU testbed; the paper's full-depth architectures
+(resnet164/101/152) are registered too and build on capable hardware — the
+generator code is identical, only depth/width differ (DESIGN.md subst. 3).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from ..model import ModelDef
+from .mlp import build_mlp
+from .resnet import build_resnet
+from .transformer import build_transformer
+
+_REGISTRY: Dict[str, Callable[[], Tuple[dict, str, int]]] = {}
+
+
+def _register(name: str, builder, *, input_dtype: str, num_classes: int,
+              use_pallas: bool):
+    _REGISTRY[name] = (builder, input_dtype, num_classes, use_pallas)
+
+
+# --- MLP family (quickstart / integration tests / coordinator benches) -----
+
+_register("mlp_tiny",
+          lambda: build_mlp(batch=16, input_dim=3072, hidden=128, depth=6,
+                            num_classes=10, use_pallas=True),
+          input_dtype="f32", num_classes=10, use_pallas=True)
+
+_register("mlp_wide",
+          lambda: build_mlp(batch=64, input_dim=3072, hidden=512, depth=12,
+                            num_classes=10, use_pallas=False),
+          input_dtype="f32", num_classes=10, use_pallas=False)
+
+# --- ResNet family (Figs 3-6, Tables 1-2 workloads) -------------------------
+# Scaled stand-ins: _s plays the ResNet164 role (basic blocks), _m/_l play
+# ResNet101/152 (bottleneck). 10-class variants; *_c100 are the CIFAR-100
+# counterparts used by Table 2.
+
+def _resnet_s(nc=10):
+    return build_resnet(batch=32, blocks_per_stage=[2, 2, 2], block="basic",
+                        base_channels=8, num_classes=nc)
+
+
+def _resnet_m(nc=10):
+    return build_resnet(batch=32, blocks_per_stage=[2, 2, 2], block="bottleneck",
+                        base_channels=8, num_classes=nc)
+
+
+def _resnet_l(nc=10):
+    return build_resnet(batch=32, blocks_per_stage=[3, 3, 3], block="bottleneck",
+                        base_channels=8, num_classes=nc)
+
+
+for _nm, _b, _nc in [
+    ("resnet_s", _resnet_s, 10), ("resnet_m", _resnet_m, 10), ("resnet_l", _resnet_l, 10),
+    ("resnet_s_c100", lambda: _resnet_s(100), 100),
+    ("resnet_m_c100", lambda: _resnet_m(100), 100),
+    ("resnet_l_c100", lambda: _resnet_l(100), 100),
+]:
+    _register(_nm, _b, input_dtype="f32", num_classes=_nc, use_pallas=False)
+
+# Full-depth paper architectures (build-capable, not in the default suite).
+_register("resnet164",
+          lambda: build_resnet(batch=128, blocks_per_stage=[18, 18, 18],
+                               block="bottleneck", base_channels=16, num_classes=10),
+          input_dtype="f32", num_classes=10, use_pallas=False)
+_register("resnet101",
+          lambda: build_resnet(batch=128, blocks_per_stage=[11, 11, 11],
+                               block="bottleneck", base_channels=16, num_classes=10),
+          input_dtype="f32", num_classes=10, use_pallas=False)
+_register("resnet152",
+          lambda: build_resnet(batch=128, blocks_per_stage=[17, 17, 16],
+                               block="bottleneck", base_channels=16, num_classes=10),
+          input_dtype="f32", num_classes=10, use_pallas=False)
+
+# --- Transformer family (e2e training driver) -------------------------------
+
+_register("transformer_tiny",
+          lambda: build_transformer(batch=8, seq=64, vocab=96, d_model=128,
+                                    heads=4, depth=4, use_pallas=True),
+          input_dtype="i32", num_classes=96, use_pallas=True)
+
+_register("transformer_small",
+          lambda: build_transformer(batch=8, seq=128, vocab=96, d_model=256,
+                                    heads=8, depth=8, use_pallas=False),
+          input_dtype="i32", num_classes=96, use_pallas=False)
+
+# ~100M-parameter reference config (registry-complete; needs real accelerators)
+_register("transformer_100m",
+          lambda: build_transformer(batch=8, seq=512, vocab=50304, d_model=768,
+                                    heads=12, depth=12, use_pallas=False),
+          input_dtype="i32", num_classes=50304, use_pallas=False)
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+def get(name: str, k: int, seed: int = 0) -> ModelDef:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown model config {name!r}; known: {names()}")
+    builder, input_dtype, num_classes, use_pallas = _REGISTRY[name]
+    layers, input_shape = builder()
+    return ModelDef(name=name, layers=layers, input_shape=input_shape,
+                    input_dtype=input_dtype, num_classes=num_classes,
+                    k=k, use_pallas=use_pallas, seed=seed)

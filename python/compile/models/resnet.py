@@ -1,0 +1,144 @@
+"""ResNet family for 32x32 images (CIFAR-style), basic and bottleneck blocks.
+
+Generates the exact architectures of He et al. for any depth — the paper's
+ResNet164 (basic... actually 164 uses bottleneck in the original; the paper
+labels it "basic building block", we support both) / ResNet101 / ResNet152
+roles — plus the scaled-down `resnet_s/m/l` configs used on this testbed
+(see DESIGN.md substitution 3). GroupNorm replaces BatchNorm (substitution 4).
+
+Layout: NHWC, f32. Stem conv3x3 -> 3 stages (strides 1, 2, 2, channel
+doubling) -> global average pool -> linear head.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Layer, conv2d, conv_flops, dense_layer, global_avg_pool_layer, group_norm,
+    he_normal,
+)
+
+_GN_GROUPS = 8
+
+
+def _conv_gn_params(key: jax.Array, kh: int, kw: int, cin: int, cout: int):
+    kw_, = jax.random.split(key, 1)
+    return [
+        he_normal(kw_, (kh, kw, cin, cout), kh * kw * cin),
+        jnp.ones((cout,), jnp.float32),
+        jnp.zeros((cout,), jnp.float32),
+    ]
+
+
+def _basic_block(name: str, batch: int, hw: int, cin: int, cout: int,
+                 stride: int) -> Layer:
+    """conv3x3-GN-ReLU-conv3x3-GN + projection skip, ReLU."""
+    proj = stride != 1 or cin != cout
+    out_hw = hw // stride
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = _conv_gn_params(k1, 3, 3, cin, cout)
+        params += _conv_gn_params(k2, 3, 3, cout, cout)
+        if proj:
+            params += _conv_gn_params(k3, 1, 1, cin, cout)
+        return params
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        w1, g1, b1, w2, g2, b2, *rest = params
+        h = jnp.maximum(group_norm(conv2d(x, w1, stride), g1, b1, _GN_GROUPS), 0.0)
+        h = group_norm(conv2d(h, w2, 1), g2, b2, _GN_GROUPS)
+        if proj:
+            wp, gp, bp = rest
+            x = group_norm(conv2d(x, wp, stride), gp, bp, _GN_GROUPS)
+        return jnp.maximum(h + x, 0.0)
+
+    flops = (conv_flops(batch, hw, hw, 3, 3, cin, cout, stride)
+             + conv_flops(batch, out_hw, out_hw, 3, 3, cout, cout, 1)
+             + (conv_flops(batch, hw, hw, 1, 1, cin, cout, stride) if proj else 0))
+    act = 4 * batch * out_hw * out_hw * cout * 4  # two conv outs, two norms
+    return Layer(name, init, apply, flops, act, (batch, out_hw, out_hw, cout))
+
+
+def _bottleneck_block(name: str, batch: int, hw: int, cin: int, cmid: int,
+                      stride: int) -> Layer:
+    """1x1 reduce - 3x3 - 1x1 expand (x4), GN between, projection skip."""
+    cout = cmid * 4
+    proj = stride != 1 or cin != cout
+    out_hw = hw // stride
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        params = _conv_gn_params(k1, 1, 1, cin, cmid)
+        params += _conv_gn_params(k2, 3, 3, cmid, cmid)
+        params += _conv_gn_params(k3, 1, 1, cmid, cout)
+        if proj:
+            params += _conv_gn_params(k4, 1, 1, cin, cout)
+        return params
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        (w1, g1, b1, w2, g2, b2, w3, g3, b3, *rest) = params
+        h = jnp.maximum(group_norm(conv2d(x, w1, 1), g1, b1, _GN_GROUPS), 0.0)
+        h = jnp.maximum(group_norm(conv2d(h, w2, stride), g2, b2, _GN_GROUPS), 0.0)
+        h = group_norm(conv2d(h, w3, 1), g3, b3, _GN_GROUPS)
+        if proj:
+            wp, gp, bp = rest
+            x = group_norm(conv2d(x, wp, stride), gp, bp, _GN_GROUPS)
+        return jnp.maximum(h + x, 0.0)
+
+    flops = (conv_flops(batch, hw, hw, 1, 1, cin, cmid, 1)
+             + conv_flops(batch, hw, hw, 3, 3, cmid, cmid, stride)
+             + conv_flops(batch, out_hw, out_hw, 1, 1, cmid, cout, 1)
+             + (conv_flops(batch, hw, hw, 1, 1, cin, cout, stride) if proj else 0))
+    act = 4 * batch * (hw * hw * cmid + out_hw * out_hw * (cmid + cout) * 2)
+    return Layer(name, init, apply, flops, act, (batch, out_hw, out_hw, cout))
+
+
+def _stem(batch: int, hw: int, cout: int) -> Layer:
+    def init(key: jax.Array) -> List[jax.Array]:
+        return _conv_gn_params(key, 3, 3, 3, cout)
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        w, g, b = params
+        return jnp.maximum(group_norm(conv2d(x, w, 1), g, b, _GN_GROUPS), 0.0)
+
+    flops = conv_flops(batch, hw, hw, 3, 3, 3, cout, 1)
+    act = 4 * batch * hw * hw * cout * 2
+    return Layer("stem", init, apply, flops, act, (batch, hw, hw, cout))
+
+
+def build_resnet(*, batch: int, blocks_per_stage: Sequence[int], block: str,
+                 base_channels: int, num_classes: int,
+                 image_hw: int = 32, use_pallas: bool = False
+                 ) -> Tuple[List[Layer], Tuple[int, ...]]:
+    """Build the layer list for a CIFAR-style ResNet.
+
+    block: "basic" (2 convs/block) or "bottleneck" (3 convs, 4x expansion).
+    Three stages at strides (1, 2, 2) with channel counts (c, 2c, 4c).
+    `use_pallas` routes the classifier head through the fused_linear kernel.
+    """
+    layers: List[Layer] = [_stem(batch, image_hw, base_channels)]
+    hw = image_hw
+    cin = base_channels
+    for stage, nblocks in enumerate(blocks_per_stage):
+        cmid = base_channels * (2 ** stage)
+        for i in range(nblocks):
+            stride = 2 if (stage > 0 and i == 0) else 1
+            name = f"s{stage}b{i}"
+            if block == "basic":
+                layers.append(_basic_block(name, batch, hw, cin, cmid, stride))
+                cin = cmid
+            elif block == "bottleneck":
+                layers.append(_bottleneck_block(name, batch, hw, cin, cmid, stride))
+                cin = cmid * 4
+            else:
+                raise ValueError(f"unknown block type {block!r}")
+            hw //= stride
+    layers.append(global_avg_pool_layer("gap", batch, (batch, hw, hw, cin)))
+    layers.append(dense_layer("head", batch, cin, num_classes, relu=False,
+                              use_pallas=use_pallas))
+    return layers, (batch, image_hw, image_hw, 3)

@@ -1,0 +1,126 @@
+"""Decoder-only transformer LM (the end-to-end training driver workload).
+
+Features Replay is architecture-agnostic — any feedforward stack of modules
+qualifies — so the e2e example trains a GPT-style causal LM partitioned into
+K modules, with module boundaries between transformer blocks.
+
+Pallas kernels on the hot path when `use_pallas`: fused_linear for all
+projections/MLPs and the fused layernorm kernel. Attention softmax/AV use
+jnp einsum (batched 3D contractions; the 2D MXU tiles carry the projections,
+which dominate FLOPs at these sizes).
+
+Interface quirk: the first module consumes i32 token ids (B, T); every other
+boundary activation is f32 (B, T, D). The head layer emits logits reshaped to
+(B*T, V) so the generic classification loss head applies unchanged, with
+labels flattened to (B*T,).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+from ..kernels import ref as kref
+from .common import Layer, he_normal
+
+
+def _linear(params_w, params_b, x2d, use_pallas, relu=False):
+    if use_pallas:
+        return kernels.fused_linear(x2d, params_w, params_b, relu=relu)
+    return kref.fused_linear(x2d, params_w, params_b, relu)
+
+
+def _ln(x, g, b, use_pallas):
+    if use_pallas:
+        return kernels.layernorm(x, g, b)
+    return kref.layernorm(x, g, b)
+
+
+def _embed_layer(batch: int, seq: int, vocab: int, d: int) -> Layer:
+    def init(key: jax.Array) -> List[jax.Array]:
+        k1, k2 = jax.random.split(key)
+        return [
+            jax.random.normal(k1, (vocab, d), jnp.float32) * 0.02,
+            jax.random.normal(k2, (seq, d), jnp.float32) * 0.02,
+        ]
+
+    def apply(params: Sequence[jax.Array], tokens: jax.Array) -> jax.Array:
+        tok_emb, pos_emb = params
+        return jnp.take(tok_emb, tokens, axis=0) + pos_emb[None, :, :]
+
+    flops = batch * seq * d
+    act = 4 * batch * seq * d
+    return Layer("embed", init, apply, flops, act, (batch, seq, d))
+
+
+def _block_layer(name: str, batch: int, seq: int, d: int, heads: int,
+                 use_pallas: bool) -> Layer:
+    hd = d // heads
+    mlp_d = 4 * d
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        ks = jax.random.split(key, 6)
+        return [
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),   # ln1
+            he_normal(ks[0], (d, 3 * d), d), jnp.zeros((3 * d,), jnp.float32),  # qkv
+            he_normal(ks[1], (d, d), d) / math.sqrt(2.0), jnp.zeros((d,), jnp.float32),  # proj
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),   # ln2
+            he_normal(ks[2], (d, mlp_d), d), jnp.zeros((mlp_d,), jnp.float32),  # fc1
+            he_normal(ks[3], (mlp_d, d), mlp_d) / math.sqrt(2.0), jnp.zeros((d,), jnp.float32),  # fc2
+        ]
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        (g1, b1, wqkv, bqkv, wo, bo, g2, b2, w1, b1m, w2, b2m) = params
+        b, t, _ = x.shape
+        h = _ln(x, g1, b1, use_pallas)
+        qkv = _linear(wqkv, bqkv, h.reshape(b * t, d), use_pallas).reshape(b, t, 3, heads, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (b, t, heads, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+        mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b * t, d)
+        x = x + _linear(wo, bo, ctx, use_pallas).reshape(b, t, d)
+        h = _ln(x, g2, b2, use_pallas).reshape(b * t, d)
+        h = _linear(w1, b1m, h, use_pallas, relu=True)
+        h = _linear(w2, b2m, h, use_pallas).reshape(b, t, d)
+        return x + h
+
+    flops = 2 * batch * seq * d * (3 * d + d + 2 * mlp_d) + 4 * batch * heads * seq * seq * hd
+    act = 4 * batch * seq * (3 * d + heads * seq * 2 + d + mlp_d + 2 * d)
+    return Layer(name, init, apply, flops, act, (batch, seq, d))
+
+
+def _head_layer(batch: int, seq: int, d: int, vocab: int, use_pallas: bool) -> Layer:
+    """Final LN + LM head; reshapes logits to (B*T, V) for the loss head."""
+
+    def init(key: jax.Array) -> List[jax.Array]:
+        return [
+            jnp.ones((d,), jnp.float32), jnp.zeros((d,), jnp.float32),
+            he_normal(key, (d, vocab), d), jnp.zeros((vocab,), jnp.float32),
+        ]
+
+    def apply(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+        g, b, w, bb = params
+        bsz, t, _ = x.shape
+        h = _ln(x, g, b, use_pallas).reshape(bsz * t, d)
+        return _linear(w, bb, h, use_pallas)
+
+    flops = 2 * batch * seq * d * vocab
+    act = 4 * batch * seq * (d + vocab)
+    return Layer("head", init, apply, flops, act, (batch * seq, vocab))
+
+
+def build_transformer(*, batch: int, seq: int, vocab: int, d_model: int,
+                      heads: int, depth: int, use_pallas: bool
+                      ) -> Tuple[List[Layer], Tuple[int, ...]]:
+    """Layers: embed, `depth` blocks, head. Input: i32 tokens (B, T)."""
+    layers: List[Layer] = [_embed_layer(batch, seq, vocab, d_model)]
+    for i in range(depth):
+        layers.append(_block_layer(f"blk{i}", batch, seq, d_model, heads, use_pallas))
+    layers.append(_head_layer(batch, seq, d_model, vocab, use_pallas))
+    return layers, (batch, seq)

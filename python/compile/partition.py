@@ -1,0 +1,65 @@
+"""Balanced contiguous partitioning of a layer list into K modules.
+
+The paper assigns each module G(k) to one GPU, so module compute costs should
+be as equal as possible — the pipeline's makespan is set by the slowest
+module. We solve the classic "linear partition" problem exactly with DP
+(minimize the maximum module FLOP count over contiguous splits), which is
+what a deployment launcher should do rather than eyeballing split points.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+def balanced_partition(costs: Sequence[int], k: int) -> List[List[int]]:
+    """Split indices 0..n-1 into k contiguous groups minimizing max group cost.
+
+    Returns a list of k lists of layer indices. k must satisfy 1 <= k <= n.
+    """
+    n = len(costs)
+    if not 1 <= k <= n:
+        raise ValueError(f"cannot split {n} layers into {k} modules")
+    prefix = [0] * (n + 1)
+    for i, c in enumerate(costs):
+        if c < 0:
+            raise ValueError("layer costs must be non-negative")
+        prefix[i + 1] = prefix[i] + c
+
+    def seg(a: int, b: int) -> int:  # cost of layers [a, b)
+        return prefix[b] - prefix[a]
+
+    INF = float("inf")
+    # dp[j][i] = minimal max-cost splitting first i layers into j groups
+    dp = [[INF] * (n + 1) for _ in range(k + 1)]
+    cut = [[0] * (n + 1) for _ in range(k + 1)]
+    dp[0][0] = 0
+    for j in range(1, k + 1):
+        for i in range(j, n + 1):
+            # last group is [m, i); need m >= j-1 so earlier groups non-empty
+            for m in range(j - 1, i):
+                cand = max(dp[j - 1][m], seg(m, i))
+                if cand < dp[j][i]:
+                    dp[j][i] = cand
+                    cut[j][i] = m
+    groups: List[List[int]] = []
+    i = n
+    for j in range(k, 0, -1):
+        m = cut[j][i]
+        groups.append(list(range(m, i)))
+        i = m
+    groups.reverse()
+    return groups
+
+
+def partition_report(costs: Sequence[int], groups: Sequence[Sequence[int]]) -> str:
+    """Human-readable balance summary (logged into the manifest)."""
+    totals = [sum(costs[i] for i in g) for g in groups]
+    whole = sum(totals) or 1
+    lines = []
+    for k, (g, t) in enumerate(zip(groups, totals)):
+        lines.append(f"module {k}: layers {g[0]}..{g[-1]} "
+                     f"flops={t} ({100.0 * t / whole:.1f}%)")
+    imbalance = max(totals) / (whole / len(groups)) if whole else 1.0
+    lines.append(f"imbalance (max/mean): {imbalance:.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,92 @@
+"""DNI gradient synthesizers (the baseline of Jaderberg et al., 2016).
+
+At each module boundary, a small network predicts the error gradient
+delta_hat = S(h) from the boundary activation h, so the lower module can
+update without waiting for the real backward signal. Following the paper's
+experimental setup: two hidden conv layers (5x5, pad 2) with normalization +
+ReLU and a 5x5 output conv for 4D activations; a two-hidden-layer MLP for 2D
+activations. The output layer is zero-initialized (the standard DNI trick:
+synthetic gradients start at zero rather than noise).
+
+Both the predictor and its MSE training step are AOT-lowered so the Rust
+coordinator can run DNI without Python.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models.common import conv2d, group_norm, he_normal
+
+_GN_GROUPS = 8
+
+
+def build_synth(shape: Sequence[int], hidden: int = 0):
+    """Return (init, apply) for a synthesizer over activations of `shape`.
+
+    shape includes the batch dim; 2D -> MLP synth, 4D (NHWC) -> conv synth.
+    `hidden` overrides the hidden width/channels (0 = match input).
+    """
+    if len(shape) == 2:
+        d = int(shape[1])
+        hd = hidden or d
+
+        def init(key: jax.Array) -> List[jax.Array]:
+            k1, k2 = jax.random.split(key)
+            return [
+                he_normal(k1, (d, hd), d), jnp.zeros((hd,), jnp.float32),
+                he_normal(k2, (hd, hd), hd), jnp.zeros((hd,), jnp.float32),
+                jnp.zeros((hd, d), jnp.float32), jnp.zeros((d,), jnp.float32),
+            ]
+
+        def apply(params: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+            w1, b1, w2, b2, w3, b3 = params
+            x = jnp.maximum(h @ w1 + b1, 0.0)
+            x = jnp.maximum(x @ w2 + b2, 0.0)
+            return x @ w3 + b3
+
+        return init, apply
+
+    if len(shape) == 4:
+        c = int(shape[3])
+        hc = hidden or c
+
+        def init(key: jax.Array) -> List[jax.Array]:
+            k1, k2, k3 = jax.random.split(key, 3)
+            return [
+                he_normal(k1, (5, 5, c, hc), 25 * c),
+                jnp.ones((hc,), jnp.float32), jnp.zeros((hc,), jnp.float32),
+                he_normal(k2, (5, 5, hc, hc), 25 * hc),
+                jnp.ones((hc,), jnp.float32), jnp.zeros((hc,), jnp.float32),
+                jnp.zeros((5, 5, hc, c), jnp.float32),
+            ]
+
+        def apply(params: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+            w1, g1, b1, w2, g2, b2, w3 = params
+            x = jnp.maximum(group_norm(conv2d(h, w1), g1, b1, _GN_GROUPS), 0.0)
+            x = jnp.maximum(group_norm(conv2d(x, w2), g2, b2, _GN_GROUPS), 0.0)
+            return conv2d(x, w3)
+
+        return init, apply
+
+    if len(shape) == 3:
+        # (B, T, D) transformer boundary: apply the MLP synth tokenwise.
+        d = int(shape[2])
+        hd = hidden or d
+        mlp_init, mlp_apply = build_synth((int(shape[0]) * int(shape[1]), d), hd)
+
+        def apply(params: Sequence[jax.Array], h: jax.Array) -> jax.Array:
+            b, t, _ = h.shape
+            return mlp_apply(params, h.reshape(b * t, d)).reshape(b, t, d)
+
+        return mlp_init, apply
+
+    raise ValueError(f"no synthesizer for activation rank {len(shape)}")
+
+
+def synth_param_count(shape: Sequence[int], hidden: int = 0) -> int:
+    init, _ = build_synth(shape, hidden)
+    return sum(int(p.size) for p in init(jax.random.PRNGKey(0)))

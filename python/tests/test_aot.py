@@ -1,0 +1,90 @@
+"""AOT pipeline: manifest consistency, artifact files, param dumps.
+
+Builds one tiny config into a tmpdir (slow-ish but the definitive check that
+everything the Rust runtime will parse is well-formed).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import build_config
+from compile.models import registry
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg_dir = build_config("mlp_tiny", 2, str(out), verbose=False)
+    with open(os.path.join(cfg_dir, "manifest.json")) as f:
+        return cfg_dir, json.load(f)
+
+
+def test_manifest_basics(built):
+    _, m = built
+    assert m["config"] == "mlp_tiny" and m["k"] == 2
+    assert m["input_shape"] == [16, 3072]
+    assert m["label_shape"] == [16]
+    assert m["num_classes"] == 10
+    assert len(m["modules"]) == 2
+    assert len(m["synth"]) == 1
+
+
+def test_module_files_exist_and_parse(built):
+    cfg_dir, m = built
+    for mod in m["modules"]:
+        for f in mod["files"].values():
+            path = os.path.join(cfg_dir, f)
+            assert os.path.exists(path)
+            head = open(path).read(200)
+            assert "HloModule" in head  # HLO text, not proto bytes
+    last = m["modules"][-1]
+    assert "loss" in last["files"]
+    assert "loss" not in m["modules"][0]["files"]
+
+
+def test_param_bins_match_shapes(built):
+    cfg_dir, m = built
+    for mod in m["modules"]:
+        for i, shape in enumerate(mod["param_shapes"]):
+            path = os.path.join(cfg_dir, "params", f"module{mod['index']}_p{i}.bin")
+            data = np.fromfile(path, dtype=np.float32)
+            assert data.size == int(np.prod(shape)), (path, shape)
+
+
+def test_synth_files(built):
+    cfg_dir, m = built
+    for s in m["synth"]:
+        for f in s["files"].values():
+            assert os.path.exists(os.path.join(cfg_dir, f))
+        for i, shape in enumerate(s["param_shapes"]):
+            path = os.path.join(cfg_dir, "params", f"synth{s['boundary']}_p{i}.bin")
+            data = np.fromfile(path, dtype=np.float32)
+            assert data.size == int(np.prod(shape))
+
+
+def test_boundary_shapes_chain(built):
+    _, m = built
+    mods = m["modules"]
+    for a, b in zip(mods, mods[1:]):
+        assert a["out_shape"] == b["in_shape"]
+    assert mods[0]["in_shape"] == m["input_shape"]
+    assert mods[-1]["out_shape"] == m["logits_shape"]
+
+
+def test_registry_names_resolve():
+    for name in registry.names():
+        assert registry._REGISTRY[name]
+    with pytest.raises(KeyError):
+        registry.get("nope", 2)
+
+
+def test_full_depth_paper_configs_instantiable():
+    """ResNet164/101/152 generators build layer lists of the right depth."""
+    for name, blocks in [("resnet164", 54), ("resnet101", 33), ("resnet152", 50)]:
+        builder, _, _, _ = registry._REGISTRY[name]
+        layers, _ = builder()
+        # stem + blocks + gap + head
+        assert len(layers) == blocks + 3

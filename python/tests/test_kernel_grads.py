@@ -1,0 +1,85 @@
+"""custom_vjp gradients of the Pallas kernels vs jax.grad of the oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=40)
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _check(gs1, gs2, rtol=1e-3, atol=1e-4):
+    for a, b in zip(gs1, gs2):
+        np.testing.assert_allclose(a, b, rtol=rtol, atol=atol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=SEED)
+def test_matmul_grads(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    c = _arr(rng, m, n)  # random cotangent direction via weighted sum
+    f1 = lambda x, y: jnp.sum(kernels.matmul(x, y) * c)
+    f2 = lambda x, y: jnp.sum(ref.matmul(x, y) * c)
+    _check(jax.grad(f1, (0, 1))(x, y), jax.grad(f2, (0, 1))(x, y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, relu=st.booleans(), seed=SEED)
+def test_fused_linear_grads(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    c = _arr(rng, m, n)
+    f1 = lambda x, w, b: jnp.sum(kernels.fused_linear(x, w, b, relu=relu) * c)
+    f2 = lambda x, w, b: jnp.sum(ref.fused_linear(x, w, b, relu) * c)
+    _check(jax.grad(f1, (0, 1, 2))(x, w, b), jax.grad(f2, (0, 1, 2))(x, w, b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=DIM, d=st.integers(min_value=2, max_value=48), seed=SEED)
+def test_layernorm_grads(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = _arr(rng, rows, d), _arr(rng, d), _arr(rng, d)
+    c = _arr(rng, rows, d)
+    f1 = lambda x, g, b: jnp.sum(kernels.layernorm(x, g, b) * c)
+    f2 = lambda x, g, b: jnp.sum(ref.layernorm(x, g, b) * c)
+    _check(jax.grad(f1, (0, 1, 2))(x, g, b), jax.grad(f2, (0, 1, 2))(x, g, b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=DIM, c=st.integers(min_value=2, max_value=60), seed=SEED)
+def test_softmax_xent_grads(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, b, c) * 2.0
+    labels = jnp.asarray(rng.integers(0, c, size=(b,)), jnp.int32)
+    g1 = jax.grad(lambda l: kernels.softmax_xent(l, labels))(logits)
+    g2 = jax.grad(lambda l: ref.softmax_xent(l, labels))(logits)
+    _check([g1], [g2])
+
+
+def test_grad_through_composition():
+    """A two-layer pallas MLP differentiates like its ref composition."""
+    rng = np.random.default_rng(7)
+    x = _arr(rng, 6, 12)
+    w1, b1 = _arr(rng, 12, 20), _arr(rng, 20)
+    w2, b2 = _arr(rng, 20, 5), _arr(rng, 5)
+    labels = jnp.asarray(rng.integers(0, 5, size=(6,)), jnp.int32)
+
+    def f1(w1, b1, w2, b2):
+        h = kernels.fused_linear(x, w1, b1, relu=True)
+        return kernels.softmax_xent(kernels.fused_linear(h, w2, b2, relu=False), labels)
+
+    def f2(w1, b1, w2, b2):
+        h = ref.fused_linear(x, w1, b1, True)
+        return ref.softmax_xent(ref.fused_linear(h, w2, b2, False), labels)
+
+    _check(jax.grad(f1, (0, 1, 2, 3))(w1, b1, w2, b2),
+           jax.grad(f2, (0, 1, 2, 3))(w1, b1, w2, b2))

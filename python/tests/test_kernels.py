@@ -1,0 +1,97 @@
+"""L1 kernel forward correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes — including awkward non-tile-multiples — asserting
+allclose against ref.py. These are the core correctness signal for the
+kernels that every AOT artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=70)
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=SEED)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(kernels.matmul_raw(x, y), ref.matmul(x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, relu=st.booleans(), seed=SEED)
+def test_fused_linear_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    np.testing.assert_allclose(kernels.fused_linear_raw(x, w, b, relu=relu),
+                               ref.fused_linear(x, w, b, relu),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=DIM, d=st.integers(min_value=2, max_value=96), seed=SEED)
+def test_layernorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = _arr(rng, rows, d), _arr(rng, d), _arr(rng, d)
+    np.testing.assert_allclose(kernels.layernorm_raw(x, g, b),
+                               ref.layernorm(x, g, b), rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_3d_input():
+    rng = np.random.default_rng(0)
+    x, g, b = _arr(rng, 3, 5, 16), _arr(rng, 16), _arr(rng, 16)
+    np.testing.assert_allclose(kernels.layernorm_raw(x, g, b),
+                               ref.layernorm(x, g, b), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=DIM, c=st.integers(min_value=2, max_value=120), seed=SEED)
+def test_softmax_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, b, c) * 3.0
+    labels = jnp.asarray(rng.integers(0, c, size=(b,)), jnp.int32)
+    np.testing.assert_allclose(kernels.softmax_xent_raw(logits, labels),
+                               ref.softmax_xent(logits, labels),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.asarray([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], jnp.float32)
+    labels = jnp.asarray([0, 0], jnp.int32)
+    out = kernels.softmax_xent_raw(logits, labels)
+    assert np.isfinite(float(out))
+    np.testing.assert_allclose(out, ref.softmax_xent(logits, labels), rtol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((2, 3)); y = jnp.zeros((4, 2))
+    with pytest.raises(ValueError):
+        kernels.matmul_raw(x, y)
+    with pytest.raises(ValueError):
+        kernels.fused_linear_raw(x, jnp.zeros((3, 4)), jnp.zeros((5,)))
+    with pytest.raises(ValueError):
+        kernels.softmax_xent_raw(jnp.zeros((2, 3)), jnp.zeros((3,), jnp.int32))
+    with pytest.raises(ValueError):
+        kernels.layernorm_raw(x, jnp.zeros((4,)), jnp.zeros((4,)))
+
+
+def test_matmul_custom_blocks():
+    rng = np.random.default_rng(3)
+    x, y = _arr(rng, 130, 70), _arr(rng, 70, 129)
+    for bm, bn, bk in [(32, 32, 32), (64, 128, 16), (8, 8, 8)]:
+        np.testing.assert_allclose(
+            kernels.matmul_raw(x, y, bm=bm, bn=bn, bk=bk), ref.matmul(x, y),
+            rtol=1e-4, atol=1e-4)

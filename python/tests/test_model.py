@@ -1,0 +1,169 @@
+"""L2 module-partitioned models: composing per-module fwd/bwd/loss functions
+must reproduce the monolithic model's forward and exact BP gradients.
+
+This is the contract the Rust coordinator relies on: when it chains the AOT
+artifacts with *fresh* (non-stale) features and deltas, it is doing vanilla
+backpropagation — so any difference FR shows later comes from staleness, not
+from artifact plumbing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelDef
+from compile.models.mlp import build_mlp
+from compile.models.resnet import build_resnet
+from compile.models.transformer import build_transformer
+
+
+def _mlp_model(k=3, use_pallas=False):
+    layers, ishape = build_mlp(batch=4, input_dim=24, hidden=16, depth=3,
+                               num_classes=5, use_pallas=use_pallas)
+    return ModelDef(name="t_mlp", layers=layers, input_shape=ishape,
+                    input_dtype="f32", num_classes=5, k=k, use_pallas=use_pallas)
+
+
+def _resnet_model(k=2, block="basic"):
+    layers, ishape = build_resnet(batch=2, blocks_per_stage=[1, 1], block=block,
+                                  base_channels=4, num_classes=3, image_hw=8)
+    return ModelDef(name="t_rn", layers=layers, input_shape=ishape,
+                    input_dtype="f32", num_classes=3, k=k, use_pallas=False)
+
+
+def _transformer_model(k=3, use_pallas=False):
+    layers, ishape = build_transformer(batch=2, seq=8, vocab=11, d_model=16,
+                                       heads=2, depth=2, use_pallas=use_pallas)
+    return ModelDef(name="t_tr", layers=layers, input_shape=ishape,
+                    input_dtype="i32", num_classes=11, k=k, use_pallas=use_pallas)
+
+
+def _inputs(model, seed=0):
+    rng = np.random.default_rng(seed)
+    if model.input_dtype == "i32":
+        x = jnp.asarray(rng.integers(0, model.num_classes, model.input_shape), jnp.int32)
+    else:
+        x = jnp.asarray(rng.normal(size=model.input_shape), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, model.num_classes, model.label_shape), jnp.int32)
+    return x, labels
+
+
+def _all_params(model):
+    return [model.init_module_params(k) for k in range(model.k)]
+
+
+@pytest.mark.parametrize("make", [_mlp_model, _resnet_model, _transformer_model])
+def test_module_composition_equals_full_forward(make):
+    model = make()
+    params = _all_params(model)
+    x, _ = _inputs(model)
+    h = x
+    for k in range(model.k):
+        (h,) = model.fwd_fn(k)(*params[k], h)
+    np.testing.assert_allclose(h, model.full_forward(params, x), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("make,k", [(_mlp_model, 1), (_mlp_model, 3),
+                                    (_resnet_model, 2), (_transformer_model, 3)])
+def test_bwd_chain_equals_monolithic_grad(make, k):
+    """Fresh-feature chaining of loss + bwd artifacts == jax.grad of full loss."""
+    model = make(k)
+    params = _all_params(model)
+    x, labels = _inputs(model)
+
+    # Reference: monolithic BP gradient.
+    flat = [p for ps in params for p in ps]
+    sizes = [len(ps) for ps in params]
+
+    def full(*flat_params):
+        ps, i = [], 0
+        for n in sizes:
+            ps.append(list(flat_params[i:i + n]))
+            i += n
+        return model.full_loss(ps, x, labels)
+
+    ref_grads = jax.grad(full, argnums=tuple(range(len(flat))))(*flat)
+
+    # Chain artifacts: forward to collect module inputs, then loss head and
+    # bwd hops downward.
+    hins = [x]
+    h = x
+    for kk in range(model.k):
+        (h,) = model.fwd_fn(kk)(*params[kk], h)
+        hins.append(h)
+
+    got = [None] * model.k
+    out = model.loss_fn()(*params[model.k - 1], hins[model.k - 1], labels)
+    npar = len(params[model.k - 1])
+    loss_v = out[0]
+    got[model.k - 1] = list(out[1:1 + npar])
+    delta = out[1 + npar] if model.k > 1 else None
+    for kk in range(model.k - 2, -1, -1):
+        outs = model.bwd_fn(kk)(*params[kk], hins[kk], delta)
+        npar = len(params[kk])
+        got[kk] = list(outs[:npar])
+        if kk > 0:
+            delta = outs[npar]
+
+    flat_got = [g for gs in got for g in gs]
+    assert np.isfinite(float(loss_v))
+    assert len(flat_got) == len(ref_grads)
+    for a, b in zip(flat_got, ref_grads):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-5)
+
+
+def test_loss_head_value_matches_full_loss():
+    model = _mlp_model(k=2)
+    params = _all_params(model)
+    x, labels = _inputs(model)
+    (h,) = model.fwd_fn(0)(*params[0], x)
+    out = model.loss_fn()(*params[1], h, labels)
+    np.testing.assert_allclose(out[0], model.full_loss(params, x, labels),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_logits_emitted_by_loss_head():
+    model = _mlp_model(k=2)
+    params = _all_params(model)
+    x, labels = _inputs(model)
+    (h,) = model.fwd_fn(0)(*params[0], x)
+    out = model.loss_fn()(*params[1], h, labels)
+    logits = out[-1]
+    assert logits.shape == tuple(model.logits_shape)
+    np.testing.assert_allclose(logits, model.full_forward(params, x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_and_ref_models_agree():
+    """The same MLP with use_pallas on/off gives identical params & outputs."""
+    m1, m2 = _mlp_model(2, use_pallas=True), _mlp_model(2, use_pallas=False)
+    p1, p2 = _all_params(m1), _all_params(m2)
+    for a, b in zip([p for ps in p1 for p in ps], [p for ps in p2 for p in ps]):
+        np.testing.assert_allclose(a, b)
+    x, labels = _inputs(m1)
+    np.testing.assert_allclose(m1.full_loss(p1, x, labels),
+                               m2.full_loss(p2, x, labels), rtol=1e-4, atol=1e-5)
+
+
+def test_param_shapes_match_init():
+    for make in (_mlp_model, _resnet_model, _transformer_model):
+        model = make()
+        for k in range(model.k):
+            ps = model.init_module_params(k)
+            assert [tuple(int(d) for d in p.shape) for p in ps] == \
+                   [tuple(s) for s in model.modules[k].param_shapes]
+
+
+def test_seed_changes_params_but_not_shapes():
+    model = _mlp_model(2)
+    p0 = model.init_module_params(0, seed=0)
+    p1 = model.init_module_params(0, seed=1)
+    assert any(not np.allclose(a, b) for a, b in zip(p0, p1))
+    assert all(a.shape == b.shape for a, b in zip(p0, p1))
+
+
+def test_transformer_first_module_takes_tokens():
+    model = _transformer_model()
+    assert model.modules[0].in_dtype == "i32"
+    assert all(m.in_dtype == "f32" for m in model.modules[1:])

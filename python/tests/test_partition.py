@@ -1,0 +1,56 @@
+"""Balanced-partition DP: optimality, contiguity, coverage invariants."""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.partition import balanced_partition, partition_report
+
+
+def _brute_force_best(costs, k):
+    """Minimal max-group cost over all contiguous splits (reference)."""
+    n = len(costs)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bounds = [0, *cuts, n]
+        m = max(sum(costs[a:b]) for a, b in zip(bounds, bounds[1:]))
+        best = min(best, m)
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(costs=st.lists(st.integers(min_value=0, max_value=1000), min_size=1, max_size=10),
+       data=st.data())
+def test_dp_is_optimal(costs, data):
+    k = data.draw(st.integers(min_value=1, max_value=len(costs)))
+    groups = balanced_partition(costs, k)
+    got = max(sum(costs[i] for i in g) for g in groups)
+    assert got == _brute_force_best(costs, k)
+
+
+@settings(max_examples=60, deadline=None)
+@given(costs=st.lists(st.integers(min_value=0, max_value=1000), min_size=1, max_size=30),
+       data=st.data())
+def test_partition_invariants(costs, data):
+    k = data.draw(st.integers(min_value=1, max_value=len(costs)))
+    groups = balanced_partition(costs, k)
+    assert len(groups) == k
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(len(costs)))  # contiguous, ordered, complete
+    assert all(g for g in groups)  # non-empty
+
+
+def test_rejects_bad_k():
+    with pytest.raises(ValueError):
+        balanced_partition([1, 2, 3], 0)
+    with pytest.raises(ValueError):
+        balanced_partition([1, 2, 3], 4)
+    with pytest.raises(ValueError):
+        balanced_partition([1, -2, 3], 2)
+
+
+def test_report_mentions_every_module():
+    costs = [5, 5, 5, 5]
+    rep = partition_report(costs, balanced_partition(costs, 2))
+    assert "module 0" in rep and "module 1" in rep and "imbalance" in rep

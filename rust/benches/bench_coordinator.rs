@@ -1,0 +1,64 @@
+//! L3 coordinator micro-benchmarks: the non-compute overheads that must stay
+//! under 10% of module compute per DESIGN.md §Perf — replay-buffer traffic,
+//! optimizer updates, channel round-trips, JSON parsing, data generation.
+
+use features_replay::bench::Bencher;
+use features_replay::coordinator::history::ReplayBuffer;
+use features_replay::data::synthetic_cifar::SyntheticCifar;
+use features_replay::data::tiny_corpus::TinyCorpus;
+use features_replay::optim::SgdMomentum;
+use features_replay::runtime::{DType, Tensor};
+use features_replay::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // replay ring: push + stale on a CIFAR-sized boundary tensor
+    let shape = [32usize, 16, 16, 32];
+    let mut ring = ReplayBuffer::new(4, &shape, DType::F32);
+    let t = Tensor::zeros(&shape, DType::F32);
+    b.bench("history/push+stale (1 MB tensor)", || {
+        ring.push(t.clone());
+        let _ = ring.stale(3).len();
+    });
+
+    // optimizer: SGD+momentum over 1M params
+    let mut params = vec![Tensor::zeros(&[1_000_000], DType::F32)];
+    let grads = vec![Tensor::zeros(&[1_000_000], DType::F32)];
+    let mut opt = SgdMomentum::new(&params, 0.9, 5e-4);
+    b.bench("optimizer/sgd_momentum (1M params)", || {
+        opt.step(&mut params, &grads, 0.01).unwrap();
+    });
+
+    // channel round-trip with a boundary-sized payload (worker hand-off)
+    let (tx, rx) = std::sync::mpsc::channel::<Tensor>();
+    b.bench("channel/send+recv (1 MB tensor)", || {
+        tx.send(t.clone()).unwrap();
+        let _ = rx.recv().unwrap();
+    });
+
+    // manifest parse (startup path)
+    let manifest_path = features_replay::default_artifacts_root()
+        .join("resnet_s_k4").join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        b.bench("json/parse resnet_s manifest", || {
+            Json::parse(&text).unwrap();
+        });
+    }
+
+    // data generation (must stay off the critical path)
+    let mut cifar = SyntheticCifar::new(10, 0);
+    b.bench("data/synthetic_cifar batch 32", || {
+        let _ = cifar.train_batch(32);
+    });
+    let mut corpus = TinyCorpus::new(200_000, 0);
+    b.bench("data/tiny_corpus batch 8x64", || {
+        let _ = corpus.train_batch(8, 64);
+    });
+
+    // tensor<->literal marshaling at batch scale
+    let batchy = Tensor::zeros(&[32, 32, 32, 3], DType::F32);
+    b.bench("tensor/to_literal (393 KB)", || {
+        batchy.to_literal().unwrap();
+    });
+}

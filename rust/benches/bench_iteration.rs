@@ -1,0 +1,67 @@
+//! End-to-end iteration benchmarks — the Fig 4 row 2 / Fig 6 cost source:
+//! full train_step latency of each method on each model, plus the derived
+//! K-device pipeline numbers (BP vs FR speedup, BP-DP scaling).
+
+use features_replay::bench::Bencher;
+use features_replay::coordinator::{
+    self, make_trainer, pipeline_sim, Algo, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::runtime::{Engine, Manifest};
+
+fn main() {
+    let root = features_replay::default_artifacts_root();
+    let mut b = Bencher::new();
+    let comm = pipeline_sim::CommModel::default();
+
+    for cfg in ["mlp_tiny_k4", "resnet_s_k4"] {
+        let dir = root.join(cfg);
+        if !dir.exists() {
+            eprintln!("(skip {cfg}: artifacts not built)");
+            continue;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        println!("\n-- {cfg}: one training iteration per method --");
+
+        for algo in [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni] {
+            let mut trainer = make_trainer(&engine, &dir, algo,
+                                           TrainConfig::default()).unwrap();
+            let mut data = DataSource::for_manifest(&manifest, 0).unwrap();
+            // warm the pipeline so steady-state is measured
+            for _ in 0..manifest.k {
+                let batch = data.train_batch();
+                trainer.train_step(&batch, 0.01).unwrap();
+            }
+            let mut timings = Vec::new();
+            let batch = data.train_batch();
+            b.bench(&format!("{cfg}/{}/train_step", trainer.name()), || {
+                let s = trainer.train_step(&batch, 0.01).unwrap();
+                timings.push(s.timing);
+            });
+            let costs = pipeline_sim::MeasuredCosts::from_timings(
+                &timings,
+                coordinator::boundary_bytes(trainer.stack()),
+                coordinator::param_bytes(trainer.stack()));
+            match algo {
+                Algo::Bp => {
+                    println!("    K-device locked BP : {:8.2} ms/iter",
+                             pipeline_sim::bp_iteration_ms(&costs, &comm));
+                    for n in [2, 4] {
+                        println!("    BP data-parallel x{n}: {:8.2} ms/iter",
+                                 pipeline_sim::bp_data_parallel_ms(&costs, &comm, n));
+                    }
+                }
+                Algo::Fr => {
+                    println!("    K-device FR        : {:8.2} ms/iter  (speedup {:.2}x)",
+                             pipeline_sim::decoupled_iteration_ms(&costs, &comm),
+                             pipeline_sim::fr_speedup(&costs, &comm));
+                }
+                _ => {
+                    println!("    K-device decoupled : {:8.2} ms/iter",
+                             pipeline_sim::decoupled_iteration_ms(&costs, &comm));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Runtime-layer benchmarks: per-module executable latency (fwd / bwd /
+//! fused loss head) and host<->literal marshaling, per artifact config.
+//!
+//! This is the L1/L2 "measured cost" source: everything the pipeline
+//! simulator consumes is visible here. Run with `cargo bench` (or
+//! FR_BENCH_QUICK=1 for a fast pass).
+
+use features_replay::bench::Bencher;
+use features_replay::runtime::{DType, Engine, Manifest, ModuleRuntime, Tensor};
+
+fn main() {
+    let root = features_replay::default_artifacts_root();
+    let mut b = Bencher::new();
+
+    for cfg in ["mlp_tiny_k4", "resnet_s_k4", "transformer_tiny_k4"] {
+        let dir = root.join(cfg);
+        if !dir.exists() {
+            eprintln!("(skip {cfg}: artifacts not built)");
+            continue;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        println!("\n-- {cfg} --");
+        for k in 0..manifest.k {
+            let m = ModuleRuntime::load(&engine, &manifest, k).unwrap();
+            let h = Tensor::zeros(&m.spec.in_shape, m.spec.in_dtype);
+            if k < manifest.k - 1 {
+                b.bench(&format!("{cfg}/module{k}/fwd"), || {
+                    m.forward(&h).unwrap();
+                });
+            }
+            let delta = Tensor::zeros(&m.spec.out_shape, DType::F32);
+            if k < manifest.k - 1 {
+                b.bench(&format!("{cfg}/module{k}/bwd"), || {
+                    m.backward(&h, &delta).unwrap();
+                });
+            } else {
+                let labels = Tensor::from_i32(
+                    manifest.label_shape.clone(),
+                    vec![0; manifest.label_shape.iter().product()]).unwrap();
+                b.bench(&format!("{cfg}/module{k}/loss_bwd"), || {
+                    m.loss_backward(&h, &labels).unwrap();
+                });
+            }
+        }
+
+        // marshaling overhead: the L3 <-> PJRT boundary cost
+        let big = Tensor::zeros(&manifest.input_shape, manifest.input_dtype);
+        b.bench(&format!("{cfg}/tensor_to_literal"), || {
+            big.to_literal().unwrap();
+        });
+        let lit = big.to_literal().unwrap();
+        b.bench(&format!("{cfg}/literal_to_tensor"), || {
+            Tensor::from_literal(&lit).unwrap();
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! Mini-criterion: a benchmark harness for `cargo bench` targets in an
+//! offline sandbox (no criterion crate). Warmup + timed iterations,
+//! mean/median/stddev, and an aligned table — enough to compare the paper's
+//! methods against each other, which is all the figures need.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!("{:<42} {:>9.3} ms/iter (median {:>9.3}, sd {:>7.3}, n={})",
+                self.name, self.mean_ms, self.median_ms, self.stddev_ms, self.iters)
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        // Keep runs short: module executions here are milliseconds-scale and
+        // the comparisons the figures need are ~10% accurate already at n=10.
+        let quick = std::env::var("FR_BENCH_QUICK").is_ok();
+        Bencher {
+            warmup_iters: if quick { 1 } else { 3 },
+            measure_iters: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let r = summarize(name, &samples);
+        println!("{}", r.report_line());
+        self.results.push(r.clone());
+        r
+    }
+}
+
+pub fn summarize(name: &str, samples_ms: &[f64]) -> BenchResult {
+    let n = samples_ms.len().max(1) as f64;
+    let mean = samples_ms.iter().sum::<f64>() / n;
+    let var = samples_ms.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let mut sorted = samples_ms.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ms.len(),
+        mean_ms: mean,
+        median_ms: sorted.get(sorted.len() / 2).copied().unwrap_or(f64::NAN),
+        stddev_ms: var.sqrt(),
+        min_ms: sorted.first().copied().unwrap_or(f64::NAN),
+        max_ms: sorted.last().copied().unwrap_or(f64::NAN),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_stats() {
+        let r = summarize("x", &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(r.mean_ms, 3.0);
+        assert_eq!(r.median_ms, 3.0);
+        assert_eq!(r.min_ms, 1.0);
+        assert_eq!(r.max_ms, 5.0);
+        assert!((r.stddev_ms - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bencher_runs_closure() {
+        let mut b = Bencher { warmup_iters: 1, measure_iters: 3, results: vec![] };
+        let mut count = 0;
+        b.bench("noop", || count += 1);
+        assert_eq!(count, 4);
+        assert_eq!(b.results.len(), 1);
+    }
+}

@@ -1,0 +1,77 @@
+//! BP baseline: vanilla backpropagation with backward locking.
+//!
+//! Forward runs bottom-up, then the error gradient propagates top-down
+//! through every module *within the same iteration* — module k cannot start
+//! its backward until k+1 finished (the locking FR removes). Gradients are
+//! bit-identical to monolithic BP (verified in python/tests/test_model.py).
+
+use anyhow::{Context, Result};
+
+use crate::data::Batch;
+use crate::runtime::Tensor;
+use crate::util::Timer;
+
+use super::stack::ModuleStack;
+use super::strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+
+pub struct BpTrainer {
+    stack: ModuleStack,
+}
+
+impl BpTrainer {
+    pub fn new(stack: ModuleStack) -> BpTrainer {
+        BpTrainer { stack }
+    }
+}
+
+impl Trainer for BpTrainer {
+    fn name(&self) -> &'static str {
+        "BP"
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let kk = self.stack.k();
+        let mut timing = StepTiming::new(kk);
+        let mut timer = Timer::new();
+
+        // forward pass (sequential, bottom-up)
+        let mut hs: Vec<Tensor> = Vec::with_capacity(kk);
+        hs.push(batch.input.clone());
+        for k in 0..kk - 1 {
+            let h = self.stack.modules[k].forward(&hs[k])?;
+            timing.fwd_ms[k] = timer.lap_ms();
+            hs.push(h);
+        }
+
+        // backward pass (sequential, top-down — the locked dependency chain)
+        let out = self.stack.modules[kk - 1].loss_backward(&hs[kk - 1], &batch.labels)?;
+        self.stack.update(kk - 1, &out.grads, lr)?;
+        timing.fwd_ms[kk - 1] = 0.0; // folded into the fused loss head
+        timing.bwd_ms[kk - 1] = timer.lap_ms();
+        let mut delta = out.delta_in;
+        for k in (0..kk - 1).rev() {
+            let d = delta.take().context("BP: missing delta")?;
+            let (grads, din) = self.stack.modules[k].backward(&hs[k], &d)?;
+            self.stack.update(k, &grads, lr)?;
+            timing.bwd_ms[k] = timer.lap_ms();
+            delta = din;
+        }
+
+        Ok(StepStats { loss: out.loss, timing })
+    }
+
+    fn memory(&self) -> MemoryReport {
+        MemoryReport {
+            activations: self.stack.activation_bytes(),
+            ..Default::default()
+        }
+    }
+
+    fn stack(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    fn stack_mut(&mut self) -> &mut ModuleStack {
+        &mut self.stack
+    }
+}

@@ -1,0 +1,155 @@
+//! DDG baseline — Decoupled parallel backpropagation with *stale gradients*
+//! (Huo et al., ICML 2018; the paper's main comparison).
+//!
+//! Where FR replays stale *features* through current weights, DDG applies
+//! stale *gradients*: module k's update at iteration t is the true BP
+//! gradient of iteration t-(K-1-k), i.e. the backward graph captured at
+//! forward time (old weights, old activations). That requires every module
+//! to keep its full forward state for K-k in-flight iterations — the
+//! O(LK + K^2) activation memory of Table 1 and the divergence-prone
+//! staleness the paper observes at K >= 3 on deep nets.
+//!
+//! Our bwd artifacts recompute the module forward from (params, input), so
+//! holding (w^{t-lag}, h_in^{t-lag}) reproduces DDG's gradient exactly; for
+//! the *memory model* we charge the paper's semantics — the full per-layer
+//! activation stash a no-recompute implementation holds (see `memory()`).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::Tensor;
+use crate::util::Timer;
+
+use super::stack::ModuleStack;
+use super::strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+
+/// One stashed forward: the inputs DDG's delayed backward needs.
+struct Stash {
+    h_in: Tensor,
+    params: Vec<Tensor>,
+    labels: Option<Tensor>,
+}
+
+pub struct DdgTrainer {
+    stack: ModuleStack,
+    /// stash[k]: FIFO of in-flight forwards (front = oldest), len <= K-k.
+    stash: Vec<VecDeque<Stash>>,
+    pending_delta: Vec<Tensor>,
+    step: usize,
+}
+
+impl DdgTrainer {
+    pub fn new(stack: ModuleStack) -> DdgTrainer {
+        let kk = stack.k();
+        let pending_delta = (0..kk.saturating_sub(1))
+            .map(|k| Tensor::zeros(&stack.modules[k].spec.out_shape,
+                                   crate::runtime::DType::F32))
+            .collect();
+        DdgTrainer {
+            stash: (0..kk).map(|_| VecDeque::new()).collect(),
+            stack,
+            pending_delta,
+            step: 0,
+        }
+    }
+
+    fn lag(&self, k: usize) -> usize {
+        self.stack.k() - 1 - k
+    }
+}
+
+impl Trainer for DdgTrainer {
+    fn name(&self) -> &'static str {
+        "DDG"
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let kk = self.stack.k();
+        let mut timing = StepTiming::new(kk);
+        let mut timer = Timer::new();
+
+        // forward pass with full stashing (weights snapshotted: the delayed
+        // backward must differentiate the graph captured *now*)
+        let mut h = batch.input.clone();
+        for k in 0..kk {
+            self.stash[k].push_back(Stash {
+                h_in: h.clone(),
+                params: self.stack.modules[k].params.clone(),
+                labels: (k == kk - 1).then(|| batch.labels.clone()),
+            });
+            if k < kk - 1 {
+                h = self.stack.modules[k].forward(&h)?;
+                timing.fwd_ms[k] = timer.lap_ms();
+            }
+        }
+
+        // decoupled backward: module k consumes the stash from lag(k)
+        // iterations ago once the pipeline has filled that far.
+        let mut loss = f32::NAN;
+        for k in 0..kk {
+            let lag = self.lag(k);
+            if self.stash[k].len() <= lag && k < kk - 1 {
+                // pipeline still filling: nothing to do for this module yet
+                continue;
+            }
+            if k == kk - 1 {
+                let s = self.stash[k].pop_back().unwrap(); // lag 0: current
+                let out = self.stack.modules[k]
+                    .loss_backward(&s.h_in, s.labels.as_ref().unwrap())?;
+                loss = out.loss;
+                self.stack.update(k, &out.grads, lr)?;
+                if kk > 1 {
+                    self.pending_delta[k - 1] = out.delta_in.unwrap();
+                }
+            } else {
+                let s = self.stash[k].pop_front().unwrap(); // oldest in-flight
+                let delta = std::mem::replace(
+                    &mut self.pending_delta[k],
+                    Tensor::zeros(&self.stack.modules[k].spec.out_shape,
+                                  crate::runtime::DType::F32));
+                // differentiate the OLD graph: snapshot params + old input
+                let saved = std::mem::replace(&mut self.stack.modules[k].params, s.params);
+                let result = self.stack.modules[k].backward(&s.h_in, &delta);
+                self.stack.modules[k].params = saved;
+                let (grads, delta_in) = result?;
+                // stale gradient applied to CURRENT weights — DDG's defining move
+                self.stack.update(k, &grads, lr)?;
+                if k > 0 {
+                    self.pending_delta[k - 1] = delta_in.unwrap();
+                }
+            }
+            timing.bwd_ms[k] = timer.lap_ms();
+        }
+
+        self.step += 1;
+        Ok(StepStats { loss, timing })
+    }
+
+    fn memory(&self) -> MemoryReport {
+        // Paper semantics: a no-recompute DDG holds the module's *full*
+        // per-layer activations for every in-flight iteration.
+        let history = self.stack.modules.iter().enumerate()
+            .map(|(k, m)| m.spec.act_bytes * self.stash[k].len().max(1))
+            .sum::<usize>();
+        MemoryReport {
+            // the one-batch O(L) term is already inside `history` (factor >= 1)
+            activations: 0,
+            history,
+            deltas: self.pending_delta.iter().map(|d| d.size_bytes()).sum(),
+            weight_copies: self.stash.iter().flatten()
+                .map(|s| s.params.iter().map(|p| p.size_bytes()).sum::<usize>())
+                .sum(),
+            ..Default::default()
+        }
+    }
+
+    fn stack(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    fn stack_mut(&mut self) -> &mut ModuleStack {
+        &mut self.stack
+    }
+}

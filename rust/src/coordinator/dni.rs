@@ -1,0 +1,115 @@
+//! DNI baseline — Decoupled Neural Interfaces with synthetic gradients
+//! (Jaderberg et al., 2016).
+//!
+//! Each module boundary carries a small synthesizer network S_k that
+//! predicts the error gradient from the boundary activation: module k
+//! updates immediately with δ̂ = S_k(h_k) instead of waiting for the real
+//! backward signal. The synthesizers themselves train on the delta emitted
+//! by the module above (bootstrapped targets, as in the original paper).
+//!
+//! The paper's finding (Fig 4): with deep networks the small synthesizer
+//! cannot track the true gradient and training diverges — our harness
+//! reproduces exactly that failure shape.
+
+use anyhow::{Context, Result};
+
+use crate::data::Batch;
+use crate::optim::SgdMomentum;
+use crate::runtime::{Engine, SynthRuntime, Tensor};
+use crate::util::Timer;
+
+use super::stack::ModuleStack;
+use super::strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+
+pub struct DniTrainer {
+    stack: ModuleStack,
+    synths: Vec<SynthRuntime>,
+    synth_opts: Vec<SgdMomentum>,
+    /// Stepsize for synthesizer training (DNI uses a separate, smaller lr).
+    pub synth_lr: f32,
+}
+
+impl DniTrainer {
+    pub fn new(engine: &Engine, stack: ModuleStack) -> Result<DniTrainer> {
+        let kk = stack.k();
+        let mut synths = Vec::with_capacity(kk.saturating_sub(1));
+        for k in 0..kk.saturating_sub(1) {
+            synths.push(SynthRuntime::load(engine, &stack.manifest, k)
+                .with_context(|| format!("loading synthesizer {k} — was the \
+                    artifact built with synthesizers? (aot.py without --no-synth)"))?);
+        }
+        let synth_opts = synths.iter()
+            .map(|s| SgdMomentum::new(&s.params, 0.9, 0.0))
+            .collect();
+        Ok(DniTrainer { stack, synths, synth_opts, synth_lr: 1e-4 })
+    }
+}
+
+impl Trainer for DniTrainer {
+    fn name(&self) -> &'static str {
+        "DNI"
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let kk = self.stack.k();
+        let mut timing = StepTiming::new(kk);
+        let mut timer = Timer::new();
+
+        // forward, keeping boundary activations
+        let mut hs: Vec<Tensor> = Vec::with_capacity(kk);
+        hs.push(batch.input.clone());
+        for k in 0..kk - 1 {
+            let h = self.stack.modules[k].forward(&hs[k])?;
+            timing.fwd_ms[k] = timer.lap_ms();
+            hs.push(h);
+        }
+
+        // every module updates immediately from its synthetic gradient;
+        // delta targets flow down one boundary per module backward.
+        let out = self.stack.modules[kk - 1].loss_backward(&hs[kk - 1], &batch.labels)?;
+        let loss = out.loss;
+        self.stack.update(kk - 1, &out.grads, lr)?;
+        timing.bwd_ms[kk - 1] = timer.lap_ms();
+        let mut target = out.delta_in;
+
+        for k in (0..kk - 1).rev() {
+            // 1) train synthesizer k on (h_k, true-ish delta from above)
+            let tgt = target.take().context("DNI: missing target delta")?;
+            let (_mse, sgrads) = self.synths[k].train_grads(&hs[k + 1], &tgt)?;
+            self.synth_opts[k].step(&mut self.synths[k].params, &sgrads, self.synth_lr)?;
+            // 2) module k updates from the (fresh) synthetic gradient
+            let delta_hat = self.synths[k].predict(&hs[k + 1])?;
+            timing.aux_ms[k] = timer.lap_ms();
+            let (grads, delta_in) = self.stack.modules[k].backward(&hs[k], &delta_hat)?;
+            self.stack.update(k, &grads, lr)?;
+            timing.bwd_ms[k] = timer.lap_ms();
+            target = delta_in;
+        }
+
+        Ok(StepStats { loss, timing })
+    }
+
+    fn memory(&self) -> MemoryReport {
+        let synth_params: usize = self.synths.iter()
+            .flat_map(|s| s.params.iter().map(|p| p.size_bytes()))
+            .sum();
+        // synthesizer activations: ~one boundary-sized map per synth layer
+        // (two hidden + one output, the paper's L_s = 3 architecture)
+        let synth_acts: usize = self.stack.modules.iter().take(self.synths.len())
+            .map(|m| m.spec.out_bytes() * 3)
+            .sum();
+        MemoryReport {
+            activations: self.stack.activation_bytes(),
+            synth: synth_params + synth_acts,
+            ..Default::default()
+        }
+    }
+
+    fn stack(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    fn stack_mut(&mut self) -> &mut ModuleStack {
+        &mut self.stack
+    }
+}

@@ -1,0 +1,161 @@
+//! Features Replay (Algorithm 1 of the paper) — the system contribution.
+//!
+//! Play: the forward pass runs bottom-up and every module stores its input
+//! in a replay ring of capacity K-k (module k, 0-indexed).
+//!
+//! Replay: all K module backwards are *mutually independent* at iteration t:
+//! module k re-forwards (replays) its input from iteration t-(K-1-k) through
+//! its **current** weights and backpropagates the stale error gradient
+//! δ_k^t it received from module k+1 at the end of iteration t-1 — which
+//! refers to exactly that replayed input index. The last module uses the
+//! current batch and the true loss gradient.
+//!
+//! This file is the faithful single-timeline implementation (dependency
+//! structure identical to the paper; on K real devices the replay section
+//! runs concurrently — see `parallel.rs` for the threaded version and
+//! `pipeline_sim.rs` for the K-device timing model).
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::runtime::Tensor;
+use crate::util::Timer;
+
+use super::history::ReplayBuffer;
+use super::stack::ModuleStack;
+use super::strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+
+pub struct FrTrainer {
+    stack: ModuleStack,
+    /// history[k]: replay ring for module k's inputs (capacity K-k).
+    history: Vec<ReplayBuffer>,
+    /// pending_delta[k]: δ for module k produced by module k+1 last iter.
+    pending_delta: Vec<Tensor>,
+    /// Skip updates while a module's replay slot is still the zero prefill
+    /// (paper sets h := 0; updating on zeros with zero deltas is a no-op for
+    /// everything except biases, so this is equivalent and cheaper).
+    pub skip_warmup_updates: bool,
+    step: usize,
+}
+
+impl FrTrainer {
+    /// The underlying stack (sigma probe needs reference BP gradients).
+    pub fn stack_ref(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    pub fn new(stack: ModuleStack) -> FrTrainer {
+        let kk = stack.k();
+        let history = (0..kk)
+            .map(|k| {
+                let spec = &stack.modules[k].spec;
+                ReplayBuffer::new(kk - k, &spec.in_shape, spec.in_dtype)
+            })
+            .collect();
+        let pending_delta = (0..kk.saturating_sub(1))
+            .map(|k| Tensor::zeros(&stack.modules[k].spec.out_shape,
+                                   crate::runtime::DType::F32))
+            .collect();
+        FrTrainer { stack, history, pending_delta, skip_warmup_updates: true, step: 0 }
+    }
+
+    /// lag of module k: how stale its replayed input is.
+    fn lag(&self, k: usize) -> usize {
+        self.stack.k() - 1 - k
+    }
+
+    /// One iteration, optionally capturing the per-module gradients before
+    /// they are applied (the sigma probe uses this).
+    pub fn step_capture(&mut self, batch: &Batch, lr: f32,
+                        capture: Option<&mut Vec<Vec<Tensor>>>)
+                        -> Result<StepStats> {
+        let kk = self.stack.k();
+        let mut timing = StepTiming::new(kk);
+        let mut timer = Timer::new();
+
+        // ---- Play: forward pass, storing inputs ------------------------
+        // Inputs are moved into the history rings rather than cloned; the
+        // last module's forward is fused into its loss head below.
+        let mut h = batch.input.clone();
+        for k in 0..kk - 1 {
+            let out = self.stack.modules[k].forward(&h)?;
+            self.history[k].push(h);
+            h = out;
+            timing.fwd_ms[k] = timer.lap_ms();
+        }
+        self.history[kk - 1].push(h);
+
+        // ---- Replay: independent per-module backward + update ----------
+        // Processing k ascending keeps the read of pending_delta[k] (written
+        // at t-1) before module k+1 overwrites it for t+1.
+        let mut captured: Vec<Vec<Tensor>> = Vec::new();
+        let mut loss = f32::NAN;
+        for k in 0..kk {
+            let lag = self.lag(k);
+            let warmed = self.history[k].warmed(lag);
+            if k == kk - 1 {
+                // current input, true loss gradient (lag 0)
+                let h_in = self.history[k].stale(0).clone();
+                let out = self.stack.modules[k].loss_backward(&h_in, &batch.labels)?;
+                loss = out.loss;
+                if capture.is_some() {
+                    captured.push(out.grads.clone());
+                }
+                self.stack.update(k, &out.grads, lr)?;
+                if kk > 1 {
+                    self.pending_delta[k - 1] = out.delta_in.unwrap();
+                }
+            } else {
+                let h_replay = self.history[k].stale(lag).clone();
+                let delta = std::mem::replace(
+                    &mut self.pending_delta[k],
+                    Tensor::zeros(&self.stack.modules[k].spec.out_shape,
+                                  crate::runtime::DType::F32));
+                let (grads, delta_in) = self.stack.modules[k].backward(&h_replay, &delta)?;
+                if capture.is_some() {
+                    captured.push(grads.clone());
+                }
+                if warmed || !self.skip_warmup_updates {
+                    self.stack.update(k, &grads, lr)?;
+                }
+                if k > 0 {
+                    self.pending_delta[k - 1] = delta_in.unwrap();
+                }
+            }
+            timing.bwd_ms[k] = timer.lap_ms();
+        }
+        if let Some(out) = capture {
+            *out = captured;
+        }
+
+        self.step += 1;
+        Ok(StepStats { loss, timing })
+    }
+}
+
+impl Trainer for FrTrainer {
+    fn name(&self) -> &'static str {
+        "FR"
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        self.step_capture(batch, lr, None)
+    }
+
+    fn memory(&self) -> MemoryReport {
+        MemoryReport {
+            activations: self.stack.activation_bytes(),
+            history: self.history.iter().map(|h| h.bytes()).sum(),
+            deltas: self.pending_delta.iter().map(|d| d.size_bytes()).sum(),
+            ..Default::default()
+        }
+    }
+
+    fn stack(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    fn stack_mut(&mut self) -> &mut ModuleStack {
+        &mut self.stack
+    }
+}

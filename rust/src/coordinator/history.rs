@@ -1,0 +1,117 @@
+//! Feature-replay history buffer.
+//!
+//! Module k (0-indexed) replays, at iteration t, the input it received at
+//! iteration t - lag where lag = K-1-k — so it must hold lag+1 = K-k inputs
+//! (the paper's "history of size K-k+1" with 1-indexed modules). The buffer
+//! is a fixed ring pre-filled with zeros: reads before the pipeline fills
+//! return the zero tensor, exactly the paper's h^{t+k-K<0} := 0 convention.
+
+use crate::runtime::tensor::{DType, Tensor};
+
+pub struct ReplayBuffer {
+    ring: Vec<Tensor>,
+    head: usize, // slot the *next* push writes
+    pushes: usize,
+}
+
+impl ReplayBuffer {
+    /// `capacity` = lag + 1 slots, pre-filled with zeros of `shape`.
+    pub fn new(capacity: usize, shape: &[usize], dtype: DType) -> ReplayBuffer {
+        assert!(capacity >= 1, "replay buffer needs at least one slot");
+        ReplayBuffer {
+            ring: (0..capacity).map(|_| Tensor::zeros(shape, dtype)).collect(),
+            head: 0,
+            pushes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Bytes held by the buffer (memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.ring.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Store the input observed this iteration (Play step).
+    pub fn push(&mut self, t: Tensor) {
+        self.ring[self.head] = t;
+        self.head = (self.head + 1) % self.ring.len();
+        self.pushes += 1;
+    }
+
+    /// The input from `lag` iterations ago (0 = most recent push). Returns
+    /// the pre-filled zero tensor while the pipeline is still warming up.
+    pub fn stale(&self, lag: usize) -> &Tensor {
+        assert!(lag < self.ring.len(), "lag {lag} >= capacity {}", self.ring.len());
+        let idx = (self.head + self.ring.len() - 1 - lag) % self.ring.len();
+        &self.ring[idx]
+    }
+
+    /// True once `stale(lag)` refers to a real (pushed) input.
+    pub fn warmed(&self, lag: usize) -> bool {
+        self.pushes > lag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Tensor {
+        Tensor::from_f32(vec![1], vec![v]).unwrap()
+    }
+
+    #[test]
+    fn zero_prefill_before_warmup() {
+        let buf = ReplayBuffer::new(3, &[1], DType::F32);
+        assert_eq!(buf.stale(0).f32s(), &[0.0]);
+        assert_eq!(buf.stale(2).f32s(), &[0.0]);
+        assert!(!buf.warmed(0));
+    }
+
+    #[test]
+    fn stale_returns_lagged_input() {
+        let mut buf = ReplayBuffer::new(3, &[1], DType::F32);
+        for i in 1..=5 {
+            buf.push(t(i as f32));
+        }
+        assert_eq!(buf.stale(0).f32s(), &[5.0]);
+        assert_eq!(buf.stale(1).f32s(), &[4.0]);
+        assert_eq!(buf.stale(2).f32s(), &[3.0]);
+    }
+
+    #[test]
+    fn warmup_threshold_per_lag() {
+        let mut buf = ReplayBuffer::new(3, &[1], DType::F32);
+        buf.push(t(1.0));
+        assert!(buf.warmed(0));
+        assert!(!buf.warmed(1));
+        buf.push(t(2.0));
+        assert!(buf.warmed(1));
+        assert!(!buf.warmed(2));
+    }
+
+    #[test]
+    fn capacity_one_behaves_like_latest() {
+        let mut buf = ReplayBuffer::new(1, &[1], DType::F32);
+        buf.push(t(7.0));
+        assert_eq!(buf.stale(0).f32s(), &[7.0]);
+        buf.push(t(8.0));
+        assert_eq!(buf.stale(0).f32s(), &[8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lag_beyond_capacity_panics() {
+        let buf = ReplayBuffer::new(2, &[1], DType::F32);
+        buf.stale(2);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let buf = ReplayBuffer::new(4, &[2, 3], DType::F32);
+        assert_eq!(buf.bytes(), 4 * 6 * 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`fr`]: Features Replay (Algorithm 1), single-timeline implementation
+//! - [`parallel`]: the threaded K-worker FR deployment (one PJRT client per
+//!   module, channels for features/deltas)
+//! - [`bp`] / [`ddg`] / [`dni`]: the paper's comparison methods
+//! - [`history`]: replay ring buffers (the K-k+1 input history)
+//! - [`stack`]: shared module-runtime + optimizer state
+//! - [`memory`]: Table 1 / Fig 5 activation-memory model
+//! - [`sigma`]: Assumption 1 / Fig 3 sufficient-direction probe
+//! - [`pipeline_sim`]: K-device makespan model for the timing figures
+
+pub mod bp;
+pub mod ddg;
+pub mod dni;
+pub mod fr;
+pub mod history;
+pub mod memory;
+pub mod parallel;
+pub mod pipeline_sim;
+pub mod sigma;
+pub mod stack;
+pub mod strategy;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::data::DataSource;
+use crate::metrics::{Curve, CurvePoint};
+use crate::optim::LrSchedule;
+use crate::runtime::{Engine, Manifest};
+use crate::util::Timer;
+
+pub use memory::Algo;
+pub use stack::{ModuleStack, TrainConfig};
+pub use strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+
+/// Build a trainer for `algo` from an artifact directory.
+pub fn make_trainer(engine: &Engine, artifact_dir: &Path, algo: Algo,
+                    config: TrainConfig) -> Result<Box<dyn Trainer>> {
+    let manifest = Manifest::load(artifact_dir)?;
+    let stack = ModuleStack::load(engine, manifest, config)?;
+    Ok(match algo {
+        Algo::Bp => Box::new(bp::BpTrainer::new(stack)),
+        Algo::Fr => Box::new(fr::FrTrainer::new(stack)),
+        Algo::Ddg => Box::new(ddg::DdgTrainer::new(stack)),
+        Algo::Dni => Box::new(dni::DniTrainer::new(engine, stack)?),
+    })
+}
+
+pub fn parse_algo(s: &str) -> Result<Algo> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "bp" => Algo::Bp,
+        "fr" => Algo::Fr,
+        "ddg" => Algo::Ddg,
+        "dni" => Algo::Dni,
+        other => bail!("unknown algorithm {other:?} (bp|fr|ddg|dni)"),
+    })
+}
+
+/// Options for a recorded training run.
+pub struct RunOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub steps_per_epoch: usize,
+    pub verbose: bool,
+    /// Abort (and mark the curve diverged) if train loss exceeds this.
+    pub divergence_loss: f64,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions {
+            steps: 200,
+            eval_every: 25,
+            eval_batches: 4,
+            steps_per_epoch: 50,
+            verbose: false,
+            divergence_loss: 1e4,
+        }
+    }
+}
+
+/// Outcome of `run_training`, including the per-module cost profile the
+/// pipeline simulator consumes.
+pub struct RunResult {
+    pub curve: Curve,
+    pub timings: Vec<StepTiming>,
+    pub diverged: bool,
+    pub final_memory: MemoryReport,
+}
+
+/// The shared training loop every experiment harness drives: step, schedule,
+/// periodic eval, curve recording, divergence detection.
+pub fn run_training(trainer: &mut dyn Trainer, data: &mut DataSource,
+                    schedule: &dyn LrSchedule, opts: &RunOptions) -> Result<RunResult> {
+    let mut curve = Curve::new(trainer.name());
+    let mut timings = Vec::with_capacity(opts.steps);
+    let timer = Timer::new();
+    let mut diverged = false;
+    let mut sim_accum = 0.0;
+
+    for step in 0..opts.steps {
+        let batch = data.train_batch();
+        let lr = schedule.lr(step);
+        let stats = trainer.train_step(&batch, lr)?;
+
+        // accumulate simulated K-device time from this step's measured costs
+        let costs = pipeline_sim::MeasuredCosts::from_timings(
+            std::slice::from_ref(&stats.timing),
+            boundary_bytes(trainer.stack()),
+            param_bytes(trainer.stack()));
+        let comm = pipeline_sim::CommModel::default();
+        sim_accum += match trainer.name() {
+            "BP" => pipeline_sim::bp_iteration_ms(&costs, &comm),
+            _ => pipeline_sim::decoupled_iteration_ms(&costs, &comm),
+        };
+
+        if !stats.loss.is_finite() || stats.loss as f64 > opts.divergence_loss {
+            diverged = true;
+            if opts.verbose {
+                println!("[{}] step {step}: DIVERGED (loss {})", trainer.name(), stats.loss);
+            }
+            curve.push(CurvePoint {
+                step,
+                epoch: step as f64 / opts.steps_per_epoch as f64,
+                wall_ms: timer.elapsed_ms(),
+                train_loss: f64::INFINITY,
+                test_loss: f64::INFINITY,
+                test_err: 1.0,
+                sim_ms: sim_accum,
+            });
+            break;
+        }
+        timings.push(stats.timing.clone());
+
+        let last = step + 1 == opts.steps;
+        if step % opts.eval_every == 0 || last {
+            let (test_loss, test_err) = trainer.stack().eval(data, opts.eval_batches)?;
+            curve.push(CurvePoint {
+                step,
+                epoch: step as f64 / opts.steps_per_epoch as f64,
+                wall_ms: timer.elapsed_ms(),
+                train_loss: stats.loss as f64,
+                test_loss,
+                test_err,
+                sim_ms: sim_accum,
+            });
+            if opts.verbose {
+                println!("[{}] step {step:4} lr {lr:.4} train_loss {:.4} \
+                          test_loss {test_loss:.4} test_err {test_err:.3}",
+                         trainer.name(), stats.loss);
+            }
+        }
+    }
+
+    Ok(RunResult {
+        curve,
+        timings,
+        diverged,
+        final_memory: trainer.memory(),
+    })
+}
+
+/// Bytes crossing each module boundary (for the comm model).
+pub fn boundary_bytes(stack: &ModuleStack) -> Vec<usize> {
+    stack.modules.iter().take(stack.k().saturating_sub(1))
+        .map(|m| m.spec.out_bytes())
+        .collect()
+}
+
+/// Total parameter bytes (data-parallel allreduce volume).
+pub fn param_bytes(stack: &ModuleStack) -> usize {
+    stack.modules.iter()
+        .map(|m| m.params.iter().map(|p| p.size_bytes()).sum::<usize>())
+        .sum()
+}

@@ -1,0 +1,296 @@
+//! Threaded FR coordinator: one OS thread per module, each owning its own
+//! PJRT client (clients are not `Send`; one client per worker also mirrors
+//! the paper's one-GPU-per-module deployment).
+//!
+//! Dataflow per iteration (exactly Algorithm 1's topology):
+//!   leader --input--> W0 --h--> W1 --h--> ... --h--> W(K-1)   (Play)
+//!   leader --Backward(lr)--> all workers concurrently          (Replay)
+//!   Wk --delta--> W(k-1)   (consumed at the *next* iteration)
+//!   Wk --done(timing)--> leader
+//!
+//! On the 1-core testbed the threads interleave rather than overlap; the
+//! correctness (identical gradients to `FrTrainer`) is what this module
+//! demonstrates, and it is covered by an integration test asserting
+//! parity with the single-timeline implementation.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Batch;
+use crate::metrics::xent_and_acc;
+use crate::optim::SgdMomentum;
+use crate::runtime::{DType, Engine, Manifest, ModuleRuntime, Tensor};
+use crate::util::Timer;
+
+use super::history::ReplayBuffer;
+use super::stack::TrainConfig;
+use super::strategy::{StepStats, StepTiming};
+
+enum Command {
+    /// Play phase: receive input (from leader or lower worker), store it,
+    /// forward, hand off. `eval` skips the history push.
+    Forward { eval: bool },
+    /// Replay phase: backward with stored stale input + pending delta.
+    Backward { lr: f32 },
+    Shutdown,
+}
+
+struct WorkerDone {
+    worker: usize,
+    fwd_ms: f64,
+    bwd_ms: f64,
+    loss: Option<f32>,
+    logits: Option<Tensor>,
+    history_bytes: usize,
+}
+
+struct WorkerHandles {
+    cmd_tx: Sender<Command>,
+    join: JoinHandle<Result<()>>,
+}
+
+pub struct ParallelFr {
+    workers: Vec<WorkerHandles>,
+    /// Leader-side entry: input feed to worker 0.
+    input_tx: Sender<(Tensor, Option<Tensor>)>,
+    done_rx: Receiver<WorkerDone>,
+    k: usize,
+    step: usize,
+}
+
+impl ParallelFr {
+    pub fn spawn(artifact_dir: std::path::PathBuf, config: TrainConfig) -> Result<ParallelFr> {
+        // Validate the manifest on the leader before spawning anything.
+        let manifest = Manifest::load(&artifact_dir)?;
+        let kk = manifest.k;
+
+        // activation channels: leader -> W0 -> W1 ... (payload, labels-for-last)
+        let mut act_txs: Vec<Sender<(Tensor, Option<Tensor>)>> = Vec::new();
+        let mut act_rxs: Vec<Receiver<(Tensor, Option<Tensor>)>> = Vec::new();
+        for _ in 0..kk {
+            let (tx, rx) = channel();
+            act_txs.push(tx);
+            act_rxs.push(rx);
+        }
+        // delta channels: W(k+1) -> W(k)
+        let mut delta_txs: Vec<Option<Sender<Tensor>>> =
+            (0..kk).map(|_| None).collect();
+        let mut delta_rxs: Vec<Option<Receiver<Tensor>>> =
+            (0..kk).map(|_| None).collect();
+        for k in 0..kk.saturating_sub(1) {
+            let (tx, rx) = channel();
+            delta_txs[k + 1] = Some(tx); // worker k+1 sends downward
+            delta_rxs[k] = Some(rx);     // worker k receives
+        }
+        let (done_tx, done_rx) = channel();
+        let input_tx = act_txs[0].clone();
+
+        let mut workers = Vec::with_capacity(kk);
+        let mut act_rxs = act_rxs.into_iter();
+        // worker k forwards to k+1 (None for the last)
+        let mut next_txs: Vec<Option<Sender<(Tensor, Option<Tensor>)>>> =
+            act_txs.iter().skip(1).cloned().map(Some).collect();
+        next_txs.push(None);
+
+        for k in 0..kk {
+            let (cmd_tx, cmd_rx) = channel::<Command>();
+            let act_rx = act_rxs.next().unwrap();
+            let next_tx = next_txs[k].take();
+            let delta_tx = delta_txs[k].take();
+            let delta_rx = delta_rxs[k].take();
+            let done = done_tx.clone();
+            let dir = artifact_dir.clone();
+            let cfg = config.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("fr-worker-{k}"))
+                .spawn(move || {
+                    worker_main(k, dir, cfg, cmd_rx, act_rx, next_tx,
+                                delta_tx, delta_rx, done)
+                })
+                .context("spawning worker thread")?;
+            workers.push(WorkerHandles { cmd_tx, join });
+        }
+
+        Ok(ParallelFr { workers, input_tx, done_rx, k: kk, step: 0 })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    fn broadcast(&self, make: impl Fn() -> Command) -> Result<()> {
+        for w in &self.workers {
+            w.cmd_tx.send(make()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+        Ok(())
+    }
+
+    /// One Algorithm-1 iteration across the worker fleet.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        self.broadcast(|| Command::Forward { eval: false })?;
+        self.input_tx.send((batch.input.clone(), Some(batch.labels.clone())))
+            .map_err(|_| anyhow::anyhow!("worker 0 hung up"))?;
+        self.broadcast(|| Command::Backward { lr })?;
+
+        let mut timing = StepTiming::new(self.k);
+        let mut loss = f32::NAN;
+        let mut history = 0usize;
+        for _ in 0..self.k {
+            let d: WorkerDone = self.done_rx.recv().context("worker died mid-step")?;
+            timing.fwd_ms[d.worker] = d.fwd_ms;
+            timing.bwd_ms[d.worker] = d.bwd_ms;
+            if let Some(l) = d.loss {
+                loss = l;
+            }
+            history += d.history_bytes;
+        }
+        let _ = history;
+        self.step += 1;
+        Ok(StepStats { loss, timing })
+    }
+
+    /// Forward-only pass returning (mean loss, error rate) on one batch.
+    pub fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
+        self.broadcast(|| Command::Forward { eval: true })?;
+        self.input_tx.send((batch.input.clone(), Some(batch.labels.clone())))
+            .map_err(|_| anyhow::anyhow!("worker 0 hung up"))?;
+        let mut logits = None;
+        for _ in 0..self.k {
+            let d = self.done_rx.recv().context("worker died mid-eval")?;
+            if d.logits.is_some() {
+                logits = d.logits;
+            }
+        }
+        let logits = logits.context("no logits returned from eval")?;
+        let (l, a) = xent_and_acc(&logits, &batch.labels);
+        Ok((l, 1.0 - a))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(Command::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            match w.join.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("worker panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    k: usize,
+    artifact_dir: std::path::PathBuf,
+    config: TrainConfig,
+    cmd_rx: Receiver<Command>,
+    act_rx: Receiver<(Tensor, Option<Tensor>)>,
+    next_tx: Option<Sender<(Tensor, Option<Tensor>)>>,
+    delta_tx: Option<Sender<Tensor>>,
+    delta_rx: Option<Receiver<Tensor>>,
+    done: Sender<WorkerDone>,
+) -> Result<()> {
+    // Each worker builds its own PJRT client + module runtime ("one GPU").
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(&artifact_dir)?;
+    let kk = manifest.k;
+    let mut module = ModuleRuntime::load(&engine, &manifest, k)?;
+    let mut opt = SgdMomentum::new(&module.params, config.momentum, config.weight_decay);
+    let lag = kk - 1 - k;
+    let mut history = ReplayBuffer::new(kk - k, &module.spec.in_shape, module.spec.in_dtype);
+    let mut pending_delta = Tensor::zeros(&module.spec.out_shape, DType::F32);
+    let mut labels: Option<Tensor> = None;
+    let is_last = k == kk - 1;
+    let mut train_steps = 0usize;
+
+    loop {
+        match cmd_rx.recv() {
+            Err(_) | Ok(Command::Shutdown) => return Ok(()),
+            Ok(Command::Forward { eval }) => {
+                let mut timer = Timer::new();
+                let (h, lbl) = act_rx.recv().context("activation feed closed")?;
+                if eval {
+                    if is_last {
+                        let logits = module.forward(&h)?;
+                        done.send(WorkerDone {
+                            worker: k, fwd_ms: timer.lap_ms(), bwd_ms: 0.0,
+                            loss: None, logits: Some(logits),
+                            history_bytes: history.bytes(),
+                        }).ok();
+                    } else {
+                        let out = module.forward(&h)?;
+                        next_tx.as_ref().unwrap().send((out, lbl)).ok();
+                        done.send(WorkerDone {
+                            worker: k, fwd_ms: timer.lap_ms(), bwd_ms: 0.0,
+                            loss: None, logits: None,
+                            history_bytes: history.bytes(),
+                        }).ok();
+                    }
+                    continue;
+                }
+                history.push(h.clone());
+                if is_last {
+                    labels = lbl;
+                } else {
+                    let out = module.forward(&h)?;
+                    next_tx.as_ref().unwrap().send((out, lbl)).ok();
+                }
+                // fwd timing is reported with the backward's done message
+                let fwd_ms = timer.lap_ms();
+                // stash fwd time in pending slot via thread-local pattern:
+                // simplest is to piggyback on the Backward handler below.
+                FWD_MS.with(|c| c.set(fwd_ms));
+            }
+            Ok(Command::Backward { lr }) => {
+                let mut timer = Timer::new();
+                let mut loss = None;
+                if is_last {
+                    let h_in = history.stale(0).clone();
+                    let out = module.loss_backward(
+                        &h_in, labels.as_ref().context("no labels stored")?)?;
+                    loss = Some(out.loss);
+                    opt.step(&mut module.params, &out.grads, lr)?;
+                    if let (Some(tx), Some(d)) = (&delta_tx, out.delta_in) {
+                        tx.send(d).ok();
+                    }
+                } else {
+                    // Consume exactly ONE delta per iteration — the one the
+                    // upper worker emitted at iteration t-1 (FIFO discipline
+                    // keeps Algorithm 1's staleness exact even though all
+                    // workers run concurrently). Iteration 0 has none yet.
+                    if train_steps > 0 {
+                        if let Some(rx) = &delta_rx {
+                            pending_delta = rx.recv()
+                                .context("delta feed closed")?;
+                        }
+                    }
+                    let h_replay = history.stale(lag).clone();
+                    let (grads, delta_in) = module.backward(&h_replay, &pending_delta)?;
+                    if history.warmed(lag) {
+                        opt.step(&mut module.params, &grads, lr)?;
+                    }
+                    if let (Some(tx), Some(d)) = (&delta_tx, delta_in) {
+                        tx.send(d).ok();
+                    }
+                }
+                train_steps += 1;
+                done.send(WorkerDone {
+                    worker: k,
+                    fwd_ms: FWD_MS.with(|c| c.get()),
+                    bwd_ms: timer.lap_ms(),
+                    loss,
+                    logits: None,
+                    history_bytes: history.bytes(),
+                }).ok();
+            }
+        }
+    }
+}
+
+thread_local! {
+    static FWD_MS: std::cell::Cell<f64> = const { std::cell::Cell::new(0.0) };
+}

@@ -1,0 +1,209 @@
+//! K-device pipeline schedule simulator (DESIGN.md substitution 1).
+//!
+//! The testbed has one CPU core, so the paper's multi-GPU wall-clock results
+//! (Fig 4 row 2, Fig 6) are reproduced by computing the *makespan* of each
+//! algorithm's per-iteration dependency graph on K simulated devices, fed
+//! with *measured* per-module compute costs from the real runtime:
+//!
+//! - BP (model-parallel): fwd chain + locked bwd chain — strictly sequential
+//!   across devices: T = sum(fwd) + sum(bwd) + 2(K-1) boundary transfers.
+//! - FR / DDG: fwd chain still sequential, but all K backwards run
+//!   concurrently: T = sum(fwd) + max_k(bwd_k) + transfers.
+//! - DNI: like FR with per-module synthesizer overhead folded in.
+//! - BP + data parallelism over n devices: compute scales 1/n (per-sample
+//!   linearity of the measured costs), plus a ring-allreduce on gradients.
+//!
+//! Communication model: latency + bytes/bandwidth per transfer (defaults are
+//! PCIe-3-x16-ish, the paper's Titan X testbed interconnect).
+
+use super::strategy::StepTiming;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    /// One-way transfer setup latency (ms).
+    pub latency_ms: f64,
+    /// Effective bandwidth (bytes per ms).
+    pub bytes_per_ms: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        // ~8 GB/s effective PCIe gen3 x16, 30 us launch+sync latency
+        CommModel { latency_ms: 0.03, bytes_per_ms: 8e6 }
+    }
+}
+
+impl CommModel {
+    pub fn transfer_ms(&self, bytes: usize) -> f64 {
+        self.latency_ms + bytes as f64 / self.bytes_per_ms
+    }
+}
+
+/// Average per-module costs measured on the real runtime.
+#[derive(Clone, Debug)]
+pub struct MeasuredCosts {
+    pub fwd_ms: Vec<f64>,
+    pub bwd_ms: Vec<f64>,
+    pub aux_ms: Vec<f64>,
+    /// Activation bytes crossing boundary k -> k+1.
+    pub boundary_bytes: Vec<usize>,
+    /// Total parameter bytes (data-parallel allreduce volume).
+    pub param_bytes: usize,
+}
+
+impl MeasuredCosts {
+    /// Average a set of recorded step timings (skipping warmup steps is the
+    /// caller's job).
+    pub fn from_timings(timings: &[StepTiming], boundary_bytes: Vec<usize>,
+                        param_bytes: usize) -> MeasuredCosts {
+        let k = timings.first().map(|t| t.fwd_ms.len()).unwrap_or(0);
+        let n = timings.len().max(1) as f64;
+        let mut fwd = vec![0.0; k];
+        let mut bwd = vec![0.0; k];
+        let mut aux = vec![0.0; k];
+        for t in timings {
+            for i in 0..k {
+                fwd[i] += t.fwd_ms[i] / n;
+                bwd[i] += t.bwd_ms[i] / n;
+                aux[i] += t.aux_ms[i] / n;
+            }
+        }
+        MeasuredCosts { fwd_ms: fwd, bwd_ms: bwd, aux_ms: aux, boundary_bytes, param_bytes }
+    }
+}
+
+/// Per-iteration makespan (ms) of backward-locked model-parallel BP.
+pub fn bp_iteration_ms(c: &MeasuredCosts, comm: &CommModel) -> f64 {
+    let compute: f64 = c.fwd_ms.iter().sum::<f64>() + c.bwd_ms.iter().sum::<f64>();
+    // each boundary crossed twice (activation up, delta down)
+    let transfers: f64 = c.boundary_bytes.iter()
+        .map(|&b| 2.0 * comm.transfer_ms(b))
+        .sum();
+    compute + transfers
+}
+
+/// Per-iteration makespan of FR (and DDG — same dependency shape): the
+/// forward chain is sequential, every backward runs concurrently, and the
+/// delta hand-off overlaps the next iteration (it is consumed next step).
+pub fn decoupled_iteration_ms(c: &MeasuredCosts, comm: &CommModel) -> f64 {
+    let fwd: f64 = c.fwd_ms.iter().sum();
+    let up_transfers: f64 = c.boundary_bytes.iter()
+        .map(|&b| comm.transfer_ms(b))
+        .sum();
+    let slowest_bwd = c.bwd_ms.iter().zip(&c.aux_ms)
+        .map(|(b, a)| b + a)
+        .fold(0.0, f64::max);
+    fwd + up_transfers + slowest_bwd
+}
+
+/// Per-iteration makespan of BP with data parallelism over `n` replicas:
+/// compute scales 1/n; ring allreduce moves 2 x params x (n-1)/n bytes.
+pub fn bp_data_parallel_ms(c: &MeasuredCosts, comm: &CommModel, n: usize) -> f64 {
+    let compute: f64 = (c.fwd_ms.iter().sum::<f64>() + c.bwd_ms.iter().sum::<f64>())
+        / n as f64;
+    if n <= 1 {
+        return compute;
+    }
+    let volume = 2.0 * c.param_bytes as f64 * (n - 1) as f64 / n as f64;
+    let allreduce = 2.0 * (n - 1) as f64 * comm.latency_ms + volume / comm.bytes_per_ms;
+    compute + allreduce
+}
+
+/// Headline number: FR speedup over locked BP at these measured costs.
+pub fn fr_speedup(c: &MeasuredCosts, comm: &CommModel) -> f64 {
+    bp_iteration_ms(c, comm) / decoupled_iteration_ms(c, comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(fwd: Vec<f64>, bwd: Vec<f64>) -> MeasuredCosts {
+        let k = fwd.len();
+        MeasuredCosts {
+            fwd_ms: fwd,
+            bwd_ms: bwd,
+            aux_ms: vec![0.0; k],
+            boundary_bytes: vec![0; k.saturating_sub(1)],
+            param_bytes: 0,
+        }
+    }
+
+    fn no_comm() -> CommModel {
+        CommModel { latency_ms: 0.0, bytes_per_ms: 1e30 }
+    }
+
+    #[test]
+    fn perfectly_balanced_speedup_approaches_ideal() {
+        // fwd f per module, bwd 2f per module (the 1:2 fwd:bwd ratio the
+        // paper cites): BP = K(f + 2f) = 3Kf; FR = Kf + 2f.
+        let k = 4;
+        let c = costs(vec![1.0; k], vec![2.0; k]);
+        let comm = no_comm();
+        assert!((bp_iteration_ms(&c, &comm) - 12.0).abs() < 1e-9);
+        assert!((decoupled_iteration_ms(&c, &comm) - 6.0).abs() < 1e-9);
+        assert!((fr_speedup(&c, &comm) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_grows_with_k() {
+        let comm = no_comm();
+        let s2 = fr_speedup(&costs(vec![1.0; 2], vec![2.0; 2]), &comm);
+        let s4 = fr_speedup(&costs(vec![1.0; 4], vec![2.0; 4]), &comm);
+        assert!(s4 > s2, "speedup K=4 ({s4}) should beat K=2 ({s2})");
+    }
+
+    #[test]
+    fn imbalance_hurts_decoupled() {
+        let comm = no_comm();
+        let balanced = decoupled_iteration_ms(&costs(vec![1.0; 2], vec![2.0, 2.0]), &comm);
+        let skewed = decoupled_iteration_ms(&costs(vec![1.0; 2], vec![0.5, 3.5]), &comm);
+        assert!(skewed > balanced);
+    }
+
+    #[test]
+    fn comm_overhead_slows_both_schedules() {
+        let mk = |bytes: usize| MeasuredCosts {
+            fwd_ms: vec![1.0; 4],
+            bwd_ms: vec![2.0; 4],
+            aux_ms: vec![0.0; 4],
+            boundary_bytes: vec![bytes; 3],
+            param_bytes: 0,
+        };
+        let comm = CommModel { latency_ms: 0.0, bytes_per_ms: 8e6 };
+        // 8 MB boundaries = 1 ms per transfer: FR pays the up-transfers
+        // once, BP pays them twice (activations up + deltas down).
+        let fr0 = decoupled_iteration_ms(&mk(0), &comm);
+        let fr1 = decoupled_iteration_ms(&mk(8_000_000), &comm);
+        assert!((fr1 - fr0 - 3.0).abs() < 1e-9, "FR grows by 3 transfer-ms");
+        let bp0 = bp_iteration_ms(&mk(0), &comm);
+        let bp1 = bp_iteration_ms(&mk(8_000_000), &comm);
+        assert!((bp1 - bp0 - 6.0).abs() < 1e-9, "BP grows by 6 transfer-ms");
+    }
+
+    #[test]
+    fn data_parallel_scales_then_saturates() {
+        let mut c = costs(vec![10.0; 4], vec![20.0; 4]);
+        c.param_bytes = 100_000_000; // 100 MB of gradients
+        let comm = CommModel::default();
+        let t1 = bp_data_parallel_ms(&c, &comm, 1);
+        let t2 = bp_data_parallel_ms(&c, &comm, 2);
+        let t4 = bp_data_parallel_ms(&c, &comm, 4);
+        assert!(t2 < t1);
+        // allreduce volume stops it from reaching 4x
+        assert!(t4 > t1 / 4.0);
+    }
+
+    #[test]
+    fn from_timings_averages() {
+        let mut t1 = StepTiming::new(2);
+        t1.fwd_ms = vec![1.0, 3.0];
+        t1.bwd_ms = vec![2.0, 4.0];
+        let mut t2 = StepTiming::new(2);
+        t2.fwd_ms = vec![3.0, 5.0];
+        t2.bwd_ms = vec![4.0, 6.0];
+        let c = MeasuredCosts::from_timings(&[t1, t2], vec![0], 0);
+        assert_eq!(c.fwd_ms, vec![2.0, 4.0]);
+        assert_eq!(c.bwd_ms, vec![3.0, 5.0]);
+    }
+}

@@ -1,0 +1,148 @@
+//! ModuleStack: the K module runtimes + their optimizers, with the common
+//! operations every training strategy composes (forward chain, reference BP
+//! gradients, evaluation). Strategies differ only in *which* features and
+//! deltas they feed to `backward` and *when* they update — that logic lives
+//! in bp.rs / fr.rs / ddg.rs / dni.rs.
+
+use anyhow::{Context, Result};
+
+use crate::data::Batch;
+use crate::metrics::xent_and_acc;
+use crate::optim::SgdMomentum;
+use crate::runtime::{Engine, Manifest, ModuleRuntime, Tensor};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters shared by all strategies (the paper's recipe defaults).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 0.01, momentum: 0.9, weight_decay: 5e-4, seed: 0 }
+    }
+}
+
+pub struct ModuleStack {
+    pub manifest: Manifest,
+    pub modules: Vec<ModuleRuntime>,
+    pub optimizers: Vec<SgdMomentum>,
+    pub config: TrainConfig,
+}
+
+impl ModuleStack {
+    pub fn load(engine: &Engine, manifest: Manifest, config: TrainConfig)
+                -> Result<ModuleStack> {
+        let mut modules = Vec::with_capacity(manifest.k);
+        for k in 0..manifest.k {
+            modules.push(ModuleRuntime::load(engine, &manifest, k)
+                .with_context(|| format!("loading module {k}"))?);
+        }
+        let optimizers = modules.iter()
+            .map(|m| SgdMomentum::new(&m.params, config.momentum, config.weight_decay))
+            .collect();
+        Ok(ModuleStack { manifest, modules, optimizers, config })
+    }
+
+    pub fn k(&self) -> usize {
+        self.modules.len()
+    }
+
+    /// Re-initialize parameters with He/zero init from the manifest shapes
+    /// (multi-seed runs without re-running Python).
+    pub fn reinit(&mut self, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for m in &mut self.modules {
+            for (p, shape) in m.params.iter_mut().zip(&m.spec.param_shapes) {
+                reinit_tensor(p, shape, &mut rng);
+            }
+        }
+        for opt in &mut self.optimizers {
+            opt.reset();
+        }
+    }
+
+    /// Forward through all modules; returns boundary activations:
+    /// hs[k] = input to module k, hs[K] = logits.
+    pub fn forward_chain(&self, input: &Tensor) -> Result<Vec<Tensor>> {
+        let mut hs = Vec::with_capacity(self.k() + 1);
+        hs.push(input.clone());
+        for m in &self.modules {
+            let h = m.forward(hs.last().unwrap())?;
+            hs.push(h);
+        }
+        Ok(hs)
+    }
+
+    /// Exact backpropagation gradients for a batch at the current weights
+    /// (reference for the sigma probe; also the BP strategy's inner step).
+    /// Returns (loss, per-module grads, logits).
+    pub fn bp_grads(&self, batch: &Batch) -> Result<(f32, Vec<Vec<Tensor>>, Tensor)> {
+        let kk = self.k();
+        let mut hs = Vec::with_capacity(kk);
+        hs.push(batch.input.clone());
+        for m in &self.modules[..kk - 1] {
+            let h = m.forward(hs.last().unwrap())?;
+            hs.push(h);
+        }
+        let mut grads: Vec<Vec<Tensor>> = vec![Vec::new(); kk];
+        let out = self.modules[kk - 1].loss_backward(&hs[kk - 1], &batch.labels)?;
+        grads[kk - 1] = out.grads;
+        let mut delta = out.delta_in;
+        for k in (0..kk - 1).rev() {
+            let d = delta.take().context("missing delta in BP chain")?;
+            let (g, din) = self.modules[k].backward(&hs[k], &d)?;
+            grads[k] = g;
+            delta = din;
+        }
+        Ok((out.loss, grads, out.logits))
+    }
+
+    /// SGD step on module k with the given grads at stepsize lr.
+    pub fn update(&mut self, k: usize, grads: &[Tensor], lr: f32) -> Result<()> {
+        self.optimizers[k].step(&mut self.modules[k].params, grads, lr)
+    }
+
+    /// Evaluate mean loss + error rate over `n_batches` deterministic test
+    /// batches from `data`.
+    pub fn eval(&self, data: &mut crate::data::DataSource, n_batches: usize)
+                -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+        for i in 0..n_batches {
+            let batch = data.test_batch(i);
+            let hs = self.forward_chain(&batch.input)?;
+            let (loss, acc) = xent_and_acc(hs.last().unwrap(), &batch.labels);
+            loss_sum += loss;
+            acc_sum += acc;
+        }
+        let n = n_batches.max(1) as f64;
+        Ok((loss_sum / n, 1.0 - acc_sum / n))
+    }
+
+    /// Sum of per-layer activation bytes across all modules — the O(L)
+    /// one-in-flight-batch term every algorithm pays (memory model).
+    pub fn activation_bytes(&self) -> usize {
+        self.modules.iter().map(|m| m.spec.act_bytes).sum()
+    }
+}
+
+/// He-normal for >=2D tensors (fan_in = product of all dims but the last),
+/// zeros for biases, ones for 1-D norm scales — matching the Python init
+/// closely enough for training dynamics (exact dumps come from aot.py).
+fn reinit_tensor(p: &mut Tensor, shape: &[usize], rng: &mut Rng) {
+    let data = p.f32s_mut();
+    if shape.len() >= 2 {
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let std = (2.0 / fan_in as f32).sqrt();
+        data.iter_mut().for_each(|x| *x = rng.normal() * std);
+    } else {
+        // 1-D: zeros (biases; norm scales dumped as ones are close enough
+        // to re-init at 1.0 — detect via heuristic: leave at previous sign)
+        data.iter_mut().for_each(|x| *x = if *x == 1.0 { 1.0 } else { 0.0 });
+    }
+}

@@ -1,0 +1,75 @@
+//! The `Trainer` abstraction: one `train_step` per mini-batch, plus the
+//! per-phase timing and memory reports the experiment harnesses consume.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+
+/// Wall-clock timing of one iteration, split the way the pipeline simulator
+/// needs it: per-module forward cost and per-module backward(+update) cost.
+/// On the 1-core testbed these phases run sequentially; the simulator uses
+/// them to compute the K-device makespan of each algorithm's dependency
+/// graph (DESIGN.md substitution 1).
+#[derive(Clone, Debug, Default)]
+pub struct StepTiming {
+    pub fwd_ms: Vec<f64>,
+    pub bwd_ms: Vec<f64>,
+    /// Extra decoupling work that runs *on* the device, e.g. DNI's
+    /// synthesizer prediction + training (per module; zero otherwise).
+    pub aux_ms: Vec<f64>,
+}
+
+impl StepTiming {
+    pub fn new(k: usize) -> StepTiming {
+        StepTiming { fwd_ms: vec![0.0; k], bwd_ms: vec![0.0; k], aux_ms: vec![0.0; k] }
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.fwd_ms.iter().chain(&self.bwd_ms).chain(&self.aux_ms).sum()
+    }
+}
+
+/// What one training iteration reports back to the loop.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub timing: StepTiming,
+}
+
+/// Bytes each algorithm holds, split by what holds them (Fig 5 / Table 1).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryReport {
+    /// One in-flight batch of per-layer activations (every algorithm).
+    pub activations: usize,
+    /// FR: module-input history rings. DDG: stashed inputs across in-flight
+    /// iterations (counted at paper semantics — full per-layer stash).
+    pub history: usize,
+    /// Cross-iteration error-gradient buffers (FR/DDG pending deltas).
+    pub deltas: usize,
+    /// DNI synthesizer parameters + their activations.
+    pub synth: usize,
+    /// Weight snapshot queues (DDG; the paper calls these negligible).
+    pub weight_copies: usize,
+}
+
+impl MemoryReport {
+    pub fn total(&self) -> usize {
+        self.activations + self.history + self.deltas + self.synth + self.weight_copies
+    }
+}
+
+pub trait Trainer {
+    /// Short name used in tables/curves ("BP", "FR", "DDG", "DNI").
+    fn name(&self) -> &'static str;
+
+    /// Run one iteration (forward + whatever decoupled backward the method
+    /// prescribes + weight updates) at stepsize `lr`.
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats>;
+
+    /// Memory the method is holding right now.
+    fn memory(&self) -> MemoryReport;
+
+    /// Access the underlying stack (for eval / sigma probing).
+    fn stack(&self) -> &super::stack::ModuleStack;
+    fn stack_mut(&mut self) -> &mut super::stack::ModuleStack;
+}

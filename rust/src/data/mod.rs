@@ -1,0 +1,82 @@
+//! Datasets: synthetic CIFAR (images) and tiny-corpus (char LM), plus a
+//! model-agnostic `DataSource` that serves whichever input layout the
+//! loaded manifest asks for.
+
+pub mod synthetic_cifar;
+pub mod tiny_corpus;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::spec::Manifest;
+use crate::runtime::tensor::Tensor;
+use synthetic_cifar::SyntheticCifar;
+use tiny_corpus::TinyCorpus;
+
+/// A (input, labels) pair shaped for one training step.
+pub struct Batch {
+    pub input: Tensor,
+    pub labels: Tensor,
+}
+
+/// Serves batches matching a manifest's input contract:
+/// - rank-4 f32 input  -> NHWC synthetic CIFAR images
+/// - rank-2 f32 input  -> flattened synthetic CIFAR
+/// - rank-2 i32 input  -> char-LM token windows
+pub enum DataSource {
+    Images(SyntheticCifar, usize),
+    FlatImages(SyntheticCifar, usize),
+    Text(TinyCorpus, usize, usize),
+}
+
+impl DataSource {
+    pub fn for_manifest(m: &Manifest, seed: u64) -> Result<DataSource> {
+        let b = m.batch();
+        match (m.input_dtype, m.input_shape.len()) {
+            (crate::runtime::tensor::DType::F32, 4) => {
+                Ok(DataSource::Images(SyntheticCifar::new(m.num_classes, seed), b))
+            }
+            (crate::runtime::tensor::DType::F32, 2) => {
+                Ok(DataSource::FlatImages(SyntheticCifar::new(m.num_classes, seed), b))
+            }
+            (crate::runtime::tensor::DType::I32, 2) => {
+                let seq = m.input_shape[1];
+                Ok(DataSource::Text(TinyCorpus::new(200_000, seed), b, seq))
+            }
+            (d, r) => bail!("no data source for input dtype {d:?} rank {r}"),
+        }
+    }
+
+    pub fn train_batch(&mut self) -> Batch {
+        match self {
+            DataSource::Images(ds, b) => {
+                let (input, labels) = ds.train_batch(*b);
+                Batch { input, labels }
+            }
+            DataSource::FlatImages(ds, b) => {
+                let (input, labels) = ds.train_batch_flat(*b);
+                Batch { input, labels }
+            }
+            DataSource::Text(ds, b, t) => {
+                let (input, labels) = ds.train_batch(*b, *t);
+                Batch { input, labels }
+            }
+        }
+    }
+
+    pub fn test_batch(&mut self, i: usize) -> Batch {
+        match self {
+            DataSource::Images(ds, b) => {
+                let (input, labels) = ds.test_batch(*b, i);
+                Batch { input, labels }
+            }
+            DataSource::FlatImages(ds, b) => {
+                let (input, labels) = ds.test_batch_flat(*b, i);
+                Batch { input, labels }
+            }
+            DataSource::Text(ds, b, t) => {
+                let (input, labels) = ds.test_batch(*b, *t, i);
+                Batch { input, labels }
+            }
+        }
+    }
+}

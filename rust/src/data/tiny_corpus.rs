@@ -1,0 +1,199 @@
+//! Tiny-corpus character-level LM data (the e2e transformer driver's fuel).
+//!
+//! A small public-domain seed text is expanded deterministically with a
+//! word-level trigram babbler into as much training text as requested, so
+//! the LM has a real (if simple) distribution to fit: English orthography,
+//! word structure, punctuation. Char-level tokenization over printable
+//! ASCII (vocab 96: byte 32..=126 plus newline at index 95).
+
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 96;
+
+/// Public-domain seed (opening of *Pride and Prejudice*, Austen, 1813).
+const SEED_TEXT: &str = "It is a truth universally acknowledged, that a single man in \
+possession of a good fortune, must be in want of a wife. However little known the \
+feelings or views of such a man may be on his first entering a neighbourhood, this \
+truth is so well fixed in the minds of the surrounding families, that he is considered \
+as the rightful property of some one or other of their daughters. My dear Mr. Bennet, \
+said his lady to him one day, have you heard that Netherfield Park is let at last? \
+Mr. Bennet replied that he had not. But it is, returned she; for Mrs. Long has just \
+been here, and she told me all about it. Mr. Bennet made no answer. Do not you want \
+to know who has taken it? cried his wife impatiently. You want to tell me, and I have \
+no objection to hearing it. This was invitation enough. Why, my dear, you must know, \
+Mrs. Long says that Netherfield is taken by a young man of large fortune from the \
+north of England; that he came down on Monday in a chaise and four to see the place, \
+and was so much delighted with it that he agreed with Mr. Morris immediately; that he \
+is to take possession before Michaelmas, and some of his servants are to be in the \
+house by the end of next week. What is his name? Bingley. Is he married or single? \
+Oh, single, my dear, to be sure! A single man of large fortune; four or five thousand \
+a year. What a fine thing for our girls!";
+
+pub fn encode_char(c: u8) -> i32 {
+    match c {
+        b'\n' => 95,
+        32..=126 => (c - 32) as i32,
+        _ => 0, // map exotic bytes to space
+    }
+}
+
+pub fn decode_char(t: i32) -> u8 {
+    match t {
+        95 => b'\n',
+        0..=94 => t as u8 + 32,
+        _ => b'?',
+    }
+}
+
+/// Expand the seed with a word-trigram babbler to `target_chars` characters.
+pub fn generate_corpus(target_chars: usize, seed: u64) -> String {
+    let words: Vec<&str> = SEED_TEXT.split_whitespace().collect();
+    let mut out = String::with_capacity(target_chars + 64);
+    out.push_str(SEED_TEXT);
+    out.push(' ');
+    let mut rng = Rng::new(seed);
+    // trigram successor table: (w_i, w_i+1) -> candidate w_i+2 list
+    let mut table: std::collections::HashMap<(&str, &str), Vec<&str>> =
+        std::collections::HashMap::new();
+    for w in words.windows(3) {
+        table.entry((w[0], w[1])).or_default().push(w[2]);
+    }
+    let mut a = words[0];
+    let mut b = words[1];
+    while out.len() < target_chars {
+        let next = match table.get(&(a, b)) {
+            Some(cands) => cands[rng.below(cands.len())],
+            None => {
+                let i = rng.below(words.len() - 2);
+                a = words[i];
+                b = words[i + 1];
+                continue;
+            }
+        };
+        out.push_str(next);
+        out.push(' ');
+        a = b;
+        b = next;
+    }
+    out.truncate(target_chars);
+    out
+}
+
+/// Char-LM batcher over a corpus: (tokens [B,T] i32, targets [B*T] i32 =
+/// next-char labels, flattened to match the loss head's label shape).
+pub struct TinyCorpus {
+    tokens: Vec<i32>,
+    rng: Rng,
+    test_offset: usize, // tail 10% reserved for eval
+}
+
+impl TinyCorpus {
+    pub fn new(target_chars: usize, seed: u64) -> TinyCorpus {
+        let text = generate_corpus(target_chars.max(4096), seed);
+        let tokens: Vec<i32> = text.bytes().map(encode_char).collect();
+        let test_offset = tokens.len() * 9 / 10;
+        TinyCorpus { tokens, rng: Rng::new(seed ^ 0xC0FFEE), test_offset }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    fn window(&self, start: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let xs = self.tokens[start..start + seq].to_vec();
+        let ys = self.tokens[start + 1..start + seq + 1].to_vec();
+        (xs, ys)
+    }
+
+    fn batch_at(&self, starts: &[usize], seq: usize) -> (Tensor, Tensor) {
+        let b = starts.len();
+        let mut xs = Vec::with_capacity(b * seq);
+        let mut ys = Vec::with_capacity(b * seq);
+        for &s in starts {
+            let (x, y) = self.window(s, seq);
+            xs.extend(x);
+            ys.extend(y);
+        }
+        (
+            Tensor::from_i32(vec![b, seq], xs).unwrap(),
+            Tensor::from_i32(vec![b * seq], ys).unwrap(),
+        )
+    }
+
+    /// Random training windows from the head 90% of the corpus.
+    pub fn train_batch(&mut self, batch: usize, seq: usize) -> (Tensor, Tensor) {
+        let hi = self.test_offset.saturating_sub(seq + 1).max(1);
+        let starts: Vec<usize> = (0..batch).map(|_| self.rng.below(hi)).collect();
+        self.batch_at(&starts, seq)
+    }
+
+    /// Deterministic eval windows from the held-out tail.
+    pub fn test_batch(&self, batch: usize, seq: usize, i: usize) -> (Tensor, Tensor) {
+        let span = self.tokens.len() - self.test_offset - seq - 1;
+        let starts: Vec<usize> = (0..batch)
+            .map(|bi| self.test_offset + (i * batch + bi) * 31 % span.max(1))
+            .collect();
+        self.batch_at(&starts, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for c in 32u8..=126 {
+            assert_eq!(decode_char(encode_char(c)), c);
+        }
+        assert_eq!(decode_char(encode_char(b'\n')), b'\n');
+        assert!(encode_char(200) >= 0);
+    }
+
+    #[test]
+    fn corpus_reaches_target_and_is_ascii() {
+        let text = generate_corpus(20_000, 1);
+        assert_eq!(text.len(), 20_000);
+        assert!(text.bytes().all(|b| (32..=126).contains(&b) || b == b'\n'));
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        assert_eq!(generate_corpus(5000, 9), generate_corpus(5000, 9));
+        assert_ne!(generate_corpus(5000, 9), generate_corpus(5000, 10));
+    }
+
+    #[test]
+    fn batches_shift_by_one() {
+        let mut c = TinyCorpus::new(10_000, 0);
+        let (x, y) = c.train_batch(2, 16);
+        assert_eq!(x.shape, vec![2, 16]);
+        assert_eq!(y.shape, vec![32]);
+        // target[i] is input[i+1] within each row
+        for b in 0..2 {
+            for t in 0..15 {
+                assert_eq!(x.i32s()[b * 16 + t + 1], y.i32s()[b * 16 + t]);
+            }
+        }
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let mut c = TinyCorpus::new(8_000, 0);
+        let (x, y) = c.train_batch(4, 32);
+        assert!(x.i32s().iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        assert!(y.i32s().iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn test_batches_from_heldout_tail() {
+        let c = TinyCorpus::new(10_000, 0);
+        let (x, _) = c.test_batch(2, 16, 0);
+        assert_eq!(x.shape, vec![2, 16]);
+    }
+}

@@ -1,0 +1,38 @@
+//! # features-replay
+//!
+//! A production-grade reproduction of *"Training Neural Networks Using
+//! Features Replay"* (Huo, Gu, Huang — NIPS 2018) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the decoupled-training coordinator — K module
+//!   workers (one PJRT client each), feature-replay history buffers, the
+//!   four training strategies (FR / BP / DDG / DNI), optimizer, memory
+//!   accounting, the sufficient-direction probe and a pipeline schedule
+//!   simulator for multi-device timing.
+//! - **L2 (python/compile)**: module-partitioned JAX models, AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! - **L1 (python/compile/kernels)**: Pallas kernels for the compute
+//!   hot-spots, embedded in the same artifacts.
+//!
+//! Python never runs at training time: everything in `artifacts/` is loaded
+//! and executed through PJRT by [`runtime`].
+//!
+//! Quickstart: `cargo run --release --example quickstart` (after
+//! `make artifacts`). See README.md for the full tour.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Default artifacts root: `<repo>/artifacts` (overridable via CLI/env).
+pub fn default_artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FR_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,223 @@
+//! `frctl` — the Features Replay training launcher.
+//!
+//! Subcommands:
+//!   info     --model <cfg> --k <K>     inspect an artifact manifest
+//!   train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
+//!   compare  --model <cfg> --k <K>     all four methods side by side
+//!   sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
+//!   memory   --model <cfg>             Fig 5 / Table 1 memory model
+//!   parallel --model <cfg> --k <K>     threaded K-worker FR deployment
+//!
+//! Everything runs from AOT artifacts; Python is never invoked.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use features_replay::coordinator::{
+    self, make_trainer, memory, parallel::ParallelFr, parse_algo, sigma,
+    Algo, RunOptions, TrainConfig,
+};
+use features_replay::data::DataSource;
+use features_replay::metrics::TablePrinter;
+use features_replay::optim::StepDecay;
+use features_replay::runtime::{Engine, Manifest};
+use features_replay::util::cli::Args;
+
+const OPTS: &[(&str, &str)] = &[
+    ("model", "model config name (e.g. mlp_tiny, resnet_s)"),
+    ("k", "number of modules K (default 4)"),
+    ("algo", "bp | fr | ddg | dni (train only)"),
+    ("steps", "training steps (default 100)"),
+    ("lr", "base stepsize (default 0.01)"),
+    ("seed", "data/init seed (default 0)"),
+    ("eval-every", "eval cadence in steps (default 25)"),
+    ("artifacts", "artifacts root (default ./artifacts)"),
+    ("out", "write a JSON report to this path"),
+];
+
+const FLAGS: &[(&str, &str)] = &[
+    ("verbose", "log every eval point"),
+    ("help", "show usage"),
+];
+
+fn usage() -> String {
+    let schema = Args::parse(&[], OPTS, FLAGS).unwrap();
+    format!(
+        "frctl — Features Replay (NIPS'18) training coordinator\n\n\
+         usage: frctl <info|train|compare|sigma|memory|parallel> [options]\n\n{}",
+        schema.help()
+    )
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, OPTS, FLAGS).map_err(|e| anyhow::anyhow!(e))?;
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+
+    let root = args.get("artifacts").map(PathBuf::from)
+        .unwrap_or_else(features_replay::default_artifacts_root);
+    let model = args.get_or("model", "mlp_tiny").to_string();
+    let k = args.usize_or("k", 4).map_err(|e| anyhow::anyhow!(e))?;
+    let steps = args.usize_or("steps", 100).map_err(|e| anyhow::anyhow!(e))?;
+    let lr = args.f64_or("lr", 0.01).map_err(|e| anyhow::anyhow!(e))? as f32;
+    let seed = args.u64_or("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let eval_every = args.usize_or("eval-every", 25).map_err(|e| anyhow::anyhow!(e))?;
+    let dir = root.join(format!("{model}_k{k}"));
+
+    match args.positional[0].as_str() {
+        "info" => cmd_info(&dir),
+        "train" => {
+            let algo = parse_algo(args.get_or("algo", "fr"))?;
+            cmd_train(&dir, algo, steps, lr, seed, eval_every, args.get("out"))
+        }
+        "compare" => cmd_compare(&dir, steps, lr, seed, eval_every),
+        "sigma" => cmd_sigma(&dir, steps, lr, seed),
+        "memory" => cmd_memory(&root, &model),
+        "parallel" => cmd_parallel(&dir, steps, lr, seed),
+        other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
+    }
+}
+
+fn cmd_info(dir: &PathBuf) -> Result<()> {
+    let m = Manifest::load(dir)?;
+    println!("config        {}", m.config);
+    println!("modules (K)   {}", m.k);
+    println!("layers (L)    {}", m.num_layers);
+    println!("batch         {}", m.batch());
+    println!("input         {:?} {:?}", m.input_shape, m.input_dtype);
+    println!("classes       {}", m.num_classes);
+    println!("params        {}", m.total_params());
+    println!("total flops   {:.3} GFLOP/iter", m.total_flops as f64 / 1e9);
+    println!("pallas        {}", m.use_pallas);
+    println!("synthesizers  {}", m.synth.len());
+    println!("\npartition:\n{}", m.partition_report);
+    for mm in &m.modules {
+        println!("  module {}: {} layers, {} params, in {:?} -> out {:?}",
+                 mm.index, mm.layers.len(), mm.param_count(),
+                 mm.in_shape, mm.out_shape);
+    }
+    Ok(())
+}
+
+fn cmd_train(dir: &PathBuf, algo: Algo, steps: usize, lr: f32, seed: u64,
+             eval_every: usize, out: Option<&str>) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let config = TrainConfig { lr, seed, ..Default::default() };
+    let mut trainer = make_trainer(&engine, dir, algo, config)?;
+    let mut data = DataSource::for_manifest(&manifest, seed)?;
+    let opts = RunOptions { steps, eval_every, verbose: true, ..Default::default() };
+    println!("training {} with {} for {steps} steps (lr {lr})",
+             manifest.config, trainer.name());
+    let res = coordinator::run_training(
+        trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
+    println!("\nfinal: train_loss {:.4}  best test_err {:.3}  diverged: {}",
+             res.curve.final_train_loss(), res.curve.best_test_err(), res.diverged);
+    let mem = &res.final_memory;
+    println!("memory: activations {} + history {} + deltas {} + synth {} = {} bytes",
+             mem.activations, mem.history, mem.deltas, mem.synth, mem.total());
+    if let Some(path) = out {
+        features_replay::metrics::write_report(
+            std::path::Path::new(path), "train", &[res.curve], vec![])?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(dir: &PathBuf, steps: usize, lr: f32, seed: u64,
+               eval_every: usize) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let table = TablePrinter::new(
+        &["method", "train_loss", "test_err", "mem_MB", "sim_ms/iter", "diverged"],
+        &[8, 11, 9, 8, 12, 9]);
+    for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
+        let config = TrainConfig { lr, seed, ..Default::default() };
+        let mut trainer = make_trainer(&engine, dir, algo, config)?;
+        let mut data = DataSource::for_manifest(&manifest, seed)?;
+        let opts = RunOptions { steps, eval_every, ..Default::default() };
+        let res = coordinator::run_training(
+            trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
+        let sim_per_iter = res.curve.points.last()
+            .map(|p| p.sim_ms / (p.step.max(1) as f64))
+            .unwrap_or(f64::NAN);
+        table.row(&[
+            trainer.name(),
+            &format!("{:.4}", res.curve.final_train_loss()),
+            &format!("{:.3}", res.curve.best_test_err()),
+            &format!("{:.2}", res.final_memory.total() as f64 / 1e6),
+            &format!("{sim_per_iter:.2}"),
+            if res.diverged { "YES" } else { "no" },
+        ]);
+    }
+    Ok(())
+}
+
+fn cmd_sigma(dir: &PathBuf, steps: usize, lr: f32, seed: u64) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let stack = coordinator::ModuleStack::load(
+        &engine, manifest.clone(), TrainConfig { lr, seed, ..Default::default() })?;
+    let mut fr = coordinator::fr::FrTrainer::new(stack);
+    let mut data = DataSource::for_manifest(&manifest, seed)?;
+    println!("step  sigma per module (k=1..K), total");
+    for step in 0..steps {
+        let batch = data.train_batch();
+        let (s, loss) = sigma::probe_step(&mut fr, &batch, lr, step)?;
+        if step % 5 == 0 || step + 1 == steps {
+            let per: Vec<String> = s.per_module.iter()
+                .map(|v| format!("{v:6.3}"))
+                .collect();
+            println!("{step:4}  [{}]  total {:.3}  (loss {loss:.4})",
+                     per.join(" "), s.total);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memory(root: &PathBuf, model: &str) -> Result<()> {
+    let table = TablePrinter::new(&["K", "BP_MB", "FR_MB", "DDG_MB", "DNI_MB"],
+                                  &[3, 10, 10, 10, 10]);
+    let mut any = false;
+    for k in 1..=4 {
+        let dir = root.join(format!("{model}_k{k}"));
+        if !dir.exists() {
+            continue;
+        }
+        any = true;
+        let m = Manifest::load(&dir)?;
+        let row: Vec<String> = [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni].iter()
+            .map(|&a| format!("{:.2}", memory::predicted_bytes(&m, a) as f64 / 1e6))
+            .collect();
+        table.row(&[&k.to_string(), &row[0], &row[1], &row[2], &row[3]]);
+    }
+    if !any {
+        bail!("no artifacts for model {model:?} at any K under {root:?}");
+    }
+    Ok(())
+}
+
+fn cmd_parallel(dir: &PathBuf, steps: usize, lr: f32, seed: u64) -> Result<()> {
+    let manifest = Manifest::load(dir)?;
+    let mut par = ParallelFr::spawn(dir.clone(), TrainConfig { lr, seed, ..Default::default() })?;
+    let mut data = DataSource::for_manifest(&manifest, seed)?;
+    println!("threaded FR: {} workers, one PJRT client each", par.k());
+    for step in 0..steps {
+        let b = data.train_batch();
+        let s = par.train_step(&b, lr)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {:.4}  slowest bwd {:.1} ms",
+                     s.loss,
+                     s.timing.bwd_ms.iter().cloned().fold(0.0, f64::max));
+        }
+    }
+    let eb = data.test_batch(0);
+    let (el, ee) = par.eval_batch(&eb)?;
+    println!("eval: loss {el:.4} err {ee:.3}");
+    par.shutdown().context("worker shutdown")?;
+    Ok(())
+}

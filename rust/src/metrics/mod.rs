@@ -1,0 +1,181 @@
+//! Training metrics: loss/accuracy computation, curve recording, CSV and
+//! JSON reports (what the experiment harnesses print and save).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::tensor::Tensor;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Softmax cross-entropy + top-1 accuracy from logits (eval path — the
+/// train path gets its loss from the fused loss-head artifact).
+pub fn xent_and_acc(logits: &Tensor, labels: &Tensor) -> (f64, f64) {
+    let n = labels.len();
+    let c = logits.shape[1];
+    let lf = logits.f32s();
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &lf[i * c..(i + 1) * c];
+        let label = labels.i32s()[i] as usize;
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln()
+            + m as f64;
+        loss += lse - row[label] as f64;
+        let argmax = row.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        correct += usize::from(argmax == label);
+    }
+    (loss / n as f64, correct as f64 / n as f64)
+}
+
+/// One recorded point on a training curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub epoch: f64,
+    pub wall_ms: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_err: f64,
+    /// Simulated K-device wall-clock (pipeline model), ms since start.
+    pub sim_ms: f64,
+}
+
+/// A named training curve (one per method per model in Fig 4 / Fig 6).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn best_test_err(&self) -> f64 {
+        self.points.iter().map(|p| p.test_err).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.points.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("points", arr(self.points.iter().map(|p| obj(vec![
+                ("step", num(p.step as f64)),
+                ("epoch", num(p.epoch)),
+                ("wall_ms", num(p.wall_ms)),
+                ("train_loss", num(p.train_loss)),
+                ("test_loss", num(p.test_loss)),
+                ("test_err", num(p.test_err)),
+                ("sim_ms", num(p.sim_ms)),
+            ])))),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,epoch,wall_ms,sim_ms,train_loss,test_loss,test_err")?;
+        for p in &self.points {
+            writeln!(f, "{},{:.3},{:.1},{:.1},{:.5},{:.5},{:.4}",
+                     p.step, p.epoch, p.wall_ms, p.sim_ms,
+                     p.train_loss, p.test_loss, p.test_err)?;
+        }
+        Ok(())
+    }
+}
+
+/// Write several curves as one JSON report (harness output artifact).
+pub fn write_report(path: &Path, title: &str, curves: &[Curve],
+                    extra: Vec<(&str, Json)>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut fields = vec![
+        ("title", s(title)),
+        ("curves", arr(curves.iter().map(|c| c.to_json()))),
+    ];
+    fields.extend(extra);
+    std::fs::write(path, obj(fields).to_string_pretty())?;
+    Ok(())
+}
+
+/// Fixed-width table printer for harness stdout (paper-style rows).
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> TablePrinter {
+        let t = TablePrinter { widths: widths.to_vec() };
+        t.row(headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len() * 2));
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let line: Vec<String> = cells.iter().zip(&self.widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_matches_hand_calc() {
+        // logits [[ln2, 0]] label 0: p0 = 2/3 -> loss = ln(3/2)
+        let logits = Tensor::from_f32(vec![1, 2], vec![2f32.ln(), 0.0]).unwrap();
+        let labels = Tensor::from_i32(vec![1], vec![0]).unwrap();
+        let (loss, acc) = xent_and_acc(&logits, &labels);
+        assert!((loss - (1.5f64).ln()).abs() < 1e-6);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Tensor::from_f32(vec![2, 3],
+            vec![0.0, 1.0, 0.0, 5.0, 1.0, 0.0]).unwrap();
+        let labels = Tensor::from_i32(vec![2], vec![1, 2]).unwrap();
+        let (_, acc) = xent_and_acc(&logits, &labels);
+        assert_eq!(acc, 0.5);
+    }
+
+    #[test]
+    fn curve_best_err() {
+        let mut c = Curve::new("fr");
+        for (i, e) in [0.5, 0.2, 0.3].iter().enumerate() {
+            c.push(CurvePoint { step: i, epoch: i as f64, wall_ms: 0.0,
+                train_loss: 1.0, test_loss: 1.0, test_err: *e, sim_ms: 0.0 });
+        }
+        assert_eq!(c.best_test_err(), 0.2);
+    }
+
+    #[test]
+    fn csv_roundtrip_lines() {
+        let mut c = Curve::new("bp");
+        c.push(CurvePoint { step: 1, epoch: 0.5, wall_ms: 10.0, train_loss: 2.0,
+            test_loss: 2.1, test_err: 0.9, sim_ms: 5.0 });
+        let path = std::env::temp_dir().join("fr_metrics_test.csv");
+        c.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("step,"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Learning-rate schedules. The paper: initial 0.01 (ResNets on CIFAR use
+//! 0.1 in He et al.; the FR paper says 0.01), divided by 10 at epochs 150
+//! and 225 of 300 — i.e. at 50% and 75% of training.
+
+pub trait LrSchedule: Send {
+    fn lr(&self, step: usize) -> f32;
+}
+
+pub struct ConstantLr(pub f32);
+
+impl LrSchedule for ConstantLr {
+    fn lr(&self, _step: usize) -> f32 {
+        self.0
+    }
+}
+
+/// Divide `base` by `factor` at each milestone step.
+pub struct StepDecay {
+    pub base: f32,
+    pub factor: f32,
+    pub milestones: Vec<usize>,
+}
+
+impl StepDecay {
+    /// The paper's schedule scaled to `total_steps`: /10 at 50% and 75%.
+    pub fn paper(base: f32, total_steps: usize) -> StepDecay {
+        StepDecay {
+            base,
+            factor: 10.0,
+            milestones: vec![total_steps / 2, total_steps * 3 / 4],
+        }
+    }
+}
+
+impl LrSchedule for StepDecay {
+    fn lr(&self, step: usize) -> f32 {
+        let drops = self.milestones.iter().filter(|&&m| step >= m).count();
+        self.base / self.factor.powi(drops as i32)
+    }
+}
+
+/// 1/sqrt(t) diminishing stepsize satisfying the Theorem 2 conditions
+/// (sum gamma_t = inf, sum gamma_t^2 < inf needs 1/t; we expose both).
+pub struct InverseT {
+    pub base: f32,
+    pub power: f32, // 1.0 satisfies (10); 0.5 is the common practical choice
+}
+
+impl LrSchedule for InverseT {
+    fn lr(&self, step: usize) -> f32 {
+        self.base / (1.0 + step as f32).powf(self.power)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ConstantLr(0.01);
+        assert_eq!(s.lr(0), 0.01);
+        assert_eq!(s.lr(1_000_000), 0.01);
+    }
+
+    #[test]
+    fn paper_schedule_drops_twice() {
+        let s = StepDecay::paper(0.01, 300);
+        assert!((s.lr(0) - 0.01).abs() < 1e-9);
+        assert!((s.lr(149) - 0.01).abs() < 1e-9);
+        assert!((s.lr(150) - 0.001).abs() < 1e-9);
+        assert!((s.lr(225) - 0.0001).abs() < 1e-9);
+        assert!((s.lr(299) - 0.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_t_decreases() {
+        let s = InverseT { base: 1.0, power: 1.0 };
+        assert!(s.lr(0) > s.lr(10));
+        assert!((s.lr(0) - 1.0).abs() < 1e-9);
+        assert!((s.lr(9) - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Optimizers + learning-rate schedules (the paper's training recipe:
+//! SGD, momentum 0.9, weight decay 5e-4, step-decay LR /10 at 50%/75%).
+
+pub mod lr;
+pub mod sgd;
+
+pub use lr::{ConstantLr, LrSchedule, StepDecay};
+pub use sgd::SgdMomentum;

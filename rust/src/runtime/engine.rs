@@ -1,0 +1,107 @@
+//! PJRT execution engine: load HLO text artifacts, compile once, run many.
+//!
+//! One `Engine` per worker thread (PJRT client handles are `Rc`-based and
+//! not `Send`; a client per worker also mirrors the paper's one-GPU-per-
+//! module topology). Compiled executables are cached by path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached; compilation is the expensive
+    /// one-time cost, so workers pre-warm their executables at startup).
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(path) {
+            return Ok(Rc::clone(e));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let e = Rc::new(Executable { exe, path: path.to_path_buf() });
+        self.cache.borrow_mut().insert(path.to_path_buf(), Rc::clone(&e));
+        Ok(e)
+    }
+}
+
+/// A compiled computation; `run` converts host tensors at the boundary.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with host tensors; outputs are the flattened result tuple
+    /// (aot.py lowers everything with return_tuple=True).
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs.iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let bufs = self.exe.execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let result = bufs[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn engine_compiles_and_runs_module_fwd() {
+        let root = artifacts_root().join("mlp_tiny_k4");
+        if !root.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = crate::runtime::spec::Manifest::load(&root).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load(&m.hlo_path(&m.modules[0].fwd_file)).unwrap();
+
+        // params from the dump + a zero input batch
+        let spec = &m.modules[0];
+        let mut inputs: Vec<Tensor> = Vec::new();
+        for (i, shape) in spec.param_shapes.iter().enumerate() {
+            inputs.push(Tensor::from_f32_file(
+                &m.param_path("module0", i), shape.clone()).unwrap());
+        }
+        inputs.push(Tensor::zeros(&spec.in_shape, spec.in_dtype));
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = exe.run(&refs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, spec.out_shape);
+
+        // cache returns the same compiled object
+        let again = engine.load(&m.hlo_path(&m.modules[0].fwd_file)).unwrap();
+        assert!(Rc::ptr_eq(&exe, &again));
+    }
+}

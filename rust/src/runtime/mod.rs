@@ -1,0 +1,17 @@
+//! Runtime layer: the AOT bridge between the Rust coordinator and the
+//! HLO artifacts produced by `python/compile/aot.py`.
+//!
+//! - [`tensor`]: Send-able host tensors (channel payloads, optimizer state)
+//! - [`spec`]: manifest.json parsing (artifact contract)
+//! - [`engine`]: PJRT client + compiled-executable cache
+//! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers
+
+pub mod engine;
+pub mod module;
+pub mod spec;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use module::{LossOutput, ModuleRuntime, SynthRuntime};
+pub use spec::{Manifest, ModuleSpec, SynthSpec};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,252 @@
+//! Per-module runtime: compiled fwd/bwd/loss executables + parameter state.
+//!
+//! This is the object a module worker owns. Parameters are host tensors (the
+//! optimizer updates them in place); each call marshals params + activations
+//! into the executable and unpacks the result tuple according to the
+//! artifact contract in DESIGN.md.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, Executable};
+use super::spec::{Manifest, ModuleSpec, SynthSpec};
+use super::tensor::Tensor;
+
+pub struct LossOutput {
+    pub loss: f32,
+    pub grads: Vec<Tensor>,
+    pub delta_in: Option<Tensor>,
+    pub logits: Tensor,
+}
+
+pub struct ModuleRuntime {
+    pub spec: ModuleSpec,
+    pub params: Vec<Tensor>,
+    fwd: Rc<Executable>,
+    bwd: Rc<Executable>,
+    loss: Option<Rc<Executable>>,
+}
+
+impl ModuleRuntime {
+    /// Load module `k` of `manifest` on `engine`, with initial params from
+    /// the artifact dump (or re-initialized elsewhere for multi-seed runs).
+    pub fn load(engine: &Engine, manifest: &Manifest, k: usize) -> Result<ModuleRuntime> {
+        let spec = manifest.modules.get(k)
+            .with_context(|| format!("module {k} out of range"))?
+            .clone();
+        let fwd = engine.load(&manifest.hlo_path(&spec.fwd_file))?;
+        let bwd = engine.load(&manifest.hlo_path(&spec.bwd_file))?;
+        let loss = match &spec.loss_file {
+            Some(f) => Some(engine.load(&manifest.hlo_path(f))?),
+            None => None,
+        };
+        let mut params = Vec::with_capacity(spec.param_shapes.len());
+        for (i, shape) in spec.param_shapes.iter().enumerate() {
+            params.push(Tensor::from_f32_file(
+                &manifest.param_path(&format!("module{k}"), i), shape.clone())?);
+        }
+        Ok(ModuleRuntime { spec, params, fwd, bwd, loss })
+    }
+
+    pub fn is_first(&self) -> bool {
+        self.spec.index == 0
+    }
+
+    pub fn has_loss_head(&self) -> bool {
+        self.loss.is_some()
+    }
+
+    fn check_input(&self, h: &Tensor) -> Result<()> {
+        if h.shape != self.spec.in_shape {
+            bail!("module {}: input shape {:?}, expected {:?}",
+                  self.spec.index, h.shape, self.spec.in_shape);
+        }
+        Ok(())
+    }
+
+    /// Play: h_out = F_G(k)(h_in; w).
+    pub fn forward(&self, h_in: &Tensor) -> Result<Tensor> {
+        self.check_input(h_in)?;
+        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
+        inputs.push(h_in);
+        let mut out = self.fwd.run(&inputs)?;
+        if out.len() != 1 {
+            bail!("fwd returned {} outputs, expected 1", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Replay + chain rule: gradients of the module given (replayed) input
+    /// and the error gradient delta at its output. Returns (param grads,
+    /// delta for the module below — None for module 0).
+    pub fn backward(&self, h_in: &Tensor, delta: &Tensor)
+                    -> Result<(Vec<Tensor>, Option<Tensor>)> {
+        self.check_input(h_in)?;
+        if delta.shape != self.spec.out_shape {
+            bail!("module {}: delta shape {:?}, expected {:?}",
+                  self.spec.index, delta.shape, self.spec.out_shape);
+        }
+        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
+        inputs.push(h_in);
+        inputs.push(delta);
+        let mut out = self.bwd.run(&inputs)?;
+        let np = self.params.len();
+        let expect = np + usize::from(!self.is_first());
+        if out.len() != expect {
+            bail!("bwd returned {} outputs, expected {expect}", out.len());
+        }
+        let delta_in = if self.is_first() { None } else { Some(out.remove(np)) };
+        Ok((out, delta_in))
+    }
+
+    /// Last module only: fused fwd + loss + full backward.
+    pub fn loss_backward(&self, h_in: &Tensor, labels: &Tensor) -> Result<LossOutput> {
+        self.check_input(h_in)?;
+        let exe = self.loss.as_ref().context("module has no loss head")?;
+        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
+        inputs.push(h_in);
+        inputs.push(labels);
+        let mut out = exe.run(&inputs)?;
+        let np = self.params.len();
+        let expect = 1 + np + usize::from(!self.is_first()) + 1;
+        if out.len() != expect {
+            bail!("loss head returned {} outputs, expected {expect}", out.len());
+        }
+        let loss = out[0].item_f32()?;
+        let logits = out.pop().unwrap();
+        let delta_in = if self.is_first() { None } else { Some(out.remove(1 + np)) };
+        let grads = out.drain(1..).collect();
+        Ok(LossOutput { loss, grads, delta_in, logits })
+    }
+}
+
+/// DNI gradient synthesizer runtime (predictor + its own training step).
+pub struct SynthRuntime {
+    pub spec: SynthSpec,
+    pub params: Vec<Tensor>,
+    pred: Rc<Executable>,
+    train: Rc<Executable>,
+}
+
+impl SynthRuntime {
+    pub fn load(engine: &Engine, manifest: &Manifest, boundary: usize) -> Result<SynthRuntime> {
+        let spec = manifest.synth.iter().find(|s| s.boundary == boundary)
+            .with_context(|| format!("no synthesizer for boundary {boundary}"))?
+            .clone();
+        let pred = engine.load(&manifest.hlo_path(&spec.pred_file))?;
+        let train = engine.load(&manifest.hlo_path(&spec.train_file))?;
+        let mut params = Vec::with_capacity(spec.param_shapes.len());
+        for (i, shape) in spec.param_shapes.iter().enumerate() {
+            params.push(Tensor::from_f32_file(
+                &manifest.param_path(&format!("synth{boundary}"), i), shape.clone())?);
+        }
+        Ok(SynthRuntime { spec, params, pred, train })
+    }
+
+    /// delta_hat = S(h).
+    pub fn predict(&self, h: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
+        inputs.push(h);
+        let mut out = self.pred.run(&inputs)?;
+        if out.len() != 1 {
+            bail!("synth pred returned {} outputs", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// MSE(S(h), delta_true) and its gradients w.r.t. synth params.
+    pub fn train_grads(&self, h: &Tensor, delta_true: &Tensor)
+                       -> Result<(f32, Vec<Tensor>)> {
+        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
+        inputs.push(h);
+        inputs.push(delta_true);
+        let mut out = self.train.run(&inputs)?;
+        if out.len() != 1 + self.params.len() {
+            bail!("synth train returned {} outputs", out.len());
+        }
+        let mse = out[0].item_f32()?;
+        Ok((mse, out.drain(1..).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts").join("mlp_tiny_k4");
+        if root.exists() {
+            Some(Manifest::load(&root).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn forward_backward_shapes() {
+        let Some(m) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let m0 = ModuleRuntime::load(&engine, &m, 0).unwrap();
+        let m1 = ModuleRuntime::load(&engine, &m, 1).unwrap();
+
+        let x = Tensor::zeros(&m0.spec.in_shape, m0.spec.in_dtype);
+        let h = m0.forward(&x).unwrap();
+        assert_eq!(h.shape, m0.spec.out_shape);
+
+        let delta = Tensor::zeros(&m1.spec.out_shape, crate::runtime::tensor::DType::F32);
+        let (grads, din) = m1.backward(&h, &delta).unwrap();
+        assert_eq!(grads.len(), m1.params.len());
+        assert_eq!(din.as_ref().unwrap().shape, m1.spec.in_shape);
+
+        // module 0 emits no delta_in
+        let (g0, d0) = m0.backward(&x, &Tensor::zeros(&m0.spec.out_shape,
+            crate::runtime::tensor::DType::F32)).unwrap();
+        assert_eq!(g0.len(), m0.params.len());
+        assert!(d0.is_none());
+    }
+
+    #[test]
+    fn loss_head_runs() {
+        let Some(m) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let last = ModuleRuntime::load(&engine, &m, m.k - 1).unwrap();
+        assert!(last.has_loss_head());
+        let h = Tensor::zeros(&last.spec.in_shape, last.spec.in_dtype);
+        let labels = Tensor::from_i32(m.label_shape.clone(),
+                                      vec![0; m.label_shape.iter().product()]).unwrap();
+        let out = last.loss_backward(&h, &labels).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.grads.len(), last.params.len());
+        assert_eq!(out.logits.shape, m.logits_shape);
+        assert!(out.delta_in.is_some());
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        let Some(m) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let m0 = ModuleRuntime::load(&engine, &m, 0).unwrap();
+        let bad = Tensor::zeros(&[1, 2], crate::runtime::tensor::DType::F32);
+        assert!(m0.forward(&bad).is_err());
+    }
+
+    #[test]
+    fn synth_predicts_zero_initially() {
+        let Some(m) = manifest() else { return };
+        let engine = Engine::cpu().unwrap();
+        let s = SynthRuntime::load(&engine, &m, 0).unwrap();
+        let h = Tensor::from_f32(m.modules[0].out_shape.clone(),
+            (0..m.modules[0].out_shape.iter().product::<usize>())
+                .map(|i| i as f32 * 0.01).collect()).unwrap();
+        let d = s.predict(&h).unwrap();
+        assert!(d.f32s().iter().all(|&x| x.abs() < 1e-6),
+                "zero-init synth must predict zeros");
+        let (mse, grads) = s.train_grads(&h, &d).unwrap();
+        assert!(mse.abs() < 1e-9);
+        assert_eq!(grads.len(), s.params.len());
+    }
+}

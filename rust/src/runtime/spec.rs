@@ -1,0 +1,207 @@
+//! Artifact manifest parsing: the contract between `python/compile/aot.py`
+//! and the Rust coordinator (see DESIGN.md §Artifact contract).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use super::tensor::DType;
+
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub index: usize,
+    pub layers: Vec<String>,
+    pub layer_act_bytes: Vec<usize>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub in_shape: Vec<usize>,
+    pub in_dtype: DType,
+    pub out_shape: Vec<usize>,
+    pub flops: u64,
+    pub act_bytes: usize,
+    pub fwd_file: String,
+    pub bwd_file: String,
+    pub loss_file: Option<String>,
+}
+
+impl ModuleSpec {
+    pub fn param_count(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Bytes of the module's *input* activation (what FR's history stores).
+    pub fn in_bytes(&self) -> usize {
+        self.in_shape.iter().product::<usize>() * 4
+    }
+
+    pub fn out_bytes(&self) -> usize {
+        self.out_shape.iter().product::<usize>() * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub boundary: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub pred_file: String,
+    pub train_file: String,
+}
+
+/// Parsed manifest.json for one artifact config directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: String,
+    pub k: usize,
+    pub seed: u64,
+    pub model_type: String,
+    pub use_pallas: bool,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: DType,
+    pub label_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub logits_shape: Vec<usize>,
+    pub num_layers: usize,
+    pub total_flops: u64,
+    pub partition_report: String,
+    pub modules: Vec<ModuleSpec>,
+    pub synth: Vec<SynthSpec>,
+}
+
+fn shapes(j: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    j.field(key)?
+        .as_arr()
+        .context("param_shapes not an array")?
+        .iter()
+        .map(|s| s.as_usize_vec().context("bad shape entry"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let k = j.field("k")?.as_usize().context("k")?;
+        let mut modules = Vec::with_capacity(k);
+        for m in j.field("modules")?.as_arr().context("modules")? {
+            let files = m.field("files")?;
+            modules.push(ModuleSpec {
+                index: m.field("index")?.as_usize().context("index")?,
+                layers: m.field("layers")?.as_arr().context("layers")?
+                    .iter().map(|x| x.as_str().unwrap_or("?").to_string()).collect(),
+                layer_act_bytes: m.field("layer_act_bytes")?.as_usize_vec()
+                    .context("layer_act_bytes")?,
+                param_shapes: shapes(m, "param_shapes")?,
+                in_shape: m.field("in_shape")?.as_usize_vec().context("in_shape")?,
+                in_dtype: DType::from_manifest(
+                    m.field("in_dtype")?.as_str().context("in_dtype")?)?,
+                out_shape: m.field("out_shape")?.as_usize_vec().context("out_shape")?,
+                flops: m.field("flops")?.as_i64().context("flops")? as u64,
+                act_bytes: m.field("act_bytes")?.as_usize().context("act_bytes")?,
+                fwd_file: files.field("fwd")?.as_str().context("fwd")?.to_string(),
+                bwd_file: files.field("bwd")?.as_str().context("bwd")?.to_string(),
+                loss_file: files.get("loss").and_then(|x| x.as_str()).map(String::from),
+            });
+        }
+        if modules.len() != k {
+            bail!("manifest k={k} but {} modules listed", modules.len());
+        }
+        if modules.last().map(|m| m.loss_file.is_none()).unwrap_or(true) {
+            bail!("last module must carry the loss head");
+        }
+
+        let mut synth = Vec::new();
+        for s in j.field("synth")?.as_arr().context("synth")? {
+            let files = s.field("files")?;
+            synth.push(SynthSpec {
+                boundary: s.field("boundary")?.as_usize().context("boundary")?,
+                param_shapes: shapes(s, "param_shapes")?,
+                pred_file: files.field("pred")?.as_str().context("pred")?.to_string(),
+                train_file: files.field("train")?.as_str().context("train")?.to_string(),
+            });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config: j.field("config")?.as_str().context("config")?.to_string(),
+            k,
+            seed: j.field("seed")?.as_i64().context("seed")? as u64,
+            model_type: j.field("model_type")?.as_str().context("model_type")?.to_string(),
+            use_pallas: j.field("use_pallas")?.as_bool().context("use_pallas")?,
+            input_shape: j.field("input_shape")?.as_usize_vec().context("input_shape")?,
+            input_dtype: DType::from_manifest(
+                j.field("input_dtype")?.as_str().context("input_dtype")?)?,
+            label_shape: j.field("label_shape")?.as_usize_vec().context("label_shape")?,
+            num_classes: j.field("num_classes")?.as_usize().context("num_classes")?,
+            logits_shape: j.field("logits_shape")?.as_usize_vec().context("logits_shape")?,
+            num_layers: j.field("num_layers")?.as_usize().context("num_layers")?,
+            total_flops: j.field("total_flops")?.as_i64().context("total_flops")? as u64,
+            partition_report: j.field("partition_report")?.as_str()
+                .context("partition_report")?.to_string(),
+            modules,
+            synth,
+        })
+    }
+
+    /// Locate `<root>/<config>_k<K>` under the artifacts root.
+    pub fn locate(root: &Path, config: &str, k: usize) -> Result<Manifest> {
+        Manifest::load(&root.join(format!("{config}_k{k}")))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    pub fn param_path(&self, stem: &str, i: usize) -> PathBuf {
+        self.dir.join("params").join(format!("{stem}_p{i}.bin"))
+    }
+
+    /// Batch size (leading input dim).
+    pub fn batch(&self) -> usize {
+        self.input_shape.first().copied().unwrap_or(1)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.modules.iter().map(|m| m.param_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_mlp_tiny_manifest() {
+        let root = artifacts_root();
+        if !root.join("mlp_tiny_k4").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::locate(&root, "mlp_tiny", 4).unwrap();
+        assert_eq!(m.k, 4);
+        assert_eq!(m.modules.len(), 4);
+        assert_eq!(m.input_shape, vec![16, 3072]);
+        assert_eq!(m.num_classes, 10);
+        assert!(m.modules[3].loss_file.is_some());
+        assert!(m.modules[0].loss_file.is_none());
+        assert_eq!(m.synth.len(), 3);
+        // boundary chaining
+        for w in m.modules.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        assert!(m.total_params() > 0);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::locate(&artifacts_root(), "no_such", 2).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Host tensors: the Send-able payload that flows between module workers.
+//!
+//! PJRT `Literal`s wrap C++ objects behind `Rc` and are not `Send`, so
+//! everything crossing a channel (features, deltas, gradients) is a plain
+//! `Tensor` — shape + contiguous host data — converted to/from `Literal` at
+//! the worker boundary.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Contiguous row-major host tensor. F32 data lives in `f`, I32 in `i`.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    f: Vec<f32>,
+    i: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, dtype: DType::F32, f: data, i: Vec::new() })
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, dtype: DType::I32, f: Vec::new(), i: data })
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor { shape: shape.to_vec(), dtype, f: vec![0.0; n], i: Vec::new() },
+            DType::I32 => Tensor { shape: shape.to_vec(), dtype, f: Vec::new(), i: vec![0; n] },
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], dtype: DType::F32, f: vec![v], i: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype.size_bytes()
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        &self.f
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        &mut self.f
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        debug_assert_eq!(self.dtype, DType::I32);
+        &self.i
+    }
+
+    pub fn item_f32(&self) -> Result<f32> {
+        if self.dtype != DType::F32 || self.len() != 1 {
+            bail!("item_f32 on {:?} tensor of shape {:?}", self.dtype, self.shape);
+        }
+        Ok(self.f[0])
+    }
+
+    /// L2 norm squared (sigma probe / diagnostics).
+    pub fn sq_norm(&self) -> f64 {
+        self.f.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.len(), other.len());
+        self.f.iter().zip(other.f.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+
+    // --- PJRT boundary ----------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match self.dtype {
+            DType::F32 => (xla::ElementType::F32, bytemuck_f32(&self.f)),
+            DType::I32 => (xla::ElementType::S32, bytemuck_i32(&self.i)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Tensor::from_f32(dims, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Tensor::from_i32(dims, lit.to_vec::<i32>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Load a raw little-endian f32 dump (artifacts/<cfg>/params/*.bin).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("{path:?}: expected {} bytes for shape {shape:?}, got {}",
+                  n * 4, bytes.len());
+        }
+        let mut data = vec![0f32; n];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        Tensor::from_f32(shape, data)
+    }
+}
+
+fn bytemuck_f32(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+fn bytemuck_i32(xs: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::from_f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::from_i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn zeros_and_sizes() {
+        let t = Tensor::zeros(&[3, 5], DType::F32);
+        assert_eq!(t.len(), 15);
+        assert_eq!(t.size_bytes(), 60);
+        assert!(t.f32s().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = Tensor::from_f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_f32(vec![3], vec![4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(a.dot(&b), 32.0);
+        assert_eq!(a.sq_norm(), 14.0);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape, vec![2, 2]);
+        assert_eq!(back.f32s(), t.f32s());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(vec![3], vec![7, -1, 2]).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.i32s(), t.i32s());
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("fr_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let data: Vec<u8> = [1.5f32, -2.0, 0.25].iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, &data).unwrap();
+        let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
+        assert_eq!(t.f32s(), &[1.5, -2.0, 0.25]);
+        assert!(Tensor::from_f32_file(&path, vec![4]).is_err());
+    }
+}

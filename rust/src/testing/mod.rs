@@ -1,0 +1,8 @@
+//! Mini-proptest: seeded random-input property testing (no proptest crate
+//! offline). Runs a property over N generated cases; on failure, reports
+//! the failing seed so the case is reproducible, and retries the property
+//! with "smaller" draws first to keep counterexamples readable.
+
+pub mod prop;
+
+pub use prop::{check, Gen};

@@ -1,0 +1,159 @@
+//! Tiny CLI argument parser (substrate: no clap in the offline sandbox).
+//!
+//! Grammar: `frctl <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is accepted too. Unknown flags are an error so typos fail
+//! loudly rather than silently using defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    known_opts: Vec<(&'static str, &'static str)>,
+    known_flags: Vec<(&'static str, &'static str)>,
+}
+
+impl Args {
+    /// Parse raw args against a declared schema of options and flags.
+    pub fn parse(
+        raw: &[String],
+        known_opts: &[(&'static str, &'static str)],
+        known_flags: &[(&'static str, &'static str)],
+    ) -> Result<Args, String> {
+        let mut out = Args {
+            known_opts: known_opts.to_vec(),
+            known_flags: known_flags.to_vec(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (key, inline_val) = match name.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if known_flags.iter().any(|(f, _)| *f == key) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    out.flags.push(key.to_string());
+                } else if known_opts.iter().any(|(o, _)| *o == key) {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i).cloned()
+                                .ok_or(format!("option --{key} needs a value"))?
+                        }
+                    };
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Render a help block from the declared schema.
+    pub fn help(&self) -> String {
+        let mut s = String::from("options:\n");
+        for (o, d) in &self.known_opts {
+            s.push_str(&format!("  --{o} <v>   {d}\n"));
+        }
+        for (f, d) in &self.known_flags {
+            s.push_str(&format!("  --{f}       {d}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const OPTS: &[(&str, &str)] = &[("model", "model name"), ("steps", "step count")];
+    const FLAGS: &[(&str, &str)] = &[("verbose", "log more")];
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["train", "--model", "mlp", "--steps=10", "--verbose"]),
+                            OPTS, FLAGS).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&sv(&["--nope"]), OPTS, FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(&sv(&["--model"]), OPTS, FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_value_on_flag() {
+        assert!(Args::parse(&sv(&["--verbose=yes"]), OPTS, FLAGS).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), OPTS, FLAGS).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_or("model", "mlp_tiny"), "mlp_tiny");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_number_reports_option() {
+        let a = Args::parse(&sv(&["--steps", "abc"]), OPTS, FLAGS).unwrap();
+        assert!(a.usize_or("steps", 0).unwrap_err().contains("steps"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Hand-rolled substrates the offline sandbox lacks crates for:
+//! JSON, CLI parsing, PRNG, and a wall-clock timer.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Simple scope timer; `elapsed_ms()` for metrics, `lap()` for phase splits.
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn lap_ms(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64() * 1e3;
+        self.last = now;
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let mut t = Timer::new();
+        let a = t.lap_ms();
+        let b = t.elapsed_ms();
+        assert!(a >= 0.0 && b >= a);
+    }
+}

@@ -1,0 +1,229 @@
+//! Integration tests over real AOT artifacts (mlp_tiny_k4): the training
+//! strategies' semantic contracts.
+//!
+//! Requires `make artifacts`. Tests skip (with a notice) if artifacts are
+//! missing so `cargo test` stays runnable on a fresh checkout.
+
+use features_replay::coordinator::{
+    self, make_trainer, Algo, ModuleStack, TrainConfig,
+};
+use features_replay::data::{Batch, DataSource};
+use features_replay::optim::ConstantLr;
+use features_replay::runtime::{Engine, Manifest, Tensor};
+
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = features_replay::default_artifacts_root().join("mlp_tiny_k4");
+    if dir.exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn load_stack(dir: &PathBuf, engine: &Engine) -> ModuleStack {
+    let manifest = Manifest::load(dir).unwrap();
+    ModuleStack::load(engine, manifest, TrainConfig::default()).unwrap()
+}
+
+fn batch_for(manifest: &Manifest, seed: u64) -> Batch {
+    let mut data = DataSource::for_manifest(manifest, seed).unwrap();
+    data.train_batch()
+}
+
+/// FR's *last* module uses the current input and true loss gradient, so its
+/// first-step gradient must equal BP's for that module exactly.
+#[test]
+fn fr_last_module_matches_bp_on_first_step() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let stack = load_stack(&dir, &engine);
+    let batch = batch_for(&stack.manifest, 1);
+
+    let (_, bp_grads, _) = stack.bp_grads(&batch).unwrap();
+
+    let mut fr = coordinator::fr::FrTrainer::new(load_stack(&dir, &engine));
+    let mut fr_grads: Vec<Vec<Tensor>> = Vec::new();
+    fr.step_capture(&batch, 0.0, Some(&mut fr_grads)).unwrap();
+
+    let k_last = bp_grads.len() - 1;
+    for (a, b) in bp_grads[k_last].iter().zip(&fr_grads[k_last]) {
+        let diff: f32 = a.f32s().iter().zip(b.f32s())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-4, "last-module grads differ by {diff}");
+    }
+}
+
+/// With K=1 there is no decoupling at all: FR, DDG and BP must produce the
+/// same parameters after several steps.
+#[test]
+fn all_methods_equal_bp_at_k1() {
+    let root = features_replay::default_artifacts_root().join("resnet_s_k1");
+    if !root.exists() {
+        eprintln!("skipping: resnet_s_k1 artifacts missing");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&root).unwrap();
+    let mut data = DataSource::for_manifest(&manifest, 3).unwrap();
+    let batches: Vec<Batch> = (0..3).map(|_| data.train_batch()).collect();
+
+    let mut finals: Vec<Vec<f32>> = Vec::new();
+    for algo in [Algo::Bp, Algo::Fr, Algo::Ddg] {
+        let mut t = make_trainer(&engine, &root, algo, TrainConfig::default()).unwrap();
+        for b in &batches {
+            t.train_step(b, 0.01).unwrap();
+        }
+        finals.push(t.stack().modules[0].params[0].f32s().to_vec());
+    }
+    for other in &finals[1..] {
+        let diff: f32 = finals[0].iter().zip(other)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-4, "K=1 methods disagree by {diff}");
+    }
+}
+
+/// After enough identical-lag steps, FR gradients should align with BP
+/// (sigma -> positive); weak check: the probe returns finite sane values.
+#[test]
+fn sigma_probe_produces_sane_values() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let stack = load_stack(&dir, &engine);
+    let manifest = stack.manifest.clone();
+    let mut fr = coordinator::fr::FrTrainer::new(stack);
+    let mut data = DataSource::for_manifest(&manifest, 5).unwrap();
+
+    let mut last = None;
+    for step in 0..6 {
+        let batch = data.train_batch();
+        let (sample, loss) =
+            coordinator::sigma::probe_step(&mut fr, &batch, 0.005, step).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(sample.per_module.len(), 4);
+        assert!(sample.per_module.iter().all(|s| s.is_finite()));
+        last = Some(sample);
+    }
+    // the last module's direction is exact BP -> sigma == 1
+    let s = last.unwrap();
+    assert!((s.per_module[3] - 1.0).abs() < 1e-3,
+            "last module sigma {} should be 1", s.per_module[3]);
+    // after the pipeline warms up, lower-module sigma should be positive
+    assert!(s.per_module[0] > -0.5, "sigma way off: {:?}", s.per_module);
+}
+
+/// Training must reduce the loss for every method on the tiny MLP.
+#[test]
+fn short_training_reduces_loss_all_methods() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+
+    for algo in [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni] {
+        let mut t = make_trainer(&engine, &dir, algo, TrainConfig::default()).unwrap();
+        let mut data = DataSource::for_manifest(&manifest, 7).unwrap();
+        let mut first = None;
+        let mut last = 0.0f32;
+        for step in 0..40 {
+            let b = data.train_batch();
+            let s = t.train_step(&b, 0.004).unwrap();
+            if step == 0 {
+                first = Some(s.loss);
+            }
+            last = s.loss;
+        }
+        let first = first.unwrap();
+        assert!(last.is_finite(), "{}: diverged", t.name());
+        assert!(last < first,
+                "{}: loss did not decrease ({first} -> {last})", t.name());
+    }
+}
+
+/// The threaded K-worker FR must produce the same training trajectory as the
+/// single-timeline FrTrainer (same losses step by step).
+#[test]
+fn parallel_fr_matches_sequential_fr() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+
+    let mut seq = coordinator::fr::FrTrainer::new(load_stack(&dir, &engine));
+    let mut par = coordinator::parallel::ParallelFr::spawn(
+        dir.clone(), TrainConfig::default()).unwrap();
+
+    let mut data1 = DataSource::for_manifest(&manifest, 11).unwrap();
+    let mut data2 = DataSource::for_manifest(&manifest, 11).unwrap();
+
+    use features_replay::coordinator::strategy::Trainer;
+    for step in 0..8 {
+        let b1 = data1.train_batch();
+        let b2 = data2.train_batch();
+        let s1 = seq.train_step(&b1, 0.01).unwrap();
+        let s2 = par.train_step(&b2, 0.01).unwrap();
+        assert!((s1.loss - s2.loss).abs() < 1e-4,
+                "step {step}: sequential {} vs parallel {}", s1.loss, s2.loss);
+    }
+
+    // eval parity too
+    let eb = data1.test_batch(0);
+    let (l2, e2) = par.eval_batch(&eb).unwrap();
+    let hs = seq.stack_ref().forward_chain(&eb.input).unwrap();
+    let (l1, a1) = features_replay::metrics::xent_and_acc(hs.last().unwrap(), &eb.labels);
+    assert!((l1 - l2).abs() < 1e-6);
+    assert!((e2 - (1.0 - a1)).abs() < 1e-9);
+
+    par.shutdown().unwrap();
+}
+
+/// Memory reports: FR holds history+deltas; BP holds only activations; the
+/// live DDG stash grows until the pipeline fills.
+#[test]
+fn memory_reports_reflect_method_structure() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut data = DataSource::for_manifest(&manifest, 1).unwrap();
+
+    let mut bp = make_trainer(&engine, &dir, Algo::Bp, TrainConfig::default()).unwrap();
+    let mut fr = make_trainer(&engine, &dir, Algo::Fr, TrainConfig::default()).unwrap();
+    let mut ddg = make_trainer(&engine, &dir, Algo::Ddg, TrainConfig::default()).unwrap();
+    for _ in 0..5 {
+        let b = data.train_batch();
+        bp.train_step(&b, 0.01).unwrap();
+        fr.train_step(&b, 0.01).unwrap();
+        ddg.train_step(&b, 0.01).unwrap();
+    }
+    let (mb, mf, md) = (bp.memory(), fr.memory(), ddg.memory());
+    assert_eq!(mb.history, 0);
+    assert!(mf.history > 0 && mf.deltas > 0);
+    // DDG keeps weight snapshots and a multi-iteration stash; on this tiny
+    // MLP the *input* dominates FR's history, so the paper's DDG >> FR
+    // ordering is asserted on the conv model in memory::tests instead.
+    assert!(md.history > 0 && md.weight_copies > 0);
+    assert!(md.total() > mb.total());
+}
+
+/// run_training end-to-end: curve recorded, timings collected, no divergence.
+#[test]
+fn run_training_records_curves() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut t = make_trainer(&engine, &dir, Algo::Fr, TrainConfig::default()).unwrap();
+    let mut data = DataSource::for_manifest(&manifest, 2).unwrap();
+    let opts = coordinator::RunOptions {
+        steps: 12, eval_every: 4, eval_batches: 2, steps_per_epoch: 4,
+        verbose: false, divergence_loss: 1e4,
+    };
+    let res = coordinator::run_training(
+        t.as_mut(), &mut data, &ConstantLr(0.01), &opts).unwrap();
+    assert!(!res.diverged);
+    assert!(res.curve.points.len() >= 3);
+    assert_eq!(res.timings.len(), 12);
+    assert!(res.curve.points.iter().all(|p| p.sim_ms > 0.0));
+    assert!(res.final_memory.total() > 0);
+}

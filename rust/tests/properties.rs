@@ -1,0 +1,206 @@
+//! Property-based tests (mini-proptest) over the coordinator's pure
+//! invariants: replay buffers, optimizer algebra, JSON round-trips, the
+//! pipeline simulator, and the memory model's monotonicity.
+
+use features_replay::coordinator::history::ReplayBuffer;
+use features_replay::coordinator::pipeline_sim::{
+    bp_data_parallel_ms, bp_iteration_ms, decoupled_iteration_ms, CommModel,
+    MeasuredCosts,
+};
+use features_replay::optim::SgdMomentum;
+use features_replay::runtime::{DType, Tensor};
+use features_replay::testing::check;
+use features_replay::util::json::Json;
+
+#[test]
+fn replay_buffer_returns_exact_lag() {
+    check("replay_lag", 200, |g| {
+        let cap = g.usize_in(1, 8);
+        let pushes = g.usize_in(0, 40);
+        let mut buf = ReplayBuffer::new(cap, &[1], DType::F32);
+        for i in 0..pushes {
+            buf.push(Tensor::from_f32(vec![1], vec![i as f32 + 1.0]).unwrap());
+        }
+        let lag = g.usize_in(0, cap - 1);
+        let got = buf.stale(lag).f32s()[0];
+        let want = if pushes > lag { (pushes - lag) as f32 } else { 0.0 };
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("cap={cap} pushes={pushes} lag={lag}: got {got}, want {want}"))
+        }
+    });
+}
+
+#[test]
+fn replay_buffer_warmup_consistent_with_reads() {
+    check("replay_warmup", 200, |g| {
+        let cap = g.usize_in(1, 6);
+        let mut buf = ReplayBuffer::new(cap, &[1], DType::F32);
+        for _ in 0..g.usize_in(0, 20) {
+            buf.push(Tensor::from_f32(vec![1], vec![1.0]).unwrap());
+        }
+        for lag in 0..cap {
+            let warmed = buf.warmed(lag);
+            let nonzero = buf.stale(lag).f32s()[0] != 0.0;
+            if warmed != nonzero {
+                return Err(format!("cap={cap} lag={lag}: warmed={warmed} nonzero={nonzero}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sgd_without_momentum_is_linear_in_lr() {
+    check("sgd_linear", 100, |g| {
+        let n = g.usize_in(1, 32);
+        let w0 = g.vec_f32(n, -1.0, 1.0);
+        let gr = g.vec_f32(n, -1.0, 1.0);
+        let lr = g.f32_in(0.001, 0.5);
+
+        let run = |mult: f32| -> Vec<f32> {
+            let mut p = vec![Tensor::from_f32(vec![n], w0.clone()).unwrap()];
+            let gt = vec![Tensor::from_f32(vec![n], gr.clone()).unwrap()];
+            let mut opt = SgdMomentum::new(&p, 0.0, 0.0);
+            opt.step(&mut p, &gt, lr * mult).unwrap();
+            p[0].f32s().to_vec()
+        };
+        let w1 = run(1.0);
+        let w2 = run(2.0);
+        // (w0 - w2) == 2 * (w0 - w1)
+        for i in 0..n {
+            let d1 = w0[i] - w1[i];
+            let d2 = w0[i] - w2[i];
+            if (d2 - 2.0 * d1).abs() > 1e-5 {
+                return Err(format!("i={i}: d1={d1} d2={d2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sgd_momentum_matches_reference_recurrence() {
+    check("sgd_momentum_ref", 50, |g| {
+        let steps = g.usize_in(1, 10);
+        let mu = g.f32_in(0.0, 0.99);
+        let wd = g.f32_in(0.0, 0.01);
+        let lr = g.f32_in(0.001, 0.1);
+        let g0 = g.f32_in(-1.0, 1.0);
+
+        let mut p = vec![Tensor::from_f32(vec![1], vec![1.0]).unwrap()];
+        let gt = vec![Tensor::from_f32(vec![1], vec![g0]).unwrap()];
+        let mut opt = SgdMomentum::new(&p, mu, wd);
+
+        // scalar reference recurrence
+        let (mut w, mut v) = (1.0f32, 0.0f32);
+        for _ in 0..steps {
+            opt.step(&mut p, &gt, lr).unwrap();
+            let grad = g0 + wd * w;
+            v = mu * v + grad;
+            w -= lr * v;
+        }
+        let got = p[0].f32s()[0];
+        if (got - w).abs() < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("got {got}, reference {w}"))
+        }
+    });
+}
+
+#[test]
+fn json_roundtrips_generated_documents() {
+    check("json_roundtrip", 150, |g| {
+        fn gen_value(g: &mut features_replay::testing::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.usize_in(0, 1) == 1),
+                2 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}-\"quoted\"\n", g.usize_in(0, 999))),
+                4 => Json::Arr((0..g.usize_in(0, 4))
+                    .map(|_| gen_value(g, depth - 1))
+                    .collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize_in(0, 4) {
+                        m.insert(format!("k{i}"), gen_value(g, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_value(g, 3);
+        let text = v.to_string_pretty();
+        match Json::parse(&text) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("roundtrip mismatch:\n{v:?}\nvs\n{back:?}")),
+            Err(e) => Err(format!("reparse failed: {e} on {text}")),
+        }
+    });
+}
+
+#[test]
+fn decoupled_never_slower_than_locked_bp() {
+    check("fr_le_bp", 200, |g| {
+        let k = g.usize_in(1, 8);
+        let costs = MeasuredCosts {
+            fwd_ms: g.vec_f32(k, 0.0, 50.0).iter().map(|&x| x as f64).collect(),
+            bwd_ms: g.vec_f32(k, 0.0, 50.0).iter().map(|&x| x as f64).collect(),
+            aux_ms: vec![0.0; k],
+            boundary_bytes: g.vec_usize(k.saturating_sub(1), 0, 1_000_000),
+            param_bytes: 0,
+        };
+        let comm = CommModel::default();
+        let bp = bp_iteration_ms(&costs, &comm);
+        let fr = decoupled_iteration_ms(&costs, &comm);
+        // FR replaces sum(bwd) + down-transfers with max(bwd): never slower
+        if fr <= bp + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("fr {fr} > bp {bp} at k={k}"))
+        }
+    });
+}
+
+#[test]
+fn data_parallel_monotone_compute_term() {
+    check("dp_compute", 100, |g| {
+        let k = g.usize_in(1, 6);
+        let costs = MeasuredCosts {
+            fwd_ms: g.vec_f32(k, 1.0, 20.0).iter().map(|&x| x as f64).collect(),
+            bwd_ms: g.vec_f32(k, 1.0, 20.0).iter().map(|&x| x as f64).collect(),
+            aux_ms: vec![0.0; k],
+            boundary_bytes: vec![0; k.saturating_sub(1)],
+            param_bytes: 0, // no allreduce -> pure compute scaling
+        };
+        let comm = CommModel { latency_ms: 0.0, bytes_per_ms: 1e30 };
+        let mut prev = f64::INFINITY;
+        for n in 1..=4 {
+            let t = bp_data_parallel_ms(&costs, &comm, n);
+            if t > prev + 1e-9 {
+                return Err(format!("dp time increased at n={n}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tensor_literal_roundtrip_random_shapes() {
+    check("tensor_roundtrip", 40, |g| {
+        let rank = g.usize_in(1, 4);
+        let shape = g.vec_usize(rank, 1, 8);
+        let n: usize = shape.iter().product();
+        let data = g.vec_f32(n, -100.0, 100.0);
+        let t = Tensor::from_f32(shape.clone(), data.clone()).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        if back.shape == shape && back.f32s() == &data[..] {
+            Ok(())
+        } else {
+            Err(format!("roundtrip failed for shape {shape:?}"))
+        }
+    });
+}
