@@ -1,32 +1,48 @@
 //! Quickstart: train a small residual MLP with Features Replay (K=4).
 //!
 //! ```sh
-//! make artifacts                       # once: AOT-compile the models
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart    # runs offline: native backend
 //! ```
 //!
-//! Walks the whole public API surface: load a manifest, build a trainer,
+//! Uses AOT artifacts when `make artifacts` has been run (with the `pjrt`
+//! feature); otherwise falls back to the procedural native-MLP config, so
+//! the whole walkthrough works on a fresh checkout with no Python.
+//!
+//! Walks the whole public API surface: resolve a manifest, build a trainer,
 //! drive the shared training loop, inspect memory + timing, and print the
 //! simulated K-device speedup over backward-locked BP.
 
 use anyhow::Result;
 
 use features_replay::coordinator::{
-    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig,
+    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig, Trainer,
 };
 use features_replay::data::DataSource;
 use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
+use features_replay::runtime::{Engine, Manifest, NativeMlpSpec};
+
+/// Pick the (engine, manifest) pair this build can actually run: PJRT +
+/// artifacts when both are available, otherwise the native CPU backend with
+/// the procedural MLP config (AOT manifests carry no native op graph).
+fn testbed() -> Result<(Engine, Manifest)> {
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = features_replay::default_artifacts_root().join("mlp_tiny_k4");
+        if dir.join("manifest.json").exists() {
+            return Ok((Engine::pjrt_cpu()?, Manifest::load(&dir)?));
+        }
+    }
+    println!("(using the native CPU backend with the procedural MLP config)");
+    Ok((Engine::native(), NativeMlpSpec::tiny(4).manifest()?))
+}
 
 fn main() -> Result<()> {
-    let dir = features_replay::default_artifacts_root().join("mlp_tiny_k4");
-    let manifest = Manifest::load(&dir)?;
+    let (engine, manifest) = testbed()?;
     println!("== Features Replay quickstart ==");
     println!("model {} | K={} modules | {} params | pallas kernels: {}",
              manifest.config, manifest.k, manifest.total_params(), manifest.use_pallas);
-
-    let engine = Engine::cpu()?;
-    let mut trainer = make_trainer(&engine, &dir, Algo::Fr, TrainConfig::default())?;
+    println!("backend: {}", engine.platform());
+    let mut trainer = make_trainer(&engine, &manifest, Algo::Fr, TrainConfig::default())?;
     let mut data = DataSource::for_manifest(&manifest, 0)?;
 
     let steps = std::env::var("FR_STEPS").ok()

@@ -1,0 +1,17 @@
+"""Cross-language spec check for the Rust native CPU backend.
+
+`native_mirror.py` transliterates `rust/src/runtime/native.rs` — the Rng
+(splitmix64 + xoshiro256**), procedural He/zero init, the kernel set
+(matmul variants, fused bias+ReLU, layernorm, softmax-xent) and the module
+forward/backward — into numpy float32, using the *same seeds and probe
+indices* as the Rust unit tests. Running its finite-difference suite here
+pins the backward math the Rust side implements, independent of cargo.
+
+Only numpy is required (no jax), so this runs in the offline sandbox.
+"""
+
+import native_mirror
+
+
+def test_native_mirror_finite_difference_suite():
+    assert native_mirror.main() == 0

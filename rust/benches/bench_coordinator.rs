@@ -13,7 +13,8 @@ use features_replay::util::json::Json;
 fn main() {
     let mut b = Bencher::new();
 
-    // replay ring: push + stale on a CIFAR-sized boundary tensor
+    // replay ring: push + stale on a CIFAR-sized boundary tensor — with
+    // Arc-backed tensors this is refcount traffic, not a memcpy
     let shape = [32usize, 16, 16, 32];
     let mut ring = ReplayBuffer::new(4, &shape, DType::F32);
     let t = Tensor::zeros(&shape, DType::F32);
@@ -56,9 +57,9 @@ fn main() {
         let _ = corpus.train_batch(8, 64);
     });
 
-    // tensor<->literal marshaling at batch scale
+    // batch-scale tensor hand-off (what every channel send now costs)
     let batchy = Tensor::zeros(&[32, 32, 32, 3], DType::F32);
-    b.bench("tensor/to_literal (393 KB)", || {
-        batchy.to_literal().unwrap();
+    b.bench("tensor/arc_clone (393 KB)", || {
+        let _ = batchy.clone();
     });
 }

@@ -1,67 +1,127 @@
 //! End-to-end iteration benchmarks — the Fig 4 row 2 / Fig 6 cost source:
-//! full train_step latency of each method on each model, plus the derived
-//! K-device pipeline numbers (BP vs FR speedup, BP-DP scaling).
+//! full train_step latency of each method on the native CPU backend, the
+//! derived K-device pipeline numbers (BP vs FR speedup, BP-DP scaling), and
+//! the hot-path copy audit written to BENCH_hotpath.json:
+//!
+//! - `fr_deep_copy_bytes_per_step` must be 0 — the replay/channel path is
+//!   Arc clones only (copy-on-write never fires during FR),
+//! - `fr_param_remarshals_per_step` must be 0 — parameters stay resident in
+//!   the backend instead of being re-marshaled every `run`.
 
-use features_replay::bench::Bencher;
+use std::path::PathBuf;
+
+use features_replay::bench::{write_bench_json, Bencher};
 use features_replay::coordinator::{
-    self, make_trainer, pipeline_sim, Algo, TrainConfig,
+    self, make_trainer, parallel::ParallelFr, pipeline_sim, Algo, TrainConfig, Trainer,
 };
 use features_replay::data::DataSource;
-use features_replay::runtime::{Engine, Manifest};
+use features_replay::runtime::{copy_metrics, BackendKind, NativeMlpSpec};
+use features_replay::util::json::{num, s, Json};
+
+const AUDIT_STEPS: usize = 16;
 
 fn main() {
-    let root = features_replay::default_artifacts_root();
+    let manifest = NativeMlpSpec::tiny(4).manifest().unwrap();
+    let engine = BackendKind::Native.engine().unwrap();
     let mut b = Bencher::new();
     let comm = pipeline_sim::CommModel::default();
+    println!("-- {} ({} backend): one training iteration per method --",
+             manifest.config, engine.platform());
 
-    for cfg in ["mlp_tiny_k4", "resnet_s_k4"] {
-        let dir = root.join(cfg);
-        if !dir.exists() {
-            eprintln!("(skip {cfg}: artifacts not built)");
-            continue;
-        }
-        let manifest = Manifest::load(&dir).unwrap();
-        let engine = Engine::cpu().unwrap();
-        println!("\n-- {cfg}: one training iteration per method --");
+    let mut extra: Vec<(&str, Json)> = vec![
+        ("backend", s(&engine.platform())),
+        ("config", s(&manifest.config)),
+    ];
 
-        for algo in [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni] {
-            let mut trainer = make_trainer(&engine, &dir, algo,
-                                           TrainConfig::default()).unwrap();
-            let mut data = DataSource::for_manifest(&manifest, 0).unwrap();
-            // warm the pipeline so steady-state is measured
-            for _ in 0..manifest.k {
-                let batch = data.train_batch();
-                trainer.train_step(&batch, 0.01).unwrap();
-            }
-            let mut timings = Vec::new();
+    for algo in [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni] {
+        let mut trainer = make_trainer(&engine, &manifest, algo,
+                                       TrainConfig::default()).unwrap();
+        let mut data = DataSource::for_manifest(&manifest, 0).unwrap();
+        // warm the pipeline so steady-state is measured
+        for _ in 0..manifest.k {
             let batch = data.train_batch();
-            b.bench(&format!("{cfg}/{}/train_step", trainer.name()), || {
-                let s = trainer.train_step(&batch, 0.01).unwrap();
-                timings.push(s.timing);
-            });
-            let costs = pipeline_sim::MeasuredCosts::from_timings(
-                &timings,
-                coordinator::boundary_bytes(trainer.stack()),
-                coordinator::param_bytes(trainer.stack()));
-            match algo {
-                Algo::Bp => {
-                    println!("    K-device locked BP : {:8.2} ms/iter",
-                             pipeline_sim::bp_iteration_ms(&costs, &comm));
-                    for n in [2, 4] {
-                        println!("    BP data-parallel x{n}: {:8.2} ms/iter",
-                                 pipeline_sim::bp_data_parallel_ms(&costs, &comm, n));
-                    }
-                }
-                Algo::Fr => {
-                    println!("    K-device FR        : {:8.2} ms/iter  (speedup {:.2}x)",
-                             pipeline_sim::decoupled_iteration_ms(&costs, &comm),
-                             pipeline_sim::fr_speedup(&costs, &comm));
-                }
-                _ => {
-                    println!("    K-device decoupled : {:8.2} ms/iter",
-                             pipeline_sim::decoupled_iteration_ms(&costs, &comm));
+            trainer.train_step(&batch, 0.01).unwrap();
+        }
+        let mut timings = Vec::new();
+        let batch = data.train_batch();
+        b.bench(&format!("{}/train_step", trainer.name()), || {
+            let stats = trainer.train_step(&batch, 0.01).unwrap();
+            timings.push(stats.timing);
+        });
+        let costs = pipeline_sim::MeasuredCosts::from_timings(
+            &timings,
+            coordinator::boundary_bytes(trainer.stack()),
+            coordinator::param_bytes(trainer.stack()));
+        match algo {
+            Algo::Bp => {
+                println!("    K-device locked BP : {:8.3} ms/iter",
+                         pipeline_sim::bp_iteration_ms(&costs, &comm));
+                for n in [2, 4] {
+                    println!("    BP data-parallel x{n}: {:8.3} ms/iter",
+                             pipeline_sim::bp_data_parallel_ms(&costs, &comm, n));
                 }
             }
+            Algo::Fr => {
+                println!("    K-device FR        : {:8.3} ms/iter  (speedup {:.2}x)",
+                         pipeline_sim::decoupled_iteration_ms(&costs, &comm),
+                         pipeline_sim::fr_speedup(&costs, &comm));
+            }
+            _ => {
+                println!("    K-device decoupled : {:8.3} ms/iter",
+                         pipeline_sim::decoupled_iteration_ms(&costs, &comm));
+            }
+        }
+
+        // Hot-path copy audit for FR: after warmup, a steady-state window
+        // must perform zero deep copies and zero parameter re-marshals.
+        if algo == Algo::Fr {
+            copy_metrics::reset();
+            let mut history_bytes = 0usize;
+            for _ in 0..AUDIT_STEPS {
+                let batch = data.train_batch();
+                let stats = trainer.train_step(&batch, 0.01).unwrap();
+                history_bytes = stats.history_bytes;
+            }
+            let per = AUDIT_STEPS as f64;
+            extra.push(("fr_deep_copies_per_step",
+                        num(copy_metrics::deep_copies() as f64 / per)));
+            extra.push(("fr_deep_copy_bytes_per_step",
+                        num(copy_metrics::deep_copy_bytes() as f64 / per)));
+            extra.push(("fr_param_remarshals_per_step",
+                        num(copy_metrics::param_remarshals() as f64 / per)));
+            extra.push(("fr_arc_clones_per_step",
+                        num(copy_metrics::shallow_clones() as f64 / per)));
+            extra.push(("fr_history_bytes", num(history_bytes as f64)));
+            println!("    FR copy audit      : {:.1} deep-copy B/step, \
+                      {:.1} remarshals/step, {:.1} arc clones/step",
+                     copy_metrics::deep_copy_bytes() as f64 / per,
+                     copy_metrics::param_remarshals() as f64 / per,
+                     copy_metrics::shallow_clones() as f64 / per);
         }
     }
+
+    // Threaded deployment: the channel path must be zero-copy too.
+    {
+        let mut data = DataSource::for_manifest(&manifest, 0).unwrap();
+        let mut par = ParallelFr::spawn(
+            manifest.clone(), TrainConfig::default(), BackendKind::Native).unwrap();
+        for _ in 0..manifest.k {
+            let batch = data.train_batch();
+            par.train_step(&batch, 0.01).unwrap();
+        }
+        copy_metrics::reset();
+        let batch = data.train_batch();
+        b.bench("ParallelFR/train_step", || {
+            par.train_step(&batch, 0.01).unwrap();
+        });
+        let steps = b.warmup_iters + b.results.last().map(|r| r.iters).unwrap_or(1);
+        extra.push(("parallel_deep_copy_bytes_per_step",
+                    num(copy_metrics::deep_copy_bytes() as f64 / steps as f64)));
+        par.shutdown().unwrap();
+    }
+
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..").join("BENCH_hotpath.json");
+    write_bench_json(&out, "hotpath", &b.results, extra).unwrap();
+    println!("\nwrote {}", out.display());
 }

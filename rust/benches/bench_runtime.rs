@@ -1,57 +1,63 @@
-//! Runtime-layer benchmarks: per-module executable latency (fwd / bwd /
-//! fused loss head) and host<->literal marshaling, per artifact config.
+//! Runtime-layer benchmarks on the native CPU backend: per-module program
+//! latency (fwd / bwd / fused loss head) plus the raw kernel hot-spots.
 //!
-//! This is the L1/L2 "measured cost" source: everything the pipeline
-//! simulator consumes is visible here. Run with `cargo bench` (or
-//! FR_BENCH_QUICK=1 for a fast pass).
+//! This is the "measured cost" source: everything the pipeline simulator
+//! consumes is visible here. Run with `cargo bench` (or FR_BENCH_QUICK=1
+//! for a fast pass).
 
 use features_replay::bench::Bencher;
-use features_replay::runtime::{DType, Engine, Manifest, ModuleRuntime, Tensor};
+use features_replay::runtime::native::kernels;
+use features_replay::runtime::{DType, Engine, ModuleRuntime, NativeMlpSpec, Tensor};
 
 fn main() {
-    let root = features_replay::default_artifacts_root();
     let mut b = Bencher::new();
+    let manifest = NativeMlpSpec::tiny(4).manifest().unwrap();
+    let engine = Engine::native();
+    println!("-- {} ({}) --", manifest.config, engine.platform());
 
-    for cfg in ["mlp_tiny_k4", "resnet_s_k4", "transformer_tiny_k4"] {
-        let dir = root.join(cfg);
-        if !dir.exists() {
-            eprintln!("(skip {cfg}: artifacts not built)");
-            continue;
-        }
-        let manifest = Manifest::load(&dir).unwrap();
-        let engine = Engine::cpu().unwrap();
-        println!("\n-- {cfg} --");
-        for k in 0..manifest.k {
-            let m = ModuleRuntime::load(&engine, &manifest, k).unwrap();
-            let h = Tensor::zeros(&m.spec.in_shape, m.spec.in_dtype);
-            if k < manifest.k - 1 {
-                b.bench(&format!("{cfg}/module{k}/fwd"), || {
-                    m.forward(&h).unwrap();
-                });
-            }
+    for k in 0..manifest.k {
+        let m = ModuleRuntime::load(&engine, &manifest, k).unwrap();
+        let h = Tensor::zeros(&m.spec.in_shape, m.spec.in_dtype);
+        if k < manifest.k - 1 {
+            b.bench(&format!("module{k}/fwd"), || {
+                m.forward(&h).unwrap();
+            });
             let delta = Tensor::zeros(&m.spec.out_shape, DType::F32);
-            if k < manifest.k - 1 {
-                b.bench(&format!("{cfg}/module{k}/bwd"), || {
-                    m.backward(&h, &delta).unwrap();
-                });
-            } else {
-                let labels = Tensor::from_i32(
-                    manifest.label_shape.clone(),
-                    vec![0; manifest.label_shape.iter().product()]).unwrap();
-                b.bench(&format!("{cfg}/module{k}/loss_bwd"), || {
-                    m.loss_backward(&h, &labels).unwrap();
-                });
-            }
+            b.bench(&format!("module{k}/bwd"), || {
+                m.backward(&h, &delta).unwrap();
+            });
+        } else {
+            let labels = Tensor::from_i32(
+                manifest.label_shape.clone(),
+                vec![0; manifest.label_shape.iter().product()]).unwrap();
+            b.bench(&format!("module{k}/loss_bwd"), || {
+                m.loss_backward(&h, &labels).unwrap();
+            });
         }
-
-        // marshaling overhead: the L3 <-> PJRT boundary cost
-        let big = Tensor::zeros(&manifest.input_shape, manifest.input_dtype);
-        b.bench(&format!("{cfg}/tensor_to_literal"), || {
-            big.to_literal().unwrap();
-        });
-        let lit = big.to_literal().unwrap();
-        b.bench(&format!("{cfg}/literal_to_tensor"), || {
-            Tensor::from_literal(&lit).unwrap();
-        });
     }
+
+    // raw kernel hot-spots at the stem's dimensions
+    let (bb, din, h) = (16usize, 3072usize, 64usize);
+    let x = vec![0.5f32; bb * din];
+    let w = vec![0.01f32; din * h];
+    b.bench("kernels/matmul 16x3072x64", || {
+        let _ = kernels::matmul(&x, &w, bb, din, h);
+    });
+    let dy = vec![0.5f32; bb * h];
+    b.bench("kernels/matmul_tn (dW)", || {
+        let _ = kernels::matmul_tn(&x, &dy, bb, din, h);
+    });
+    b.bench("kernels/matmul_nt (dx)", || {
+        let _ = kernels::matmul_nt(&dy, &w, bb, h, din);
+    });
+
+    // host-tensor traffic: Arc clone vs forced deep copy
+    let big = Tensor::zeros(&[32, 32, 32, 3], DType::F32);
+    b.bench("tensor/arc_clone (393 KB)", || {
+        let _ = big.clone();
+    });
+    b.bench("tensor/deep_copy_via_cow (393 KB)", || {
+        let mut c = big.clone();
+        c.f32s_mut()[0] = 1.0; // shared -> copy-on-write fires
+    });
 }

@@ -1,9 +1,14 @@
 //! Mini-criterion: a benchmark harness for `cargo bench` targets in an
 //! offline sandbox (no criterion crate). Warmup + timed iterations,
-//! mean/median/stddev, and an aligned table — enough to compare the paper's
-//! methods against each other, which is all the figures need.
+//! mean/median/stddev, an aligned table, and a machine-readable JSON report
+//! (`BENCH_*.json`) so the perf trajectory is tracked across PRs.
 
+use std::path::Path;
 use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{arr, num, obj, s, Json};
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -21,6 +26,34 @@ impl BenchResult {
         format!("{:<42} {:>9.3} ms/iter (median {:>9.3}, sd {:>7.3}, n={})",
                 self.name, self.mean_ms, self.median_ms, self.stddev_ms, self.iters)
     }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("mean_ms", num(self.mean_ms)),
+            ("median_ms", num(self.median_ms)),
+            ("stddev_ms", num(self.stddev_ms)),
+            ("min_ms", num(self.min_ms)),
+            ("max_ms", num(self.max_ms)),
+        ])
+    }
+}
+
+/// Write bench results + extra fields as one JSON report (the BENCH_*.json
+/// artifacts a later PR's bench run diffs against).
+pub fn write_bench_json(path: &Path, title: &str, results: &[BenchResult],
+                        extra: Vec<(&str, Json)>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut fields = vec![
+        ("bench", s(title)),
+        ("results", arr(results.iter().map(|r| r.to_json()))),
+    ];
+    fields.extend(extra);
+    std::fs::write(path, obj(fields).to_string_pretty())?;
+    Ok(())
 }
 
 pub struct Bencher {
@@ -94,6 +127,18 @@ mod tests {
         assert_eq!(r.min_ms, 1.0);
         assert_eq!(r.max_ms, 5.0);
         assert!((r.stddev_ms - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = summarize("x", &[1.0, 2.0]);
+        let path = std::env::temp_dir().join("fr_bench_test.json");
+        write_bench_json(&path, "test", &[r], vec![("extra", num(5.0))]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.field("bench").unwrap().as_str(), Some("test"));
+        assert_eq!(j.field("extra").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.field("results").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -57,7 +57,7 @@ impl Trainer for BpTrainer {
             delta = din;
         }
 
-        Ok(StepStats { loss: out.loss, timing })
+        Ok(StepStats { loss: out.loss, timing, history_bytes: 0 })
     }
 
     fn memory(&self) -> MemoryReport {

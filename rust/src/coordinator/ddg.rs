@@ -71,12 +71,14 @@ impl Trainer for DdgTrainer {
         let mut timer = Timer::new();
 
         // forward pass with full stashing (weights snapshotted: the delayed
-        // backward must differentiate the graph captured *now*)
+        // backward must differentiate the graph captured *now*). The
+        // snapshots are Arc bumps; the optimizer's next in-place update
+        // copy-on-writes the live params away from them.
         let mut h = batch.input.clone();
         for k in 0..kk {
             self.stash[k].push_back(Stash {
                 h_in: h.clone(),
-                params: self.stack.modules[k].params.clone(),
+                params: self.stack.modules[k].params.to_vec(),
                 labels: (k == kk - 1).then(|| batch.labels.clone()),
             });
             if k < kk - 1 {
@@ -105,14 +107,11 @@ impl Trainer for DdgTrainer {
                 }
             } else {
                 let s = self.stash[k].pop_front().unwrap(); // oldest in-flight
-                let delta = std::mem::replace(
-                    &mut self.pending_delta[k],
-                    Tensor::zeros(&self.stack.modules[k].spec.out_shape,
-                                  crate::runtime::DType::F32));
+                let delta = self.pending_delta[k].clone();
                 // differentiate the OLD graph: snapshot params + old input
-                let saved = std::mem::replace(&mut self.stack.modules[k].params, s.params);
+                let saved = self.stack.modules[k].params.replace(s.params);
                 let result = self.stack.modules[k].backward(&s.h_in, &delta);
-                self.stack.modules[k].params = saved;
+                self.stack.modules[k].params.replace(saved);
                 let (grads, delta_in) = result?;
                 // stale gradient applied to CURRENT weights — DDG's defining move
                 self.stack.update(k, &grads, lr)?;
@@ -124,7 +123,10 @@ impl Trainer for DdgTrainer {
         }
 
         self.step += 1;
-        Ok(StepStats { loss, timing })
+        let history_bytes = self.stash.iter().flatten()
+            .map(|s| s.h_in.size_bytes())
+            .sum();
+        Ok(StepStats { loss, timing, history_bytes })
     }
 
     fn memory(&self) -> MemoryReport {

@@ -76,7 +76,7 @@ impl Trainer for DniTrainer {
             // 1) train synthesizer k on (h_k, true-ish delta from above)
             let tgt = target.take().context("DNI: missing target delta")?;
             let (_mse, sgrads) = self.synths[k].train_grads(&hs[k + 1], &tgt)?;
-            self.synth_opts[k].step(&mut self.synths[k].params, &sgrads, self.synth_lr)?;
+            self.synth_opts[k].step_resident(&mut self.synths[k].params, &sgrads, self.synth_lr)?;
             // 2) module k updates from the (fresh) synthetic gradient
             let delta_hat = self.synths[k].predict(&hs[k + 1])?;
             timing.aux_ms[k] = timer.lap_ms();
@@ -86,7 +86,7 @@ impl Trainer for DniTrainer {
             target = delta_in;
         }
 
-        Ok(StepStats { loss, timing })
+        Ok(StepStats { loss, timing, history_bytes: 0 })
     }
 
     fn memory(&self) -> MemoryReport {

@@ -74,8 +74,9 @@ impl FrTrainer {
         let mut timer = Timer::new();
 
         // ---- Play: forward pass, storing inputs ------------------------
-        // Inputs are moved into the history rings rather than cloned; the
-        // last module's forward is fused into its loss head below.
+        // Tensors are Arc-backed: the input clone and every ring push are
+        // refcount bumps, not buffer copies. The last module's forward is
+        // fused into its loss head below.
         let mut h = batch.input.clone();
         for k in 0..kk - 1 {
             let out = self.stack.modules[k].forward(&h)?;
@@ -106,11 +107,10 @@ impl FrTrainer {
                     self.pending_delta[k - 1] = out.delta_in.unwrap();
                 }
             } else {
+                // Both reads are Arc bumps; module k+1 overwrites
+                // pending_delta[k] for the next iteration below.
                 let h_replay = self.history[k].stale(lag).clone();
-                let delta = std::mem::replace(
-                    &mut self.pending_delta[k],
-                    Tensor::zeros(&self.stack.modules[k].spec.out_shape,
-                                  crate::runtime::DType::F32));
+                let delta = self.pending_delta[k].clone();
                 let (grads, delta_in) = self.stack.modules[k].backward(&h_replay, &delta)?;
                 if capture.is_some() {
                     captured.push(grads.clone());
@@ -129,7 +129,8 @@ impl FrTrainer {
         }
 
         self.step += 1;
-        Ok(StepStats { loss, timing })
+        let history_bytes = self.history.iter().map(|h| h.bytes()).sum();
+        Ok(StepStats { loss, timing, history_bytes })
     }
 }
 

@@ -22,8 +22,6 @@ pub mod sigma;
 pub mod stack;
 pub mod strategy;
 
-use std::path::Path;
-
 use anyhow::{bail, Result};
 
 use crate::data::DataSource;
@@ -36,11 +34,12 @@ pub use memory::Algo;
 pub use stack::{ModuleStack, TrainConfig};
 pub use strategy::{MemoryReport, StepStats, StepTiming, Trainer};
 
-/// Build a trainer for `algo` from an artifact directory.
-pub fn make_trainer(engine: &Engine, artifact_dir: &Path, algo: Algo,
+/// Build a trainer for `algo` from a manifest (loaded from an artifact
+/// directory, or built procedurally — see `runtime::NativeMlpSpec`) on the
+/// given engine's backend.
+pub fn make_trainer(engine: &Engine, manifest: &Manifest, algo: Algo,
                     config: TrainConfig) -> Result<Box<dyn Trainer>> {
-    let manifest = Manifest::load(artifact_dir)?;
-    let stack = ModuleStack::load(engine, manifest, config)?;
+    let stack = ModuleStack::load(engine, manifest.clone(), config)?;
     Ok(match algo {
         Algo::Bp => Box::new(bp::BpTrainer::new(stack)),
         Algo::Fr => Box::new(fr::FrTrainer::new(stack)),

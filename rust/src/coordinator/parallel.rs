@@ -1,6 +1,6 @@
 //! Threaded FR coordinator: one OS thread per module, each owning its own
-//! PJRT client (clients are not `Send`; one client per worker also mirrors
-//! the paper's one-GPU-per-module deployment).
+//! execution engine (backends are `Rc`-based and not `Send`; one engine per
+//! worker also mirrors the paper's one-GPU-per-module deployment).
 //!
 //! Dataflow per iteration (exactly Algorithm 1's topology):
 //!   leader --input--> W0 --h--> W1 --h--> ... --h--> W(K-1)   (Play)
@@ -8,10 +8,13 @@
 //!   Wk --delta--> W(k-1)   (consumed at the *next* iteration)
 //!   Wk --done(timing)--> leader
 //!
-//! On the 1-core testbed the threads interleave rather than overlap; the
-//! correctness (identical gradients to `FrTrainer`) is what this module
-//! demonstrates, and it is covered by an integration test asserting
-//! parity with the single-timeline implementation.
+//! Every payload crossing a channel is an Arc-backed [`Tensor`], so the
+//! hand-offs (input feed, boundary activations, deltas) are refcount bumps
+//! — no buffer is copied on the worker graph. On the 1-core testbed the
+//! threads interleave rather than overlap; the correctness (identical
+//! gradients to `FrTrainer`) is what this module demonstrates, covered by
+//! an integration test asserting parity with the single-timeline
+//! implementation on the native backend.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -21,7 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::Batch;
 use crate::metrics::xent_and_acc;
 use crate::optim::SgdMomentum;
-use crate::runtime::{DType, Engine, Manifest, ModuleRuntime, Tensor};
+use crate::runtime::{BackendKind, DType, Manifest, ModuleRuntime, Tensor};
 use crate::util::Timer;
 
 use super::history::ReplayBuffer;
@@ -61,10 +64,15 @@ pub struct ParallelFr {
 }
 
 impl ParallelFr {
-    pub fn spawn(artifact_dir: std::path::PathBuf, config: TrainConfig) -> Result<ParallelFr> {
-        // Validate the manifest on the leader before spawning anything.
-        let manifest = Manifest::load(&artifact_dir)?;
+    /// Spawn the worker fleet for `manifest` on `backend`. The manifest is
+    /// cloned into every worker; each worker builds its own engine + module
+    /// runtime from it (procedural configs need no disk at all).
+    pub fn spawn(manifest: Manifest, config: TrainConfig, backend: BackendKind)
+                 -> Result<ParallelFr> {
         let kk = manifest.k;
+        if kk == 0 {
+            bail!("manifest has no modules");
+        }
 
         // activation channels: leader -> W0 -> W1 ... (payload, labels-for-last)
         let mut act_txs: Vec<Sender<(Tensor, Option<Tensor>)>> = Vec::new();
@@ -96,18 +104,18 @@ impl ParallelFr {
 
         for k in 0..kk {
             let (cmd_tx, cmd_rx) = channel::<Command>();
-            let act_rx = act_rxs.next().unwrap();
+            let act_rx = act_rxs.next().expect("one receiver per worker");
             let next_tx = next_txs[k].take();
             let delta_tx = delta_txs[k].take();
             let delta_rx = delta_rxs[k].take();
             let done = done_tx.clone();
-            let dir = artifact_dir.clone();
+            let worker_manifest = manifest.clone();
             let cfg = config.clone();
             let join = std::thread::Builder::new()
                 .name(format!("fr-worker-{k}"))
                 .spawn(move || {
-                    worker_main(k, dir, cfg, cmd_rx, act_rx, next_tx,
-                                delta_tx, delta_rx, done)
+                    worker_main(k, worker_manifest, backend, cfg, cmd_rx, act_rx,
+                                next_tx, delta_tx, delta_rx, done)
                 })
                 .context("spawning worker thread")?;
             workers.push(WorkerHandles { cmd_tx, join });
@@ -136,7 +144,7 @@ impl ParallelFr {
 
         let mut timing = StepTiming::new(self.k);
         let mut loss = f32::NAN;
-        let mut history = 0usize;
+        let mut history_bytes = 0usize;
         for _ in 0..self.k {
             let d: WorkerDone = self.done_rx.recv().context("worker died mid-step")?;
             timing.fwd_ms[d.worker] = d.fwd_ms;
@@ -144,11 +152,10 @@ impl ParallelFr {
             if let Some(l) = d.loss {
                 loss = l;
             }
-            history += d.history_bytes;
+            history_bytes += d.history_bytes;
         }
-        let _ = history;
         self.step += 1;
-        Ok(StepStats { loss, timing })
+        Ok(StepStats { loss, timing, history_bytes })
     }
 
     /// Forward-only pass returning (mean loss, error rate) on one batch.
@@ -185,7 +192,8 @@ impl ParallelFr {
 #[allow(clippy::too_many_arguments)]
 fn worker_main(
     k: usize,
-    artifact_dir: std::path::PathBuf,
+    manifest: Manifest,
+    backend: BackendKind,
     config: TrainConfig,
     cmd_rx: Receiver<Command>,
     act_rx: Receiver<(Tensor, Option<Tensor>)>,
@@ -194,9 +202,8 @@ fn worker_main(
     delta_rx: Option<Receiver<Tensor>>,
     done: Sender<WorkerDone>,
 ) -> Result<()> {
-    // Each worker builds its own PJRT client + module runtime ("one GPU").
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load(&artifact_dir)?;
+    // Each worker builds its own engine + module runtime ("one GPU").
+    let engine = backend.engine()?;
     let kk = manifest.k;
     let mut module = ModuleRuntime::load(&engine, &manifest, k)?;
     let mut opt = SgdMomentum::new(&module.params, config.momentum, config.weight_decay);
@@ -223,7 +230,8 @@ fn worker_main(
                         }).ok();
                     } else {
                         let out = module.forward(&h)?;
-                        next_tx.as_ref().unwrap().send((out, lbl)).ok();
+                        next_tx.as_ref().expect("non-last worker has next_tx")
+                            .send((out, lbl)).ok();
                         done.send(WorkerDone {
                             worker: k, fwd_ms: timer.lap_ms(), bwd_ms: 0.0,
                             loss: None, logits: None,
@@ -232,17 +240,19 @@ fn worker_main(
                     }
                     continue;
                 }
-                history.push(h.clone());
                 if is_last {
+                    history.push(h);
                     labels = lbl;
                 } else {
                     let out = module.forward(&h)?;
-                    next_tx.as_ref().unwrap().send((out, lbl)).ok();
+                    // Arc bump into the ring; the buffer is shared with
+                    // whoever else still holds this iteration's activation.
+                    history.push(h);
+                    next_tx.as_ref().expect("non-last worker has next_tx")
+                        .send((out, lbl)).ok();
                 }
                 // fwd timing is reported with the backward's done message
                 let fwd_ms = timer.lap_ms();
-                // stash fwd time in pending slot via thread-local pattern:
-                // simplest is to piggyback on the Backward handler below.
                 FWD_MS.with(|c| c.set(fwd_ms));
             }
             Ok(Command::Backward { lr }) => {
@@ -253,7 +263,7 @@ fn worker_main(
                     let out = module.loss_backward(
                         &h_in, labels.as_ref().context("no labels stored")?)?;
                     loss = Some(out.loss);
-                    opt.step(&mut module.params, &out.grads, lr)?;
+                    opt.step_resident(&mut module.params, &out.grads, lr)?;
                     if let (Some(tx), Some(d)) = (&delta_tx, out.delta_in) {
                         tx.send(d).ok();
                     }
@@ -271,7 +281,7 @@ fn worker_main(
                     let h_replay = history.stale(lag).clone();
                     let (grads, delta_in) = module.backward(&h_replay, &pending_delta)?;
                     if history.warmed(lag) {
-                        opt.step(&mut module.params, &grads, lr)?;
+                        opt.step_resident(&mut module.params, &grads, lr)?;
                     }
                     if let (Some(tx), Some(d)) = (&delta_tx, delta_in) {
                         tx.send(d).ok();

@@ -57,9 +57,10 @@ impl ModuleStack {
     pub fn reinit(&mut self, seed: u64) {
         let mut rng = Rng::new(seed);
         for m in &mut self.modules {
-            for (p, shape) in m.params.iter_mut().zip(&m.spec.param_shapes) {
+            for (p, shape) in m.params.tensors_mut().iter_mut().zip(&m.spec.param_shapes) {
                 reinit_tensor(p, shape, &mut rng);
             }
+            m.params.mark_updated();
         }
         for opt in &mut self.optimizers {
             opt.reset();
@@ -102,9 +103,11 @@ impl ModuleStack {
         Ok((out.loss, grads, out.logits))
     }
 
-    /// SGD step on module k with the given grads at stepsize lr.
+    /// SGD step on module k with the given grads at stepsize lr. Goes
+    /// through the resident-params write-back hook so backends re-upload
+    /// weights exactly once per update.
     pub fn update(&mut self, k: usize, grads: &[Tensor], lr: f32) -> Result<()> {
-        self.optimizers[k].step(&mut self.modules[k].params, grads, lr)
+        self.optimizers[k].step_resident(&mut self.modules[k].params, grads, lr)
     }
 
     /// Evaluate mean loss + error rate over `n_batches` deterministic test

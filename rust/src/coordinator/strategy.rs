@@ -34,6 +34,11 @@ impl StepTiming {
 pub struct StepStats {
     pub loss: f32,
     pub timing: StepTiming,
+    /// Bytes currently held by the method's cross-iteration feature buffers
+    /// (FR replay rings / DDG stashes), aggregated across workers — lets the
+    /// threaded deployment's memory accounting line up with
+    /// `Trainer::memory().history` without another fleet round-trip.
+    pub history_bytes: usize,
 }
 
 /// Bytes each algorithm holds, split by what holds them (Fig 5 / Table 1).

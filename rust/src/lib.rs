@@ -14,11 +14,13 @@
 //! - **L1 (python/compile/kernels)**: Pallas kernels for the compute
 //!   hot-spots, embedded in the same artifacts.
 //!
-//! Python never runs at training time: everything in `artifacts/` is loaded
-//! and executed through PJRT by [`runtime`].
+//! Python never runs at training time. Execution goes through the pluggable
+//! backend layer in [`runtime`]: the pure-Rust **native CPU engine**
+//! (default — procedural op graphs, fully offline) or **PJRT** over the AOT
+//! `artifacts/` (cargo feature `pjrt`).
 //!
-//! Quickstart: `cargo run --release --example quickstart` (after
-//! `make artifacts`). See README.md for the full tour.
+//! Quickstart: `cargo run --release --example quickstart` (works offline;
+//! uses artifacts when built). See README.md for the full tour.
 
 pub mod bench;
 pub mod coordinator;

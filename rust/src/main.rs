@@ -1,14 +1,16 @@
 //! `frctl` — the Features Replay training launcher.
 //!
 //! Subcommands:
-//!   info     --model <cfg> --k <K>     inspect an artifact manifest
+//!   info     --model <cfg> --k <K>     inspect a manifest
 //!   train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
 //!   compare  --model <cfg> --k <K>     all four methods side by side
 //!   sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
 //!   memory   --model <cfg>             Fig 5 / Table 1 memory model
 //!   parallel --model <cfg> --k <K>     threaded K-worker FR deployment
 //!
-//! Everything runs from AOT artifacts; Python is never invoked.
+//! Backends: `--backend native` (default — pure-Rust CPU engine, works with
+//! no artifacts at all: mlp models fall back to a procedural config) or
+//! `--backend pjrt` (cargo feature `pjrt`, runs AOT HLO artifacts).
 
 use std::path::PathBuf;
 
@@ -16,18 +18,19 @@ use anyhow::{bail, Context, Result};
 
 use features_replay::coordinator::{
     self, make_trainer, memory, parallel::ParallelFr, parse_algo, sigma,
-    Algo, RunOptions, TrainConfig,
+    Algo, RunOptions, TrainConfig, Trainer,
 };
 use features_replay::data::DataSource;
 use features_replay::metrics::TablePrinter;
 use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
+use features_replay::runtime::{BackendKind, Engine, Manifest, NativeMlpSpec};
 use features_replay::util::cli::Args;
 
 const OPTS: &[(&str, &str)] = &[
     ("model", "model config name (e.g. mlp_tiny, resnet_s)"),
     ("k", "number of modules K (default 4)"),
     ("algo", "bp | fr | ddg | dni (train only)"),
+    ("backend", "native | pjrt (default native)"),
     ("steps", "training steps (default 100)"),
     ("lr", "base stepsize (default 0.01)"),
     ("seed", "data/init seed (default 0)"),
@@ -50,6 +53,31 @@ fn usage() -> String {
     )
 }
 
+/// Resolve the manifest the selected backend can actually execute: the PJRT
+/// backend wants the on-disk AOT artifacts; the native backend needs a
+/// procedural op graph, so it uses the `NativeMlpSpec` fallback (mlp models
+/// only — that is the graph family the native backend can build).
+fn resolve_manifest(root: &PathBuf, model: &str, k: usize, seed: u64,
+                    backend: BackendKind) -> Result<Manifest> {
+    let dir = root.join(format!("{model}_k{k}"));
+    match backend {
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => return Manifest::load(&dir),
+        BackendKind::Native => {}
+    }
+    if dir.join("manifest.json").exists() {
+        eprintln!("(artifacts at {dir:?} need --backend pjrt; the native \
+                   backend uses the procedural config)");
+    }
+    if model.starts_with("mlp") {
+        let mut cfg = NativeMlpSpec::tiny(k);
+        cfg.seed = seed;
+        return cfg.manifest();
+    }
+    bail!("the native backend has no procedural graph for model {model:?} \
+           (only mlp* has one) — build artifacts and use --backend pjrt")
+}
+
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, OPTS, FLAGS).map_err(|e| anyhow::anyhow!(e))?;
@@ -66,24 +94,34 @@ fn main() -> Result<()> {
     let lr = args.f64_or("lr", 0.01).map_err(|e| anyhow::anyhow!(e))? as f32;
     let seed = args.u64_or("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
     let eval_every = args.usize_or("eval-every", 25).map_err(|e| anyhow::anyhow!(e))?;
-    let dir = root.join(format!("{model}_k{k}"));
+    let backend = BackendKind::parse(args.get_or("backend", "native"))?;
 
     match args.positional[0].as_str() {
-        "info" => cmd_info(&dir),
+        "info" => cmd_info(&resolve_manifest(&root, &model, k, seed, backend)?),
         "train" => {
             let algo = parse_algo(args.get_or("algo", "fr"))?;
-            cmd_train(&dir, algo, steps, lr, seed, eval_every, args.get("out"))
+            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
+            cmd_train(&manifest, backend, algo, steps, lr, seed, eval_every,
+                      args.get("out"))
         }
-        "compare" => cmd_compare(&dir, steps, lr, seed, eval_every),
-        "sigma" => cmd_sigma(&dir, steps, lr, seed),
-        "memory" => cmd_memory(&root, &model),
-        "parallel" => cmd_parallel(&dir, steps, lr, seed),
+        "compare" => {
+            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
+            cmd_compare(&manifest, backend, steps, lr, seed, eval_every)
+        }
+        "sigma" => {
+            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
+            cmd_sigma(&manifest, backend, steps, lr, seed)
+        }
+        "memory" => cmd_memory(&root, &model, seed, backend),
+        "parallel" => {
+            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
+            cmd_parallel(manifest, backend, steps, lr, seed)
+        }
         other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
     }
 }
 
-fn cmd_info(dir: &PathBuf) -> Result<()> {
-    let m = Manifest::load(dir)?;
+fn cmd_info(m: &Manifest) -> Result<()> {
     println!("config        {}", m.config);
     println!("modules (K)   {}", m.k);
     println!("layers (L)    {}", m.num_layers);
@@ -103,16 +141,16 @@ fn cmd_info(dir: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(dir: &PathBuf, algo: Algo, steps: usize, lr: f32, seed: u64,
-             eval_every: usize, out: Option<&str>) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load(dir)?;
+#[allow(clippy::too_many_arguments)]
+fn cmd_train(manifest: &Manifest, backend: BackendKind, algo: Algo, steps: usize,
+             lr: f32, seed: u64, eval_every: usize, out: Option<&str>) -> Result<()> {
+    let engine = backend.engine()?;
     let config = TrainConfig { lr, seed, ..Default::default() };
-    let mut trainer = make_trainer(&engine, dir, algo, config)?;
-    let mut data = DataSource::for_manifest(&manifest, seed)?;
+    let mut trainer = make_trainer(&engine, manifest, algo, config)?;
+    let mut data = DataSource::for_manifest(manifest, seed)?;
     let opts = RunOptions { steps, eval_every, verbose: true, ..Default::default() };
-    println!("training {} with {} for {steps} steps (lr {lr})",
-             manifest.config, trainer.name());
+    println!("training {} with {} for {steps} steps (lr {lr}, backend {})",
+             manifest.config, trainer.name(), engine.platform());
     let res = coordinator::run_training(
         trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
     println!("\nfinal: train_loss {:.4}  best test_err {:.3}  diverged: {}",
@@ -128,17 +166,16 @@ fn cmd_train(dir: &PathBuf, algo: Algo, steps: usize, lr: f32, seed: u64,
     Ok(())
 }
 
-fn cmd_compare(dir: &PathBuf, steps: usize, lr: f32, seed: u64,
-               eval_every: usize) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load(dir)?;
+fn cmd_compare(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
+               seed: u64, eval_every: usize) -> Result<()> {
+    let engine = backend.engine()?;
     let table = TablePrinter::new(
         &["method", "train_loss", "test_err", "mem_MB", "sim_ms/iter", "diverged"],
         &[8, 11, 9, 8, 12, 9]);
     for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
         let config = TrainConfig { lr, seed, ..Default::default() };
-        let mut trainer = make_trainer(&engine, dir, algo, config)?;
-        let mut data = DataSource::for_manifest(&manifest, seed)?;
+        let mut trainer = make_trainer(&engine, manifest, algo, config)?;
+        let mut data = DataSource::for_manifest(manifest, seed)?;
         let opts = RunOptions { steps, eval_every, ..Default::default() };
         let res = coordinator::run_training(
             trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
@@ -157,13 +194,13 @@ fn cmd_compare(dir: &PathBuf, steps: usize, lr: f32, seed: u64,
     Ok(())
 }
 
-fn cmd_sigma(dir: &PathBuf, steps: usize, lr: f32, seed: u64) -> Result<()> {
-    let engine = Engine::cpu()?;
-    let manifest = Manifest::load(dir)?;
+fn cmd_sigma(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
+             seed: u64) -> Result<()> {
+    let engine = backend.engine()?;
     let stack = coordinator::ModuleStack::load(
         &engine, manifest.clone(), TrainConfig { lr, seed, ..Default::default() })?;
     let mut fr = coordinator::fr::FrTrainer::new(stack);
-    let mut data = DataSource::for_manifest(&manifest, seed)?;
+    let mut data = DataSource::for_manifest(manifest, seed)?;
     println!("step  sigma per module (k=1..K), total");
     for step in 0..steps {
         let batch = data.train_batch();
@@ -179,40 +216,38 @@ fn cmd_sigma(dir: &PathBuf, steps: usize, lr: f32, seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn cmd_memory(root: &PathBuf, model: &str) -> Result<()> {
+fn cmd_memory(root: &PathBuf, model: &str, seed: u64, backend: BackendKind) -> Result<()> {
     let table = TablePrinter::new(&["K", "BP_MB", "FR_MB", "DDG_MB", "DNI_MB"],
                                   &[3, 10, 10, 10, 10]);
     let mut any = false;
     for k in 1..=4 {
-        let dir = root.join(format!("{model}_k{k}"));
-        if !dir.exists() {
-            continue;
-        }
+        let Ok(m) = resolve_manifest(root, model, k, seed, backend) else { continue };
         any = true;
-        let m = Manifest::load(&dir)?;
         let row: Vec<String> = [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni].iter()
             .map(|&a| format!("{:.2}", memory::predicted_bytes(&m, a) as f64 / 1e6))
             .collect();
         table.row(&[&k.to_string(), &row[0], &row[1], &row[2], &row[3]]);
     }
     if !any {
-        bail!("no artifacts for model {model:?} at any K under {root:?}");
+        bail!("no manifests for model {model:?} at any K under {root:?}");
     }
     Ok(())
 }
 
-fn cmd_parallel(dir: &PathBuf, steps: usize, lr: f32, seed: u64) -> Result<()> {
-    let manifest = Manifest::load(dir)?;
-    let mut par = ParallelFr::spawn(dir.clone(), TrainConfig { lr, seed, ..Default::default() })?;
+fn cmd_parallel(manifest: Manifest, backend: BackendKind, steps: usize, lr: f32,
+                seed: u64) -> Result<()> {
     let mut data = DataSource::for_manifest(&manifest, seed)?;
-    println!("threaded FR: {} workers, one PJRT client each", par.k());
+    let mut par = ParallelFr::spawn(
+        manifest, TrainConfig { lr, seed, ..Default::default() }, backend)?;
+    println!("threaded FR: {} workers, one engine each", par.k());
     for step in 0..steps {
         let b = data.train_batch();
         let s = par.train_step(&b, lr)?;
         if step % 10 == 0 || step + 1 == steps {
-            println!("step {step:4}  loss {:.4}  slowest bwd {:.1} ms",
+            println!("step {step:4}  loss {:.4}  slowest bwd {:.1} ms  history {} B",
                      s.loss,
-                     s.timing.bwd_ms.iter().cloned().fold(0.0, f64::max));
+                     s.timing.bwd_ms.iter().cloned().fold(0.0, f64::max),
+                     s.history_bytes);
         }
     }
     let eb = data.test_batch(0);

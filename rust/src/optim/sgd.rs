@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::runtime::backend::ResidentParams;
 use crate::runtime::tensor::Tensor;
 
 pub struct SgdMomentum {
@@ -46,6 +47,16 @@ impl SgdMomentum {
                 *w -= lr * *vel;
             }
         }
+        Ok(())
+    }
+
+    /// In-place update of backend-resident parameters, with the write-back
+    /// hook: bumps the params' version so backends holding device copies
+    /// re-upload exactly once per optimizer step instead of once per run.
+    pub fn step_resident(&mut self, params: &mut ResidentParams, grads: &[Tensor], lr: f32)
+                         -> Result<()> {
+        self.step(params.tensors_mut(), grads, lr)?;
+        params.mark_updated();
         Ok(())
     }
 
@@ -116,6 +127,17 @@ mod tests {
         assert!(opt.step(&mut params, &[], 0.1).is_err());
         let bad = vec![t(vec![1.0, 2.0])];
         assert!(opt.step(&mut params, &bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn step_resident_updates_and_bumps_version() {
+        let mut params = ResidentParams::new(vec![t(vec![1.0, 2.0])]);
+        let grads = vec![t(vec![0.5, -1.0])];
+        let mut opt = SgdMomentum::new(&params, 0.0, 0.0);
+        let v0 = params.version();
+        opt.step_resident(&mut params, &grads, 0.1).unwrap();
+        assert_eq!(params.version(), v0 + 1);
+        assert_eq!(params[0].f32s(), &[0.95, 2.1]);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Execution-backend abstraction: how module programs get compiled and run.
+//!
+//! A [`Backend`] turns a manifest's module/synthesizer specs into executable
+//! objects and owns parameter initialization. Two implementations exist:
+//!
+//! - [`super::native::NativeBackend`] — a pure-Rust CPU engine that executes
+//!   procedural op graphs (`ModuleSpec::native_ops`) directly. Always
+//!   available; the default. Parameters are *resident by construction*: the
+//!   executor reads the host buffers in place, so there is no per-call
+//!   marshaling at all.
+//! - `super::pjrt::PjrtBackend` (behind the `pjrt` cargo feature) — the
+//!   original PJRT engine running AOT HLO artifacts. Parameters are kept
+//!   resident as device literals, re-uploaded only when the version counter
+//!   in [`ResidentParams`] says the optimizer wrote them back.
+//!
+//! The coordinator layer only sees `Engine` + the traits here, so every
+//! training strategy runs unchanged on either backend.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::spec::Manifest;
+use super::tensor::Tensor;
+
+/// Output of a fused loss-head execution (last module only).
+pub struct LossOutput {
+    pub loss: f32,
+    pub grads: Vec<Tensor>,
+    pub delta_in: Option<Tensor>,
+    pub logits: Tensor,
+}
+
+/// Module parameters kept resident in a backend.
+///
+/// The host tensors are the source of truth; `version` is bumped by the
+/// optimizer's write-back hook ([`crate::optim::SgdMomentum::step_resident`])
+/// after each in-place update so backends holding device-side copies know
+/// when (and only when) to re-upload. Derefs to `[Tensor]` so read paths
+/// look like a plain parameter slice.
+pub struct ResidentParams {
+    host: Vec<Tensor>,
+    version: u64,
+}
+
+impl ResidentParams {
+    pub fn new(host: Vec<Tensor>) -> ResidentParams {
+        ResidentParams { host, version: 0 }
+    }
+
+    /// Monotone counter identifying the current parameter contents.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Mutable access for in-place updates. Callers that write through this
+    /// MUST call [`ResidentParams::mark_updated`] afterwards (the optimizer
+    /// write-back hook does).
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.host
+    }
+
+    /// Record that the host tensors changed (invalidates device copies).
+    pub fn mark_updated(&mut self) {
+        self.version += 1;
+    }
+
+    /// Swap the whole parameter set (DDG's weight-snapshot replay), returning
+    /// the previous tensors. Bumps the version.
+    pub fn replace(&mut self, new: Vec<Tensor>) -> Vec<Tensor> {
+        let old = std::mem::replace(&mut self.host, new);
+        self.version += 1;
+        old
+    }
+}
+
+impl std::ops::Deref for ResidentParams {
+    type Target = [Tensor];
+
+    fn deref(&self) -> &[Tensor] {
+        &self.host
+    }
+}
+
+/// A compiled module program: fwd, bwd (replay + chain rule), and — for the
+/// last module — the fused fwd+loss+bwd head. Parameters come in as
+/// [`ResidentParams`] so the backend can use its resident copy.
+pub trait ModuleExec {
+    fn forward(&self, params: &ResidentParams, h_in: &Tensor) -> Result<Tensor>;
+
+    /// Returns (param grads, delta for the module below — `None` when this
+    /// is module 0).
+    fn backward(&self, params: &ResidentParams, h_in: &Tensor, delta: &Tensor)
+                -> Result<(Vec<Tensor>, Option<Tensor>)>;
+
+    fn loss_backward(&self, params: &ResidentParams, h_in: &Tensor, labels: &Tensor)
+                     -> Result<LossOutput>;
+}
+
+/// A compiled DNI gradient-synthesizer program.
+pub trait SynthExec {
+    /// `delta_hat = S(h)`.
+    fn predict(&self, params: &ResidentParams, h: &Tensor) -> Result<Tensor>;
+
+    /// MSE(S(h), delta_true) and its gradients w.r.t. the synth params.
+    fn train_grads(&self, params: &ResidentParams, h: &Tensor, delta_true: &Tensor)
+                   -> Result<(f32, Vec<Tensor>)>;
+}
+
+/// An execution backend: compiles module programs and initializes params.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn load_module(&self, manifest: &Manifest, k: usize) -> Result<Rc<dyn ModuleExec>>;
+
+    fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>>;
+
+    /// Initial parameter tensors for `stem` (e.g. "module0", "synth2").
+    fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
+                   -> Result<Vec<Tensor>>;
+}
+
+/// Which backend to construct — the `Send`-able recipe worker threads use
+/// (backends themselves hold `Rc`s and are thread-local).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(BackendKind::Pjrt),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => anyhow::bail!(
+                "this build has no PJRT backend — rebuild with --features pjrt"),
+            other => anyhow::bail!("unknown backend {other:?} (native|pjrt)"),
+        }
+    }
+
+    pub fn engine(self) -> Result<super::engine::Engine> {
+        match self {
+            BackendKind::Native => Ok(super::engine::Engine::native()),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => super::engine::Engine::pjrt_cpu(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::DType;
+
+    #[test]
+    fn resident_params_version_tracking() {
+        let mut p = ResidentParams::new(vec![Tensor::zeros(&[2], DType::F32)]);
+        assert_eq!(p.version(), 0);
+        assert_eq!(p.len(), 1);
+        p.tensors_mut()[0].f32s_mut()[0] = 1.0;
+        p.mark_updated();
+        assert_eq!(p.version(), 1);
+        let old = p.replace(vec![Tensor::zeros(&[3], DType::F32)]);
+        assert_eq!(old[0].f32s()[0], 1.0);
+        assert_eq!(p.version(), 2);
+        assert_eq!(p[0].len(), 3);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(BackendKind::parse("pjrt").is_err());
+    }
+}

@@ -1,107 +1,104 @@
-//! PJRT execution engine: load HLO text artifacts, compile once, run many.
+//! The execution engine a worker owns: a thin handle over one [`Backend`].
 //!
-//! One `Engine` per worker thread (PJRT client handles are `Rc`-based and
-//! not `Send`; a client per worker also mirrors the paper's one-GPU-per-
-//! module topology). Compiled executables are cached by path.
+//! `Engine::native()` is always available and is the default — it runs the
+//! procedural op graphs of the pure-Rust CPU backend, so the whole training
+//! stack works offline with no artifacts. `Engine::pjrt_cpu()` (cargo
+//! feature `pjrt`) runs AOT HLO artifacts through PJRT.
+//!
+//! One `Engine` per worker thread: backends hold `Rc`-based state (compiled
+//! program caches, PJRT client handles) and are deliberately not `Send` —
+//! workers construct their own from a [`BackendKind`], mirroring the paper's
+//! one-device-per-module topology.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::backend::{Backend, BackendKind, ModuleExec, SynthExec};
+use super::native::NativeBackend;
+use super::spec::Manifest;
 use super::tensor::Tensor;
 
 pub struct Engine {
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    backend: Rc<dyn Backend>,
+    kind: BackendKind,
 }
 
 impl Engine {
+    /// The pure-Rust CPU backend (always available, no artifacts needed).
+    pub fn native() -> Engine {
+        Engine { backend: Rc::new(NativeBackend), kind: BackendKind::Native }
+    }
+
+    /// The PJRT backend over a CPU client (cargo feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_cpu() -> Result<Engine> {
+        Ok(Engine {
+            backend: Rc::new(super::pjrt::PjrtBackend::cpu()?),
+            kind: BackendKind::Pjrt,
+        })
+    }
+
+    /// Default engine for this build: the native CPU backend. (Kept as a
+    /// `Result` for source compatibility with the PJRT-only era.)
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine::native())
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
-    /// Load + compile an HLO text file (cached; compilation is the expensive
-    /// one-time cost, so workers pre-warm their executables at startup).
-    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(path) {
-            return Ok(Rc::clone(e));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        let e = Rc::new(Executable { exe, path: path.to_path_buf() });
-        self.cache.borrow_mut().insert(path.to_path_buf(), Rc::clone(&e));
-        Ok(e)
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
-}
 
-/// A compiled computation; `run` converts host tensors at the boundary.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
+    pub fn load_module(&self, manifest: &Manifest, k: usize) -> Result<Rc<dyn ModuleExec>> {
+        self.backend.load_module(manifest, k)
+    }
 
-impl Executable {
-    /// Execute with host tensors; outputs are the flattened result tuple
-    /// (aot.py lowers everything with return_tuple=True).
-    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> = inputs.iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let bufs = self.exe.execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {:?}", self.path))?;
-        let result = bufs[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
+    pub fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>> {
+        self.backend.load_synth(manifest, boundary)
+    }
+
+    pub fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
+                       -> Result<Vec<Tensor>> {
+        self.backend.init_params(manifest, stem, shapes)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
 
-    fn artifacts_root() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    #[test]
+    fn native_engine_reports_platform() {
+        let e = Engine::native();
+        assert_eq!(e.platform(), "native-cpu");
+        assert_eq!(e.kind(), BackendKind::Native);
     }
 
     #[test]
-    fn engine_compiles_and_runs_module_fwd() {
-        let root = artifacts_root().join("mlp_tiny_k4");
-        if !root.exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let m = crate::runtime::spec::Manifest::load(&root).unwrap();
-        let engine = Engine::cpu().unwrap();
-        let exe = engine.load(&m.hlo_path(&m.modules[0].fwd_file)).unwrap();
+    fn cpu_defaults_to_native() {
+        assert_eq!(Engine::cpu().unwrap().kind(), BackendKind::Native);
+    }
 
-        // params from the dump + a zero input batch
-        let spec = &m.modules[0];
-        let mut inputs: Vec<Tensor> = Vec::new();
-        for (i, shape) in spec.param_shapes.iter().enumerate() {
-            inputs.push(Tensor::from_f32_file(
-                &m.param_path("module0", i), shape.clone()).unwrap());
-        }
-        inputs.push(Tensor::zeros(&spec.in_shape, spec.in_dtype));
-        let refs: Vec<&Tensor> = inputs.iter().collect();
-        let out = exe.run(&refs).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].shape, spec.out_shape);
+    #[test]
+    fn engine_runs_native_module_end_to_end() {
+        use crate::runtime::backend::ResidentParams;
+        use crate::runtime::native::NativeMlpSpec;
 
-        // cache returns the same compiled object
-        let again = engine.load(&m.hlo_path(&m.modules[0].fwd_file)).unwrap();
-        assert!(Rc::ptr_eq(&exe, &again));
+        let m = NativeMlpSpec::tiny(2).manifest().unwrap();
+        let e = Engine::native();
+        let exec = e.load_module(&m, 0).unwrap();
+        let params = ResidentParams::new(
+            e.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
+        let h = Tensor::zeros(&m.modules[0].in_shape, m.modules[0].in_dtype);
+        let out = exec.forward(&params, &h).unwrap();
+        assert_eq!(out.shape, m.modules[0].out_shape);
     }
 }

@@ -1,17 +1,27 @@
-//! Runtime layer: the AOT bridge between the Rust coordinator and the
-//! HLO artifacts produced by `python/compile/aot.py`.
+//! Runtime layer: pluggable execution backends under a stable module API.
 //!
-//! - [`tensor`]: Send-able host tensors (channel payloads, optimizer state)
-//! - [`spec`]: manifest.json parsing (artifact contract)
-//! - [`engine`]: PJRT client + compiled-executable cache
+//! - [`tensor`]: Send-able Arc-backed host tensors (channel payloads,
+//!   optimizer state) with copy-on-write mutation and copy metrics
+//! - [`spec`]: manifest parsing (artifact contract) + procedural op graphs
+//! - [`backend`]: the `Backend`/`ModuleExec`/`SynthExec` traits and the
+//!   resident-parameter buffer
+//! - [`native`]: pure-Rust CPU backend (default; fully offline)
+//! - `pjrt` (cargo feature `pjrt`): PJRT client + compiled-HLO backend
+//! - [`engine`]: per-worker backend handle
 //! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers
 
+pub mod backend;
 pub mod engine;
 pub mod module;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod spec;
 pub mod tensor;
 
-pub use engine::{Engine, Executable};
-pub use module::{LossOutput, ModuleRuntime, SynthRuntime};
-pub use spec::{Manifest, ModuleSpec, SynthSpec};
-pub use tensor::{DType, Tensor};
+pub use backend::{Backend, BackendKind, LossOutput, ModuleExec, ResidentParams, SynthExec};
+pub use engine::Engine;
+pub use module::{ModuleRuntime, SynthRuntime};
+pub use native::{NativeBackend, NativeMlpSpec};
+pub use spec::{Manifest, ModuleSpec, NativeOp, SynthSpec};
+pub use tensor::{copy_metrics, DType, Tensor};

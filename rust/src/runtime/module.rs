@@ -1,52 +1,38 @@
-//! Per-module runtime: compiled fwd/bwd/loss executables + parameter state.
+//! Per-module runtime: the backend-compiled programs + resident parameters.
 //!
-//! This is the object a module worker owns. Parameters are host tensors (the
-//! optimizer updates them in place); each call marshals params + activations
-//! into the executable and unpacks the result tuple according to the
-//! artifact contract in DESIGN.md.
-
-use std::rc::Rc;
+//! This is the object a module worker owns. Parameters live in a
+//! [`ResidentParams`] buffer: the optimizer updates the host tensors in
+//! place and bumps the version (its write-back hook), and the backend
+//! re-uploads device copies only on that signal — `forward`/`backward`
+//! never re-marshal weights. Shape checks happen here so both backends
+//! share the same artifact contract (DESIGN.md).
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{Engine, Executable};
+use std::rc::Rc;
+
+use super::backend::{LossOutput, ModuleExec, ResidentParams, SynthExec};
+use super::engine::Engine;
 use super::spec::{Manifest, ModuleSpec, SynthSpec};
 use super::tensor::Tensor;
 
-pub struct LossOutput {
-    pub loss: f32,
-    pub grads: Vec<Tensor>,
-    pub delta_in: Option<Tensor>,
-    pub logits: Tensor,
-}
-
 pub struct ModuleRuntime {
     pub spec: ModuleSpec,
-    pub params: Vec<Tensor>,
-    fwd: Rc<Executable>,
-    bwd: Rc<Executable>,
-    loss: Option<Rc<Executable>>,
+    pub params: ResidentParams,
+    exec: Rc<dyn ModuleExec>,
 }
 
 impl ModuleRuntime {
     /// Load module `k` of `manifest` on `engine`, with initial params from
-    /// the artifact dump (or re-initialized elsewhere for multi-seed runs).
+    /// the backend (artifact dumps when present, procedural init otherwise).
     pub fn load(engine: &Engine, manifest: &Manifest, k: usize) -> Result<ModuleRuntime> {
         let spec = manifest.modules.get(k)
             .with_context(|| format!("module {k} out of range"))?
             .clone();
-        let fwd = engine.load(&manifest.hlo_path(&spec.fwd_file))?;
-        let bwd = engine.load(&manifest.hlo_path(&spec.bwd_file))?;
-        let loss = match &spec.loss_file {
-            Some(f) => Some(engine.load(&manifest.hlo_path(f))?),
-            None => None,
-        };
-        let mut params = Vec::with_capacity(spec.param_shapes.len());
-        for (i, shape) in spec.param_shapes.iter().enumerate() {
-            params.push(Tensor::from_f32_file(
-                &manifest.param_path(&format!("module{k}"), i), shape.clone())?);
-        }
-        Ok(ModuleRuntime { spec, params, fwd, bwd, loss })
+        let exec = engine.load_module(manifest, k)?;
+        let params = ResidentParams::new(
+            engine.init_params(manifest, &format!("module{k}"), &spec.param_shapes)?);
+        Ok(ModuleRuntime { spec, params, exec })
     }
 
     pub fn is_first(&self) -> bool {
@@ -54,7 +40,7 @@ impl ModuleRuntime {
     }
 
     pub fn has_loss_head(&self) -> bool {
-        self.loss.is_some()
+        self.spec.loss_file.is_some()
     }
 
     fn check_input(&self, h: &Tensor) -> Result<()> {
@@ -68,13 +54,7 @@ impl ModuleRuntime {
     /// Play: h_out = F_G(k)(h_in; w).
     pub fn forward(&self, h_in: &Tensor) -> Result<Tensor> {
         self.check_input(h_in)?;
-        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
-        inputs.push(h_in);
-        let mut out = self.fwd.run(&inputs)?;
-        if out.len() != 1 {
-            bail!("fwd returned {} outputs, expected 1", out.len());
-        }
-        Ok(out.remove(0))
+        self.exec.forward(&self.params, h_in)
     }
 
     /// Replay + chain rule: gradients of the module given (replayed) input
@@ -87,46 +67,34 @@ impl ModuleRuntime {
             bail!("module {}: delta shape {:?}, expected {:?}",
                   self.spec.index, delta.shape, self.spec.out_shape);
         }
-        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
-        inputs.push(h_in);
-        inputs.push(delta);
-        let mut out = self.bwd.run(&inputs)?;
-        let np = self.params.len();
-        let expect = np + usize::from(!self.is_first());
-        if out.len() != expect {
-            bail!("bwd returned {} outputs, expected {expect}", out.len());
+        let (grads, delta_in) = self.exec.backward(&self.params, h_in, delta)?;
+        if grads.len() != self.params.len() {
+            bail!("module {}: bwd returned {} grads for {} params",
+                  self.spec.index, grads.len(), self.params.len());
         }
-        let delta_in = if self.is_first() { None } else { Some(out.remove(np)) };
-        Ok((out, delta_in))
+        Ok((grads, delta_in))
     }
 
     /// Last module only: fused fwd + loss + full backward.
     pub fn loss_backward(&self, h_in: &Tensor, labels: &Tensor) -> Result<LossOutput> {
         self.check_input(h_in)?;
-        let exe = self.loss.as_ref().context("module has no loss head")?;
-        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
-        inputs.push(h_in);
-        inputs.push(labels);
-        let mut out = exe.run(&inputs)?;
-        let np = self.params.len();
-        let expect = 1 + np + usize::from(!self.is_first()) + 1;
-        if out.len() != expect {
-            bail!("loss head returned {} outputs, expected {expect}", out.len());
+        if !self.has_loss_head() {
+            bail!("module {} has no loss head", self.spec.index);
         }
-        let loss = out[0].item_f32()?;
-        let logits = out.pop().unwrap();
-        let delta_in = if self.is_first() { None } else { Some(out.remove(1 + np)) };
-        let grads = out.drain(1..).collect();
-        Ok(LossOutput { loss, grads, delta_in, logits })
+        let out = self.exec.loss_backward(&self.params, h_in, labels)?;
+        if out.grads.len() != self.params.len() {
+            bail!("module {}: loss head returned {} grads for {} params",
+                  self.spec.index, out.grads.len(), self.params.len());
+        }
+        Ok(out)
     }
 }
 
 /// DNI gradient synthesizer runtime (predictor + its own training step).
 pub struct SynthRuntime {
     pub spec: SynthSpec,
-    pub params: Vec<Tensor>,
-    pred: Rc<Executable>,
-    train: Rc<Executable>,
+    pub params: ResidentParams,
+    exec: Rc<dyn SynthExec>,
 }
 
 impl SynthRuntime {
@@ -134,62 +102,43 @@ impl SynthRuntime {
         let spec = manifest.synth.iter().find(|s| s.boundary == boundary)
             .with_context(|| format!("no synthesizer for boundary {boundary}"))?
             .clone();
-        let pred = engine.load(&manifest.hlo_path(&spec.pred_file))?;
-        let train = engine.load(&manifest.hlo_path(&spec.train_file))?;
-        let mut params = Vec::with_capacity(spec.param_shapes.len());
-        for (i, shape) in spec.param_shapes.iter().enumerate() {
-            params.push(Tensor::from_f32_file(
-                &manifest.param_path(&format!("synth{boundary}"), i), shape.clone())?);
-        }
-        Ok(SynthRuntime { spec, params, pred, train })
+        let exec = engine.load_synth(manifest, boundary)?;
+        let params = ResidentParams::new(
+            engine.init_params(manifest, &format!("synth{boundary}"), &spec.param_shapes)?);
+        Ok(SynthRuntime { spec, params, exec })
     }
 
     /// delta_hat = S(h).
     pub fn predict(&self, h: &Tensor) -> Result<Tensor> {
-        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
-        inputs.push(h);
-        let mut out = self.pred.run(&inputs)?;
-        if out.len() != 1 {
-            bail!("synth pred returned {} outputs", out.len());
-        }
-        Ok(out.remove(0))
+        self.exec.predict(&self.params, h)
     }
 
     /// MSE(S(h), delta_true) and its gradients w.r.t. synth params.
     pub fn train_grads(&self, h: &Tensor, delta_true: &Tensor)
                        -> Result<(f32, Vec<Tensor>)> {
-        let mut inputs: Vec<&Tensor> = self.params.iter().collect();
-        inputs.push(h);
-        inputs.push(delta_true);
-        let mut out = self.train.run(&inputs)?;
-        if out.len() != 1 + self.params.len() {
-            bail!("synth train returned {} outputs", out.len());
+        let (mse, grads) = self.exec.train_grads(&self.params, h, delta_true)?;
+        if grads.len() != self.params.len() {
+            bail!("synth {}: returned {} grads for {} params",
+                  self.spec.boundary, grads.len(), self.params.len());
         }
-        let mse = out[0].item_f32()?;
-        Ok((mse, out.drain(1..).collect()))
+        Ok((mse, grads))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
+    use crate::runtime::native::NativeMlpSpec;
+    use crate::runtime::tensor::DType;
 
-    fn manifest() -> Option<Manifest> {
-        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-            .join("artifacts").join("mlp_tiny_k4");
-        if root.exists() {
-            Some(Manifest::load(&root).unwrap())
-        } else {
-            eprintln!("skipping: artifacts not built");
-            None
-        }
+    fn manifest() -> Manifest {
+        NativeMlpSpec::tiny(4).manifest().unwrap()
     }
 
     #[test]
     fn forward_backward_shapes() {
-        let Some(m) = manifest() else { return };
-        let engine = Engine::cpu().unwrap();
+        let m = manifest();
+        let engine = Engine::native();
         let m0 = ModuleRuntime::load(&engine, &m, 0).unwrap();
         let m1 = ModuleRuntime::load(&engine, &m, 1).unwrap();
 
@@ -197,22 +146,22 @@ mod tests {
         let h = m0.forward(&x).unwrap();
         assert_eq!(h.shape, m0.spec.out_shape);
 
-        let delta = Tensor::zeros(&m1.spec.out_shape, crate::runtime::tensor::DType::F32);
+        let delta = Tensor::zeros(&m1.spec.out_shape, DType::F32);
         let (grads, din) = m1.backward(&h, &delta).unwrap();
         assert_eq!(grads.len(), m1.params.len());
         assert_eq!(din.as_ref().unwrap().shape, m1.spec.in_shape);
 
         // module 0 emits no delta_in
         let (g0, d0) = m0.backward(&x, &Tensor::zeros(&m0.spec.out_shape,
-            crate::runtime::tensor::DType::F32)).unwrap();
+            DType::F32)).unwrap();
         assert_eq!(g0.len(), m0.params.len());
         assert!(d0.is_none());
     }
 
     #[test]
     fn loss_head_runs() {
-        let Some(m) = manifest() else { return };
-        let engine = Engine::cpu().unwrap();
+        let m = manifest();
+        let engine = Engine::native();
         let last = ModuleRuntime::load(&engine, &m, m.k - 1).unwrap();
         assert!(last.has_loss_head());
         let h = Tensor::zeros(&last.spec.in_shape, last.spec.in_dtype);
@@ -227,17 +176,18 @@ mod tests {
 
     #[test]
     fn bad_shape_rejected() {
-        let Some(m) = manifest() else { return };
-        let engine = Engine::cpu().unwrap();
+        let m = manifest();
+        let engine = Engine::native();
         let m0 = ModuleRuntime::load(&engine, &m, 0).unwrap();
-        let bad = Tensor::zeros(&[1, 2], crate::runtime::tensor::DType::F32);
+        let bad = Tensor::zeros(&[1, 2], DType::F32);
         assert!(m0.forward(&bad).is_err());
+        assert!(m0.loss_backward(&bad, &bad).is_err(), "no loss head on module 0");
     }
 
     #[test]
     fn synth_predicts_zero_initially() {
-        let Some(m) = manifest() else { return };
-        let engine = Engine::cpu().unwrap();
+        let m = manifest();
+        let engine = Engine::native();
         let s = SynthRuntime::load(&engine, &m, 0).unwrap();
         let h = Tensor::from_f32(m.modules[0].out_shape.clone(),
             (0..m.modules[0].out_shape.iter().product::<usize>())

@@ -1,0 +1,1060 @@
+//! Native CPU execution backend: a pure-Rust engine for the procedural op
+//! graphs in `ModuleSpec::native_ops`, so the crate compiles, trains, tests
+//! and benches fully offline — no Python, no HLO artifacts, no PJRT.
+//!
+//! The kernel set mirrors `python/compile/kernels/ref.py` (the L1 oracles):
+//! matmul, fused bias+ReLU, layernorm, and softmax cross-entropy, plus their
+//! hand-derived backward passes. Backward follows the same contract as the
+//! AOT bwd artifacts: recompute the module forward from `(params, input)`
+//! and chain-rule the provided output delta, so FR's replay semantics are
+//! identical across backends.
+//!
+//! Parameters are resident by construction: the executor reads the host
+//! `Arc` buffers in place on every call — zero marshaling, which is the
+//! whole point of the backend split (see BENCH_hotpath.json).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::backend::{Backend, LossOutput, ModuleExec, ResidentParams, SynthExec};
+use super::spec::{Manifest, ModuleSpec, NativeOp, SynthSpec};
+use super::tensor::{DType, Tensor};
+
+/// The f32 slice kernels (also used directly by benches and tests).
+pub mod kernels {
+    /// `(m, k) @ (k, n) -> (m, n)`, row-major, fresh output (ikj order).
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &aip) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aip * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `aᵀ @ b` where `a` is `(rows, m)` and `b` is `(rows, n)` -> `(m, n)`.
+    /// (The `dW = xᵀ dy` kernel.) `a` holds post-ReLU activations on the
+    /// training path, so exact zeros are common: rows with `a == 0.0` skip
+    /// the inner loop. This treats `0 · x` as 0 even for non-finite `x` —
+    /// fine for gradients (a NaN blow-up still reaches the loss through the
+    /// forward pass), and roughly halves the dW work after ReLU.
+    pub fn matmul_tn(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), rows * m);
+        debug_assert_eq!(b.len(), rows * n);
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..rows {
+            let arow = &a[r * m..(r + 1) * m];
+            let brow = &b[r * n..(r + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `a @ bᵀ` where `a` is `(m, k)` and `b` is `(n, k)` -> `(m, n)`.
+    /// (The `dx = dy Wᵀ` kernel — both operands walk contiguously.)
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// Broadcast-add a `(n,)` bias over the rows of `(rows, n)` in place.
+    pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+        for row in x.chunks_exact_mut(bias.len()) {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+
+    /// `max(x, 0)` in place.
+    pub fn relu(x: &mut [f32]) {
+        for v in x.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// `dy := dy ⊙ 1[y > 0]` — the ReLU backward, masked by the *output*.
+    pub fn relu_bwd(dy: &mut [f32], y: &[f32]) {
+        for (d, &yy) in dy.iter_mut().zip(y) {
+            if yy <= 0.0 {
+                *d = 0.0;
+            }
+        }
+    }
+
+    /// Column sums of `(rows, n)` — the bias gradient.
+    pub fn bias_grad(dy: &[f32], n: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; n];
+        for row in dy.chunks_exact(n) {
+            for (gv, &d) in g.iter_mut().zip(row) {
+                *gv += d;
+            }
+        }
+        g
+    }
+
+    /// LayerNorm over the last axis with affine params; returns
+    /// `(y, xhat, rstd)` where `xhat`/`rstd` are the backward's cache.
+    pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], eps: f32)
+                     -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = gamma.len();
+        let rows = x.len() / d;
+        let mut y = vec![0.0f32; x.len()];
+        let mut xhat = vec![0.0f32; x.len()];
+        let mut rstd = vec![0.0f32; rows];
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let mean = xr.iter().sum::<f32>() / d as f32;
+            let var = xr.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let rs = 1.0 / (var + eps).sqrt();
+            rstd[r] = rs;
+            for j in 0..d {
+                let xh = (xr[j] - mean) * rs;
+                xhat[r * d + j] = xh;
+                y[r * d + j] = xh * gamma[j] + beta[j];
+            }
+        }
+        (y, xhat, rstd)
+    }
+
+    /// LayerNorm backward from the `(xhat, rstd)` cache; returns
+    /// `(dx, dgamma, dbeta)`.
+    pub fn layernorm_bwd(dy: &[f32], xhat: &[f32], rstd: &[f32], gamma: &[f32])
+                         -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = gamma.len();
+        let rows = dy.len() / d;
+        let mut dx = vec![0.0f32; dy.len()];
+        let mut dgamma = vec![0.0f32; d];
+        let mut dbeta = vec![0.0f32; d];
+        for r in 0..rows {
+            let dyr = &dy[r * d..(r + 1) * d];
+            let xhr = &xhat[r * d..(r + 1) * d];
+            let mut mean_dxhat = 0.0f32;
+            let mut mean_dxhat_xhat = 0.0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * gamma[j];
+                mean_dxhat += dxh;
+                mean_dxhat_xhat += dxh * xhr[j];
+                dgamma[j] += dyr[j] * xhr[j];
+                dbeta[j] += dyr[j];
+            }
+            mean_dxhat /= d as f32;
+            mean_dxhat_xhat /= d as f32;
+            for j in 0..d {
+                let dxh = dyr[j] * gamma[j];
+                dx[r * d + j] = rstd[r] * (dxh - mean_dxhat - xhr[j] * mean_dxhat_xhat);
+            }
+        }
+        (dx, dgamma, dbeta)
+    }
+
+    /// Mean softmax cross-entropy over `(b, c)` logits with `(b,)` i32
+    /// labels; returns `(loss, dlogits)` where `dlogits = (softmax - 1hot)/b`.
+    pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+        debug_assert_eq!(logits.len(), b * c);
+        debug_assert_eq!(labels.len(), b);
+        let mut dlogits = vec![0.0f32; b * c];
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let row = &logits[i * c..(i + 1) * c];
+            let label = labels[i] as usize;
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for &v in row {
+                sum += ((v - m) as f64).exp();
+            }
+            loss += sum.ln() + m as f64 - row[label] as f64;
+            let drow = &mut dlogits[i * c..(i + 1) * c];
+            for (j, &v) in row.iter().enumerate() {
+                let p = (((v - m) as f64).exp() / sum) as f32;
+                let onehot = if j == label { 1.0 } else { 0.0 };
+                drow[j] = (p - onehot) / b as f32;
+            }
+        }
+        ((loss / b as f64) as f32, dlogits)
+    }
+}
+
+/// A shaped, validated plan for one `NativeOp`.
+#[derive(Clone, Copy, Debug)]
+enum Plan {
+    Dense { din: usize, dout: usize, relu: bool },
+    Residual { d: usize },
+    LayerNorm { d: usize },
+}
+
+impl Plan {
+    fn param_arity(self) -> usize {
+        match self {
+            Plan::Dense { .. } => 2,
+            Plan::Residual { .. } => 4,
+            Plan::LayerNorm { .. } => 2,
+        }
+    }
+}
+
+/// Per-plan activation cache kept by the traced forward for the backward.
+enum Aux {
+    Dense,
+    Residual { h1: Vec<f32> },
+    LayerNorm { xhat: Vec<f32>, rstd: Vec<f32> },
+}
+
+pub struct NativeModule {
+    spec: ModuleSpec,
+    plans: Vec<Plan>,
+    /// params index where each plan's parameter run starts.
+    offsets: Vec<usize>,
+    batch: usize,
+    is_first: bool,
+}
+
+impl NativeModule {
+    fn build(spec: ModuleSpec) -> Result<NativeModule> {
+        if spec.native_ops.is_empty() {
+            bail!("module {}: manifest carries no native op graph — AOT \
+                   artifacts need the `pjrt` backend (cargo feature), or use \
+                   a procedural config (e.g. NativeMlpSpec)", spec.index);
+        }
+        if spec.in_shape.len() != 2 || spec.in_dtype != DType::F32 {
+            bail!("module {}: native backend supports rank-2 f32 activations, \
+                   got {:?} {:?}", spec.index, spec.in_shape, spec.in_dtype);
+        }
+        let batch = spec.in_shape[0];
+        let mut width = spec.in_shape[1];
+        let mut plans = Vec::with_capacity(spec.native_ops.len());
+        let mut offsets = Vec::with_capacity(spec.native_ops.len());
+        let mut pi = 0usize;
+        for op in &spec.native_ops {
+            offsets.push(pi);
+            let plan = match op {
+                NativeOp::Dense { relu } => {
+                    let w = spec.param_shapes.get(pi)
+                        .with_context(|| format!("module {}: missing dense weight", spec.index))?;
+                    if w.len() != 2 || w[0] != width {
+                        bail!("module {}: dense weight {w:?} does not accept \
+                               width {width}", spec.index);
+                    }
+                    let p = Plan::Dense { din: w[0], dout: w[1], relu: *relu };
+                    width = w[1];
+                    p
+                }
+                NativeOp::ResidualPair => Plan::Residual { d: width },
+                NativeOp::LayerNorm => Plan::LayerNorm { d: width },
+            };
+            pi += plan.param_arity();
+            plans.push(plan);
+        }
+        if pi != spec.param_shapes.len() {
+            bail!("module {}: op graph consumes {pi} params but manifest \
+                   lists {}", spec.index, spec.param_shapes.len());
+        }
+        if spec.out_shape != vec![batch, width] {
+            bail!("module {}: op graph ends at width {width}, manifest says \
+                   out {:?}", spec.index, spec.out_shape);
+        }
+        let is_first = spec.index == 0;
+        Ok(NativeModule { spec, plans, offsets, batch, is_first })
+    }
+
+    /// Forward keeping per-plan activations when `traced`: `outs[p]` is the
+    /// output of plan `p` (plan p's input is `x` for p == 0, else
+    /// `outs[p-1]` — the module input is borrowed, never copied). Untraced,
+    /// only the last buffer survives.
+    fn run_forward(&self, params: &[Tensor], x: &[f32], traced: bool)
+                   -> (Vec<Vec<f32>>, Vec<Aux>) {
+        let b = self.batch;
+        let mut outs: Vec<Vec<f32>> =
+            Vec::with_capacity(if traced { self.plans.len() } else { 1 });
+        let mut aux: Vec<Aux> = Vec::with_capacity(self.plans.len());
+        for (pi, plan) in self.plans.iter().enumerate() {
+            let pp = &params[self.offsets[pi]..];
+            let cur: &[f32] = if traced && pi > 0 {
+                &outs[pi - 1]
+            } else {
+                outs.last().map(Vec::as_slice).unwrap_or(x)
+            };
+            let (out, a) = match *plan {
+                Plan::Dense { din, dout, relu } => {
+                    let mut y = kernels::matmul(cur, pp[0].f32s(), b, din, dout);
+                    kernels::add_bias(&mut y, pp[1].f32s());
+                    if relu {
+                        kernels::relu(&mut y);
+                    }
+                    (y, Aux::Dense)
+                }
+                Plan::Residual { d } => {
+                    let mut h1 = kernels::matmul(cur, pp[0].f32s(), b, d, d);
+                    kernels::add_bias(&mut h1, pp[1].f32s());
+                    kernels::relu(&mut h1);
+                    let mut y = kernels::matmul(&h1, pp[2].f32s(), b, d, d);
+                    kernels::add_bias(&mut y, pp[3].f32s());
+                    for (v, &xv) in y.iter_mut().zip(cur.iter()) {
+                        *v += xv;
+                    }
+                    kernels::relu(&mut y);
+                    (y, Aux::Residual { h1 })
+                }
+                Plan::LayerNorm { .. } => {
+                    let (y, xhat, rstd) =
+                        kernels::layernorm(cur, pp[0].f32s(), pp[1].f32s(), 1e-5);
+                    (y, Aux::LayerNorm { xhat, rstd })
+                }
+            };
+            if traced {
+                outs.push(out);
+                aux.push(a);
+            } else if outs.is_empty() {
+                outs.push(out);
+            } else {
+                outs[0] = out;
+            }
+        }
+        (outs, aux)
+    }
+
+    /// Backprop `dout` through the traced forward (`outs` as produced by
+    /// `run_forward(.., traced: true)`, `x` the module input); returns param
+    /// grads (in manifest order) and the input gradient (skipped for
+    /// module 0).
+    fn backprop(&self, params: &[Tensor], x: &[f32], outs: &[Vec<f32>], aux: &[Aux],
+                dout: Vec<f32>) -> (Vec<Tensor>, Option<Vec<f32>>) {
+        let b = self.batch;
+        let mut grads: Vec<Option<Tensor>> = (0..params.len()).map(|_| None).collect();
+        let mut grad = dout;
+        for (pi, plan) in self.plans.iter().enumerate().rev() {
+            let off = self.offsets[pi];
+            let pp = &params[off..];
+            let x: &[f32] = if pi == 0 { x } else { &outs[pi - 1] };
+            let y = &outs[pi];
+            let need_dx = pi > 0 || !self.is_first;
+            match (*plan, &aux[pi]) {
+                (Plan::Dense { din, dout, relu }, Aux::Dense) => {
+                    let mut dz = grad;
+                    if relu {
+                        kernels::relu_bwd(&mut dz, y);
+                    }
+                    let dw = kernels::matmul_tn(x, &dz, b, din, dout);
+                    let db = kernels::bias_grad(&dz, dout);
+                    grads[off] = Some(tensor2(din, dout, dw));
+                    grads[off + 1] = Some(tensor1(db));
+                    grad = if need_dx {
+                        kernels::matmul_nt(&dz, pp[0].f32s(), b, dout, din)
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::Residual { d }, Aux::Residual { h1 }) => {
+                    let mut ds = grad;
+                    kernels::relu_bwd(&mut ds, y);
+                    // upper dense: z2 = h1 w2 + b2
+                    let dw2 = kernels::matmul_tn(h1, &ds, b, d, d);
+                    let db2 = kernels::bias_grad(&ds, d);
+                    let mut dz1 = kernels::matmul_nt(&ds, pp[2].f32s(), b, d, d);
+                    kernels::relu_bwd(&mut dz1, h1);
+                    // lower dense: z1 = x w1 + b1
+                    let dw1 = kernels::matmul_tn(x, &dz1, b, d, d);
+                    let db1 = kernels::bias_grad(&dz1, d);
+                    grads[off] = Some(tensor2(d, d, dw1));
+                    grads[off + 1] = Some(tensor1(db1));
+                    grads[off + 2] = Some(tensor2(d, d, dw2));
+                    grads[off + 3] = Some(tensor1(db2));
+                    grad = if need_dx {
+                        let mut dx = kernels::matmul_nt(&dz1, pp[0].f32s(), b, d, d);
+                        for (v, &sv) in dx.iter_mut().zip(&ds) {
+                            *v += sv; // skip connection
+                        }
+                        dx
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::LayerNorm { .. }, Aux::LayerNorm { xhat, rstd }) => {
+                    let (dx, dgamma, dbeta) =
+                        kernels::layernorm_bwd(&grad, xhat, rstd, pp[0].f32s());
+                    grads[off] = Some(tensor1(dgamma));
+                    grads[off + 1] = Some(tensor1(dbeta));
+                    grad = if need_dx { dx } else { Vec::new() };
+                }
+                _ => unreachable!("plan/aux built together"),
+            }
+        }
+        let grads = grads.into_iter()
+            .map(|g| g.expect("every plan fills its grads"))
+            .collect();
+        let dx = if self.is_first { None } else { Some(grad) };
+        (grads, dx)
+    }
+}
+
+fn tensor1(data: Vec<f32>) -> Tensor {
+    let n = data.len();
+    Tensor::from_f32(vec![n], data).expect("length matches by construction")
+}
+
+fn tensor2(r: usize, c: usize, data: Vec<f32>) -> Tensor {
+    Tensor::from_f32(vec![r, c], data).expect("length matches by construction")
+}
+
+impl ModuleExec for NativeModule {
+    fn forward(&self, params: &ResidentParams, h_in: &Tensor) -> Result<Tensor> {
+        let (mut outs, _) = self.run_forward(params, h_in.f32s(), false);
+        let out = outs.pop().expect("module has at least one op");
+        Tensor::from_f32(self.spec.out_shape.clone(), out)
+    }
+
+    fn backward(&self, params: &ResidentParams, h_in: &Tensor, delta: &Tensor)
+                -> Result<(Vec<Tensor>, Option<Tensor>)> {
+        let x = h_in.f32s();
+        let (outs, aux) = self.run_forward(params, x, true);
+        let (grads, dx) = self.backprop(params, x, &outs, &aux, delta.f32s().to_vec());
+        let delta_in = match dx {
+            Some(v) => Some(Tensor::from_f32(self.spec.in_shape.clone(), v)?),
+            None => None,
+        };
+        Ok((grads, delta_in))
+    }
+
+    fn loss_backward(&self, params: &ResidentParams, h_in: &Tensor, labels: &Tensor)
+                     -> Result<LossOutput> {
+        if labels.dtype != DType::I32 || labels.len() != self.batch {
+            bail!("module {}: labels must be i32 of length {}, got {:?} {:?}",
+                  self.spec.index, self.batch, labels.dtype, labels.shape);
+        }
+        let x = h_in.f32s();
+        let (outs, aux) = self.run_forward(params, x, true);
+        let logits = outs.last().expect("module has at least one op");
+        let classes = logits.len() / self.batch;
+        let (loss, dlogits) =
+            kernels::softmax_xent(logits, labels.i32s(), self.batch, classes);
+        let logits_t = Tensor::from_f32(vec![self.batch, classes], logits.clone())?;
+        let (grads, dx) = self.backprop(params, x, &outs, &aux, dlogits);
+        let delta_in = match dx {
+            Some(v) => Some(Tensor::from_f32(self.spec.in_shape.clone(), v)?),
+            None => None,
+        };
+        Ok(LossOutput { loss, grads, delta_in, logits: logits_t })
+    }
+}
+
+/// Native MLP gradient synthesizer: the 2-hidden-layer dense synth of
+/// `python/compile/synth.py` with a zero-initialized output layer.
+pub struct NativeSynth {
+    d: usize,
+    hd: usize,
+}
+
+impl NativeSynth {
+    fn build(spec: &SynthSpec) -> Result<NativeSynth> {
+        if spec.param_shapes.len() != 6 {
+            bail!("synth {}: native synth wants 6 params (w1,b1,w2,b2,w3,b3), \
+                   manifest lists {}", spec.boundary, spec.param_shapes.len());
+        }
+        let w1 = &spec.param_shapes[0];
+        let w3 = &spec.param_shapes[4];
+        if w1.len() != 2 || w3.len() != 2 || w3[1] != w1[0] {
+            bail!("synth {}: unsupported param shapes {:?}", spec.boundary,
+                  spec.param_shapes);
+        }
+        Ok(NativeSynth { d: w1[0], hd: w1[1] })
+    }
+
+    /// Forward keeping the hidden activations for backward.
+    fn fwd(&self, params: &[Tensor], h: &[f32], b: usize)
+           -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut a1 = kernels::matmul(h, params[0].f32s(), b, self.d, self.hd);
+        kernels::add_bias(&mut a1, params[1].f32s());
+        kernels::relu(&mut a1);
+        let mut a2 = kernels::matmul(&a1, params[2].f32s(), b, self.hd, self.hd);
+        kernels::add_bias(&mut a2, params[3].f32s());
+        kernels::relu(&mut a2);
+        let mut out = kernels::matmul(&a2, params[4].f32s(), b, self.hd, self.d);
+        kernels::add_bias(&mut out, params[5].f32s());
+        (a1, a2, out)
+    }
+}
+
+impl SynthExec for NativeSynth {
+    fn predict(&self, params: &ResidentParams, h: &Tensor) -> Result<Tensor> {
+        if h.len() % self.d != 0 {
+            bail!("synth: activation of {} elements is not a multiple of \
+                   width {}", h.len(), self.d);
+        }
+        let b = h.len() / self.d;
+        let (_, _, out) = self.fwd(params, h.f32s(), b);
+        Tensor::from_f32(h.shape.clone(), out)
+    }
+
+    fn train_grads(&self, params: &ResidentParams, h: &Tensor, delta_true: &Tensor)
+                   -> Result<(f32, Vec<Tensor>)> {
+        if h.len() != delta_true.len() || h.len() % self.d != 0 {
+            bail!("synth: mismatched activation/target sizes {} vs {}",
+                  h.len(), delta_true.len());
+        }
+        let b = h.len() / self.d;
+        let (a1, a2, out) = self.fwd(params, h.f32s(), b);
+        let target = delta_true.f32s();
+        let n = out.len();
+        let mut mse = 0.0f64;
+        let mut dout = vec![0.0f32; n];
+        for i in 0..n {
+            let e = out[i] - target[i];
+            mse += (e as f64) * (e as f64);
+            dout[i] = 2.0 * e / n as f32;
+        }
+        let mse = (mse / n as f64) as f32;
+        // layer 3 (linear): out = a2 w3 + b3
+        let dw3 = kernels::matmul_tn(&a2, &dout, b, self.hd, self.d);
+        let db3 = kernels::bias_grad(&dout, self.d);
+        let mut da2 = kernels::matmul_nt(&dout, params[4].f32s(), b, self.d, self.hd);
+        kernels::relu_bwd(&mut da2, &a2);
+        // layer 2: a2 = relu(a1 w2 + b2)
+        let dw2 = kernels::matmul_tn(&a1, &da2, b, self.hd, self.hd);
+        let db2 = kernels::bias_grad(&da2, self.hd);
+        let mut da1 = kernels::matmul_nt(&da2, params[2].f32s(), b, self.hd, self.hd);
+        kernels::relu_bwd(&mut da1, &a1);
+        // layer 1: a1 = relu(h w1 + b1)
+        let dw1 = kernels::matmul_tn(h.f32s(), &da1, b, self.d, self.hd);
+        let db1 = kernels::bias_grad(&da1, self.hd);
+        Ok((mse, vec![
+            tensor2(self.d, self.hd, dw1), tensor1(db1),
+            tensor2(self.hd, self.hd, dw2), tensor1(db2),
+            tensor2(self.hd, self.d, dw3), tensor1(db3),
+        ]))
+    }
+}
+
+/// The native backend object (stateless; programs are built per load).
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-cpu"
+    }
+
+    fn load_module(&self, manifest: &Manifest, k: usize) -> Result<Rc<dyn ModuleExec>> {
+        let spec = manifest.modules.get(k)
+            .with_context(|| format!("module {k} out of range"))?
+            .clone();
+        Ok(Rc::new(NativeModule::build(spec)?))
+    }
+
+    fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>> {
+        let spec = manifest.synth.iter().find(|s| s.boundary == boundary)
+            .with_context(|| format!("no synthesizer for boundary {boundary}"))?;
+        Ok(Rc::new(NativeSynth::build(spec)?))
+    }
+
+    fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
+                   -> Result<Vec<Tensor>> {
+        // Prefer on-disk dumps when the artifact directory has them (exact
+        // parity with AOT runs); otherwise deterministic procedural init.
+        if !shapes.is_empty() && manifest.param_path(stem, 0).exists() {
+            return shapes.iter().enumerate()
+                .map(|(i, s)| Tensor::from_f32_file(&manifest.param_path(stem, i), s.clone()))
+                .collect();
+        }
+        Ok(procedural_init(manifest.seed, stem, shapes))
+    }
+}
+
+/// Deterministic parameter init: He-normal for >=2-D weights, zeros for
+/// 1-D (biases), and zeros for a synthesizer's output layer (params 4..)
+/// — the standard DNI zero-init trick. Every worker derives the identical
+/// tensors from (seed, stem, index), which is what makes the threaded
+/// deployment bit-compatible with the single-timeline trainer.
+pub fn procedural_init(seed: u64, stem: &str, shapes: &[Vec<usize>]) -> Vec<Tensor> {
+    let synth_zero_from = if stem.starts_with("synth") { 4 } else { usize::MAX };
+    shapes.iter().enumerate()
+        .map(|(i, shape)| {
+            let n: usize = shape.iter().product();
+            if shape.len() < 2 || i >= synth_zero_from {
+                return Tensor::zeros(shape, DType::F32);
+            }
+            let fan_in: usize = shape[..shape.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f32).sqrt();
+            let mut rng = Rng::new(seed ^ fnv(stem) ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * std).collect();
+            Tensor::from_f32(shape.clone(), data).expect("shape/product consistent")
+        })
+        .collect()
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Procedural residual-MLP config mirroring `python/compile/models/mlp.py`:
+/// a ReLU stem, `depth` residual pairs, and an un-activated classifier head,
+/// partitioned into `k` contiguous modules with DNI synthesizers at every
+/// boundary. Produces a fully in-memory [`Manifest`] the native backend can
+/// train without any artifacts on disk.
+#[derive(Clone, Debug)]
+pub struct NativeMlpSpec {
+    pub batch: usize,
+    /// Must stay 3072 to match the flat synthetic-CIFAR data source.
+    pub input_dim: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub num_classes: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl NativeMlpSpec {
+    /// The offline testbed config (matches mlp_tiny's data contract).
+    pub fn tiny(k: usize) -> NativeMlpSpec {
+        NativeMlpSpec {
+            batch: 16,
+            input_dim: 3072,
+            hidden: 64,
+            depth: std::cmp::max(1, k.saturating_sub(1)),
+            num_classes: 10,
+            k,
+            seed: 0,
+        }
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        native_mlp_manifest(self)
+    }
+}
+
+/// One layer of the procedural MLP before partitioning.
+struct LayerDesc {
+    name: String,
+    op: NativeOp,
+    param_shapes: Vec<Vec<usize>>,
+    out_width: usize,
+    flops: u64,
+    act_bytes: usize,
+}
+
+pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
+    if cfg.k == 0 || cfg.batch == 0 || cfg.hidden == 0 || cfg.num_classes == 0 {
+        bail!("degenerate native MLP config {cfg:?}");
+    }
+    let (b, h) = (cfg.batch, cfg.hidden);
+    let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 2);
+    layers.push(LayerDesc {
+        name: "stem".into(),
+        op: NativeOp::Dense { relu: true },
+        param_shapes: vec![vec![cfg.input_dim, h], vec![h]],
+        out_width: h,
+        flops: 2 * (b * cfg.input_dim * h) as u64,
+        act_bytes: 4 * b * h * 2,
+    });
+    for i in 0..cfg.depth {
+        layers.push(LayerDesc {
+            name: format!("res{i}"),
+            op: NativeOp::ResidualPair,
+            param_shapes: vec![vec![h, h], vec![h], vec![h, h], vec![h]],
+            out_width: h,
+            flops: 4 * (b * h * h) as u64,
+            act_bytes: 4 * b * h * 4,
+        });
+    }
+    layers.push(LayerDesc {
+        name: "head".into(),
+        op: NativeOp::Dense { relu: false },
+        param_shapes: vec![vec![h, cfg.num_classes], vec![cfg.num_classes]],
+        out_width: cfg.num_classes,
+        flops: 2 * (b * h * cfg.num_classes) as u64,
+        act_bytes: 4 * b * cfg.num_classes * 2,
+    });
+
+    let total_layers = layers.len();
+    if total_layers < cfg.k {
+        bail!("{total_layers} layers cannot fill k={} modules (raise depth)", cfg.k);
+    }
+
+    // Contiguous partition: the first (L % k) modules take one extra layer.
+    let base = total_layers / cfg.k;
+    let extra = total_layers % cfg.k;
+    let mut modules = Vec::with_capacity(cfg.k);
+    let mut layer_iter = layers.into_iter();
+    let mut in_width = cfg.input_dim;
+    let mut report = String::new();
+    for idx in 0..cfg.k {
+        let take = base + usize::from(idx < extra);
+        let group: Vec<LayerDesc> = layer_iter.by_ref().take(take).collect();
+        let out_width = group.last().context("empty module group")?.out_width;
+        let spec = ModuleSpec {
+            index: idx,
+            layers: group.iter().map(|l| l.name.clone()).collect(),
+            layer_act_bytes: group.iter().map(|l| l.act_bytes).collect(),
+            param_shapes: group.iter().flat_map(|l| l.param_shapes.clone()).collect(),
+            in_shape: vec![b, in_width],
+            in_dtype: DType::F32,
+            out_shape: vec![b, out_width],
+            flops: group.iter().map(|l| l.flops).sum(),
+            act_bytes: group.iter().map(|l| l.act_bytes).sum(),
+            fwd_file: "<native>".into(),
+            bwd_file: "<native>".into(),
+            loss_file: (idx == cfg.k - 1).then(|| "<native>".to_string()),
+            native_ops: group.iter().map(|l| l.op).collect(),
+        };
+        report.push_str(&format!("module {idx}: {} layers, {} flops\n",
+                                 spec.layers.len(), spec.flops));
+        in_width = out_width;
+        modules.push(spec);
+    }
+
+    let synth: Vec<SynthSpec> = (0..cfg.k.saturating_sub(1))
+        .map(|boundary| {
+            let d = modules[boundary].out_shape[1];
+            SynthSpec {
+                boundary,
+                param_shapes: vec![
+                    vec![d, d], vec![d], vec![d, d], vec![d], vec![d, d], vec![d],
+                ],
+                pred_file: "<native>".into(),
+                train_file: "<native>".into(),
+            }
+        })
+        .collect();
+
+    let total_flops: u64 = modules.iter().map(|m| m.flops).sum();
+    Ok(Manifest {
+        dir: std::path::PathBuf::from("<native>"),
+        config: format!("mlp_native_k{}", cfg.k),
+        k: cfg.k,
+        seed: cfg.seed,
+        model_type: "mlp".into(),
+        use_pallas: false,
+        input_shape: vec![b, cfg.input_dim],
+        input_dtype: DType::F32,
+        label_shape: vec![b],
+        num_classes: cfg.num_classes,
+        logits_shape: vec![b, cfg.num_classes],
+        num_layers: total_layers,
+        total_flops,
+        partition_report: report,
+        modules,
+        synth,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_values() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let out = kernels::matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        // a (2,3), b (3,2): aᵀ via matmul_tn equals transposing by hand;
+        // a bᵀ via matmul_nt equals matmul against the transposed operand.
+        let a = [1.0f32, -2.0, 3.0, 0.5, 4.0, -1.0];
+        let b = [2.0f32, 1.0, 0.0, -3.0, 1.5, 2.5];
+        // matmul_tn: aᵀ(3,2) @ c(2,2) with c rows = a's rows count 2
+        let c = [1.0f32, 2.0, 3.0, 4.0];
+        let tn = kernels::matmul_tn(&a, &c, 2, 3, 2);
+        // reference: transpose a by hand: aT (3,2) = [[1,0.5],[-2,4],[3,-1]]
+        let at = [1.0f32, 0.5, -2.0, 4.0, 3.0, -1.0];
+        assert_eq!(tn, kernels::matmul(&at, &c, 3, 2, 2));
+        // matmul_nt: a(2,3) @ b2(2,3)ᵀ -> (2,2)
+        let nt = kernels::matmul_nt(&a, &b, 2, 3, 2);
+        let bt = [2.0f32, -3.0, 1.0, 1.5, 0.0, 2.5];
+        assert_eq!(nt, kernels::matmul(&a, &bt, 2, 3, 2));
+    }
+
+    #[test]
+    fn softmax_xent_matches_metrics_formula() {
+        // logits [[ln2, 0]] label 0: p0 = 2/3 -> loss = ln(3/2)
+        let (loss, dl) = kernels::softmax_xent(&[2.0f32.ln(), 0.0], &[0], 1, 2);
+        assert!((loss as f64 - (1.5f64).ln()).abs() < 1e-6);
+        // dlogits = softmax - onehot = [2/3 - 1, 1/3]
+        assert!((dl[0] + 1.0 / 3.0).abs() < 1e-6);
+        assert!((dl[1] - 1.0 / 3.0).abs() < 1e-6);
+        // gradient sums to zero per row
+        assert!((dl[0] + dl[1]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        let gamma = [1.0f32; 4];
+        let beta = [0.0f32; 4];
+        let (y, _, _) = kernels::layernorm(&x, &gamma, &beta, 1e-5);
+        for row in y.chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "row mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row var {var}");
+        }
+    }
+
+    #[test]
+    fn dense_backward_matches_finite_differences() {
+        // A k=1 stem+residual+head module: every parameter gradient of the
+        // fused loss head checked against central differences.
+        let cfg = NativeMlpSpec {
+            batch: 3, input_dim: 5, hidden: 4, depth: 1, num_classes: 3,
+            k: 1, seed: 7,
+        };
+        let m = cfg.manifest().unwrap();
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 0).unwrap();
+        let mut params = ResidentParams::new(
+            backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
+        let mut rng = Rng::new(3);
+        let x = Tensor::from_f32(vec![3, 5],
+            (0..15).map(|_| rng.normal()).collect()).unwrap();
+        let labels = Tensor::from_i32(vec![3], vec![0, 2, 1]).unwrap();
+
+        let base = exec.loss_backward(&params, &x, &labels).unwrap();
+        // eps small enough not to cross ReLU kinks (verified numerically).
+        let eps = 1e-3f32;
+        for p_idx in 0..m.modules[0].param_shapes.len() {
+            let n = params[p_idx].len();
+            for i in [0, n / 2, n - 1] {
+                let orig = params[p_idx].f32s()[i];
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig + eps;
+                let lp = exec.loss_backward(&params, &x, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig - eps;
+                let lm = exec.loss_backward(&params, &x, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = base.grads[p_idx].f32s()[i];
+                assert!((fd - an).abs() < 1e-2 + 0.05 * an.abs(),
+                        "param {p_idx}[{i}]: finite-diff {fd} vs analytic {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn input_gradient_matches_finite_differences() {
+        // delta_in of a non-first module checked against perturbing h_in.
+        let cfg = NativeMlpSpec {
+            batch: 2, input_dim: 4, hidden: 4, depth: 1, num_classes: 3,
+            k: 2, seed: 11,
+        };
+        let m = cfg.manifest().unwrap();
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 1).unwrap();
+        let params = ResidentParams::new(
+            backend.init_params(&m, "module1", &m.modules[1].param_shapes).unwrap());
+        let mut rng = Rng::new(5);
+        let d = m.modules[1].in_shape[1];
+        let mut h: Vec<f32> = (0..2 * d).map(|_| rng.normal()).collect();
+        let labels = Tensor::from_i32(vec![2], vec![1, 0]).unwrap();
+
+        let base = exec.loss_backward(
+            &params, &Tensor::from_f32(vec![2, d], h.clone()).unwrap(), &labels).unwrap();
+        let din = base.delta_in.expect("module 1 emits delta_in");
+        let eps = 1e-3f32;
+        for i in [0usize, 3, 2 * d - 1] {
+            let orig = h[i];
+            h[i] = orig + eps;
+            let lp = exec.loss_backward(
+                &params, &Tensor::from_f32(vec![2, d], h.clone()).unwrap(), &labels)
+                .unwrap().loss;
+            h[i] = orig - eps;
+            let lm = exec.loss_backward(
+                &params, &Tensor::from_f32(vec![2, d], h.clone()).unwrap(), &labels)
+                .unwrap().loss;
+            h[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = din.f32s()[i];
+            assert!((fd - an).abs() < 1e-2 + 0.05 * an.abs(),
+                    "h[{i}]: finite-diff {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_differences() {
+        let mut rng = Rng::new(17);
+        let d = 5;
+        let rows = 2;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let gamma: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let beta: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal()).collect();
+        let probe: Vec<f32> = (0..rows * d).map(|_| rng.normal()).collect();
+        let loss = |x: &[f32], gamma: &[f32], beta: &[f32]| -> f32 {
+            let (y, _, _) = kernels::layernorm(x, gamma, beta, 1e-5);
+            y.iter().zip(&probe).map(|(a, b)| a * b).sum()
+        };
+        let (_, xhat, rstd) = kernels::layernorm(&x, &gamma, &beta, 1e-5);
+        let (dx, dgamma, dbeta) = kernels::layernorm_bwd(&probe, &xhat, &rstd, &gamma);
+        let eps = 1e-2f32;
+        let mut xx = x.clone();
+        for i in [0usize, 4, 7] {
+            let orig = xx[i];
+            xx[i] = orig + eps;
+            let lp = loss(&xx, &gamma, &beta);
+            xx[i] = orig - eps;
+            let lm = loss(&xx, &gamma, &beta);
+            xx[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dx[i]).abs() < 2e-2 + 0.05 * dx[i].abs(),
+                    "dx[{i}]: {fd} vs {}", dx[i]);
+        }
+        let mut gg = gamma.clone();
+        for i in [0usize, d - 1] {
+            let orig = gg[i];
+            gg[i] = orig + eps;
+            let lp = loss(&x, &gg, &beta);
+            gg[i] = orig - eps;
+            let lm = loss(&x, &gg, &beta);
+            gg[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dgamma[i]).abs() < 2e-2 + 0.05 * dgamma[i].abs());
+        }
+        let mut bb = beta.clone();
+        for i in [0usize, d - 1] {
+            let orig = bb[i];
+            bb[i] = orig + eps;
+            let lp = loss(&x, &gamma, &bb);
+            bb[i] = orig - eps;
+            let lm = loss(&x, &gamma, &bb);
+            bb[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dbeta[i]).abs() < 2e-2 + 0.05 * dbeta[i].abs());
+        }
+    }
+
+    #[test]
+    fn synth_backward_matches_finite_differences() {
+        let spec = SynthSpec {
+            boundary: 0,
+            param_shapes: vec![
+                vec![4, 4], vec![4], vec![4, 4], vec![4], vec![4, 4], vec![4],
+            ],
+            pred_file: "<native>".into(),
+            train_file: "<native>".into(),
+        };
+        let synth = NativeSynth::build(&spec).unwrap();
+        // He-init ALL layers (not the usual zero output init) so the MSE
+        // gradients are non-trivial for every parameter.
+        let mut params_v = procedural_init(3, "module_fake", &spec.param_shapes);
+        let mut rng = Rng::new(23);
+        let h = Tensor::from_f32(vec![2, 4], (0..8).map(|_| rng.normal()).collect()).unwrap();
+        let t = Tensor::from_f32(vec![2, 4], (0..8).map(|_| rng.normal()).collect()).unwrap();
+        // perturb biases away from zero too
+        for p in [1usize, 3, 5] {
+            for v in params_v[p].f32s_mut() {
+                *v = 0.1 * rng.normal();
+            }
+        }
+        let mut params = ResidentParams::new(params_v);
+        let (_, grads) = synth.train_grads(&params, &h, &t).unwrap();
+        let eps = 1e-3f32;
+        for p_idx in 0..6 {
+            let n = params[p_idx].len();
+            for i in [0, n - 1] {
+                let orig = params[p_idx].f32s()[i];
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig + eps;
+                let (lp, _) = synth.train_grads(&params, &h, &t).unwrap();
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig - eps;
+                let (lm, _) = synth.train_grads(&params, &h, &t).unwrap();
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[p_idx].f32s()[i];
+                assert!((fd - an).abs() < 1e-2 + 0.05 * an.abs(),
+                        "synth param {p_idx}[{i}]: finite-diff {fd} vs analytic {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_manifest_shapes_chain() {
+        let m = NativeMlpSpec::tiny(4).manifest().unwrap();
+        assert_eq!(m.k, 4);
+        assert_eq!(m.modules.len(), 4);
+        assert_eq!(m.input_shape, vec![16, 3072]);
+        assert_eq!(m.num_classes, 10);
+        assert!(m.modules[3].loss_file.is_some());
+        assert!(m.modules[0].loss_file.is_none());
+        assert_eq!(m.synth.len(), 3);
+        for w in m.modules.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        assert!(m.total_params() > 0);
+        // every module has a runnable native graph
+        let backend = NativeBackend;
+        for k in 0..m.k {
+            backend.load_module(&m, k).unwrap();
+        }
+    }
+
+    #[test]
+    fn procedural_init_is_deterministic_and_shaped() {
+        let shapes = vec![vec![4, 3], vec![3]];
+        let a = procedural_init(9, "module0", &shapes);
+        let b = procedural_init(9, "module0", &shapes);
+        assert_eq!(a[0].f32s(), b[0].f32s());
+        assert!(a[1].f32s().iter().all(|&x| x == 0.0), "bias is zero-init");
+        assert!(a[0].f32s().iter().any(|&x| x != 0.0), "weights are random");
+        let c = procedural_init(10, "module0", &shapes);
+        assert_ne!(a[0].f32s(), c[0].f32s());
+        // synth output layer zero-init
+        let synth_shapes = vec![
+            vec![3, 3], vec![3], vec![3, 3], vec![3], vec![3, 3], vec![3],
+        ];
+        let s = procedural_init(9, "synth0", &synth_shapes);
+        assert!(s[4].f32s().iter().all(|&x| x == 0.0));
+        assert!(s[0].f32s().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_through_whole_stack() {
+        let m = NativeMlpSpec::tiny(3).manifest().unwrap();
+        let backend = NativeBackend;
+        let mut h = Tensor::zeros(&m.input_shape, m.input_dtype);
+        for k in 0..m.k {
+            let exec = backend.load_module(&m, k).unwrap();
+            let params = ResidentParams::new(
+                backend.init_params(&m, &format!("module{k}"), &m.modules[k].param_shapes)
+                    .unwrap());
+            h = exec.forward(&params, &h).unwrap();
+            assert_eq!(h.shape, m.modules[k].out_shape);
+        }
+        assert_eq!(h.shape, m.logits_shape);
+    }
+}

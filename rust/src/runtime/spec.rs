@@ -8,6 +8,20 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 use super::tensor::DType;
 
+/// A procedurally-described layer op the native CPU backend can execute
+/// directly (no HLO). Disk manifests (AOT artifacts) carry an empty op list
+/// and require the `pjrt` backend; procedural configs (see
+/// `runtime::native`) fill it in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeOp {
+    /// `y = x @ w + b`, optionally ReLU'd. Params: `w (din, dout)`, `b (dout)`.
+    Dense { relu: bool },
+    /// `y = relu(x + dense2(relu(dense1(x))))`. Params: `w1, b1, w2, b2`.
+    ResidualPair,
+    /// LayerNorm over the last axis. Params: `gamma (d)`, `beta (d)`.
+    LayerNorm,
+}
+
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
     pub index: usize,
@@ -22,6 +36,8 @@ pub struct ModuleSpec {
     pub fwd_file: String,
     pub bwd_file: String,
     pub loss_file: Option<String>,
+    /// Procedural op graph for the native backend (empty for AOT artifacts).
+    pub native_ops: Vec<NativeOp>,
 }
 
 impl ModuleSpec {
@@ -104,6 +120,7 @@ impl Manifest {
                 fwd_file: files.field("fwd")?.as_str().context("fwd")?.to_string(),
                 bwd_file: files.field("bwd")?.as_str().context("bwd")?.to_string(),
                 loss_file: files.get("loss").and_then(|x| x.as_str()).map(String::from),
+                native_ops: Vec::new(),
             });
         }
         if modules.len() != k {

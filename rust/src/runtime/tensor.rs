@@ -1,11 +1,68 @@
 //! Host tensors: the Send-able payload that flows between module workers.
 //!
-//! PJRT `Literal`s wrap C++ objects behind `Rc` and are not `Send`, so
-//! everything crossing a channel (features, deltas, gradients) is a plain
-//! `Tensor` — shape + contiguous host data — converted to/from `Literal` at
-//! the worker boundary.
+//! Storage is an `Arc`-backed buffer, so `Tensor::clone` — and with it every
+//! replay-ring push, `stale(lag)` read, pending-delta hand-off and `mpsc`
+//! send on the training hot path — is a refcount bump, not a `Vec` memcpy.
+//! Mutation goes through copy-on-write (`f32s_mut`): a deep copy happens
+//! only when the buffer is actually shared (e.g. DDG's weight snapshots),
+//! and every such copy is recorded in [`copy_metrics`] so the benches can
+//! assert the hot path stays zero-copy.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
+
+/// Process-wide counters for buffer traffic. `deep_*` counts real memcpys
+/// triggered by copy-on-write on a shared buffer; `shallow_clones` counts
+/// `Tensor::clone` refcount bumps. Benches reset these around a measured
+/// window to report bytes-cloned-per-step (see BENCH_hotpath.json).
+pub mod copy_metrics {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static SHALLOW_CLONES: AtomicU64 = AtomicU64::new(0);
+    static DEEP_COPIES: AtomicU64 = AtomicU64::new(0);
+    static DEEP_COPY_BYTES: AtomicU64 = AtomicU64::new(0);
+    /// Full parameter-set marshals into an execution backend (PJRT uploads;
+    /// structurally zero on the native backend).
+    static PARAM_REMARSHALS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record_shallow_clone() {
+        SHALLOW_CLONES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn record_deep_copy(bytes: usize) {
+        DEEP_COPIES.fetch_add(1, Ordering::Relaxed);
+        DEEP_COPY_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Called by backends that re-upload the full parameter set.
+    pub fn record_param_remarshal() {
+        PARAM_REMARSHALS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shallow_clones() -> u64 {
+        SHALLOW_CLONES.load(Ordering::Relaxed)
+    }
+
+    pub fn deep_copies() -> u64 {
+        DEEP_COPIES.load(Ordering::Relaxed)
+    }
+
+    pub fn deep_copy_bytes() -> u64 {
+        DEEP_COPY_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub fn param_remarshals() -> u64 {
+        PARAM_REMARSHALS.load(Ordering::Relaxed)
+    }
+
+    pub fn reset() {
+        SHALLOW_CLONES.store(0, Ordering::Relaxed);
+        DEEP_COPIES.store(0, Ordering::Relaxed);
+        DEEP_COPY_BYTES.store(0, Ordering::Relaxed);
+        PARAM_REMARSHALS.store(0, Ordering::Relaxed);
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -23,17 +80,35 @@ impl DType {
     }
 
     pub fn size_bytes(self) -> usize {
-        4
+        match self {
+            DType::F32 => std::mem::size_of::<f32>(),
+            DType::I32 => std::mem::size_of::<i32>(),
+        }
     }
 }
 
-/// Contiguous row-major host tensor. F32 data lives in `f`, I32 in `i`.
+#[derive(Debug)]
+enum Storage {
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+}
+
+impl Clone for Storage {
+    fn clone(&self) -> Storage {
+        copy_metrics::record_shallow_clone();
+        match self {
+            Storage::F32(a) => Storage::F32(Arc::clone(a)),
+            Storage::I32(a) => Storage::I32(Arc::clone(a)),
+        }
+    }
+}
+
+/// Contiguous row-major host tensor over shared (`Arc`) storage.
 #[derive(Clone, Debug)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub dtype: DType,
-    f: Vec<f32>,
-    i: Vec<i32>,
+    data: Storage,
 }
 
 impl Tensor {
@@ -42,7 +117,7 @@ impl Tensor {
         if data.len() != n {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
-        Ok(Tensor { shape, dtype: DType::F32, f: data, i: Vec::new() })
+        Ok(Tensor { shape, dtype: DType::F32, data: Storage::F32(Arc::new(data)) })
     }
 
     pub fn from_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
@@ -50,19 +125,20 @@ impl Tensor {
         if data.len() != n {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
-        Ok(Tensor { shape, dtype: DType::I32, f: Vec::new(), i: data })
+        Ok(Tensor { shape, dtype: DType::I32, data: Storage::I32(Arc::new(data)) })
     }
 
     pub fn zeros(shape: &[usize], dtype: DType) -> Tensor {
         let n: usize = shape.iter().product();
-        match dtype {
-            DType::F32 => Tensor { shape: shape.to_vec(), dtype, f: vec![0.0; n], i: Vec::new() },
-            DType::I32 => Tensor { shape: shape.to_vec(), dtype, f: Vec::new(), i: vec![0; n] },
-        }
+        let data = match dtype {
+            DType::F32 => Storage::F32(Arc::new(vec![0.0; n])),
+            DType::I32 => Storage::I32(Arc::new(vec![0; n])),
+        };
+        Tensor { shape: shape.to_vec(), dtype, data }
     }
 
     pub fn scalar_f32(v: f32) -> Tensor {
-        Tensor { shape: vec![], dtype: DType::F32, f: vec![v], i: Vec::new() }
+        Tensor { shape: vec![], dtype: DType::F32, data: Storage::F32(Arc::new(vec![v])) }
     }
 
     pub fn len(&self) -> usize {
@@ -77,59 +153,79 @@ impl Tensor {
         self.len() * self.dtype.size_bytes()
     }
 
-    pub fn f32s(&self) -> &[f32] {
-        debug_assert_eq!(self.dtype, DType::F32);
-        &self.f
+    /// True when both tensors view the same underlying buffer (i.e. a clone
+    /// chain with no copy-on-write in between) — the zero-copy assertion.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        match (&self.data, &other.data) {
+            (Storage::F32(a), Storage::F32(b)) => Arc::ptr_eq(a, b),
+            (Storage::I32(a), Storage::I32(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
     }
 
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Storage::F32(a) => a.as_slice(),
+            Storage::I32(_) => {
+                debug_assert!(false, "f32s() on an i32 tensor");
+                &[]
+            }
+        }
+    }
+
+    /// Mutable view with copy-on-write: deep-copies (and records it in
+    /// [`copy_metrics`]) only if the buffer is shared.
     pub fn f32s_mut(&mut self) -> &mut [f32] {
-        debug_assert_eq!(self.dtype, DType::F32);
-        &mut self.f
+        match &mut self.data {
+            Storage::F32(a) => {
+                if Arc::strong_count(a) > 1 {
+                    copy_metrics::record_deep_copy(a.len() * std::mem::size_of::<f32>());
+                }
+                Arc::make_mut(a).as_mut_slice()
+            }
+            Storage::I32(_) => {
+                debug_assert!(false, "f32s_mut() on an i32 tensor");
+                &mut []
+            }
+        }
     }
 
     pub fn i32s(&self) -> &[i32] {
-        debug_assert_eq!(self.dtype, DType::I32);
-        &self.i
+        match &self.data {
+            Storage::I32(a) => a.as_slice(),
+            Storage::F32(_) => {
+                debug_assert!(false, "i32s() on an f32 tensor");
+                &[]
+            }
+        }
     }
 
     pub fn item_f32(&self) -> Result<f32> {
         if self.dtype != DType::F32 || self.len() != 1 {
             bail!("item_f32 on {:?} tensor of shape {:?}", self.dtype, self.shape);
         }
-        Ok(self.f[0])
+        Ok(self.f32s()[0])
     }
 
-    /// L2 norm squared (sigma probe / diagnostics).
+    /// L2 norm squared (sigma probe / diagnostics). Zero for i32 tensors.
     pub fn sq_norm(&self) -> f64 {
-        self.f.iter().map(|&x| (x as f64) * (x as f64)).sum()
+        match &self.data {
+            Storage::F32(a) => a.iter().map(|&x| (x as f64) * (x as f64)).sum(),
+            Storage::I32(_) => 0.0,
+        }
     }
 
     pub fn dot(&self, other: &Tensor) -> f64 {
         debug_assert_eq!(self.len(), other.len());
-        self.f.iter().zip(other.f.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+        self.f32s()
+            .iter()
+            .zip(other.f32s().iter())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
     }
 
-    // --- PJRT boundary ----------------------------------------------------
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, bytes): (xla::ElementType, &[u8]) = match self.dtype {
-            DType::F32 => (xla::ElementType::F32, bytemuck_f32(&self.f)),
-            DType::I32 => (xla::ElementType::S32, bytemuck_i32(&self.i)),
-        };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)?)
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Tensor::from_f32(dims, lit.to_vec::<f32>()?),
-            xla::ElementType::S32 => Tensor::from_i32(dims, lit.to_vec::<i32>()?),
-            other => bail!("unsupported literal element type {other:?}"),
-        }
-    }
-
-    /// Load a raw little-endian f32 dump (artifacts/<cfg>/params/*.bin).
+    /// Load a raw little-endian f32 dump (artifacts/<cfg>/params/*.bin),
+    /// decoding in bulk rather than element-at-a-time.
     pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
         let bytes = std::fs::read(path)?;
         let n: usize = shape.iter().product();
@@ -137,20 +233,14 @@ impl Tensor {
             bail!("{path:?}: expected {} bytes for shape {shape:?}, got {}",
                   n * 4, bytes.len());
         }
-        let mut data = vec![0f32; n];
-        for (i, ch) in bytes.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
-        }
+        let mut data = Vec::with_capacity(n);
+        data.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]])),
+        );
         Tensor::from_f32(shape, data)
     }
-}
-
-fn bytemuck_f32(xs: &[f32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
-}
-
-fn bytemuck_i32(xs: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
 #[cfg(test)]
@@ -170,6 +260,8 @@ mod tests {
         assert_eq!(t.len(), 15);
         assert_eq!(t.size_bytes(), 60);
         assert!(t.f32s().iter().all(|&x| x == 0.0));
+        let ti = Tensor::zeros(&[2], DType::I32);
+        assert_eq!(ti.size_bytes(), 8);
     }
 
     #[test]
@@ -181,19 +273,45 @@ mod tests {
     }
 
     #[test]
-    fn literal_roundtrip_f32() {
-        let t = Tensor::from_f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(back.shape, vec![2, 2]);
-        assert_eq!(back.f32s(), t.f32s());
+    fn clone_is_shallow() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = a.clone();
+        assert!(a.shares_storage(&b));
+        assert_eq!(b.f32s(), a.f32s());
     }
 
     #[test]
-    fn literal_roundtrip_i32() {
-        let t = Tensor::from_i32(vec![3], vec![7, -1, 2]).unwrap();
-        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(back.i32s(), t.i32s());
+    fn copy_on_write_detaches_clone() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let mut b = a.clone();
+        b.f32s_mut()[0] = 9.0;
+        assert!(!a.shares_storage(&b));
+        assert_eq!(a.f32s(), &[1.0, 2.0]);
+        assert_eq!(b.f32s(), &[9.0, 2.0]);
+    }
+
+    #[test]
+    fn unshared_mutation_does_not_copy() {
+        // Pointer identity (not the global counters, which other tests touch
+        // concurrently): an unshared buffer must be mutated in place.
+        let mut a = Tensor::from_f32(vec![4], vec![0.0; 4]).unwrap();
+        let before = a.f32s().as_ptr();
+        a.f32s_mut()[1] = 1.0;
+        assert_eq!(a.f32s().as_ptr(), before);
+        assert_eq!(a.f32s()[1], 1.0);
+    }
+
+    #[test]
+    fn shared_mutation_records_deep_copy() {
+        let a = Tensor::from_f32(vec![8], vec![1.0; 8]).unwrap();
+        let mut b = a.clone();
+        let copies = copy_metrics::deep_copies();
+        let bytes = copy_metrics::deep_copy_bytes();
+        b.f32s_mut()[0] = 2.0;
+        // >= rather than == : the counters are process-global and other
+        // tests may run concurrently.
+        assert!(copy_metrics::deep_copies() >= copies + 1);
+        assert!(copy_metrics::deep_copy_bytes() >= bytes + 32);
     }
 
     #[test]
@@ -206,5 +324,12 @@ mod tests {
         let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
         assert_eq!(t.f32s(), &[1.5, -2.0, 0.25]);
         assert!(Tensor::from_f32_file(&path, vec![4]).is_err());
+    }
+
+    #[test]
+    fn item_f32_checks() {
+        assert_eq!(Tensor::scalar_f32(3.5).item_f32().unwrap(), 3.5);
+        assert!(Tensor::zeros(&[2], DType::F32).item_f32().is_err());
+        assert!(Tensor::zeros(&[1], DType::I32).item_f32().is_err());
     }
 }

@@ -1,0 +1,44 @@
+//! The acceptance check for the zero-copy hot path, as a test: after the
+//! pipeline warms up, FR training steps must perform
+//!
+//! - zero deep buffer copies (replay pushes, stale reads, delta hand-offs
+//!   are Arc refcount bumps; copy-on-write never fires), and
+//! - zero parameter re-marshals (params are resident in the backend; the
+//!   native executor reads host buffers in place).
+//!
+//! This lives in its own integration-test binary ON PURPOSE: the copy
+//! counters are process-global, and a dedicated process with a single test
+//! keeps them race-free.
+
+use features_replay::coordinator::{self, ModuleStack, TrainConfig, Trainer};
+use features_replay::data::DataSource;
+use features_replay::runtime::{copy_metrics, Engine, NativeMlpSpec};
+
+#[test]
+fn fr_steady_state_performs_no_deep_copies_or_remarshals() {
+    let m = NativeMlpSpec::tiny(4).manifest().unwrap();
+    let engine = Engine::native();
+    let stack = ModuleStack::load(&engine, m.clone(), TrainConfig::default()).unwrap();
+    let mut fr = coordinator::fr::FrTrainer::new(stack);
+    let mut data = DataSource::for_manifest(&m, 21).unwrap();
+
+    // warm the pipeline past the zero-prefill phase
+    for _ in 0..m.k {
+        let b = data.train_batch();
+        fr.train_step(&b, 0.01).unwrap();
+    }
+
+    copy_metrics::reset();
+    for _ in 0..4 {
+        let b = data.train_batch();
+        let stats = fr.train_step(&b, 0.01).unwrap();
+        assert!(stats.loss.is_finite());
+    }
+    assert_eq!(copy_metrics::deep_copies(), 0,
+               "FR steady state must not deep-copy any tensor buffer");
+    assert_eq!(copy_metrics::deep_copy_bytes(), 0);
+    assert_eq!(copy_metrics::param_remarshals(), 0,
+               "resident params must not be re-marshaled per step");
+    assert!(copy_metrics::shallow_clones() > 0,
+            "the hot path runs on Arc clones");
+}

@@ -189,18 +189,43 @@ fn data_parallel_monotone_compute_term() {
 }
 
 #[test]
-fn tensor_literal_roundtrip_random_shapes() {
-    check("tensor_roundtrip", 40, |g| {
+fn tensor_clone_shares_until_write_then_detaches() {
+    check("tensor_cow", 100, |g| {
         let rank = g.usize_in(1, 4);
         let shape = g.vec_usize(rank, 1, 8);
         let n: usize = shape.iter().product();
         let data = g.vec_f32(n, -100.0, 100.0);
         let t = Tensor::from_f32(shape.clone(), data.clone()).unwrap();
-        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        if back.shape == shape && back.f32s() == &data[..] {
+        let mut c = t.clone();
+        if !c.shares_storage(&t) {
+            return Err("clone must share storage".to_string());
+        }
+        let i = g.usize_in(0, n - 1);
+        c.f32s_mut()[i] += 1.0;
+        if c.shares_storage(&t) {
+            return Err("write must detach the clone".to_string());
+        }
+        if t.f32s() != &data[..] {
+            return Err("original mutated through a clone".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replay_buffer_push_and_stale_are_zero_copy() {
+    check("replay_zero_copy", 100, |g| {
+        let cap = g.usize_in(1, 6);
+        let mut buf = ReplayBuffer::new(cap, &[4], DType::F32);
+        for _ in 0..g.usize_in(0, 10) {
+            buf.push(Tensor::zeros(&[4], DType::F32));
+        }
+        let t = Tensor::from_f32(vec![4], g.vec_f32(4, -1.0, 1.0)).unwrap();
+        buf.push(t.clone());
+        if buf.stale(0).shares_storage(&t) {
             Ok(())
         } else {
-            Err(format!("roundtrip failed for shape {shape:?}"))
+            Err("ring push/stale must be refcount bumps".to_string())
         }
     });
 }

@@ -1,0 +1,178 @@
+//! Offline stand-in for the `anyhow` crate (the sandbox has no registry
+//! access). Implements exactly the subset this repository uses — `Result`,
+//! `Error`, `anyhow!`, `bail!`, and the `Context` extension trait — with the
+//! same observable formatting behavior:
+//!
+//! - `{}` displays the outermost message,
+//! - `{:#}` displays the whole context chain joined by `: `,
+//! - `{:?}` displays the message plus a `Caused by:` list.
+//!
+//! Swap the path dependency in Cargo.toml for the real crates.io `anyhow`
+//! when a registry is available; no source changes are needed.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the usual default type parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error. Cheap, string-based: this shim does not keep the
+/// source error object alive, only its rendered messages.
+pub struct Error {
+    /// Outermost context first; the root cause is last. Never empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a layer of context (what `Context::context` attaches).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The rendered context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn outer(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("error")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.outer())?;
+        for cause in self.chain.iter().skip(1) {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(format!("{e}"), "value 3 bad");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 and 2");
+        let owned = String::from("plain");
+        let e = anyhow!(owned);
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 7);
+            }
+            Ok(1)
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flagged 7");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("missing file"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The sandbox has neither the XLA C++ runtime nor registry access, so this
+//! crate exists to keep the `pjrt` cargo feature *compilable*: it mirrors
+//! the exact API surface `runtime/pjrt.rs` uses. Host-side `Literal`
+//! plumbing is implemented faithfully (shape + bytes), but anything that
+//! needs a real PJRT runtime (`PjRtClient::cpu`, `compile`, `execute`)
+//! returns [`XlaError`] at runtime.
+//!
+//! To run HLO artifacts for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at actual bindings with this interface.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what} requires the real PJRT runtime — this build links the \
+         offline stub (see rust/vendor/xla)"
+    ))
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Host element types a [`Literal`] can be decoded into.
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> f32 {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> i32 {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: shape + raw little-endian bytes (faithful implementation).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.size_bytes() {
+            return Err(XlaError(format!(
+                "literal shape {dims:?} wants {} bytes, got {}",
+                n * ty.size_bytes(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.iter().map(|&d| d as i64).collect(), ty: self.ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(XlaError(format!(
+                "literal is {:?}, asked to decode as {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
