@@ -4,60 +4,41 @@
 //! cargo run --release --example quickstart    # runs offline: native backend
 //! ```
 //!
-//! Uses AOT artifacts when `make artifacts` has been run (with the `pjrt`
-//! feature); otherwise falls back to the procedural native-MLP config, so
-//! the whole walkthrough works on a fresh checkout with no Python.
-//!
-//! Walks the whole public API surface: resolve a manifest, build a trainer,
-//! drive the shared training loop, inspect memory + timing, and print the
-//! simulated K-device speedup over backward-locked BP.
+//! One `Experiment` builder chain is the whole setup: the model registry
+//! resolves `mlp_tiny` to the procedural native config (or to AOT artifacts
+//! when the `pjrt` feature + `make artifacts` are available), and the
+//! session owns trainer, data, schedule, and the shared training loop.
+//! Afterwards we inspect memory + timing and print the simulated K-device
+//! speedup over backward-locked BP.
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig, Trainer,
-};
-use features_replay::data::DataSource;
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest, NativeMlpSpec};
-
-/// Pick the (engine, manifest) pair this build can actually run: PJRT +
-/// artifacts when both are available, otherwise the native CPU backend with
-/// the procedural MLP config (AOT manifests carry no native op graph).
-fn testbed() -> Result<(Engine, Manifest)> {
-    #[cfg(feature = "pjrt")]
-    {
-        let dir = features_replay::default_artifacts_root().join("mlp_tiny_k4");
-        if dir.join("manifest.json").exists() {
-            return Ok((Engine::pjrt_cpu()?, Manifest::load(&dir)?));
-        }
-    }
-    println!("(using the native CPU backend with the procedural MLP config)");
-    Ok((Engine::native(), NativeMlpSpec::tiny(4).manifest()?))
-}
+use features_replay::coordinator::{self, pipeline_sim, Algo, Trainer};
+use features_replay::experiment::Experiment;
 
 fn main() -> Result<()> {
-    let (engine, manifest) = testbed()?;
-    println!("== Features Replay quickstart ==");
-    println!("model {} | K={} modules | {} params | pallas kernels: {}",
-             manifest.config, manifest.k, manifest.total_params(), manifest.use_pallas);
-    println!("backend: {}", engine.platform());
-    let mut trainer = make_trainer(&engine, &manifest, Algo::Fr, TrainConfig::default())?;
-    let mut data = DataSource::for_manifest(&manifest, 0)?;
-
     let steps = std::env::var("FR_STEPS").ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(60);
-    let opts = RunOptions {
-        steps,
-        eval_every: 10,
-        eval_batches: 4,
-        steps_per_epoch: 20,
-        verbose: true,
-        ..Default::default()
-    };
-    let res = coordinator::run_training(
-        trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+
+    let mut session = Experiment::new("mlp_tiny")
+        .k(4)
+        .algo(Algo::Fr)
+        .steps(steps)
+        .lr(0.01)
+        .eval_every(10)
+        .eval_batches(4)
+        .steps_per_epoch(20)
+        .verbose(true)
+        .session()?;
+
+    println!("== Features Replay quickstart ==");
+    println!("model {} | K={} modules | {} params | pallas kernels: {}",
+             session.manifest.config, session.manifest.k,
+             session.manifest.total_params(), session.manifest.use_pallas);
+    println!("backend: {:?}", session.backend);
+
+    let res = session.run()?;
 
     println!("\nbest test error: {:.3}", res.curve.best_test_err());
     let mem = &res.final_memory;
@@ -68,8 +49,8 @@ fn main() -> Result<()> {
     // the headline: what K devices would buy at these measured module costs
     let costs = pipeline_sim::MeasuredCosts::from_timings(
         &res.timings[res.timings.len().saturating_sub(20)..],
-        coordinator::boundary_bytes(trainer.stack()),
-        coordinator::param_bytes(trainer.stack()));
+        coordinator::boundary_bytes(session.trainer.stack()),
+        coordinator::param_bytes(session.trainer.stack()));
     let comm = pipeline_sim::CommModel::default();
     println!("\nK-device pipeline model (measured costs):");
     println!("  locked BP  : {:.2} ms/iter", pipeline_sim::bp_iteration_ms(&costs, &comm));

@@ -5,7 +5,8 @@
 //! for lower modules early, and approaches 1 late in training.
 //!
 //! Testbed setup (DESIGN.md subst. 3): resnet_s (basic-block role) and
-//! resnet_m (bottleneck role), K=4, synthetic CIFAR-10.
+//! resnet_m (bottleneck role), K=4, synthetic CIFAR-10 — both resolved
+//! procedurally by the model registry, so this runs offline.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig3_sigma -- [steps]
@@ -13,37 +14,26 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{fr::FrTrainer, sigma, ModuleStack, TrainConfig};
-use features_replay::data::DataSource;
-use features_replay::runtime::{Engine, Manifest};
+use features_replay::coordinator::sigma;
+use features_replay::experiment::Experiment;
 use features_replay::util::json::{arr, num, obj, s, Json};
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(60);
-    let root = features_replay::default_artifacts_root();
     let mut all = Vec::new();
 
     for model in ["resnet_s", "resnet_m"] {
-        let dir = root.join(format!("{model}_k4"));
-        if !dir.exists() {
-            println!("(skipping {model}: artifacts not built)");
-            continue;
-        }
-        let manifest = Manifest::load(&dir)?;
-        let engine = Engine::cpu()?;
-        let stack = ModuleStack::load(&engine, manifest.clone(), TrainConfig::default())?;
-        let mut fr = FrTrainer::new(stack);
-        let mut data = DataSource::for_manifest(&manifest, 0)?;
+        let mut fs = Experiment::new(model).k(4).build_fr()?;
 
         println!("\n== Fig 3 | {model} K=4: sigma_k over training ==");
         println!("{:>5}  {:>7} {:>7} {:>7} {:>7}  {:>7}",
                  "step", "mod1", "mod2", "mod3", "mod4", "total");
         let mut series = Vec::new();
         for step in 0..steps {
-            let batch = data.train_batch();
-            let (smp, _) = sigma::probe_step(&mut fr, &batch, 0.01, step)?;
+            let batch = fs.data.train_batch();
+            let (smp, _) = sigma::probe_step(&mut fs.fr, &batch, 0.01, step)?;
             if step % (steps / 12).max(1) == 0 || step + 1 == steps {
                 println!("{step:5}  {:7.3} {:7.3} {:7.3} {:7.3}  {:7.3}",
                          smp.per_module[0], smp.per_module[1],

@@ -6,7 +6,9 @@
 //! BP per epoch and is up to ~2x faster per unit time at K=4.
 //!
 //! Testbed: resnet_s/m/l stand-ins (subst. 3), K=4, synthetic CIFAR-10;
-//! the time axis is the measured-cost pipeline model (subst. 1).
+//! the time axis is the measured-cost pipeline model (subst. 1). The model
+//! registry resolves every stand-in procedurally, so this runs offline on
+//! the native backend with zero artifacts.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig4_convergence -- [steps] [models...]
@@ -14,13 +16,9 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, Algo, RunOptions, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::Algo;
+use features_replay::experiment::Experiment;
 use features_replay::metrics::{write_report, TablePrinter};
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,16 +28,8 @@ fn main() -> Result<()> {
     } else {
         vec!["resnet_s".into(), "resnet_m".into(), "resnet_l".into()]
     };
-    let root = features_replay::default_artifacts_root();
-    let engine = Engine::cpu()?;
 
     for model in &models {
-        let dir = root.join(format!("{model}_k4"));
-        if !dir.exists() {
-            println!("(skipping {model}: artifacts not built)");
-            continue;
-        }
-        let manifest = Manifest::load(&dir)?;
         println!("\n== Fig 4 | {model} K=4, {steps} steps/method ==");
         let table = TablePrinter::new(
             &["method", "final_loss", "best_err", "sim_ms/iter", "epoch_speedup", "diverged"],
@@ -47,18 +37,15 @@ fn main() -> Result<()> {
 
         let mut curves = Vec::new();
         let mut bp_iter_ms = f64::NAN;
-        for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
-            let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-            let mut data = DataSource::for_manifest(&manifest, 0)?;
-            let opts = RunOptions {
-                steps,
-                eval_every: (steps / 6).max(1),
-                eval_batches: 2,
-                steps_per_epoch: (steps / 4).max(1),
-                ..Default::default()
-            };
-            let res = coordinator::run_training(
-                trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+        for algo in Algo::ALL {
+            let res = Experiment::new(model)
+                .k(4)
+                .algo(algo)
+                .steps(steps)
+                .eval_every((steps / 6).max(1))
+                .eval_batches(2)
+                .steps_per_epoch((steps / 4).max(1))
+                .run()?;
             let sim_per_iter = res.curve.points.last()
                 .map(|p| p.sim_ms / (p.step + 1).max(1) as f64)
                 .unwrap_or(f64::NAN);
@@ -66,7 +53,7 @@ fn main() -> Result<()> {
                 bp_iter_ms = sim_per_iter;
             }
             table.row(&[
-                trainer.name(),
+                algo.name(),
                 &format!("{:.4}", res.curve.final_train_loss()),
                 &format!("{:.3}", res.curve.best_test_err()),
                 &format!("{sim_per_iter:.2}"),

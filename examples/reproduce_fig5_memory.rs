@@ -4,8 +4,9 @@
 //! (>2x BP at K=4). DNI omitted (diverges).
 //!
 //! The memory model is analytic from the manifests (DESIGN.md §Memory
-//! model) — it is also cross-checked against the *live* byte ledgers of the
-//! running trainers for one configuration.
+//! model) — the registry builds them procedurally at every K, and the model
+//! is cross-checked against the *live* byte ledgers of running trainers
+//! for one configuration. Runs offline with zero artifacts.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig5_memory
@@ -13,30 +14,20 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    make_trainer, memory::{predicted_bytes, Algo}, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::memory::{predicted_bytes, Algo};
+use features_replay::coordinator::Trainer;
+use features_replay::experiment::Experiment;
 use features_replay::metrics::TablePrinter;
-use features_replay::runtime::{Engine, Manifest};
-use features_replay::util::json::{arr, num, obj, s, Json};
+use features_replay::util::json::{num, obj, s, Json};
 
 fn main() -> Result<()> {
-    let root = features_replay::default_artifacts_root();
     let mut report = Vec::new();
 
     for model in ["resnet_s", "resnet_m", "resnet_l"] {
-        let ks: Vec<usize> = (1..=4)
-            .filter(|k| root.join(format!("{model}_k{k}")).exists())
-            .collect();
-        if ks.is_empty() {
-            println!("(skipping {model}: no artifacts)");
-            continue;
-        }
         println!("\n== Fig 5 | {model}: predicted activation memory (MB) ==");
         let table = TablePrinter::new(&["K", "BP", "FR", "DDG"], &[3, 9, 9, 9]);
-        for &k in &ks {
-            let m = Manifest::load(&root.join(format!("{model}_k{k}")))?;
+        for k in 1..=4 {
+            let m = Experiment::new(model).k(k).manifest()?;
             let row: Vec<f64> = [Algo::Bp, Algo::Fr, Algo::Ddg].iter()
                 .map(|&a| predicted_bytes(&m, a) as f64 / 1e6)
                 .collect();
@@ -51,23 +42,17 @@ fn main() -> Result<()> {
     }
 
     // live cross-check: run a few steps and compare the trainers' own ledgers
-    let dir = root.join("resnet_s_k4");
-    if dir.exists() {
-        let manifest = Manifest::load(&dir)?;
-        let engine = Engine::cpu()?;
-        println!("\nlive ledger cross-check (resnet_s K=4, 5 steps):");
-        for algo in [Algo::Bp, Algo::Fr, Algo::Ddg] {
-            let mut t = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-            let mut data = DataSource::for_manifest(&manifest, 0)?;
-            for _ in 0..5 {
-                let b = data.train_batch();
-                t.train_step(&b, 0.01)?;
-            }
-            let live = t.memory();
-            let predicted = predicted_bytes(&manifest, algo);
-            println!("  {:4}  live {:8.2} MB   model {:8.2} MB",
-                     t.name(), live.total() as f64 / 1e6, predicted as f64 / 1e6);
+    println!("\nlive ledger cross-check (resnet_s K=4, 5 steps):");
+    for algo in [Algo::Bp, Algo::Fr, Algo::Ddg] {
+        let mut session = Experiment::new("resnet_s").k(4).algo(algo).session()?;
+        for _ in 0..5 {
+            let b = session.data.train_batch();
+            session.trainer.train_step(&b, 0.01)?;
         }
+        let live = session.trainer.memory();
+        let predicted = predicted_bytes(&session.manifest, algo);
+        println!("  {:4}  live {:8.2} MB   model {:8.2} MB",
+                 algo.name(), live.total() as f64 / 1e6, predicted as f64 / 1e6);
     }
 
     std::fs::create_dir_all("results")?;

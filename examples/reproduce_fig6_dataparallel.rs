@@ -8,7 +8,8 @@
 //! Testbed: BP's per-iteration cost under n-way DP and FR's pipelined cost
 //! both come from the measured-cost schedule model (subst. 1); the loss
 //! curves come from real training runs (DP-BP's per-step trajectory equals
-//! BP's — same gradients, bigger effective hardware).
+//! BP's — same gradients, bigger effective hardware). The resnet_s stand-in
+//! resolves procedurally, so this runs offline.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig6_dataparallel -- [steps]
@@ -16,43 +17,33 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::{self, pipeline_sim, Algo, Trainer};
+use features_replay::experiment::Experiment;
 use features_replay::metrics::TablePrinter;
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
 use features_replay::util::json::{num, obj, Json};
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(30);
-    let root = features_replay::default_artifacts_root();
-    let dir = root.join("resnet_s_k4");
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu()?;
     let comm = pipeline_sim::CommModel::default();
 
     // measure both methods' per-module costs on real runs
     let mut per_algo = Vec::new();
     for algo in [Algo::Bp, Algo::Fr] {
-        let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-        let mut data = DataSource::for_manifest(&manifest, 0)?;
-        let opts = RunOptions {
-            steps,
-            eval_every: (steps / 5).max(1),
-            eval_batches: 2,
-            steps_per_epoch: (steps / 3).max(1),
-            ..Default::default()
-        };
-        let res = coordinator::run_training(
-            trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+        let mut session = Experiment::new("resnet_s")
+            .k(4)
+            .algo(algo)
+            .steps(steps)
+            .eval_every((steps / 5).max(1))
+            .eval_batches(2)
+            .steps_per_epoch((steps / 3).max(1))
+            .session()?;
+        let res = session.run()?;
         let costs = pipeline_sim::MeasuredCosts::from_timings(
             &res.timings[res.timings.len() / 2..],
-            coordinator::boundary_bytes(trainer.stack()),
-            coordinator::param_bytes(trainer.stack()));
+            coordinator::boundary_bytes(session.trainer.stack()),
+            coordinator::param_bytes(session.trainer.stack()));
         per_algo.push((algo, res, costs));
     }
 

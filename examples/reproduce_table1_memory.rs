@@ -3,9 +3,10 @@
 //!   BP O(L) | DNI O(L + K·L_s) | DDG O(LK + K²) | FR O(L + K²)
 //!
 //! The harness verifies the asymptotics *empirically* from the memory model
-//! over the artifact grid: BP flat in K; FR's overhead over BP grows ~K²
-//! (boundary tensors only); DDG's grows ~K·L; and across models of growing
-//! L, every method scales linearly in L.
+//! over the registry's procedural model grid: BP flat in K; FR's overhead
+//! over BP grows ~K² (boundary tensors only); DDG's grows ~K·L; and across
+//! models of growing L, every method scales linearly in L. Runs offline
+//! with zero artifacts.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_table1_memory
@@ -14,24 +15,17 @@
 use anyhow::Result;
 
 use features_replay::coordinator::memory::{predicted_bytes, Algo};
+use features_replay::experiment::Experiment;
 use features_replay::metrics::TablePrinter;
-use features_replay::runtime::Manifest;
 
 fn main() -> Result<()> {
-    let root = features_replay::default_artifacts_root();
-
-    println!("== Table 1 | complexity check over the artifact grid ==\n");
+    println!("== Table 1 | complexity check over the model grid ==\n");
     println!("{:^12} | {:^18} | {}", "method", "claimed", "measured behaviour");
     println!("{}", "-".repeat(78));
 
     // K sweep on resnet_s (L fixed)
-    let ks: Vec<usize> = (1..=4)
-        .filter(|k| root.join(format!("resnet_s_k{k}")).exists())
-        .collect();
-    anyhow::ensure!(ks.len() >= 3, "need resnet_s at K=1..4 — run `make artifacts`");
     let at = |k: usize, a: Algo| -> Result<f64> {
-        Ok(predicted_bytes(&Manifest::load(&root.join(format!("resnet_s_k{k}")))?, a)
-           as f64)
+        Ok(predicted_bytes(&Experiment::new("resnet_s").k(k).manifest()?, a) as f64)
     };
 
     let bp_growth = at(4, Algo::Bp)? / at(1, Algo::Bp)?;
@@ -58,11 +52,7 @@ fn main() -> Result<()> {
     let table = TablePrinter::new(&["model", "L", "BP_MB", "FR_MB", "DDG_MB"],
                                   &[10, 4, 9, 9, 9]);
     for model in ["resnet_s", "resnet_m", "resnet_l"] {
-        let dir = root.join(format!("{model}_k2"));
-        if !dir.exists() {
-            continue;
-        }
-        let m = Manifest::load(&dir)?;
+        let m = Experiment::new(model).k(2).manifest()?;
         table.row(&[
             model,
             &m.num_layers.to_string(),

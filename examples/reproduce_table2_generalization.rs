@@ -4,9 +4,10 @@
 //! Paper finding: FR beats BP and DDG on every model/dataset pair (e.g.
 //! ResNet164 C-10: BP 6.40, DDG 6.45, FR 6.03).
 //!
-//! Testbed: resnet_s/m/l stand-ins on synthetic CIFAR-10/100; absolute
-//! error rates differ from the paper's (different data + budget), the
-//! *ordering* is the reproduced claim.
+//! Testbed: resnet_s/m/l stand-ins on synthetic CIFAR-10/100 (the `_c100`
+//! registry entries carry the 100-class head); absolute error rates differ
+//! from the paper's (different data + budget), the *ordering* is the
+//! reproduced claim. Runs offline with zero artifacts.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_table2_generalization -- [steps]
@@ -14,21 +15,15 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, Algo, RunOptions, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::Algo;
+use features_replay::experiment::Experiment;
 use features_replay::metrics::TablePrinter;
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
 use features_replay::util::json::{num, obj, s, Json};
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(60);
-    let root = features_replay::default_artifacts_root();
-    let engine = Engine::cpu()?;
 
     println!("== Table 2 | best test error (%) at K=2, {steps} steps ==\n");
     let table = TablePrinter::new(
@@ -41,25 +36,16 @@ fn main() -> Result<()> {
         ("resnet_m", "C-10"), ("resnet_m_c100", "C-100"),
         ("resnet_l", "C-10"), ("resnet_l_c100", "C-100"),
     ] {
-        let dir = root.join(format!("{model}_k2"));
-        if !dir.exists() {
-            println!("(skipping {model}: artifacts not built)");
-            continue;
-        }
-        let manifest = Manifest::load(&dir)?;
         let mut errs = Vec::new();
         for algo in [Algo::Bp, Algo::Ddg, Algo::Fr] {
-            let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-            let mut data = DataSource::for_manifest(&manifest, 0)?;
-            let opts = RunOptions {
-                steps,
-                eval_every: (steps / 8).max(1),
-                eval_batches: 4,
-                steps_per_epoch: (steps / 4).max(1),
-                ..Default::default()
-            };
-            let res = coordinator::run_training(
-                trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+            let res = Experiment::new(model)
+                .k(2)
+                .algo(algo)
+                .steps(steps)
+                .eval_every((steps / 8).max(1))
+                .eval_batches(4)
+                .steps_per_epoch((steps / 4).max(1))
+                .run()?;
             errs.push(res.curve.best_test_err() * 100.0);
         }
         let fr_best = errs[2] <= errs[0] && errs[2] <= errs[1];

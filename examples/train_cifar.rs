@@ -1,5 +1,6 @@
-//! Train the CIFAR-style ResNet with every method and compare — the
-//! intro-motivating workload (model-parallel CNN training across K devices).
+//! Train the CIFAR-style ResNet stand-in with every method and compare —
+//! the intro-motivating workload (model-parallel CNN training across K
+//! devices). Runs offline on the native backend via the model registry.
 //!
 //! ```sh
 //! cargo run --release --example train_cifar -- [steps] [model]
@@ -9,21 +10,14 @@
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, Algo, RunOptions, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::Algo;
+use features_replay::experiment::Experiment;
 use features_replay::metrics::{write_report, TablePrinter};
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(40);
     let model = args.get(1).cloned().unwrap_or_else(|| "resnet_s".to_string());
-    let dir = features_replay::default_artifacts_root().join(format!("{model}_k4"));
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu()?;
 
     println!("== {model} (K=4) on synthetic CIFAR-10: {steps} steps/method ==");
     let table = TablePrinter::new(
@@ -31,20 +25,17 @@ fn main() -> Result<()> {
         &[8, 11, 9, 9, 9]);
 
     let mut curves = Vec::new();
-    for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
-        let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-        let mut data = DataSource::for_manifest(&manifest, 0)?;
-        let opts = RunOptions {
-            steps,
-            eval_every: (steps / 5).max(1),
-            eval_batches: 3,
-            steps_per_epoch: (steps / 4).max(1),
-            ..Default::default()
-        };
-        let res = coordinator::run_training(
-            trainer.as_mut(), &mut data, &StepDecay::paper(0.01, steps), &opts)?;
+    for algo in Algo::ALL {
+        let res = Experiment::new(&model)
+            .k(4)
+            .algo(algo)
+            .steps(steps)
+            .eval_every((steps / 5).max(1))
+            .eval_batches(3)
+            .steps_per_epoch((steps / 4).max(1))
+            .run()?;
         table.row(&[
-            trainer.name(),
+            algo.name(),
             &format!("{:.4}", res.curve.final_train_loss()),
             &format!("{:.3}", res.curve.best_test_err()),
             &format!("{:.2}", res.final_memory.total() as f64 / 1e6),

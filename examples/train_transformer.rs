@@ -1,74 +1,58 @@
-//! End-to-end training driver (the session's required e2e validation):
-//! train a decoder-only transformer LM with Features Replay across K=4
-//! module workers on a real small corpus, logging the loss curve.
+//! End-to-end training driver: train the char-LM transformer stand-in with
+//! Features Replay across K=4 modules on the tiny-corpus stream, logging
+//! the loss curve. FR is compared against BP on the same token stream;
+//! results land in results/train_transformer.json.
 //!
 //! ```sh
 //! cargo run --release --example train_transformer -- [steps]
 //! ```
-//! Default 300 steps. FR is compared against BP on the same token stream;
-//! results land in results/train_transformer.json and EXPERIMENTS.md.
-//!
-//! The registry also carries `transformer_small` and a ~100M-param
-//! `transformer_100m` config; this driver trains whichever artifact K=4
-//! bundle is available (tiny by default — the testbed is one CPU core).
+//! Default 300 steps. The `transformer_tiny` registry entry resolves to the
+//! procedural token-embedding + position-wise-trunk config, so this runs
+//! offline on the native backend (AOT transformer artifacts still work via
+//! the `pjrt` feature).
 
 use anyhow::Result;
 
-use features_replay::coordinator::{
-    self, make_trainer, pipeline_sim, Algo, RunOptions, TrainConfig,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::{self, pipeline_sim, Algo, Trainer};
+use features_replay::experiment::Experiment;
 use features_replay::metrics::write_report;
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{Engine, Manifest};
 use features_replay::util::json::num;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
-    let root = features_replay::default_artifacts_root();
-    // prefer the bigger bundle when built (make artifacts-full) unless the
-    // caller pins the tiny one
-    let small = root.join("transformer_small_k4");
-    let dir = if small.exists() && std::env::var("FR_FORCE_TINY").is_err() {
-        small
-    } else {
-        root.join("transformer_tiny_k4")
-    };
-
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu()?;
-    println!("== e2e: char-LM transformer, {} params, K={} ==",
-             manifest.total_params(), manifest.k);
-    println!("corpus: tiny-corpus (Austen seed + trigram babble), \
-              vocab {}, seq {}", manifest.num_classes, manifest.input_shape[1]);
 
     let mut curves = Vec::new();
     let mut fr_speedup = 0.0;
     for algo in [Algo::Fr, Algo::Bp] {
-        let mut trainer = make_trainer(&engine, &dir, algo, TrainConfig::default())?;
-        let mut data = DataSource::for_manifest(&manifest, 0)?;
-        let opts = RunOptions {
-            steps,
-            eval_every: (steps / 10).max(1),
-            eval_batches: 2,
-            steps_per_epoch: (steps / 6).max(1),
-            verbose: true,
-            ..Default::default()
-        };
-        // LM training: 3e-3 with the step decay tail
-        let res = coordinator::run_training(
-            trainer.as_mut(), &mut data, &StepDecay::paper(3e-3, steps), &opts)?;
+        let mut session = Experiment::new("transformer_tiny")
+            .k(4)
+            .algo(algo)
+            .steps(steps)
+            .lr(3e-3) // LM training: 3e-3 with the step decay tail
+            .eval_every((steps / 10).max(1))
+            .eval_batches(2)
+            .steps_per_epoch((steps / 6).max(1))
+            .verbose(true)
+            .session()?;
+        if algo == Algo::Fr {
+            println!("== e2e: char-LM stand-in, {} params, K={} ==",
+                     session.manifest.total_params(), session.manifest.k);
+            println!("corpus: tiny-corpus (Austen seed + trigram babble), \
+                      vocab {}, seq {}", session.manifest.num_classes,
+                     session.manifest.input_shape[1]);
+        }
+        let res = session.run()?;
         let final_loss = res.curve.final_train_loss();
         println!("[{}] final train loss {:.4} (ppl {:.2}), best test err {:.3}",
-                 trainer.name(), final_loss, final_loss.exp(),
+                 algo.name(), final_loss, final_loss.exp(),
                  res.curve.best_test_err());
         if algo == Algo::Fr {
             let costs = pipeline_sim::MeasuredCosts::from_timings(
                 &res.timings[res.timings.len() / 2..],
-                coordinator::boundary_bytes(trainer.stack()),
-                coordinator::param_bytes(trainer.stack()));
+                coordinator::boundary_bytes(session.trainer.stack()),
+                coordinator::param_bytes(session.trainer.stack()));
             fr_speedup = pipeline_sim::fr_speedup(
                 &costs, &pipeline_sim::CommModel::default());
         }

@@ -1,0 +1,93 @@
+"""Numpy mirror of the char-LM native op path added for the Experiment API:
+token embedding (gather / scatter-add backward) -> residual pair ->
+layernorm -> vocab head with mean softmax cross-entropy, exactly the
+formulas in rust/src/runtime/native.rs, verified against central
+differences. Run: python3 python/tests/test_lm_backward_mirror.py
+"""
+import numpy as np
+
+
+def forward(tokens, labels, E, w1, b1, w2, b2, g, be, wh, bh):
+    rows = tokens.size
+    x = E[tokens.reshape(-1)]                    # Embed: (rows, D)
+    h1 = np.maximum(x @ w1 + b1, 0)              # ResidualPair lower dense
+    y = np.maximum(x + (h1 @ w2 + b2), 0)        # ResidualPair out (skip+relu)
+    rstd = 1 / np.sqrt(y.var(1) + 1e-5)          # LayerNorm
+    xhat = (y - y.mean(1, keepdims=True)) * rstd[:, None]
+    z = xhat * g + be
+    logits = z @ wh + bh                         # Dense head (no relu)
+    m = logits.max(1, keepdims=True)
+    lse = np.log(np.exp(logits - m).sum(1)) + m[:, 0]
+    loss = (lse - logits[np.arange(rows), labels]).mean()
+    return loss, (x, h1, y, xhat, rstd, z, logits)
+
+
+def backward(tokens, labels, E, w1, w2, g, wh, cache):
+    x, h1, y, xhat, rstd, z, logits = cache
+    rows = tokens.size
+    p = np.exp(logits - logits.max(1, keepdims=True))
+    p /= p.sum(1, keepdims=True)
+    dlogits = p.copy()
+    dlogits[np.arange(rows), labels] -= 1
+    dlogits /= rows
+    dwh, dbh = z.T @ dlogits, dlogits.sum(0)
+    dz = dlogits @ wh.T
+    # layernorm_bwd (same algebra as kernels::layernorm_bwd)
+    dxh = dz * g
+    dgamma, dbeta = (dz * xhat).sum(0), dz.sum(0)
+    dy = rstd[:, None] * (dxh - dxh.mean(1, keepdims=True)
+                          - xhat * (dxh * xhat).mean(1, keepdims=True))
+    # residual pair backward
+    ds = dy * (y > 0)
+    dw2, db2 = h1.T @ ds, ds.sum(0)
+    dz1 = (ds @ w2.T) * (h1 > 0)
+    dw1, db1 = x.T @ dz1, dz1.sum(0)
+    dx = dz1 @ w1.T + ds
+    # embed_bwd: scatter-add rows into the table
+    dE = np.zeros_like(E)
+    np.add.at(dE, tokens.reshape(-1), dx)
+    return dict(E=dE, w1=dw1, b1=db1, w2=dw2, b2=db2, g=dgamma, be=dbeta,
+                wh=dwh, bh=dbh)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, S, D, V = 2, 3, 4, 5
+    tokens = rng.integers(0, V, size=(B, S))
+    labels = rng.integers(0, V, size=B * S)
+    params = dict(
+        E=rng.normal(0, 0.5, size=(V, D)),
+        w1=rng.normal(0, 0.5, size=(D, D)), b1=np.zeros(D),
+        w2=rng.normal(0, 0.5, size=(D, D)), b2=np.zeros(D),
+        g=np.ones(D), be=np.zeros(D),
+        wh=rng.normal(0, 0.5, size=(D, V)), bh=np.zeros(V),
+    )
+
+    def run():
+        return forward(tokens, labels, **params)
+
+    loss, cache = run()
+    grads = backward(tokens, labels, params["E"], params["w1"], params["w2"],
+                     params["g"], params["wh"], cache)
+
+    eps = 1e-6
+    checked = 0
+    for name, p in params.items():
+        flat = p.reshape(-1)
+        for i in (0, flat.size // 2, flat.size - 1):
+            orig = flat[i]
+            flat[i] = orig + eps
+            lp, _ = run()
+            flat[i] = orig - eps
+            lm, _ = run()
+            flat[i] = orig
+            fd = (lp - lm) / (2 * eps)
+            an = grads[name].reshape(-1)[i]
+            assert abs(fd - an) < 1e-6 + 1e-4 * abs(an), (name, i, fd, an)
+            checked += 1
+    print(f"lm backward mirror: {checked} finite-diff checks passed "
+          f"(loss {loss:.4f})")
+
+
+if __name__ == "__main__":
+    main()

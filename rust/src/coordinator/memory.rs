@@ -21,6 +21,9 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// All four methods in the paper's comparison order (Fig 4 / Table 2).
+    pub const ALL: [Algo; 4] = [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr];
+
     pub fn name(self) -> &'static str {
         match self {
             Algo::Bp => "BP",

@@ -59,6 +59,7 @@ pub fn parse_algo(s: &str) -> Result<Algo> {
 }
 
 /// Options for a recorded training run.
+#[derive(Clone, Debug)]
 pub struct RunOptions {
     pub steps: usize,
     pub eval_every: usize,

@@ -39,6 +39,13 @@ impl DataSource {
                 Ok(DataSource::FlatImages(SyntheticCifar::new(m.num_classes, seed), b))
             }
             (crate::runtime::tensor::DType::I32, 2) => {
+                // The char corpus emits tokens in 0..VOCAB regardless of the
+                // manifest; a smaller vocab would index past the embed table.
+                if m.num_classes < tiny_corpus::VOCAB {
+                    bail!("manifest {} has vocab {} but the char data source \
+                           emits tokens in 0..{}", m.config, m.num_classes,
+                          tiny_corpus::VOCAB);
+                }
                 let seq = m.input_shape[1];
                 Ok(DataSource::Text(TinyCorpus::new(200_000, seed), b, seq))
             }

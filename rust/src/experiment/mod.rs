@@ -1,0 +1,309 @@
+//! The declarative experiment API — one entry point for every harness.
+//!
+//! Before this module, each binary hand-wired seven pieces (engine,
+//! manifest, algorithm, train config, run options, data source, LR
+//! schedule) and duplicated the backend/artifact fallback logic. Now a
+//! scenario is one expression:
+//!
+// (kept as `text` so the offline test run does not depend on doctests)
+//! ```text
+//! let result = Experiment::new("resnet_s")
+//!     .k(4)
+//!     .algo(Algo::Fr)
+//!     .steps(200)
+//!     .lr(0.01)
+//!     .seed(0)
+//!     .run()?;
+//! println!("best test err {:.3}", result.curve.best_test_err());
+//! ```
+//!
+//! [`ModelRegistry`] resolves the model name (procedural native configs,
+//! or AOT artifacts under the `pjrt` feature); [`Experiment`] owns trainer
+//! construction, data-source wiring, the LR schedule, and the shared
+//! training loop. Probes that need more than a [`RunResult`] drop one
+//! level: [`Experiment::session`] (reusable trainer + data),
+//! [`Experiment::build_fr`] (the concrete FR trainer for the sigma probe),
+//! [`Experiment::spawn_parallel`] (the threaded K-worker deployment).
+
+pub mod registry;
+
+pub use registry::{ModelEntry, ModelRegistry, Resolved};
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    self, fr::FrTrainer, make_trainer, parallel::ParallelFr, Algo, ModuleStack,
+    RunOptions, RunResult, TrainConfig, Trainer,
+};
+use crate::data::DataSource;
+use crate::optim::{ConstantLr, InverseT, LrSchedule, StepDecay};
+use crate::runtime::{BackendKind, Manifest};
+
+/// Which LR schedule [`Experiment::run`] drives (built from the
+/// experiment's base `lr` and step budget at run time).
+#[derive(Clone, Copy, Debug)]
+pub enum ScheduleSpec {
+    /// Fixed stepsize.
+    Constant,
+    /// The paper's recipe: /10 at 50% and 75% of training.
+    Paper,
+    /// `lr / (1 + t)^power` (Theorem 2's diminishing stepsize family).
+    InverseT { power: f32 },
+}
+
+/// A declarative training experiment: model name + knobs, with defaults
+/// matching the paper's recipe. Every setter returns `self`, so scenarios
+/// compose as one builder chain.
+#[derive(Clone)]
+pub struct Experiment {
+    model: String,
+    k: usize,
+    algo: Algo,
+    backend: Option<BackendKind>,
+    artifacts_root: Option<PathBuf>,
+    config: TrainConfig,
+    opts: RunOptions,
+    schedule: ScheduleSpec,
+}
+
+impl Experiment {
+    /// Start an experiment on a registered model name (see
+    /// [`ModelRegistry::names`]). Defaults: K=4, FR, auto backend, 100
+    /// steps, lr 0.01, seed 0, paper LR schedule, eval every 25 steps
+    /// (4 batches), divergence abort at loss 1e4.
+    pub fn new(model: &str) -> Experiment {
+        Experiment {
+            model: model.to_string(),
+            k: 4,
+            algo: Algo::Fr,
+            backend: None,
+            artifacts_root: None,
+            config: TrainConfig::default(),
+            opts: RunOptions { steps: 100, ..Default::default() },
+            schedule: ScheduleSpec::Paper,
+        }
+    }
+
+    /// Number of modules K the model is partitioned into.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Training algorithm (FR by default; BP/DDG/DNI for comparisons).
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Pin the execution backend. Default: auto — PJRT when this build can
+    /// run on-disk artifacts, the native CPU engine otherwise.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Override the artifacts root (default `features_replay::default_artifacts_root`).
+    pub fn artifacts_root(mut self, root: impl Into<PathBuf>) -> Self {
+        self.artifacts_root = Some(root.into());
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.opts.steps = steps;
+        self
+    }
+
+    /// Base stepsize (the schedule scales it).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.config.lr = lr;
+        self
+    }
+
+    /// Data/init seed (drives both parameter init and batch sampling).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.seed = seed;
+        self
+    }
+
+    pub fn momentum(mut self, momentum: f32) -> Self {
+        self.config.momentum = momentum;
+        self
+    }
+
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.config.weight_decay = wd;
+        self
+    }
+
+    /// Eval cadence in steps (default 25).
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.opts.eval_every = every.max(1);
+        self
+    }
+
+    /// Test batches averaged per eval point (default 4).
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.opts.eval_batches = n.max(1);
+        self
+    }
+
+    /// Steps per "epoch" for the curve's epoch axis (default 50).
+    pub fn steps_per_epoch(mut self, n: usize) -> Self {
+        self.opts.steps_per_epoch = n.max(1);
+        self
+    }
+
+    /// Log every eval point to stdout.
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.opts.verbose = on;
+        self
+    }
+
+    /// Abort (and mark the curve diverged) once train loss exceeds this
+    /// (default 1e4).
+    pub fn divergence_loss(mut self, loss: f64) -> Self {
+        self.opts.divergence_loss = loss;
+        self
+    }
+
+    pub fn schedule(mut self, schedule: ScheduleSpec) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    fn root(&self) -> PathBuf {
+        self.artifacts_root.clone()
+            .unwrap_or_else(crate::default_artifacts_root)
+    }
+
+    /// Resolve the model name through the registry for this experiment's
+    /// (k, seed, backend) without building a trainer. A fallback note (e.g.
+    /// artifacts present but unusable on this backend) is logged to stderr
+    /// once per process — multi-run drivers build many sessions.
+    pub fn resolve(&self) -> Result<Resolved> {
+        let resolved = ModelRegistry::resolve(&self.model, self.k, self.config.seed,
+                                              self.backend, &self.root())?;
+        static NOTE_LOGGED: std::sync::atomic::AtomicBool =
+            std::sync::atomic::AtomicBool::new(false);
+        if let Some(note) = &resolved.note {
+            if !NOTE_LOGGED.swap(true, std::sync::atomic::Ordering::Relaxed) {
+                eprintln!("({note})");
+            }
+        }
+        Ok(resolved)
+    }
+
+    /// The manifest this experiment would train.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Ok(self.resolve()?.manifest)
+    }
+
+    fn make_schedule(&self) -> Box<dyn LrSchedule> {
+        match self.schedule {
+            ScheduleSpec::Constant => Box::new(ConstantLr(self.config.lr)),
+            ScheduleSpec::Paper =>
+                Box::new(StepDecay::paper(self.config.lr, self.opts.steps)),
+            ScheduleSpec::InverseT { power } =>
+                Box::new(InverseT { base: self.config.lr, power }),
+        }
+    }
+
+    /// Build the full run state: resolved manifest, trainer, data source,
+    /// schedule. Reusable for custom loops; [`Experiment::run`] is
+    /// `session()?.run()`.
+    pub fn session(&self) -> Result<Session> {
+        let resolved = self.resolve()?;
+        let engine = resolved.backend.engine()?;
+        let trainer = make_trainer(&engine, &resolved.manifest, self.algo,
+                                   self.config.clone())?;
+        let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
+        Ok(Session {
+            manifest: resolved.manifest,
+            backend: resolved.backend,
+            trainer,
+            data,
+            schedule: self.make_schedule(),
+            opts: self.opts.clone(),
+        })
+    }
+
+    /// Train to completion and return the recorded curve/timings.
+    pub fn run(&self) -> Result<RunResult> {
+        self.session()?.run()
+    }
+
+    /// The concrete FR trainer + data (the sigma probe needs the real type,
+    /// not `dyn Trainer`). Ignores `algo`.
+    pub fn build_fr(&self) -> Result<FrSession> {
+        let resolved = self.resolve()?;
+        let engine = resolved.backend.engine()?;
+        let stack = ModuleStack::load(&engine, resolved.manifest.clone(),
+                                      self.config.clone())?;
+        let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
+        Ok(FrSession {
+            manifest: resolved.manifest,
+            fr: FrTrainer::new(stack),
+            data,
+        })
+    }
+
+    /// Spawn the threaded K-worker FR deployment for this experiment.
+    pub fn spawn_parallel(&self) -> Result<ParallelSession> {
+        let resolved = self.resolve()?;
+        let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
+        let par = ParallelFr::spawn(resolved.manifest.clone(),
+                                    self.config.clone(), resolved.backend)?;
+        Ok(ParallelSession { manifest: resolved.manifest, par, data })
+    }
+
+    /// Base stepsize currently configured (what `run` feeds the schedule).
+    pub fn base_lr(&self) -> f32 {
+        self.config.lr
+    }
+
+    /// Step budget currently configured.
+    pub fn step_budget(&self) -> usize {
+        self.opts.steps
+    }
+}
+
+/// A built experiment: trainer + data + schedule, ready to run (or to be
+/// stepped manually for probes the shared loop doesn't cover).
+pub struct Session {
+    pub manifest: Manifest,
+    pub backend: BackendKind,
+    pub trainer: Box<dyn Trainer>,
+    pub data: DataSource,
+    schedule: Box<dyn LrSchedule>,
+    opts: RunOptions,
+}
+
+impl Session {
+    /// Drive the shared training loop to completion.
+    pub fn run(&mut self) -> Result<RunResult> {
+        coordinator::run_training(self.trainer.as_mut(), &mut self.data,
+                                  self.schedule.as_ref(), &self.opts)
+    }
+
+    pub fn opts(&self) -> &RunOptions {
+        &self.opts
+    }
+}
+
+/// [`Experiment::build_fr`]'s output: the concrete FR trainer for probes.
+pub struct FrSession {
+    pub manifest: Manifest,
+    pub fr: FrTrainer,
+    pub data: DataSource,
+}
+
+/// [`Experiment::spawn_parallel`]'s output: the threaded deployment plus
+/// the data source wired to its manifest.
+pub struct ParallelSession {
+    pub manifest: Manifest,
+    pub par: ParallelFr,
+    pub data: DataSource,
+}

@@ -1,0 +1,242 @@
+//! Named model registry: the single source of truth for resolving a model
+//! name (`mlp_tiny`, `resnet_s`, …) into a [`Manifest`] the selected
+//! backend can actually execute.
+//!
+//! Resolution order (what `quickstart::testbed()` and `main.rs` each used
+//! to hand-roll):
+//!
+//! 1. backend pinned to PJRT      -> load the AOT artifact directory
+//! 2. backend auto + artifacts    -> PJRT when the feature is compiled in
+//! 3. otherwise                   -> the registered procedural config on
+//!                                   the native CPU backend (no disk at all)
+//!
+//! The resnet_* names are *stand-ins* (DESIGN.md substitution 3): residual
+//! MLPs whose depth/width scale across s/m/l the way the paper's
+//! ResNet164/101/152 do, on synthetic CIFAR. `transformer_tiny` is the
+//! char-LM stand-in: a token embedding plus a position-wise residual trunk.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{BackendKind, Manifest, NativeLmSpec, NativeMlpSpec};
+
+#[derive(Clone, Copy)]
+enum Family {
+    /// The quickstart testbed MLP (depth grows with K, as seeded).
+    MlpTiny,
+    /// CIFAR-style residual-MLP stand-in with fixed depth/width.
+    ResMlp { hidden: usize, depth: usize, classes: usize },
+    /// Char-LM transformer stand-in (embedding + position-wise trunk).
+    CharLm,
+}
+
+/// One registered model name.
+pub struct ModelEntry {
+    pub name: &'static str,
+    pub about: &'static str,
+    family: Family,
+}
+
+impl ModelEntry {
+    /// Build the procedural native manifest for this entry at (k, seed).
+    pub fn build(&self, k: usize, seed: u64) -> Result<Manifest> {
+        let mut m = match self.family {
+            Family::MlpTiny => {
+                let mut cfg = NativeMlpSpec::tiny(k);
+                cfg.seed = seed;
+                cfg.manifest()?
+            }
+            Family::ResMlp { hidden, depth, classes } => NativeMlpSpec {
+                batch: 16,
+                input_dim: 3072,
+                hidden,
+                depth,
+                num_classes: classes,
+                k,
+                seed,
+            }.manifest()?,
+            Family::CharLm => {
+                let mut cfg = NativeLmSpec::tiny(k);
+                cfg.seed = seed;
+                cfg.manifest()?
+            }
+        };
+        m.config = format!("{}_k{k}", self.name);
+        Ok(m)
+    }
+}
+
+const ENTRIES: &[ModelEntry] = &[
+    ModelEntry {
+        name: "mlp_tiny",
+        about: "quickstart testbed MLP (depth scales with K), 10 classes",
+        family: Family::MlpTiny,
+    },
+    ModelEntry {
+        name: "resnet_s",
+        about: "ResNet164 stand-in: 8-layer residual MLP, width 64, C-10",
+        family: Family::ResMlp { hidden: 64, depth: 6, classes: 10 },
+    },
+    ModelEntry {
+        name: "resnet_m",
+        about: "ResNet101 stand-in: 12-layer residual MLP, width 96, C-10",
+        family: Family::ResMlp { hidden: 96, depth: 10, classes: 10 },
+    },
+    ModelEntry {
+        name: "resnet_l",
+        about: "ResNet152 stand-in: 16-layer residual MLP, width 128, C-10",
+        family: Family::ResMlp { hidden: 128, depth: 14, classes: 10 },
+    },
+    ModelEntry {
+        name: "resnet_s_c100",
+        about: "resnet_s with a 100-class head (synthetic CIFAR-100)",
+        family: Family::ResMlp { hidden: 64, depth: 6, classes: 100 },
+    },
+    ModelEntry {
+        name: "resnet_m_c100",
+        about: "resnet_m with a 100-class head (synthetic CIFAR-100)",
+        family: Family::ResMlp { hidden: 96, depth: 10, classes: 100 },
+    },
+    ModelEntry {
+        name: "resnet_l_c100",
+        about: "resnet_l with a 100-class head (synthetic CIFAR-100)",
+        family: Family::ResMlp { hidden: 128, depth: 14, classes: 100 },
+    },
+    ModelEntry {
+        name: "transformer_tiny",
+        about: "char-LM stand-in: token embed + position-wise residual trunk",
+        family: Family::CharLm,
+    },
+];
+
+/// How a model name was resolved for this build/backend combination.
+pub struct Resolved {
+    pub manifest: Manifest,
+    pub backend: BackendKind,
+    /// Set when a fallback decision is worth surfacing (e.g. artifacts are
+    /// on disk but the selected backend cannot run them).
+    pub note: Option<String>,
+}
+
+/// Registry facade (all associated functions — the table is static).
+pub struct ModelRegistry;
+
+impl ModelRegistry {
+    pub fn entries() -> &'static [ModelEntry] {
+        ENTRIES
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        ENTRIES.iter().map(|e| e.name).collect()
+    }
+
+    pub fn get(name: &str) -> Option<&'static ModelEntry> {
+        ENTRIES.iter().find(|e| e.name == name)
+    }
+
+    /// Resolve `name` at module count `k` to a manifest the chosen backend
+    /// can execute. `backend: None` means auto: prefer PJRT artifacts when
+    /// this build can run them, else the procedural native config.
+    pub fn resolve(name: &str, k: usize, seed: u64, backend: Option<BackendKind>,
+                   artifacts_root: &Path) -> Result<Resolved> {
+        let dir = artifacts_root.join(format!("{name}_k{k}"));
+        let have_artifacts = dir.join("manifest.json").exists();
+
+        #[cfg(feature = "pjrt")]
+        {
+            if backend == Some(BackendKind::Pjrt) {
+                return Ok(Resolved {
+                    manifest: Manifest::load(&dir)?,
+                    backend: BackendKind::Pjrt,
+                    note: None,
+                });
+            }
+            if backend.is_none() && have_artifacts {
+                return Ok(Resolved {
+                    manifest: Manifest::load(&dir)?,
+                    backend: BackendKind::Pjrt,
+                    note: Some(format!("auto-selected the pjrt backend for the \
+                                        AOT artifacts at {dir:?}")),
+                });
+            }
+        }
+
+        // Without the pjrt feature, BackendKind has one inhabitant — the
+        // request can only be (or default to) native.
+        #[cfg(not(feature = "pjrt"))]
+        let _ = backend;
+
+        let Some(entry) = Self::get(name) else {
+            if have_artifacts {
+                let fix = if cfg!(feature = "pjrt") {
+                    "select the pjrt backend (--backend pjrt) to run them"
+                } else {
+                    "rebuild with --features pjrt to run them"
+                };
+                bail!("model {name:?} exists only as AOT artifacts at {dir:?} \
+                       — {fix}");
+            }
+            bail!("unknown model {name:?}; registered models: {}",
+                  Self::names().join(", "));
+        };
+        let note = have_artifacts.then(|| format!(
+            "artifacts at {dir:?} need the pjrt backend; using the \
+             procedural native config"));
+        Ok(Resolved {
+            manifest: entry.build(k, seed)?,
+            backend: BackendKind::Native,
+            note,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_artifacts() -> std::path::PathBuf {
+        std::path::PathBuf::from("/nonexistent-artifacts-root")
+    }
+
+    #[test]
+    fn every_entry_builds_at_common_k() {
+        for e in ModelRegistry::entries() {
+            for k in [1, 2, 4] {
+                let m = e.build(k, 0).unwrap();
+                assert_eq!(m.k, k, "{} k={k}", e.name);
+                assert_eq!(m.config, format!("{}_k{k}", e.name));
+                for w in m.modules.windows(2) {
+                    assert_eq!(w[0].out_shape, w[1].in_shape, "{}", e.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_defaults_to_native_procedural() {
+        let r = ModelRegistry::resolve("resnet_s", 4, 0, None, &no_artifacts()).unwrap();
+        assert_eq!(r.backend, BackendKind::Native);
+        assert!(r.note.is_none());
+        assert_eq!(r.manifest.config, "resnet_s_k4");
+        assert!(!r.manifest.modules[0].native_ops.is_empty());
+    }
+
+    #[test]
+    fn resolve_unknown_model_lists_registry() {
+        let err = ModelRegistry::resolve("resnet_xxl", 4, 0, None, &no_artifacts())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("resnet_xxl"));
+        assert!(msg.contains("resnet_s"), "should list registered names: {msg}");
+    }
+
+    #[test]
+    fn seeds_differentiate_params_not_shapes() {
+        let a = ModelRegistry::resolve("mlp_tiny", 2, 1, None, &no_artifacts()).unwrap();
+        let b = ModelRegistry::resolve("mlp_tiny", 2, 2, None, &no_artifacts()).unwrap();
+        assert_eq!(a.manifest.total_params(), b.manifest.total_params());
+        assert_eq!(a.manifest.seed, 1);
+        assert_eq!(b.manifest.seed, 2);
+    }
+}

@@ -19,12 +19,18 @@
 //! (default — procedural op graphs, fully offline) or **PJRT** over the AOT
 //! `artifacts/` (cargo feature `pjrt`).
 //!
+//! The front door is the [`experiment`] module: a named model registry plus
+//! a builder (`Experiment::new("resnet_s").k(4).algo(Algo::Fr).run()`) that
+//! owns trainer construction, data wiring, the LR schedule, and the shared
+//! training loop — every example and the `frctl` CLI go through it.
+//!
 //! Quickstart: `cargo run --release --example quickstart` (works offline;
 //! uses artifacts when built). See README.md for the full tour.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;

@@ -1,6 +1,7 @@
 //! `frctl` — the Features Replay training launcher.
 //!
 //! Subcommands:
+//!   models                             list registered model names
 //!   info     --model <cfg> --k <K>     inspect a manifest
 //!   train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
 //!   compare  --model <cfg> --k <K>     all four methods side by side
@@ -8,29 +9,24 @@
 //!   memory   --model <cfg>             Fig 5 / Table 1 memory model
 //!   parallel --model <cfg> --k <K>     threaded K-worker FR deployment
 //!
-//! Backends: `--backend native` (default — pure-Rust CPU engine, works with
-//! no artifacts at all: mlp models fall back to a procedural config) or
-//! `--backend pjrt` (cargo feature `pjrt`, runs AOT HLO artifacts).
-
-use std::path::PathBuf;
+//! Every subcommand goes through the `Experiment` builder: the model
+//! registry resolves names to procedural native configs (always available,
+//! zero artifacts) or to AOT artifact directories (`--backend pjrt`, cargo
+//! feature `pjrt`). Without `--backend` the registry auto-selects.
 
 use anyhow::{bail, Context, Result};
 
-use features_replay::coordinator::{
-    self, make_trainer, memory, parallel::ParallelFr, parse_algo, sigma,
-    Algo, RunOptions, TrainConfig, Trainer,
-};
-use features_replay::data::DataSource;
+use features_replay::coordinator::{memory, parse_algo, sigma, Algo};
+use features_replay::experiment::{Experiment, ModelRegistry};
 use features_replay::metrics::TablePrinter;
-use features_replay::optim::StepDecay;
-use features_replay::runtime::{BackendKind, Engine, Manifest, NativeMlpSpec};
+use features_replay::runtime::{BackendKind, Manifest};
 use features_replay::util::cli::Args;
 
 const OPTS: &[(&str, &str)] = &[
-    ("model", "model config name (e.g. mlp_tiny, resnet_s)"),
+    ("model", "model config name (see `frctl models`; default mlp_tiny)"),
     ("k", "number of modules K (default 4)"),
     ("algo", "bp | fr | ddg | dni (train only)"),
-    ("backend", "native | pjrt (default native)"),
+    ("backend", "native | pjrt (default: auto — pjrt when artifacts exist)"),
     ("steps", "training steps (default 100)"),
     ("lr", "base stepsize (default 0.01)"),
     ("seed", "data/init seed (default 0)"),
@@ -48,34 +44,10 @@ fn usage() -> String {
     let schema = Args::parse(&[], OPTS, FLAGS).unwrap();
     format!(
         "frctl — Features Replay (NIPS'18) training coordinator\n\n\
-         usage: frctl <info|train|compare|sigma|memory|parallel> [options]\n\n{}",
+         usage: frctl <models|info|train|compare|sigma|memory|parallel> \
+         [options]\n\n{}",
         schema.help()
     )
-}
-
-/// Resolve the manifest the selected backend can actually execute: the PJRT
-/// backend wants the on-disk AOT artifacts; the native backend needs a
-/// procedural op graph, so it uses the `NativeMlpSpec` fallback (mlp models
-/// only — that is the graph family the native backend can build).
-fn resolve_manifest(root: &PathBuf, model: &str, k: usize, seed: u64,
-                    backend: BackendKind) -> Result<Manifest> {
-    let dir = root.join(format!("{model}_k{k}"));
-    match backend {
-        #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => return Manifest::load(&dir),
-        BackendKind::Native => {}
-    }
-    if dir.join("manifest.json").exists() {
-        eprintln!("(artifacts at {dir:?} need --backend pjrt; the native \
-                   backend uses the procedural config)");
-    }
-    if model.starts_with("mlp") {
-        let mut cfg = NativeMlpSpec::tiny(k);
-        cfg.seed = seed;
-        return cfg.manifest();
-    }
-    bail!("the native backend has no procedural graph for model {model:?} \
-           (only mlp* has one) — build artifacts and use --backend pjrt")
 }
 
 fn main() -> Result<()> {
@@ -86,39 +58,51 @@ fn main() -> Result<()> {
         return Ok(());
     }
 
-    let root = args.get("artifacts").map(PathBuf::from)
-        .unwrap_or_else(features_replay::default_artifacts_root);
     let model = args.get_or("model", "mlp_tiny").to_string();
     let k = args.usize_or("k", 4).map_err(|e| anyhow::anyhow!(e))?;
     let steps = args.usize_or("steps", 100).map_err(|e| anyhow::anyhow!(e))?;
     let lr = args.f64_or("lr", 0.01).map_err(|e| anyhow::anyhow!(e))? as f32;
     let seed = args.u64_or("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
     let eval_every = args.usize_or("eval-every", 25).map_err(|e| anyhow::anyhow!(e))?;
-    let backend = BackendKind::parse(args.get_or("backend", "native"))?;
+
+    // One builder carries every CLI knob; subcommands refine it.
+    let mut exp = Experiment::new(&model)
+        .k(k)
+        .steps(steps)
+        .lr(lr)
+        .seed(seed)
+        .eval_every(eval_every)
+        .verbose(args.flag("verbose"));
+    if let Some(b) = args.get("backend") {
+        exp = exp.backend(BackendKind::parse(b)?);
+    }
+    if let Some(root) = args.get("artifacts") {
+        exp = exp.artifacts_root(root);
+    }
 
     match args.positional[0].as_str() {
-        "info" => cmd_info(&resolve_manifest(&root, &model, k, seed, backend)?),
+        "models" => cmd_models(),
+        "info" => cmd_info(&exp.manifest()?),
         "train" => {
-            let algo = parse_algo(args.get_or("algo", "fr"))?;
-            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
-            cmd_train(&manifest, backend, algo, steps, lr, seed, eval_every,
-                      args.get("out"))
+            let exp = exp.algo(parse_algo(args.get_or("algo", "fr"))?);
+            cmd_train(exp, args.get("out"))
         }
-        "compare" => {
-            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
-            cmd_compare(&manifest, backend, steps, lr, seed, eval_every)
-        }
-        "sigma" => {
-            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
-            cmd_sigma(&manifest, backend, steps, lr, seed)
-        }
-        "memory" => cmd_memory(&root, &model, seed, backend),
-        "parallel" => {
-            let manifest = resolve_manifest(&root, &model, k, seed, backend)?;
-            cmd_parallel(manifest, backend, steps, lr, seed)
-        }
+        "compare" => cmd_compare(exp),
+        "sigma" => cmd_sigma(exp),
+        "memory" => cmd_memory(exp, &model),
+        "parallel" => cmd_parallel(exp),
         other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
     }
+}
+
+fn cmd_models() -> Result<()> {
+    println!("registered models (procedural native configs):\n");
+    for e in ModelRegistry::entries() {
+        println!("  {:18} {}", e.name, e.about);
+    }
+    println!("\nAOT artifact directories under --artifacts also resolve by \
+              name with --backend pjrt (cargo feature `pjrt`).");
+    Ok(())
 }
 
 fn cmd_info(m: &Manifest) -> Result<()> {
@@ -141,18 +125,11 @@ fn cmd_info(m: &Manifest) -> Result<()> {
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
-fn cmd_train(manifest: &Manifest, backend: BackendKind, algo: Algo, steps: usize,
-             lr: f32, seed: u64, eval_every: usize, out: Option<&str>) -> Result<()> {
-    let engine = backend.engine()?;
-    let config = TrainConfig { lr, seed, ..Default::default() };
-    let mut trainer = make_trainer(&engine, manifest, algo, config)?;
-    let mut data = DataSource::for_manifest(manifest, seed)?;
-    let opts = RunOptions { steps, eval_every, verbose: true, ..Default::default() };
-    println!("training {} with {} for {steps} steps (lr {lr}, backend {})",
-             manifest.config, trainer.name(), engine.platform());
-    let res = coordinator::run_training(
-        trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
+fn cmd_train(exp: Experiment, out: Option<&str>) -> Result<()> {
+    let mut session = exp.verbose(true).session()?;
+    println!("training {} for {} steps (backend {:?})",
+             session.manifest.config, session.opts().steps, session.backend);
+    let res = session.run()?;
     println!("\nfinal: train_loss {:.4}  best test_err {:.3}  diverged: {}",
              res.curve.final_train_loss(), res.curve.best_test_err(), res.diverged);
     let mem = &res.final_memory;
@@ -166,24 +143,17 @@ fn cmd_train(manifest: &Manifest, backend: BackendKind, algo: Algo, steps: usize
     Ok(())
 }
 
-fn cmd_compare(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
-               seed: u64, eval_every: usize) -> Result<()> {
-    let engine = backend.engine()?;
+fn cmd_compare(exp: Experiment) -> Result<()> {
     let table = TablePrinter::new(
         &["method", "train_loss", "test_err", "mem_MB", "sim_ms/iter", "diverged"],
         &[8, 11, 9, 8, 12, 9]);
-    for algo in [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr] {
-        let config = TrainConfig { lr, seed, ..Default::default() };
-        let mut trainer = make_trainer(&engine, manifest, algo, config)?;
-        let mut data = DataSource::for_manifest(manifest, seed)?;
-        let opts = RunOptions { steps, eval_every, ..Default::default() };
-        let res = coordinator::run_training(
-            trainer.as_mut(), &mut data, &StepDecay::paper(lr, steps), &opts)?;
+    for algo in Algo::ALL {
+        let res = exp.clone().algo(algo).run()?;
         let sim_per_iter = res.curve.points.last()
             .map(|p| p.sim_ms / (p.step.max(1) as f64))
             .unwrap_or(f64::NAN);
         table.row(&[
-            trainer.name(),
+            algo.name(),
             &format!("{:.4}", res.curve.final_train_loss()),
             &format!("{:.3}", res.curve.best_test_err()),
             &format!("{:.2}", res.final_memory.total() as f64 / 1e6),
@@ -194,17 +164,13 @@ fn cmd_compare(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
     Ok(())
 }
 
-fn cmd_sigma(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
-             seed: u64) -> Result<()> {
-    let engine = backend.engine()?;
-    let stack = coordinator::ModuleStack::load(
-        &engine, manifest.clone(), TrainConfig { lr, seed, ..Default::default() })?;
-    let mut fr = coordinator::fr::FrTrainer::new(stack);
-    let mut data = DataSource::for_manifest(manifest, seed)?;
+fn cmd_sigma(exp: Experiment) -> Result<()> {
+    let (steps, lr) = (exp.step_budget(), exp.base_lr());
+    let mut fs = exp.build_fr()?;
     println!("step  sigma per module (k=1..K), total");
     for step in 0..steps {
-        let batch = data.train_batch();
-        let (s, loss) = sigma::probe_step(&mut fr, &batch, lr, step)?;
+        let batch = fs.data.train_batch();
+        let (s, loss) = sigma::probe_step(&mut fs.fr, &batch, lr, step)?;
         if step % 5 == 0 || step + 1 == steps {
             let per: Vec<String> = s.per_module.iter()
                 .map(|v| format!("{v:6.3}"))
@@ -216,33 +182,41 @@ fn cmd_sigma(manifest: &Manifest, backend: BackendKind, steps: usize, lr: f32,
     Ok(())
 }
 
-fn cmd_memory(root: &PathBuf, model: &str, seed: u64, backend: BackendKind) -> Result<()> {
+fn cmd_memory(exp: Experiment, model: &str) -> Result<()> {
     let table = TablePrinter::new(&["K", "BP_MB", "FR_MB", "DDG_MB", "DNI_MB"],
                                   &[3, 10, 10, 10, 10]);
     let mut any = false;
+    let mut last_err = None;
     for k in 1..=4 {
-        let Ok(m) = resolve_manifest(root, model, k, seed, backend) else { continue };
+        let m = match exp.clone().k(k).manifest() {
+            Ok(m) => m,
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
         any = true;
         let row: Vec<String> = [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni].iter()
             .map(|&a| format!("{:.2}", memory::predicted_bytes(&m, a) as f64 / 1e6))
             .collect();
         table.row(&[&k.to_string(), &row[0], &row[1], &row[2], &row[3]]);
     }
-    if !any {
-        bail!("no manifests for model {model:?} at any K under {root:?}");
+    match (any, last_err) {
+        (false, Some(e)) => Err(e.context(format!(
+            "model {model:?} resolves at no K in 1..=4"))),
+        (false, None) => bail!("model {model:?} resolves at no K in 1..=4 — \
+                                check `frctl models`"),
+        _ => Ok(()),
     }
-    Ok(())
 }
 
-fn cmd_parallel(manifest: Manifest, backend: BackendKind, steps: usize, lr: f32,
-                seed: u64) -> Result<()> {
-    let mut data = DataSource::for_manifest(&manifest, seed)?;
-    let mut par = ParallelFr::spawn(
-        manifest, TrainConfig { lr, seed, ..Default::default() }, backend)?;
-    println!("threaded FR: {} workers, one engine each", par.k());
+fn cmd_parallel(exp: Experiment) -> Result<()> {
+    let (steps, lr) = (exp.step_budget(), exp.base_lr());
+    let mut ps = exp.spawn_parallel()?;
+    println!("threaded FR: {} workers, one engine each", ps.par.k());
     for step in 0..steps {
-        let b = data.train_batch();
-        let s = par.train_step(&b, lr)?;
+        let b = ps.data.train_batch();
+        let s = ps.par.train_step(&b, lr)?;
         if step % 10 == 0 || step + 1 == steps {
             println!("step {step:4}  loss {:.4}  slowest bwd {:.1} ms  history {} B",
                      s.loss,
@@ -250,9 +224,9 @@ fn cmd_parallel(manifest: Manifest, backend: BackendKind, steps: usize, lr: f32,
                      s.history_bytes);
         }
     }
-    let eb = data.test_batch(0);
-    let (el, ee) = par.eval_batch(&eb)?;
+    let eb = ps.data.test_batch(0);
+    let (el, ee) = ps.par.eval_batch(&eb)?;
     println!("eval: loss {el:.4} err {ee:.3}");
-    par.shutdown().context("worker shutdown")?;
+    ps.par.shutdown().context("worker shutdown")?;
     Ok(())
 }

@@ -4,5 +4,5 @@
 pub mod lr;
 pub mod sgd;
 
-pub use lr::{ConstantLr, LrSchedule, StepDecay};
+pub use lr::{ConstantLr, InverseT, LrSchedule, StepDecay};
 pub use sgd::SgdMomentum;

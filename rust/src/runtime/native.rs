@@ -183,6 +183,37 @@ pub mod kernels {
         (dx, dgamma, dbeta)
     }
 
+    /// Embedding lookup: `tokens (rows,)` i32 into `e (vocab, d)` ->
+    /// `(rows, d)`. Rows of `e` are copied, so the output is a fresh f32
+    /// activation whatever the token layout upstream.
+    pub fn embed(tokens: &[i32], e: &[f32], vocab: usize, d: usize) -> Vec<f32> {
+        debug_assert_eq!(e.len(), vocab * d);
+        let mut out = vec![0.0f32; tokens.len() * d];
+        for (r, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < vocab, "token {t} out of vocab {vocab}");
+            out[r * d..(r + 1) * d].copy_from_slice(&e[t * d..(t + 1) * d]);
+        }
+        out
+    }
+
+    /// Embedding backward: scatter-add `dy (rows, d)` into `dE (vocab, d)`
+    /// at each row's token index.
+    pub fn embed_bwd(tokens: &[i32], dy: &[f32], vocab: usize, d: usize) -> Vec<f32> {
+        debug_assert_eq!(dy.len(), tokens.len() * d);
+        let mut de = vec![0.0f32; vocab * d];
+        for (r, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < vocab, "token {t} out of vocab {vocab}");
+            let drow = &dy[r * d..(r + 1) * d];
+            let erow = &mut de[t * d..(t + 1) * d];
+            for (g, &v) in erow.iter_mut().zip(drow) {
+                *g += v;
+            }
+        }
+        de
+    }
+
     /// Mean softmax cross-entropy over `(b, c)` logits with `(b,)` i32
     /// labels; returns `(loss, dlogits)` where `dlogits = (softmax - 1hot)/b`.
     pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
@@ -216,16 +247,7 @@ enum Plan {
     Dense { din: usize, dout: usize, relu: bool },
     Residual { d: usize },
     LayerNorm { d: usize },
-}
-
-impl Plan {
-    fn param_arity(self) -> usize {
-        match self {
-            Plan::Dense { .. } => 2,
-            Plan::Residual { .. } => 4,
-            Plan::LayerNorm { .. } => 2,
-        }
-    }
+    Embed { vocab: usize, d: usize },
 }
 
 /// Per-plan activation cache kept by the traced forward for the backward.
@@ -233,6 +255,7 @@ enum Aux {
     Dense,
     Residual { h1: Vec<f32> },
     LayerNorm { xhat: Vec<f32>, rstd: Vec<f32> },
+    Embed,
 }
 
 pub struct NativeModule {
@@ -251,16 +274,31 @@ impl NativeModule {
                    artifacts need the `pjrt` backend (cargo feature), or use \
                    a procedural config (e.g. NativeMlpSpec)", spec.index);
         }
-        if spec.in_shape.len() != 2 || spec.in_dtype != DType::F32 {
+        let starts_with_embed = matches!(spec.native_ops.first(), Some(NativeOp::Embed));
+        if starts_with_embed {
+            // Token entry point: `(b, seq)` i32, every row becomes one
+            // embedded position — the op graph below is position-wise.
+            if spec.in_shape.len() != 2 || spec.in_dtype != DType::I32 {
+                bail!("module {}: Embed wants rank-2 i32 tokens, got {:?} {:?}",
+                      spec.index, spec.in_shape, spec.in_dtype);
+            }
+            if spec.index != 0 {
+                bail!("module {}: Embed is only valid in module 0", spec.index);
+            }
+        } else if spec.in_shape.len() != 2 || spec.in_dtype != DType::F32 {
             bail!("module {}: native backend supports rank-2 f32 activations, \
                    got {:?} {:?}", spec.index, spec.in_shape, spec.in_dtype);
         }
-        let batch = spec.in_shape[0];
-        let mut width = spec.in_shape[1];
+        let batch = if starts_with_embed {
+            spec.in_shape[0] * spec.in_shape[1]
+        } else {
+            spec.in_shape[0]
+        };
+        let mut width = if starts_with_embed { 0 } else { spec.in_shape[1] };
         let mut plans = Vec::with_capacity(spec.native_ops.len());
         let mut offsets = Vec::with_capacity(spec.native_ops.len());
         let mut pi = 0usize;
-        for op in &spec.native_ops {
+        for (oi, op) in spec.native_ops.iter().enumerate() {
             offsets.push(pi);
             let plan = match op {
                 NativeOp::Dense { relu } => {
@@ -276,8 +314,21 @@ impl NativeModule {
                 }
                 NativeOp::ResidualPair => Plan::Residual { d: width },
                 NativeOp::LayerNorm => Plan::LayerNorm { d: width },
+                NativeOp::Embed => {
+                    if oi != 0 {
+                        bail!("module {}: Embed must be the first op", spec.index);
+                    }
+                    let e = spec.param_shapes.get(pi)
+                        .with_context(|| format!("module {}: missing embed table", spec.index))?;
+                    if e.len() != 2 {
+                        bail!("module {}: embed table must be rank-2 \
+                               (vocab, d), got {e:?}", spec.index);
+                    }
+                    width = e[1];
+                    Plan::Embed { vocab: e[0], d: e[1] }
+                }
             };
-            pi += plan.param_arity();
+            pi += op.param_tensors();
             plans.push(plan);
         }
         if pi != spec.param_shapes.len() {
@@ -293,10 +344,11 @@ impl NativeModule {
     }
 
     /// Forward keeping per-plan activations when `traced`: `outs[p]` is the
-    /// output of plan `p` (plan p's input is `x` for p == 0, else
-    /// `outs[p-1]` — the module input is borrowed, never copied). Untraced,
-    /// only the last buffer survives.
-    fn run_forward(&self, params: &[Tensor], x: &[f32], traced: bool)
+    /// output of plan `p` (plan p's input is the module input for p == 0,
+    /// else `outs[p-1]` — the module input is borrowed, never copied).
+    /// Untraced, only the last buffer survives. The module input arrives as
+    /// a [`Tensor`] because token modules read it as i32 (Embed plan).
+    fn run_forward(&self, params: &[Tensor], h_in: &Tensor, traced: bool)
                    -> (Vec<Vec<f32>>, Vec<Aux>) {
         let b = self.batch;
         let mut outs: Vec<Vec<f32>> =
@@ -304,10 +356,12 @@ impl NativeModule {
         let mut aux: Vec<Aux> = Vec::with_capacity(self.plans.len());
         for (pi, plan) in self.plans.iter().enumerate() {
             let pp = &params[self.offsets[pi]..];
-            let cur: &[f32] = if traced && pi > 0 {
+            let cur: &[f32] = if let Plan::Embed { .. } = plan {
+                &[] // Embed reads the i32 tokens directly below
+            } else if traced && pi > 0 {
                 &outs[pi - 1]
             } else {
-                outs.last().map(Vec::as_slice).unwrap_or(x)
+                outs.last().map(Vec::as_slice).unwrap_or_else(|| h_in.f32s())
             };
             let (out, a) = match *plan {
                 Plan::Dense { din, dout, relu } => {
@@ -335,6 +389,10 @@ impl NativeModule {
                         kernels::layernorm(cur, pp[0].f32s(), pp[1].f32s(), 1e-5);
                     (y, Aux::LayerNorm { xhat, rstd })
                 }
+                Plan::Embed { vocab, d } => {
+                    let y = kernels::embed(h_in.i32s(), pp[0].f32s(), vocab, d);
+                    (y, Aux::Embed)
+                }
             };
             if traced {
                 outs.push(out);
@@ -349,10 +407,10 @@ impl NativeModule {
     }
 
     /// Backprop `dout` through the traced forward (`outs` as produced by
-    /// `run_forward(.., traced: true)`, `x` the module input); returns param
-    /// grads (in manifest order) and the input gradient (skipped for
+    /// `run_forward(.., traced: true)`, `h_in` the module input); returns
+    /// param grads (in manifest order) and the input gradient (skipped for
     /// module 0).
-    fn backprop(&self, params: &[Tensor], x: &[f32], outs: &[Vec<f32>], aux: &[Aux],
+    fn backprop(&self, params: &[Tensor], h_in: &Tensor, outs: &[Vec<f32>], aux: &[Aux],
                 dout: Vec<f32>) -> (Vec<Tensor>, Option<Vec<f32>>) {
         let b = self.batch;
         let mut grads: Vec<Option<Tensor>> = (0..params.len()).map(|_| None).collect();
@@ -360,7 +418,11 @@ impl NativeModule {
         for (pi, plan) in self.plans.iter().enumerate().rev() {
             let off = self.offsets[pi];
             let pp = &params[off..];
-            let x: &[f32] = if pi == 0 { x } else { &outs[pi - 1] };
+            let x: &[f32] = if pi == 0 {
+                if matches!(plan, Plan::Embed { .. }) { &[] } else { h_in.f32s() }
+            } else {
+                &outs[pi - 1]
+            };
             let y = &outs[pi];
             let need_dx = pi > 0 || !self.is_first;
             match (*plan, &aux[pi]) {
@@ -411,6 +473,13 @@ impl NativeModule {
                     grads[off + 1] = Some(tensor1(dbeta));
                     grad = if need_dx { dx } else { Vec::new() };
                 }
+                (Plan::Embed { vocab, d }, Aux::Embed) => {
+                    // first op of module 0 by construction: tokens carry no
+                    // gradient, only the table does
+                    let de = kernels::embed_bwd(h_in.i32s(), &grad, vocab, d);
+                    grads[off] = Some(tensor2(vocab, d, de));
+                    grad = Vec::new();
+                }
                 _ => unreachable!("plan/aux built together"),
             }
         }
@@ -433,16 +502,15 @@ fn tensor2(r: usize, c: usize, data: Vec<f32>) -> Tensor {
 
 impl ModuleExec for NativeModule {
     fn forward(&self, params: &ResidentParams, h_in: &Tensor) -> Result<Tensor> {
-        let (mut outs, _) = self.run_forward(params, h_in.f32s(), false);
+        let (mut outs, _) = self.run_forward(params, h_in, false);
         let out = outs.pop().expect("module has at least one op");
         Tensor::from_f32(self.spec.out_shape.clone(), out)
     }
 
     fn backward(&self, params: &ResidentParams, h_in: &Tensor, delta: &Tensor)
                 -> Result<(Vec<Tensor>, Option<Tensor>)> {
-        let x = h_in.f32s();
-        let (outs, aux) = self.run_forward(params, x, true);
-        let (grads, dx) = self.backprop(params, x, &outs, &aux, delta.f32s().to_vec());
+        let (outs, aux) = self.run_forward(params, h_in, true);
+        let (grads, dx) = self.backprop(params, h_in, &outs, &aux, delta.f32s().to_vec());
         let delta_in = match dx {
             Some(v) => Some(Tensor::from_f32(self.spec.in_shape.clone(), v)?),
             None => None,
@@ -456,14 +524,13 @@ impl ModuleExec for NativeModule {
             bail!("module {}: labels must be i32 of length {}, got {:?} {:?}",
                   self.spec.index, self.batch, labels.dtype, labels.shape);
         }
-        let x = h_in.f32s();
-        let (outs, aux) = self.run_forward(params, x, true);
+        let (outs, aux) = self.run_forward(params, h_in, true);
         let logits = outs.last().expect("module has at least one op");
         let classes = logits.len() / self.batch;
         let (loss, dlogits) =
             kernels::softmax_xent(logits, labels.i32s(), self.batch, classes);
         let logits_t = Tensor::from_f32(vec![self.batch, classes], logits.clone())?;
-        let (grads, dx) = self.backprop(params, x, &outs, &aux, dlogits);
+        let (grads, dx) = self.backprop(params, h_in, &outs, &aux, dlogits);
         let delta_in = match dx {
             Some(v) => Some(Tensor::from_f32(self.spec.in_shape.clone(), v)?),
             None => None,
@@ -589,7 +656,25 @@ impl Backend for NativeBackend {
                 .map(|(i, s)| Tensor::from_f32_file(&manifest.param_path(stem, i), s.clone()))
                 .collect();
         }
-        Ok(procedural_init(manifest.seed, stem, shapes))
+        let mut params = procedural_init(manifest.seed, stem, shapes);
+        // LayerNorm scales must start at one — the all-zeros 1-D default
+        // would sever the trunk. The module's op graph says which 1-D
+        // params are norm scales rather than biases.
+        if let Some(module) = stem.strip_prefix("module")
+            .and_then(|s| s.parse::<usize>().ok())
+            .and_then(|i| manifest.modules.get(i))
+        {
+            let mut pi = 0usize;
+            for op in &module.native_ops {
+                if let NativeOp::LayerNorm = op {
+                    if let Some(gamma) = params.get_mut(pi) {
+                        gamma.f32s_mut().iter_mut().for_each(|v| *v = 1.0);
+                    }
+                }
+                pi += op.param_tensors();
+            }
+        }
+        Ok(params)
     }
 }
 
@@ -660,87 +745,78 @@ impl NativeMlpSpec {
     }
 }
 
-/// One layer of the procedural MLP before partitioning.
+/// One layer of a procedural config before partitioning.
 struct LayerDesc {
     name: String,
     op: NativeOp,
     param_shapes: Vec<Vec<usize>>,
-    out_width: usize,
+    out_shape: Vec<usize>,
     flops: u64,
     act_bytes: usize,
 }
 
-pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
-    if cfg.k == 0 || cfg.batch == 0 || cfg.hidden == 0 || cfg.num_classes == 0 {
-        bail!("degenerate native MLP config {cfg:?}");
-    }
-    let (b, h) = (cfg.batch, cfg.hidden);
-    let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 2);
-    layers.push(LayerDesc {
-        name: "stem".into(),
-        op: NativeOp::Dense { relu: true },
-        param_shapes: vec![vec![cfg.input_dim, h], vec![h]],
-        out_width: h,
-        flops: 2 * (b * cfg.input_dim * h) as u64,
-        act_bytes: 4 * b * h * 2,
-    });
-    for i in 0..cfg.depth {
-        layers.push(LayerDesc {
-            name: format!("res{i}"),
-            op: NativeOp::ResidualPair,
-            param_shapes: vec![vec![h, h], vec![h], vec![h, h], vec![h]],
-            out_width: h,
-            flops: 4 * (b * h * h) as u64,
-            act_bytes: 4 * b * h * 4,
-        });
-    }
-    layers.push(LayerDesc {
-        name: "head".into(),
-        op: NativeOp::Dense { relu: false },
-        param_shapes: vec![vec![h, cfg.num_classes], vec![cfg.num_classes]],
-        out_width: cfg.num_classes,
-        flops: 2 * (b * h * cfg.num_classes) as u64,
-        act_bytes: 4 * b * cfg.num_classes * 2,
-    });
+/// Everything about a procedural model that is not its layer list; shared by
+/// [`native_mlp_manifest`] and [`native_lm_manifest`].
+struct GraphDesc {
+    config: String,
+    model_type: &'static str,
+    input_shape: Vec<usize>,
+    input_dtype: DType,
+    label_shape: Vec<usize>,
+    num_classes: usize,
+    k: usize,
+    seed: u64,
+}
 
+/// Partition `layers` into K contiguous modules with DNI synthesizers at
+/// every boundary (the shape every procedural config shares — only the
+/// layer list differs between model families).
+fn partition_manifest(desc: GraphDesc, layers: Vec<LayerDesc>) -> Result<Manifest> {
     let total_layers = layers.len();
-    if total_layers < cfg.k {
-        bail!("{total_layers} layers cannot fill k={} modules (raise depth)", cfg.k);
+    if desc.k == 0 {
+        bail!("config {}: k must be >= 1", desc.config);
     }
+    if total_layers < desc.k {
+        bail!("config {}: {total_layers} layers cannot fill k={} modules \
+               (raise depth)", desc.config, desc.k);
+    }
+    let logits_shape = layers.last().context("empty layer list")?.out_shape.clone();
 
     // Contiguous partition: the first (L % k) modules take one extra layer.
-    let base = total_layers / cfg.k;
-    let extra = total_layers % cfg.k;
-    let mut modules = Vec::with_capacity(cfg.k);
+    let base = total_layers / desc.k;
+    let extra = total_layers % desc.k;
+    let mut modules = Vec::with_capacity(desc.k);
     let mut layer_iter = layers.into_iter();
-    let mut in_width = cfg.input_dim;
+    let mut in_shape = desc.input_shape.clone();
+    let mut in_dtype = desc.input_dtype;
     let mut report = String::new();
-    for idx in 0..cfg.k {
+    for idx in 0..desc.k {
         let take = base + usize::from(idx < extra);
         let group: Vec<LayerDesc> = layer_iter.by_ref().take(take).collect();
-        let out_width = group.last().context("empty module group")?.out_width;
+        let out_shape = group.last().context("empty module group")?.out_shape.clone();
         let spec = ModuleSpec {
             index: idx,
             layers: group.iter().map(|l| l.name.clone()).collect(),
             layer_act_bytes: group.iter().map(|l| l.act_bytes).collect(),
             param_shapes: group.iter().flat_map(|l| l.param_shapes.clone()).collect(),
-            in_shape: vec![b, in_width],
-            in_dtype: DType::F32,
-            out_shape: vec![b, out_width],
+            in_shape: in_shape.clone(),
+            in_dtype,
+            out_shape: out_shape.clone(),
             flops: group.iter().map(|l| l.flops).sum(),
             act_bytes: group.iter().map(|l| l.act_bytes).sum(),
             fwd_file: "<native>".into(),
             bwd_file: "<native>".into(),
-            loss_file: (idx == cfg.k - 1).then(|| "<native>".to_string()),
+            loss_file: (idx == desc.k - 1).then(|| "<native>".to_string()),
             native_ops: group.iter().map(|l| l.op).collect(),
         };
         report.push_str(&format!("module {idx}: {} layers, {} flops\n",
                                  spec.layers.len(), spec.flops));
-        in_width = out_width;
+        in_shape = out_shape;
+        in_dtype = DType::F32; // every boundary activation is f32
         modules.push(spec);
     }
 
-    let synth: Vec<SynthSpec> = (0..cfg.k.saturating_sub(1))
+    let synth: Vec<SynthSpec> = (0..desc.k.saturating_sub(1))
         .map(|boundary| {
             let d = modules[boundary].out_shape[1];
             SynthSpec {
@@ -757,22 +833,154 @@ pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
     let total_flops: u64 = modules.iter().map(|m| m.flops).sum();
     Ok(Manifest {
         dir: std::path::PathBuf::from("<native>"),
-        config: format!("mlp_native_k{}", cfg.k),
-        k: cfg.k,
-        seed: cfg.seed,
-        model_type: "mlp".into(),
+        config: desc.config,
+        k: desc.k,
+        seed: desc.seed,
+        model_type: desc.model_type.into(),
         use_pallas: false,
-        input_shape: vec![b, cfg.input_dim],
-        input_dtype: DType::F32,
-        label_shape: vec![b],
-        num_classes: cfg.num_classes,
-        logits_shape: vec![b, cfg.num_classes],
+        input_shape: desc.input_shape,
+        input_dtype: desc.input_dtype,
+        label_shape: desc.label_shape,
+        num_classes: desc.num_classes,
+        logits_shape,
         num_layers: total_layers,
         total_flops,
         partition_report: report,
         modules,
         synth,
     })
+}
+
+pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
+    if cfg.k == 0 || cfg.batch == 0 || cfg.hidden == 0 || cfg.num_classes == 0 {
+        bail!("degenerate native MLP config {cfg:?}");
+    }
+    let (b, h) = (cfg.batch, cfg.hidden);
+    let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 2);
+    layers.push(LayerDesc {
+        name: "stem".into(),
+        op: NativeOp::Dense { relu: true },
+        param_shapes: vec![vec![cfg.input_dim, h], vec![h]],
+        out_shape: vec![b, h],
+        flops: 2 * (b * cfg.input_dim * h) as u64,
+        act_bytes: 4 * b * h * 2,
+    });
+    for i in 0..cfg.depth {
+        layers.push(LayerDesc {
+            name: format!("res{i}"),
+            op: NativeOp::ResidualPair,
+            param_shapes: vec![vec![h, h], vec![h], vec![h, h], vec![h]],
+            out_shape: vec![b, h],
+            flops: 4 * (b * h * h) as u64,
+            act_bytes: 4 * b * h * 4,
+        });
+    }
+    layers.push(LayerDesc {
+        name: "head".into(),
+        op: NativeOp::Dense { relu: false },
+        param_shapes: vec![vec![h, cfg.num_classes], vec![cfg.num_classes]],
+        out_shape: vec![b, cfg.num_classes],
+        flops: 2 * (b * h * cfg.num_classes) as u64,
+        act_bytes: 4 * b * cfg.num_classes * 2,
+    });
+    partition_manifest(GraphDesc {
+        config: format!("mlp_native_k{}", cfg.k),
+        model_type: "mlp",
+        input_shape: vec![b, cfg.input_dim],
+        input_dtype: DType::F32,
+        label_shape: vec![b],
+        num_classes: cfg.num_classes,
+        k: cfg.k,
+        seed: cfg.seed,
+    }, layers)
+}
+
+/// Procedural char-LM config: a token embedding, `depth` position-wise
+/// residual pairs, a LayerNorm, and a vocab head — the transformer stand-in
+/// the native backend can train on the tiny-corpus data source (tokens in,
+/// next-char labels out). Positions are independent rows after the embed,
+/// so the whole trunk reuses the dense/residual kernels.
+#[derive(Clone, Debug)]
+pub struct NativeLmSpec {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub depth: usize,
+    /// Must stay `data::tiny_corpus::VOCAB` to match the char data source.
+    pub vocab: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl NativeLmSpec {
+    /// The offline char-LM testbed config (matches tiny-corpus's contract).
+    pub fn tiny(k: usize) -> NativeLmSpec {
+        NativeLmSpec {
+            batch: 8,
+            seq: 32,
+            d_model: 32,
+            depth: std::cmp::max(2, k.saturating_sub(2)),
+            vocab: 96,
+            k,
+            seed: 0,
+        }
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        native_lm_manifest(self)
+    }
+}
+
+pub fn native_lm_manifest(cfg: &NativeLmSpec) -> Result<Manifest> {
+    if cfg.k == 0 || cfg.batch == 0 || cfg.seq == 0 || cfg.d_model == 0 || cfg.vocab == 0 {
+        bail!("degenerate native LM config {cfg:?}");
+    }
+    let (d, rows) = (cfg.d_model, cfg.batch * cfg.seq);
+    let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 3);
+    layers.push(LayerDesc {
+        name: "embed".into(),
+        op: NativeOp::Embed,
+        param_shapes: vec![vec![cfg.vocab, d]],
+        out_shape: vec![rows, d],
+        flops: (rows * d) as u64,
+        act_bytes: 4 * rows * d,
+    });
+    for i in 0..cfg.depth {
+        layers.push(LayerDesc {
+            name: format!("res{i}"),
+            op: NativeOp::ResidualPair,
+            param_shapes: vec![vec![d, d], vec![d], vec![d, d], vec![d]],
+            out_shape: vec![rows, d],
+            flops: 4 * (rows * d * d) as u64,
+            act_bytes: 4 * rows * d * 4,
+        });
+    }
+    layers.push(LayerDesc {
+        name: "norm".into(),
+        op: NativeOp::LayerNorm,
+        param_shapes: vec![vec![d], vec![d]],
+        out_shape: vec![rows, d],
+        flops: (8 * rows * d) as u64,
+        act_bytes: 4 * rows * d * 2,
+    });
+    layers.push(LayerDesc {
+        name: "head".into(),
+        op: NativeOp::Dense { relu: false },
+        param_shapes: vec![vec![d, cfg.vocab], vec![cfg.vocab]],
+        out_shape: vec![rows, cfg.vocab],
+        flops: 2 * (rows * d * cfg.vocab) as u64,
+        act_bytes: 4 * rows * cfg.vocab * 2,
+    });
+    partition_manifest(GraphDesc {
+        config: format!("lm_native_k{}", cfg.k),
+        model_type: "char_lm",
+        input_shape: vec![cfg.batch, cfg.seq],
+        input_dtype: DType::I32,
+        label_shape: vec![rows],
+        num_classes: cfg.vocab,
+        k: cfg.k,
+        seed: cfg.seed,
+    }, layers)
 }
 
 #[cfg(test)]
@@ -1040,6 +1248,91 @@ mod tests {
         let s = procedural_init(9, "synth0", &synth_shapes);
         assert!(s[4].f32s().iter().all(|&x| x == 0.0));
         assert!(s[0].f32s().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn embed_kernels_gather_and_scatter() {
+        // table (3, 2); tokens [2, 0, 2] -> rows of the table
+        let e = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out = kernels::embed(&[2, 0, 2], &e, 3, 2);
+        assert_eq!(out, vec![5.0, 6.0, 1.0, 2.0, 5.0, 6.0]);
+        // scatter-add accumulates repeated tokens
+        let de = kernels::embed_bwd(&[2, 0, 2], &[1.0, 1.0, 10.0, 20.0, 2.0, 3.0], 3, 2);
+        assert_eq!(de, vec![10.0, 20.0, 0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn lm_manifest_shapes_chain() {
+        let m = NativeLmSpec::tiny(4).manifest().unwrap();
+        assert_eq!(m.k, 4);
+        assert_eq!(m.input_dtype, DType::I32);
+        assert_eq!(m.input_shape, vec![8, 32]);
+        assert_eq!(m.label_shape, vec![8 * 32]);
+        assert_eq!(m.logits_shape, vec![8 * 32, 96]);
+        assert!(m.modules[3].loss_file.is_some());
+        for w in m.modules.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        // every module has a runnable native graph, incl. the token module
+        let backend = NativeBackend;
+        for k in 0..m.k {
+            backend.load_module(&m, k).unwrap();
+        }
+        // LayerNorm gamma starts at one, its beta at zero
+        for (k, module) in m.modules.iter().enumerate() {
+            let params = backend.init_params(
+                &m, &format!("module{k}"), &module.param_shapes).unwrap();
+            let mut pi = 0usize;
+            for op in &module.native_ops {
+                if let NativeOp::LayerNorm = op {
+                    assert!(params[pi].f32s().iter().all(|&v| v == 1.0));
+                    assert!(params[pi + 1].f32s().iter().all(|&v| v == 0.0));
+                }
+                pi += op.param_tensors();
+            }
+        }
+    }
+
+    #[test]
+    fn embed_module_gradients_match_finite_differences() {
+        // k=1 LM: embed + trunk + loss head fused; check the embedding
+        // table's gradient against central differences.
+        let cfg = NativeLmSpec {
+            batch: 2, seq: 3, d_model: 4, depth: 1, vocab: 5, k: 1, seed: 13,
+        };
+        let m = cfg.manifest().unwrap();
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 0).unwrap();
+        let mut params = ResidentParams::new(
+            backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
+        let tokens = Tensor::from_i32(vec![2, 3], vec![0, 3, 1, 4, 3, 2]).unwrap();
+        let labels = Tensor::from_i32(vec![6], vec![1, 0, 4, 2, 3, 0]).unwrap();
+
+        let base = exec.loss_backward(&params, &tokens, &labels).unwrap();
+        assert!(base.loss.is_finite());
+        assert!(base.delta_in.is_none(), "token module emits no delta_in");
+        let eps = 1e-3f32;
+        let n = params[0].len();
+        for i in [0usize, n / 2, n - 1] {
+            let orig = params[0].f32s()[i];
+            params.tensors_mut()[0].f32s_mut()[i] = orig + eps;
+            let lp = exec.loss_backward(&params, &tokens, &labels).unwrap().loss;
+            params.tensors_mut()[0].f32s_mut()[i] = orig - eps;
+            let lm = exec.loss_backward(&params, &tokens, &labels).unwrap().loss;
+            params.tensors_mut()[0].f32s_mut()[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = base.grads[0].f32s()[i];
+            assert!((fd - an).abs() < 1e-2 + 0.05 * an.abs(),
+                    "embed[{i}]: finite-diff {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn embed_rejected_outside_module_zero() {
+        let m = NativeLmSpec::tiny(2).manifest().unwrap();
+        let mut bad = m.modules[1].clone();
+        bad.native_ops.insert(0, NativeOp::Embed);
+        assert!(NativeModule::build(bad).is_err());
     }
 
     #[test]

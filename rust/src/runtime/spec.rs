@@ -20,6 +20,25 @@ pub enum NativeOp {
     ResidualPair,
     /// LayerNorm over the last axis. Params: `gamma (d)`, `beta (d)`.
     LayerNorm,
+    /// Token embedding lookup: `(b, seq)` i32 tokens -> `(b*seq, d)` rows.
+    /// Params: `E (vocab, d)`. Only valid as the first op of module 0 — the
+    /// entry point of the char-LM configs (every later op is position-wise).
+    Embed,
+}
+
+impl NativeOp {
+    /// How many parameter tensors this op consumes from the module's
+    /// `param_shapes` run — the single authority for walking op graphs
+    /// against parameter lists (executor plans, init, tests). Distinct from
+    /// [`ModuleSpec::param_count`], which counts scalars.
+    pub fn param_tensors(self) -> usize {
+        match self {
+            NativeOp::Dense { .. } => 2,
+            NativeOp::ResidualPair => 4,
+            NativeOp::LayerNorm => 2,
+            NativeOp::Embed => 1,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]

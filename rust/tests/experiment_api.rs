@@ -1,0 +1,146 @@
+//! Integration tests of the declarative Experiment API: every registered
+//! model name must resolve and train under every algorithm on the native
+//! backend, fully offline (the acceptance bar for the examples), and the
+//! builder must surface the run-option knobs it claims to own.
+
+use features_replay::coordinator::{Algo, Trainer};
+use features_replay::experiment::{Experiment, ModelRegistry, ScheduleSpec};
+use features_replay::runtime::BackendKind;
+
+/// Keep the grid cheap: tiny budgets, constant LR, one eval batch.
+fn tiny(model: &str, algo: Algo) -> Experiment {
+    Experiment::new(model)
+        .k(2)
+        .algo(algo)
+        .backend(BackendKind::Native)
+        .steps(2)
+        .eval_every(1)
+        .eval_batches(1)
+        .schedule(ScheduleSpec::Constant)
+}
+
+#[test]
+fn every_registered_model_trains_under_every_algo() {
+    for entry in ModelRegistry::entries() {
+        for algo in Algo::ALL {
+            let res = tiny(entry.name, algo).run()
+                .unwrap_or_else(|e| panic!("{} x {}: {e:#}", entry.name, algo.name()));
+            assert!(!res.curve.points.is_empty(),
+                    "{} x {}: empty curve", entry.name, algo.name());
+            assert!(res.curve.final_train_loss().is_finite(),
+                    "{} x {}: non-finite loss", entry.name, algo.name());
+            assert!(!res.diverged, "{} x {}: diverged in 2 steps",
+                    entry.name, algo.name());
+        }
+    }
+}
+
+#[test]
+fn eval_cadence_controls_curve_density() {
+    let res = Experiment::new("mlp_tiny")
+        .k(2)
+        .backend(BackendKind::Native)
+        .steps(5)
+        .eval_every(2)
+        .eval_batches(1)
+        .schedule(ScheduleSpec::Constant)
+        .run()
+        .unwrap();
+    // evals at steps 0, 2, 4 (4 is also the final step)
+    assert_eq!(res.curve.points.len(), 3);
+    let steps: Vec<usize> = res.curve.points.iter().map(|p| p.step).collect();
+    assert_eq!(steps, vec![0, 2, 4]);
+}
+
+#[test]
+fn divergence_threshold_is_surfaced_through_builder() {
+    // any positive loss trips a 1e-9 threshold on the first step
+    let res = Experiment::new("mlp_tiny")
+        .k(2)
+        .backend(BackendKind::Native)
+        .steps(3)
+        .divergence_loss(1e-9)
+        .run()
+        .unwrap();
+    assert!(res.diverged);
+    assert_eq!(res.curve.points.len(), 1, "aborts on the first step");
+}
+
+#[test]
+fn unknown_model_error_names_the_registry() {
+    let err = Experiment::new("resnet_xxl").run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("resnet_xxl"), "{msg}");
+    assert!(msg.contains("mlp_tiny"), "should list registered names: {msg}");
+}
+
+#[test]
+fn session_exposes_trainer_and_data_for_manual_stepping() {
+    let mut session = Experiment::new("transformer_tiny")
+        .k(2)
+        .algo(Algo::Fr)
+        .backend(BackendKind::Native)
+        .session()
+        .unwrap();
+    assert_eq!(session.backend, BackendKind::Native);
+    for _ in 0..2 {
+        let b = session.data.train_batch();
+        let stats = session.trainer.train_step(&b, 0.01).unwrap();
+        assert!(stats.loss.is_finite());
+    }
+    assert!(session.trainer.memory().total() > 0);
+}
+
+#[test]
+fn fr_session_drives_the_sigma_probe() {
+    use features_replay::coordinator::sigma;
+
+    let mut fs = Experiment::new("mlp_tiny")
+        .k(3)
+        .backend(BackendKind::Native)
+        .build_fr()
+        .unwrap();
+    let batch = fs.data.train_batch();
+    let (s, loss) = sigma::probe_step(&mut fs.fr, &batch, 0.01, 0).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(s.per_module.len(), 3);
+    // the last module is exact BP, so its sigma is 1 by construction
+    assert!((s.per_module[2] - 1.0).abs() < 1e-3,
+            "sigma_K = {}", s.per_module[2]);
+}
+
+#[test]
+fn parallel_session_runs_and_shuts_down() {
+    let mut ps = Experiment::new("mlp_tiny")
+        .k(2)
+        .backend(BackendKind::Native)
+        .spawn_parallel()
+        .unwrap();
+    assert_eq!(ps.par.k(), 2);
+    for _ in 0..2 {
+        let b = ps.data.train_batch();
+        let stats = ps.par.train_step(&b, 0.01).unwrap();
+        assert!(stats.loss.is_finite());
+    }
+    ps.par.shutdown().unwrap();
+}
+
+#[test]
+fn char_lm_stand_in_trains_on_token_stream() {
+    // the Embed-op path end to end: i32 tokens in, per-position labels out
+    let res = Experiment::new("transformer_tiny")
+        .k(4)
+        .algo(Algo::Fr)
+        .backend(BackendKind::Native)
+        .steps(3)
+        .lr(3e-3)
+        .eval_every(1)
+        .eval_batches(1)
+        .schedule(ScheduleSpec::Constant)
+        .run()
+        .unwrap();
+    assert!(!res.diverged);
+    assert!(res.curve.final_train_loss().is_finite());
+    // untrained char-LM loss starts near ln(96) ~ 4.56; 3 steps keep it sane
+    assert!(res.curve.points[0].train_loss < 10.0);
+}

@@ -1,24 +1,29 @@
 #!/usr/bin/env bash
-# CI entry point: build + test (tier-1), then fmt/clippy hygiene.
+# CI entry point: build + test (tier-1), example build + smoke, then
+# fmt/clippy hygiene.
 #
-#   scripts/ci.sh            # tier-1 hard-fails; fmt/clippy advisory
+#   scripts/ci.sh            # tier-1 + examples hard-fail; fmt/clippy advisory
 #   scripts/ci.sh --strict   # fmt/clippy failures also fail the run
 #   scripts/ci.sh --pjrt     # additionally build+test with --features pjrt
 #                            # (links the offline xla stub)
+#   scripts/ci.sh --no-smoke # skip running the example smoke (build only)
 #
-# fmt/clippy are advisory by default because the pinned offline toolchain
-# may ship without the rustfmt/clippy components; flip to --strict once the
-# toolchain is pinned with both.
+# The toolchain is pinned by rust-toolchain.toml (stable + rustfmt/clippy
+# components); fmt/clippy stay advisory by default because a non-rustup
+# cargo may ship without the components — flip to --strict where the pinned
+# toolchain is honored.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 STRICT=0
 PJRT=0
+SMOKE=1
 for arg in "$@"; do
     case "$arg" in
         --strict) STRICT=1 ;;
         --pjrt) PJRT=1 ;;
+        --no-smoke) SMOKE=0 ;;
         *) echo "unknown arg: $arg" >&2; exit 2 ;;
     esac
 done
@@ -28,6 +33,18 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== examples: cargo build --release --examples =="
+cargo build --release --examples
+
+if [ "$SMOKE" = 1 ]; then
+    # Every example is registered and runs offline through the Experiment
+    # API; smoke the walkthrough plus one reproduce_* harness with tiny
+    # budgets so CI stays fast.
+    echo "== examples: smoke (quickstart, fig4 @ 3 steps) =="
+    FR_STEPS=3 cargo run --release --example quickstart
+    cargo run --release --example reproduce_fig4_convergence -- 3 resnet_s
+fi
 
 if [ "$PJRT" = 1 ]; then
     echo "== feature matrix: --features pjrt (offline stub) =="
