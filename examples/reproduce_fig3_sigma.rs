@@ -4,9 +4,11 @@
 //! sigma_k stays > 0 throughout (Assumption 1 holds empirically), is smaller
 //! for lower modules early, and approaches 1 late in training.
 //!
-//! Testbed setup (DESIGN.md subst. 3): resnet_s (basic-block role) and
-//! resnet_m (bottleneck role), K=4, synthetic CIFAR-10 — both resolved
-//! procedurally by the model registry, so this runs offline.
+//! Testbed setup (docs/DESIGN.md §Faithful op graphs): resnet_s
+//! (basic-block role) and resnet_m (bottleneck role) — real 3×3 conv
+//! residual blocks, scaled down — K=4, synthetic CIFAR-10
+//! (DESIGN.md §Substitution 2); both resolved procedurally by the model
+//! registry, so this runs offline.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig3_sigma -- [steps]

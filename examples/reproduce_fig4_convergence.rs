@@ -5,10 +5,12 @@
 //! all models, DDG diverges on ResNet152 at K=4, FR tracks (slightly beats)
 //! BP per epoch and is up to ~2x faster per unit time at K=4.
 //!
-//! Testbed: resnet_s/m/l stand-ins (subst. 3), K=4, synthetic CIFAR-10;
-//! the time axis is the measured-cost pipeline model (subst. 1). The model
-//! registry resolves every stand-in procedurally, so this runs offline on
-//! the native backend with zero artifacts.
+//! Testbed: the scaled-down resnet_s/m/l conv configs (faithful 3x3
+//! residual blocks — see docs/DESIGN.md §Faithful op graphs), K=4, on
+//! synthetic CIFAR-10 (DESIGN.md §Substitution 2); the time axis is the
+//! measured-cost pipeline model (§Substitution 1). The model registry
+//! resolves every config procedurally, so this runs offline on the native
+//! backend with zero artifacts.
 //!
 //! ```sh
 //! cargo run --release --example reproduce_fig4_convergence -- [steps] [models...]

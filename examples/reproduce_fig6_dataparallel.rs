@@ -8,7 +8,7 @@
 //! Testbed: BP's per-iteration cost under n-way DP and FR's pipelined cost
 //! both come from the measured-cost schedule model (subst. 1); the loss
 //! curves come from real training runs (DP-BP's per-step trajectory equals
-//! BP's — same gradients, bigger effective hardware). The resnet_s stand-in
+//! BP's — same gradients, bigger effective hardware). The resnet_s config
 //! resolves procedurally, so this runs offline.
 //!
 //! ```sh

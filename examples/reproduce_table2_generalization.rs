@@ -4,7 +4,8 @@
 //! Paper finding: FR beats BP and DDG on every model/dataset pair (e.g.
 //! ResNet164 C-10: BP 6.40, DDG 6.45, FR 6.03).
 //!
-//! Testbed: resnet_s/m/l stand-ins on synthetic CIFAR-10/100 (the `_c100`
+//! Testbed: the scaled-down resnet_s/m/l conv configs on synthetic
+//! CIFAR-10/100 (the `_c100`
 //! registry entries carry the 100-class head); absolute error rates differ
 //! from the paper's (different data + budget), the *ordering* is the
 //! reproduced claim. Runs offline with zero artifacts.

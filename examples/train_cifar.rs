@@ -1,4 +1,4 @@
-//! Train the CIFAR-style ResNet stand-in with every method and compare —
+//! Train a CIFAR conv ResNet with every method and compare —
 //! the intro-motivating workload (model-parallel CNN training across K
 //! devices). Runs offline on the native backend via the model registry.
 //!

@@ -1,4 +1,4 @@
-//! End-to-end training driver: train the char-LM transformer stand-in with
+//! End-to-end training driver: train the char-LM transformer with
 //! Features Replay across K=4 modules on the tiny-corpus stream, logging
 //! the loss curve. FR is compared against BP on the same token stream;
 //! results land in results/train_transformer.json.
@@ -7,9 +7,9 @@
 //! cargo run --release --example train_transformer -- [steps]
 //! ```
 //! Default 300 steps. The `transformer_tiny` registry entry resolves to the
-//! procedural token-embedding + position-wise-trunk config, so this runs
-//! offline on the native backend (AOT transformer artifacts still work via
-//! the `pjrt` feature).
+//! procedural token-embedding + causal-attention/MLP-block config, so this
+//! runs offline on the native backend (AOT transformer artifacts still
+//! work via the `pjrt` feature).
 
 use anyhow::Result;
 
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
             .verbose(true)
             .session()?;
         if algo == Algo::Fr {
-            println!("== e2e: char-LM stand-in, {} params, K={} ==",
+            println!("== e2e: char-LM transformer, {} params, K={} ==",
                      session.manifest.total_params(), session.manifest.k);
             println!("corpus: tiny-corpus (Austen seed + trigram babble), \
                       vocab {}, seq {}", session.manifest.num_classes,

@@ -1,0 +1,310 @@
+"""Numpy mirror of the conv + attention native op path (PR 3): im2col
+convolution (stride/padding), conv residual pair, average / global pooling,
+and causal single-head attention with a residual connection — exactly the
+formulas in rust/src/runtime/native.rs (see the per-variant math in
+rust/src/runtime/spec.rs), verified against central differences.
+
+Two graphs are checked, mirroring the faithful registry configs:
+
+  conv:  Conv2d(3x3 s1 p1 relu) -> ConvResidualPair -> Conv2d(3x3 s2 p1
+         relu) -> AvgPool2d(2,2) -> GlobalAvgPool -> Dense -> softmax-xent
+  attn:  x -> Attention(causal, residual) -> ResidualPair -> LayerNorm ->
+         Dense -> softmax-xent
+
+Run: python3 python/tests/test_conv_attn_mirror.py
+"""
+import numpy as np
+
+
+# ---- kernels (numpy ports of runtime/native.rs::kernels) -------------------
+
+def im2col(x, hw, c, k, stride, pad):
+    """x (b, hw*hw*c) NHWC -> (b*ohw*ohw, k*k*c), zero padding."""
+    b = x.shape[0]
+    ohw = (hw + 2 * pad - k) // stride + 1
+    img = x.reshape(b, hw, hw, c)
+    cols = np.zeros((b, ohw, ohw, k, k, c), dtype=x.dtype)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            for ky in range(k):
+                iy = oy * stride + ky - pad
+                if iy < 0 or iy >= hw:
+                    continue
+                for kx in range(k):
+                    ix = ox * stride + kx - pad
+                    if ix < 0 or ix >= hw:
+                        continue
+                    cols[:, oy, ox, ky, kx, :] = img[:, iy, ix, :]
+    return cols.reshape(b * ohw * ohw, k * k * c), ohw
+
+
+def col2im(cols, hw, c, k, stride, pad, b):
+    """Adjoint of im2col: scatter-add patches back to (b, hw*hw*c)."""
+    ohw = (hw + 2 * pad - k) // stride + 1
+    cc = cols.reshape(b, ohw, ohw, k, k, c)
+    img = np.zeros((b, hw, hw, c), dtype=cols.dtype)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            for ky in range(k):
+                iy = oy * stride + ky - pad
+                if iy < 0 or iy >= hw:
+                    continue
+                for kx in range(k):
+                    ix = ox * stride + kx - pad
+                    if ix < 0 or ix >= hw:
+                        continue
+                    img[:, iy, ix, :] += cc[:, oy, ox, ky, kx, :]
+    return img.reshape(b, hw * hw * c)
+
+
+def conv2d(x, w, bias, hw, stride, pad, relu):
+    """w (k, k, cin, cout) flattened row-major == the im2col matmul weight."""
+    k, _, cin, cout = w.shape
+    cols, ohw = im2col(x, hw, cin, k, stride, pad)
+    y = cols @ w.reshape(k * k * cin, cout) + bias
+    if relu:
+        y = np.maximum(y, 0)
+    return y.reshape(x.shape[0], ohw * ohw * cout), ohw
+
+
+def conv2d_bwd(x, w, hw, stride, pad, relu, y, dy):
+    """Returns (dw, db, dx) given the forward output y (for the ReLU mask)."""
+    k, _, cin, cout = w.shape
+    b = x.shape[0]
+    dz = dy.reshape(-1, cout).copy()
+    if relu:
+        dz[y.reshape(-1, cout) <= 0] = 0
+    cols, _ = im2col(x, hw, cin, k, stride, pad)
+    dw = (cols.T @ dz).reshape(w.shape)
+    db = dz.sum(0)
+    dcols = dz @ w.reshape(k * k * cin, cout).T
+    dx = col2im(dcols, hw, cin, k, stride, pad, b)
+    return dw, db, dx
+
+
+def avgpool(x, hw, c, k, stride):
+    b = x.shape[0]
+    ohw = (hw - k) // stride + 1
+    img = x.reshape(b, hw, hw, c)
+    out = np.zeros((b, ohw, ohw, c), dtype=x.dtype)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            win = img[:, oy * stride:oy * stride + k,
+                      ox * stride:ox * stride + k, :]
+            out[:, oy, ox, :] = win.mean((1, 2))
+    return out.reshape(b, ohw * ohw * c), ohw
+
+
+def avgpool_bwd(dy, hw, c, k, stride, b):
+    ohw = (hw - k) // stride + 1
+    dyi = dy.reshape(b, ohw, ohw, c)
+    dx = np.zeros((b, hw, hw, c), dtype=dy.dtype)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            dx[:, oy * stride:oy * stride + k,
+               ox * stride:ox * stride + k, :] += \
+                dyi[:, oy:oy + 1, ox:ox + 1, :] / (k * k)
+    return dx.reshape(b, hw * hw * c)
+
+
+def attention(x, seq, wq, bq, wk, bk, wv, bv, wo, bo):
+    """Causal single-head attention with residual: y = x + a(x) wo + bo."""
+    rows, d = x.shape
+    q, k, v = x @ wq + bq, x @ wk + bk, x @ wv + bv
+    scale = 1.0 / np.sqrt(d)
+    mask = np.tril(np.ones((seq, seq), dtype=bool))
+    probs = np.zeros((rows, seq), dtype=x.dtype)
+    ctx = np.zeros_like(x)
+    for g in range(rows // seq):
+        sl = slice(g * seq, (g + 1) * seq)
+        s = (q[sl] @ k[sl].T) * scale
+        s = np.where(mask, s, -np.inf)
+        e = np.exp(s - s.max(1, keepdims=True))
+        a = e / e.sum(1, keepdims=True)
+        probs[sl] = a
+        ctx[sl] = a @ v[sl]
+    y = x + ctx @ wo + bo
+    return y, (q, k, v, probs, ctx)
+
+
+def attention_bwd(x, seq, wq, wk, wv, wo, cache, dy):
+    q, k, v, probs, ctx = cache
+    rows, d = x.shape
+    scale = 1.0 / np.sqrt(d)
+    dwo, dbo = ctx.T @ dy, dy.sum(0)
+    dctx = dy @ wo.T
+    dq, dk, dv = (np.zeros_like(q) for _ in range(3))
+    for g in range(rows // seq):
+        sl = slice(g * seq, (g + 1) * seq)
+        a = probs[sl]
+        da = dctx[sl] @ v[sl].T
+        dv[sl] = a.T @ dctx[sl]
+        ds = scale * a * (da - (da * a).sum(1, keepdims=True))
+        dq[sl] = ds @ k[sl]
+        dk[sl] = ds.T @ q[sl]
+    grads = dict(wq=x.T @ dq, bq=dq.sum(0), wk=x.T @ dk, bk=dk.sum(0),
+                 wv=x.T @ dv, bv=dv.sum(0), wo=dwo, bo=dbo)
+    dx = dy + dq @ wq.T + dk @ wk.T + dv @ wv.T
+    return grads, dx
+
+
+def xent(logits, labels):
+    rows = logits.shape[0]
+    m = logits.max(1, keepdims=True)
+    lse = np.log(np.exp(logits - m).sum(1)) + m[:, 0]
+    loss = (lse - logits[np.arange(rows), labels]).mean()
+    p = np.exp(logits - m)
+    p /= p.sum(1, keepdims=True)
+    dlogits = p
+    dlogits[np.arange(rows), labels] -= 1
+    return loss, dlogits / rows
+
+
+# ---- conv graph ------------------------------------------------------------
+
+def conv_forward(x, labels, p, shapes):
+    b, hw, c1, c2 = shapes
+    h1, _ = conv2d(x, p["w_stem"], p["b_stem"], hw, 1, 1, True)
+    # residual pair: relu(h1 + conv2(relu(conv1(h1))))
+    a1, _ = conv2d(h1, p["w_r1"], p["b_r1"], hw, 1, 1, True)
+    z2, _ = conv2d(a1, p["w_r2"], p["b_r2"], hw, 1, 1, False)
+    h2 = np.maximum(h1 + z2, 0)
+    h3, hw2 = conv2d(h2, p["w_down"], p["b_down"], hw, 2, 1, True)
+    h4, hw3 = avgpool(h3, hw2, c2, 2, 2)
+    h5 = h4.reshape(b, hw3 * hw3, c2).mean(1)          # global avg pool
+    logits = h5 @ p["w_head"] + p["b_head"]
+    loss, dlogits = xent(logits, labels)
+    return loss, (h1, a1, z2, h2, h3, hw2, h4, hw3, h5, dlogits)
+
+
+def conv_backward(x, p, shapes, cache):
+    b, hw, c1, c2 = shapes
+    h1, a1, z2, h2, h3, hw2, h4, hw3, h5, dlogits = cache
+    g = {}
+    g["w_head"], g["b_head"] = h5.T @ dlogits, dlogits.sum(0)
+    dh5 = dlogits @ p["w_head"].T
+    dh4 = np.repeat(dh5[:, None, :], hw3 * hw3, 1).reshape(b, -1) / (hw3 * hw3)
+    dh3 = avgpool_bwd(dh4, hw2, c2, 2, 2, b)
+    g["w_down"], g["b_down"], dh2 = conv2d_bwd(h2, p["w_down"], hw, 2, 1,
+                                               True, h3, dh3)
+    ds = dh2 * (h2 > 0)                                # outer ReLU of the pair
+    g["w_r2"], g["b_r2"], da1 = conv2d_bwd(a1, p["w_r2"], hw, 1, 1,
+                                           False, z2, ds)
+    g["w_r1"], g["b_r1"], dh1_inner = conv2d_bwd(h1, p["w_r1"], hw, 1, 1,
+                                                 True, a1, da1)
+    dh1 = dh1_inner + ds                               # skip connection
+    g["w_stem"], g["b_stem"], dx = conv2d_bwd(x, p["w_stem"], hw, 1, 1,
+                                              True, h1, dh1)
+    return g, dx
+
+
+def check(name, params, grads, run, extra=""):
+    eps = 1e-6
+    checked = 0
+    for pname, p in params.items():
+        flat = p.reshape(-1)
+        for i in (0, flat.size // 2, flat.size - 1):
+            orig = flat[i]
+            flat[i] = orig + eps
+            lp = run()
+            flat[i] = orig - eps
+            lm = run()
+            flat[i] = orig
+            fd = (lp - lm) / (2 * eps)
+            an = grads[pname].reshape(-1)[i]
+            assert abs(fd - an) < 1e-6 + 1e-4 * abs(an), \
+                (name, pname, i, fd, an)
+            checked += 1
+    print(f"{name} backward mirror: {checked} finite-diff checks passed{extra}")
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # ---- conv graph --------------------------------------------------------
+    b, hw, c1, c2, classes = 2, 6, 3, 5, 4
+    shapes = (b, hw, c1, c2)
+    x = rng.normal(0, 1, size=(b, hw * hw * 2))        # 2 input channels
+    labels = rng.integers(0, classes, size=b)
+    p = dict(
+        w_stem=rng.normal(0, 0.3, size=(3, 3, 2, c1)), b_stem=rng.normal(0, 0.05, c1),
+        w_r1=rng.normal(0, 0.3, size=(3, 3, c1, c1)), b_r1=rng.normal(0, 0.05, c1),
+        w_r2=rng.normal(0, 0.3, size=(3, 3, c1, c1)), b_r2=rng.normal(0, 0.05, c1),
+        w_down=rng.normal(0, 0.3, size=(3, 3, c1, c2)), b_down=rng.normal(0, 0.05, c2),
+        w_head=rng.normal(0, 0.3, size=(c2, classes)), b_head=np.zeros(classes),
+    )
+
+    def run_conv():
+        return conv_forward(x, labels, p, shapes)[0]
+
+    loss, cache = conv_forward(x, labels, p, shapes)
+    grads, dx = conv_backward(x, p, shapes, cache)
+    check("conv", p, grads, run_conv, extra=f" (loss {loss:.4f})")
+
+    # input gradient (what delta_in hands the module below)
+    eps = 1e-6
+    flat = x.reshape(-1)
+    for i in (0, flat.size // 2, flat.size - 1):
+        orig = flat[i]
+        flat[i] = orig + eps
+        lp = run_conv()
+        flat[i] = orig - eps
+        lm = run_conv()
+        flat[i] = orig
+        fd = (lp - lm) / (2 * eps)
+        an = dx.reshape(-1)[i]
+        assert abs(fd - an) < 1e-6 + 1e-4 * abs(an), ("conv dx", i, fd, an)
+    print("conv input-gradient mirror: 3 finite-diff checks passed")
+
+    # ---- attention graph ---------------------------------------------------
+    bb, seq, d, vocab = 2, 4, 5, 6
+    rows = bb * seq
+    xa = rng.normal(0, 1, size=(rows, d))
+    labels_a = rng.integers(0, vocab, size=rows)
+    pa = dict(
+        wq=rng.normal(0, 0.4, size=(d, d)), bq=rng.normal(0, 0.05, d),
+        wk=rng.normal(0, 0.4, size=(d, d)), bk=rng.normal(0, 0.05, d),
+        wv=rng.normal(0, 0.4, size=(d, d)), bv=rng.normal(0, 0.05, d),
+        wo=rng.normal(0, 0.4, size=(d, d)), bo=rng.normal(0, 0.05, d),
+        w1=rng.normal(0, 0.4, size=(d, d)), b1=np.zeros(d),
+        w2=rng.normal(0, 0.4, size=(d, d)), b2=np.zeros(d),
+        g=np.ones(d) + rng.normal(0, 0.05, d), be=rng.normal(0, 0.05, d),
+        wh=rng.normal(0, 0.4, size=(d, vocab)), bh=np.zeros(vocab),
+    )
+
+    def attn_forward():
+        y, cache = attention(xa, seq, pa["wq"], pa["bq"], pa["wk"], pa["bk"],
+                             pa["wv"], pa["bv"], pa["wo"], pa["bo"])
+        h1 = np.maximum(y @ pa["w1"] + pa["b1"], 0)
+        z = np.maximum(y + h1 @ pa["w2"] + pa["b2"], 0)
+        rstd = 1 / np.sqrt(z.var(1) + 1e-5)
+        xhat = (z - z.mean(1, keepdims=True)) * rstd[:, None]
+        ln = xhat * pa["g"] + pa["be"]
+        logits = ln @ pa["wh"] + pa["bh"]
+        loss, dlogits = xent(logits, labels_a)
+        return loss, (y, cache, h1, z, rstd, xhat, ln, dlogits)
+
+    def run_attn():
+        return attn_forward()[0]
+
+    loss, (y, cache, h1, z, rstd, xhat, ln, dlogits) = attn_forward()
+    g = {}
+    g["wh"], g["bh"] = ln.T @ dlogits, dlogits.sum(0)
+    dln = dlogits @ pa["wh"].T
+    dxh = dln * pa["g"]
+    g["g"], g["be"] = (dln * xhat).sum(0), dln.sum(0)
+    dz = rstd[:, None] * (dxh - dxh.mean(1, keepdims=True)
+                          - xhat * (dxh * xhat).mean(1, keepdims=True))
+    dsr = dz * (z > 0)
+    g["w2"], g["b2"] = h1.T @ dsr, dsr.sum(0)
+    dh1 = (dsr @ pa["w2"].T) * (h1 > 0)
+    g["w1"], g["b1"] = y.T @ dh1, dh1.sum(0)
+    dy = dh1 @ pa["w1"].T + dsr
+    ga, _ = attention_bwd(xa, seq, pa["wq"], pa["wk"], pa["wv"], pa["wo"],
+                          cache, dy)
+    g.update(ga)
+    check("attention", pa, g, run_attn, extra=f" (loss {loss:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,7 @@ struct Stash {
 
 pub struct DdgTrainer {
     stack: ModuleStack,
-    /// stash[k]: FIFO of in-flight forwards (front = oldest), len <= K-k.
+    /// `stash[k]`: FIFO of in-flight forwards (front = oldest), len <= K-k.
     stash: Vec<VecDeque<Stash>>,
     pending_delta: Vec<Tensor>,
     step: usize,

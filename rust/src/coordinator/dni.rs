@@ -93,10 +93,19 @@ impl Trainer for DniTrainer {
         let synth_params: usize = self.synths.iter()
             .flat_map(|s| s.params.iter().map(|p| p.size_bytes()))
             .sum();
-        // synthesizer activations: ~one boundary-sized map per synth layer
-        // (two hidden + one output, the paper's L_s = 3 architecture)
-        let synth_acts: usize = self.stack.modules.iter().take(self.synths.len())
-            .map(|m| m.spec.out_bytes() * 3)
+        // synthesizer activations, from the actual synth shapes (the
+        // paper's L_s = 3 layers: two hidden-wide + one boundary-wide map
+        // per synth — same formula as memory::predicted_bytes, so the
+        // measured ledger and the analytic model agree by construction)
+        let synth_acts: usize = self.synths.iter()
+            .map(|s| {
+                let rows = self.stack.modules[s.spec.boundary].spec.out_shape[0];
+                let (d, hidden) = match s.spec.param_shapes.first() {
+                    Some(w1) if w1.len() == 2 => (w1[0], w1[1]),
+                    _ => (0, 0),
+                };
+                4 * rows * (2 * hidden + d)
+            })
             .sum();
         MemoryReport {
             activations: self.stack.activation_bytes(),

@@ -27,9 +27,9 @@ use super::strategy::{MemoryReport, StepStats, StepTiming, Trainer};
 
 pub struct FrTrainer {
     stack: ModuleStack,
-    /// history[k]: replay ring for module k's inputs (capacity K-k).
+    /// `history[k]`: replay ring for module k's inputs (capacity K-k).
     history: Vec<ReplayBuffer>,
-    /// pending_delta[k]: δ for module k produced by module k+1 last iter.
+    /// `pending_delta[k]`: δ for module k produced by module k+1 last iter.
     pending_delta: Vec<Tensor>,
     /// Skip updates while a module's replay slot is still the zero prefill
     /// (paper sets h := 0; updating on zeros with zero deltas is a no-op for

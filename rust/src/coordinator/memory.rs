@@ -1,9 +1,14 @@
-//! Analytic activation-memory model (Table 1 / Fig 5).
+//! Analytic activation-memory model (Table 1 / Fig 5; docs/DESIGN.md
+//! §Memory model).
 //!
 //! Counts the bytes each algorithm must hold, computed from the manifest's
 //! per-layer activation sizes — i.e. what a K-GPU deployment stores, not
 //! this host's RSS (our bwd artifacts rematerialize, which would make RSS
-//! measurements meaningless for the paper's comparison):
+//! measurements meaningless for the paper's comparison). The per-module
+//! `in_bytes`/`out_bytes`/`act_bytes` come straight from the op-graph
+//! signatures in `runtime::spec`, so on the conv configs these are real
+//! feature-map sizes (e.g. a 32×32×8 boundary map), not stand-in vector
+//! widths:
 //!
 //!   BP   O(L):        one in-flight batch of per-layer activations
 //!   FR   O(L + K^2):  + module-input history rings + K-1 pending deltas
@@ -61,14 +66,23 @@ pub fn predicted_bytes(m: &Manifest, algo: Algo) -> usize {
             stash + deltas
         }
         Algo::Dni => {
-            // L_s = 3 synthesizer layers, each holding ~a boundary-sized map,
-            // plus synthesizer parameters (5x5 convs on C channels)
+            // L_s = 3 synthesizer layers; parameters AND per-layer
+            // activations are priced from the manifest's synth shapes
+            // (w1 is (d, hidden): two hidden-wide activations plus the
+            // d-wide output per boundary). On narrow boundaries
+            // hidden == d, which reduces to the former "3 boundary-sized
+            // maps" accounting exactly.
             let synth: usize = m.synth.iter()
                 .map(|s| {
                     let params: usize = s.param_shapes.iter()
                         .map(|p| p.iter().product::<usize>() * 4)
                         .sum();
-                    params + m.modules[s.boundary].out_bytes() * 3
+                    let rows = m.modules[s.boundary].out_shape[0];
+                    let (d, hidden) = match s.param_shapes.first() {
+                        Some(w1) if w1.len() == 2 => (w1[0], w1[1]),
+                        _ => (0, 0),
+                    };
+                    params + 4 * rows * (2 * hidden + d)
                 })
                 .sum();
             one_batch + synth

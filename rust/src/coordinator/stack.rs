@@ -68,7 +68,7 @@ impl ModuleStack {
     }
 
     /// Forward through all modules; returns boundary activations:
-    /// hs[k] = input to module k, hs[K] = logits.
+    /// `hs[k]` = input to module k, `hs[K]` = logits.
     pub fn forward_chain(&self, input: &Tensor) -> Result<Vec<Tensor>> {
         let mut hs = Vec::with_capacity(self.k() + 1);
         hs.push(input.clone());

@@ -104,7 +104,7 @@ impl SyntheticCifar {
         }
     }
 
-    /// Next training batch as NHWC images: ([B,32,32,3] f32, [B] i32).
+    /// Next training batch as NHWC images: `([B,32,32,3] f32, [B] i32)`.
     pub fn train_batch(&mut self, batch: usize) -> (Tensor, Tensor) {
         let mut rng = self.train_rng.fork(0);
         let augment = self.augment;

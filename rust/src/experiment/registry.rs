@@ -10,24 +10,28 @@
 //! 3. otherwise                   -> the registered procedural config on
 //!                                   the native CPU backend (no disk at all)
 //!
-//! The resnet_* names are *stand-ins* (DESIGN.md substitution 3): residual
-//! MLPs whose depth/width scale across s/m/l the way the paper's
-//! ResNet164/101/152 do, on synthetic CIFAR. `transformer_tiny` is the
-//! char-LM stand-in: a token embedding plus a position-wise residual trunk.
+//! The resnet_* names resolve to *faithful* conv op graphs — 3×3 conv
+//! residual blocks on 32×32×3 synthetic CIFAR, the paper's experimental
+//! family with depth/width scaled to the 1-core testbed — and
+//! `transformer_tiny` to a real (single-head, causal) attention + MLP
+//! block transformer. The earlier residual-MLP / position-wise stand-ins
+//! these names used to denote are retired; see docs/DESIGN.md
+//! §Substitution 3 (retired).
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{BackendKind, Manifest, NativeLmSpec, NativeMlpSpec};
+use crate::runtime::{BackendKind, Manifest, NativeConvSpec, NativeLmSpec, NativeMlpSpec};
 
 #[derive(Clone, Copy)]
 enum Family {
     /// The quickstart testbed MLP (depth grows with K, as seeded).
     MlpTiny,
-    /// CIFAR-style residual-MLP stand-in with fixed depth/width.
-    ResMlp { hidden: usize, depth: usize, classes: usize },
-    /// Char-LM transformer stand-in (embedding + position-wise trunk).
+    /// CIFAR conv ResNet (stem width, stages double channels / halve the
+    /// side, `blocks` residual conv pairs per stage, GAP + linear head).
+    Conv { stem: usize, stages: usize, blocks: usize, pool: bool, classes: usize },
+    /// Char-LM transformer (embedding + causal attention/MLP blocks).
     CharLm,
 }
 
@@ -47,15 +51,12 @@ impl ModelEntry {
                 cfg.seed = seed;
                 cfg.manifest()?
             }
-            Family::ResMlp { hidden, depth, classes } => NativeMlpSpec {
-                batch: 16,
-                input_dim: 3072,
-                hidden,
-                depth,
-                num_classes: classes,
-                k,
-                seed,
-            }.manifest()?,
+            Family::Conv { stem, stages, blocks, pool, classes } => {
+                let mut cfg = NativeConvSpec::cifar(stem, stages, blocks, classes, k);
+                cfg.pool_before_gap = pool;
+                cfg.seed = seed;
+                cfg.manifest()?
+            }
             Family::CharLm => {
                 let mut cfg = NativeLmSpec::tiny(k);
                 cfg.seed = seed;
@@ -75,37 +76,41 @@ const ENTRIES: &[ModelEntry] = &[
     },
     ModelEntry {
         name: "resnet_s",
-        about: "ResNet164 stand-in: 8-layer residual MLP, width 64, C-10",
-        family: Family::ResMlp { hidden: 64, depth: 6, classes: 10 },
+        about: "CIFAR conv ResNet (ResNet164 role): 3x3 stem + 3 stages of \
+                residual conv pairs, 8->16->32 ch, GAP head, C-10",
+        family: Family::Conv { stem: 8, stages: 3, blocks: 1, pool: false, classes: 10 },
     },
     ModelEntry {
         name: "resnet_m",
-        about: "ResNet101 stand-in: 12-layer residual MLP, width 96, C-10",
-        family: Family::ResMlp { hidden: 96, depth: 10, classes: 10 },
+        about: "CIFAR conv ResNet (ResNet101 role): 3 stages of residual \
+                conv pairs, 12->24->48 ch, GAP head, C-10",
+        family: Family::Conv { stem: 12, stages: 3, blocks: 1, pool: false, classes: 10 },
     },
     ModelEntry {
         name: "resnet_l",
-        about: "ResNet152 stand-in: 16-layer residual MLP, width 128, C-10",
-        family: Family::ResMlp { hidden: 128, depth: 14, classes: 10 },
+        about: "CIFAR conv ResNet (ResNet152 role): 3 stages of residual \
+                conv pairs, 16->32->64 ch, avgpool + GAP head, C-10",
+        family: Family::Conv { stem: 16, stages: 3, blocks: 1, pool: true, classes: 10 },
     },
     ModelEntry {
         name: "resnet_s_c100",
         about: "resnet_s with a 100-class head (synthetic CIFAR-100)",
-        family: Family::ResMlp { hidden: 64, depth: 6, classes: 100 },
+        family: Family::Conv { stem: 8, stages: 3, blocks: 1, pool: false, classes: 100 },
     },
     ModelEntry {
         name: "resnet_m_c100",
         about: "resnet_m with a 100-class head (synthetic CIFAR-100)",
-        family: Family::ResMlp { hidden: 96, depth: 10, classes: 100 },
+        family: Family::Conv { stem: 12, stages: 3, blocks: 1, pool: false, classes: 100 },
     },
     ModelEntry {
         name: "resnet_l_c100",
         about: "resnet_l with a 100-class head (synthetic CIFAR-100)",
-        family: Family::ResMlp { hidden: 128, depth: 14, classes: 100 },
+        family: Family::Conv { stem: 16, stages: 3, blocks: 1, pool: true, classes: 100 },
     },
     ModelEntry {
         name: "transformer_tiny",
-        about: "char-LM stand-in: token embed + position-wise residual trunk",
+        about: "char-LM transformer: token embed + causal-attention/MLP \
+                blocks (depth scales with K), d_model 32, vocab 96",
         family: Family::CharLm,
     },
 ];

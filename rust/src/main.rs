@@ -1,13 +1,16 @@
 //! `frctl` — the Features Replay training launcher.
 //!
 //! Subcommands:
-//!   models                             list registered model names
-//!   info     --model <cfg> --k <K>     inspect a manifest
-//!   train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
-//!   compare  --model <cfg> --k <K>     all four methods side by side
-//!   sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
-//!   memory   --model <cfg>             Fig 5 / Table 1 memory model
-//!   parallel --model <cfg> --k <K>     threaded K-worker FR deployment
+//!
+//! ```text
+//! models                             list registered model names
+//! info     --model <cfg> --k <K>     inspect a manifest
+//! train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
+//! compare  --model <cfg> --k <K>     all four methods side by side
+//! sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
+//! memory   --model <cfg>             Fig 5 / Table 1 memory model
+//! parallel --model <cfg> --k <K>     threaded K-worker FR deployment
+//! ```
 //!
 //! Every subcommand goes through the `Experiment` builder: the model
 //! registry resolves names to procedural native configs (always available,

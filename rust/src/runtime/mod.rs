@@ -22,6 +22,6 @@ pub mod tensor;
 pub use backend::{Backend, BackendKind, LossOutput, ModuleExec, ResidentParams, SynthExec};
 pub use engine::Engine;
 pub use module::{ModuleRuntime, SynthRuntime};
-pub use native::{NativeBackend, NativeLmSpec, NativeMlpSpec};
-pub use spec::{Manifest, ModuleSpec, NativeOp, SynthSpec};
+pub use native::{NativeBackend, NativeConvSpec, NativeLmSpec, NativeMlpSpec};
+pub use spec::{Manifest, ModuleSpec, NativeOp, OpSig, SynthSpec};
 pub use tensor::{copy_metrics, DType, Tensor};

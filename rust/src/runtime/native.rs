@@ -2,12 +2,17 @@
 //! graphs in `ModuleSpec::native_ops`, so the crate compiles, trains, tests
 //! and benches fully offline — no Python, no HLO artifacts, no PJRT.
 //!
-//! The kernel set mirrors `python/compile/kernels/ref.py` (the L1 oracles):
-//! matmul, fused bias+ReLU, layernorm, and softmax cross-entropy, plus their
-//! hand-derived backward passes. Backward follows the same contract as the
-//! AOT bwd artifacts: recompute the module forward from `(params, input)`
-//! and chain-rule the provided output delta, so FR's replay semantics are
-//! identical across backends.
+//! The dense kernel set mirrors `python/compile/kernels/ref.py` (the L1
+//! oracles): matmul, fused bias+ReLU, layernorm, and softmax cross-entropy.
+//! On top of those ride the structured ops: token embedding (gather /
+//! scatter-add), im2col convolution with stride/padding, average + global
+//! pooling, and causal single-head attention — each with a hand-derived
+//! backward (the math is documented per [`NativeOp`] variant and checked
+//! against central differences in both the Rust tests and the numpy
+//! mirrors under `python/tests/`). Backward follows the same contract as
+//! the AOT bwd artifacts: recompute the module forward from
+//! `(params, input)` and chain-rule the provided output delta, so FR's
+//! replay semantics are identical across backends.
 //!
 //! Parameters are resident by construction: the executor reads the host
 //! `Arc` buffers in place on every call — zero marshaling, which is the
@@ -214,6 +219,212 @@ pub mod kernels {
         de
     }
 
+    /// im2col over NHWC input: `x (b, hw·hw·c)` with a `k × k` window at
+    /// `stride`/`pad` -> `(b·ohw·ohw, k·k·c)` patch matrix whose rows are
+    /// laid out `(ky, kx, c)` — exactly the row-major flattening of a
+    /// `(k, k, cin, cout)` conv weight, so the convolution is one matmul.
+    /// Out-of-bounds taps (zero padding) stay 0.
+    pub fn im2col(x: &[f32], b: usize, hw: usize, c: usize,
+                  k: usize, stride: usize, pad: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let patch = k * k * c;
+        let mut cols = vec![0.0f32; b * ohw * ohw * patch];
+        for bi in 0..b {
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            for oy in 0..ohw {
+                for ox in 0..ohw {
+                    let row = &mut cols[((bi * ohw + oy) * ohw + ox) * patch..][..patch];
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= hw as isize {
+                                continue;
+                            }
+                            let src = (iy as usize * hw + ix as usize) * c;
+                            let dst = (ky * k + kx) * c;
+                            row[dst..dst + c].copy_from_slice(&img[src..src + c]);
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Adjoint of [`im2col`]: scatter-add a `(b·ohw·ohw, k·k·c)` patch
+    /// gradient back onto the `(b, hw·hw·c)` input layout (taps that fell
+    /// in the zero padding are dropped). This is the conv input gradient:
+    /// `dx = col2im(dz wᵀ)`.
+    pub fn col2im(cols: &[f32], b: usize, hw: usize, c: usize,
+                  k: usize, stride: usize, pad: usize) -> Vec<f32> {
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let patch = k * k * c;
+        debug_assert_eq!(cols.len(), b * ohw * ohw * patch);
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        for bi in 0..b {
+            let img = &mut dx[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            for oy in 0..ohw {
+                for ox in 0..ohw {
+                    let row = &cols[((bi * ohw + oy) * ohw + ox) * patch..][..patch];
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= hw as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= hw as isize {
+                                continue;
+                            }
+                            let dst = (iy as usize * hw + ix as usize) * c;
+                            let src = (ky * k + kx) * c;
+                            for (d, &v) in img[dst..dst + c].iter_mut()
+                                .zip(&row[src..src + c]) {
+                                *d += v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    /// Average pooling over NHWC: `kernel × kernel` window at `stride`, no
+    /// padding. `(b, hw·hw·c) -> (b, ohw·ohw·c)` with
+    /// `ohw = (hw − kernel)/stride + 1`.
+    pub fn avgpool(x: &[f32], b: usize, hw: usize, c: usize,
+                   kernel: usize, stride: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        let ohw = (hw - kernel) / stride + 1;
+        let inv = 1.0 / (kernel * kernel) as f32;
+        let mut out = vec![0.0f32; b * ohw * ohw * c];
+        for bi in 0..b {
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            for oy in 0..ohw {
+                for ox in 0..ohw {
+                    let dst = &mut out[((bi * ohw + oy) * ohw + ox) * c..][..c];
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            let src = ((oy * stride + ky) * hw + ox * stride + kx) * c;
+                            for (d, &v) in dst.iter_mut().zip(&img[src..src + c]) {
+                                *d += v * inv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// [`avgpool`] backward: each output's gradient is spread as
+    /// `dy / kernel²` over its window (positions never covered by a strided
+    /// window receive zero).
+    pub fn avgpool_bwd(dy: &[f32], b: usize, hw: usize, c: usize,
+                       kernel: usize, stride: usize) -> Vec<f32> {
+        let ohw = (hw - kernel) / stride + 1;
+        debug_assert_eq!(dy.len(), b * ohw * ohw * c);
+        let inv = 1.0 / (kernel * kernel) as f32;
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        for bi in 0..b {
+            let img = &mut dx[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            for oy in 0..ohw {
+                for ox in 0..ohw {
+                    let src = &dy[((bi * ohw + oy) * ohw + ox) * c..][..c];
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            let dst = ((oy * stride + ky) * hw + ox * stride + kx) * c;
+                            for (d, &v) in img[dst..dst + c].iter_mut().zip(src) {
+                                *d += v * inv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    /// Global average pool over NHWC: `(b, hw·hw·c) -> (b, c)`, the mean of
+    /// every spatial position per channel.
+    pub fn global_avgpool(x: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        let inv = 1.0 / (hw * hw) as f32;
+        let mut out = vec![0.0f32; b * c];
+        for bi in 0..b {
+            let dst = &mut out[bi * c..(bi + 1) * c];
+            for px in x[bi * hw * hw * c..(bi + 1) * hw * hw * c].chunks_exact(c) {
+                for (d, &v) in dst.iter_mut().zip(px) {
+                    *d += v * inv;
+                }
+            }
+        }
+        out
+    }
+
+    /// [`global_avgpool`] backward: `dx = dy / hw²` broadcast over every
+    /// spatial position.
+    pub fn global_avgpool_bwd(dy: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
+        debug_assert_eq!(dy.len(), b * c);
+        let inv = 1.0 / (hw * hw) as f32;
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        for bi in 0..b {
+            let src = &dy[bi * c..(bi + 1) * c];
+            for px in dx[bi * hw * hw * c..(bi + 1) * hw * hw * c].chunks_exact_mut(c) {
+                for (d, &v) in px.iter_mut().zip(src) {
+                    *d += v * inv;
+                }
+            }
+        }
+        dx
+    }
+
+    /// Row-wise softmax of a `(seq, seq)` score matrix under the causal
+    /// mask: row `i` normalizes over columns `0..=i` and masked columns are
+    /// written as exact zeros (so the backward's `a == 0` entries carry no
+    /// gradient). In place.
+    pub fn causal_softmax(s: &mut [f32], seq: usize) {
+        debug_assert_eq!(s.len(), seq * seq);
+        for i in 0..seq {
+            let row = &mut s[i * seq..(i + 1) * seq];
+            let m = row[..=i].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row[..=i].iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row[..=i].iter_mut() {
+                *v *= inv;
+            }
+            row[i + 1..].fill(0.0);
+        }
+    }
+
+    /// Softmax backward per row from the cached probabilities:
+    /// `ds = a ⊙ (da − Σ_j da ⊙ a)`, scaled by `scale` (the `1/√d` folded
+    /// into the scores). Masked entries have `a = 0` and thus `ds = 0`.
+    pub fn softmax_bwd_scaled(a: &[f32], da: &[f32], seq: usize, scale: f32) -> Vec<f32> {
+        debug_assert_eq!(a.len(), seq * seq);
+        debug_assert_eq!(da.len(), seq * seq);
+        let mut ds = vec![0.0f32; seq * seq];
+        for i in 0..seq {
+            let ar = &a[i * seq..(i + 1) * seq];
+            let dar = &da[i * seq..(i + 1) * seq];
+            let dot: f32 = ar.iter().zip(dar).map(|(&p, &d)| p * d).sum();
+            for (j, o) in ds[i * seq..(i + 1) * seq].iter_mut().enumerate() {
+                *o = scale * ar[j] * (dar[j] - dot);
+            }
+        }
+        ds
+    }
+
     /// Mean softmax cross-entropy over `(b, c)` logits with `(b,)` i32
     /// labels; returns `(loss, dlogits)` where `dlogits = (softmax - 1hot)/b`.
     pub fn softmax_xent(logits: &[f32], labels: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
@@ -241,13 +452,20 @@ pub mod kernels {
     }
 }
 
-/// A shaped, validated plan for one `NativeOp`.
+/// A shaped, validated plan for one `NativeOp` (shapes resolved against the
+/// module's parameter list via [`NativeOp::signature`]).
 #[derive(Clone, Copy, Debug)]
 enum Plan {
     Dense { din: usize, dout: usize, relu: bool },
     Residual { d: usize },
     LayerNorm { d: usize },
     Embed { vocab: usize, d: usize },
+    Conv { hw: usize, cin: usize, cout: usize, k: usize, stride: usize,
+           pad: usize, ohw: usize, relu: bool },
+    ConvPair { hw: usize, c: usize },
+    AvgPool { hw: usize, c: usize, kernel: usize, stride: usize },
+    GlobalAvg { hw: usize, c: usize },
+    Attention { seq: usize, d: usize },
 }
 
 /// Per-plan activation cache kept by the traced forward for the backward.
@@ -256,8 +474,24 @@ enum Aux {
     Residual { h1: Vec<f32> },
     LayerNorm { xhat: Vec<f32>, rstd: Vec<f32> },
     Embed,
+    /// im2col patches are recomputed from the replayed input in backward.
+    Conv,
+    ConvPair { h1: Vec<f32> },
+    AvgPool,
+    GlobalAvg,
+    Attention { q: Vec<f32>, k: Vec<f32>, v: Vec<f32>,
+                /// causal softmax probabilities, `(rows, seq)` (one
+                /// `(seq, seq)` block per sequence)
+                probs: Vec<f32>,
+                /// pre-projection context `a v`, `(rows, d)`
+                ctx: Vec<f32> },
 }
 
+/// One module compiled for the native backend: its validated op plans plus
+/// the parameter offsets to walk them against a flat parameter list. The
+/// backward recomputes the forward from `(params, input)` (replay
+/// semantics) and chain-rules the output delta through the plans in
+/// reverse.
 pub struct NativeModule {
     spec: ModuleSpec,
     plans: Vec<Plan>,
@@ -277,7 +511,8 @@ impl NativeModule {
         let starts_with_embed = matches!(spec.native_ops.first(), Some(NativeOp::Embed));
         if starts_with_embed {
             // Token entry point: `(b, seq)` i32, every row becomes one
-            // embedded position — the op graph below is position-wise.
+            // embedded position — downstream ops are position-wise or
+            // (Attention) mix rows within each length-`seq` group.
             if spec.in_shape.len() != 2 || spec.in_dtype != DType::I32 {
                 bail!("module {}: Embed wants rank-2 i32 tokens, got {:?} {:?}",
                       spec.index, spec.in_shape, spec.in_dtype);
@@ -300,35 +535,47 @@ impl NativeModule {
         let mut pi = 0usize;
         for (oi, op) in spec.native_ops.iter().enumerate() {
             offsets.push(pi);
-            let plan = match op {
-                NativeOp::Dense { relu } => {
-                    let w = spec.param_shapes.get(pi)
-                        .with_context(|| format!("module {}: missing dense weight", spec.index))?;
-                    if w.len() != 2 || w[0] != width {
-                        bail!("module {}: dense weight {w:?} does not accept \
-                               width {width}", spec.index);
-                    }
-                    let p = Plan::Dense { din: w[0], dout: w[1], relu: *relu };
-                    width = w[1];
-                    p
-                }
+            let end = pi + op.param_tensors();
+            if end > spec.param_shapes.len() {
+                bail!("module {}: op {op:?} wants {} param tensors but the \
+                       manifest run has {} left", spec.index,
+                      op.param_tensors(), spec.param_shapes.len() - pi);
+            }
+            let pp = &spec.param_shapes[pi..end];
+            // Shared shape/width validation lives in NativeOp::signature —
+            // the same authority the manifest builders used, so a manifest
+            // that built is a manifest that loads.
+            let sig = op.signature(batch, width, pp)
+                .with_context(|| format!("module {} op {oi}", spec.index))?;
+            let plan = match *op {
+                NativeOp::Dense { relu } =>
+                    Plan::Dense { din: width, dout: sig.out_width, relu },
                 NativeOp::ResidualPair => Plan::Residual { d: width },
                 NativeOp::LayerNorm => Plan::LayerNorm { d: width },
                 NativeOp::Embed => {
                     if oi != 0 {
                         bail!("module {}: Embed must be the first op", spec.index);
                     }
-                    let e = spec.param_shapes.get(pi)
-                        .with_context(|| format!("module {}: missing embed table", spec.index))?;
-                    if e.len() != 2 {
-                        bail!("module {}: embed table must be rank-2 \
-                               (vocab, d), got {e:?}", spec.index);
-                    }
-                    width = e[1];
-                    Plan::Embed { vocab: e[0], d: e[1] }
+                    Plan::Embed { vocab: pp[0][0], d: pp[0][1] }
                 }
+                NativeOp::Conv2d { hw, stride, pad, relu } => {
+                    let (k, cout) = (pp[0][0], pp[0][3]);
+                    Plan::Conv {
+                        hw, cin: width / (hw * hw), cout, k, stride, pad,
+                        ohw: sig.out_side, relu,
+                    }
+                }
+                NativeOp::ConvResidualPair { hw } =>
+                    Plan::ConvPair { hw, c: width / (hw * hw) },
+                NativeOp::AvgPool2d { hw, kernel, stride } =>
+                    Plan::AvgPool { hw, c: width / (hw * hw), kernel, stride },
+                NativeOp::GlobalAvgPool { hw } =>
+                    Plan::GlobalAvg { hw, c: width / (hw * hw) },
+                NativeOp::Attention { seq } =>
+                    Plan::Attention { seq, d: width },
             };
-            pi += op.param_tensors();
+            width = sig.out_width;
+            pi = end;
             plans.push(plan);
         }
         if pi != spec.param_shapes.len() {
@@ -392,6 +639,65 @@ impl NativeModule {
                 Plan::Embed { vocab, d } => {
                     let y = kernels::embed(h_in.i32s(), pp[0].f32s(), vocab, d);
                     (y, Aux::Embed)
+                }
+                Plan::Conv { hw, cin, cout, k, stride, pad, ohw, relu } => {
+                    let cols = kernels::im2col(cur, b, hw, cin, k, stride, pad);
+                    let mut y = kernels::matmul(&cols, pp[0].f32s(),
+                                                b * ohw * ohw, k * k * cin, cout);
+                    kernels::add_bias(&mut y, pp[1].f32s());
+                    if relu {
+                        kernels::relu(&mut y);
+                    }
+                    (y, Aux::Conv)
+                }
+                Plan::ConvPair { hw, c } => {
+                    let rows = b * hw * hw;
+                    let cols1 = kernels::im2col(cur, b, hw, c, 3, 1, 1);
+                    let mut h1 = kernels::matmul(&cols1, pp[0].f32s(), rows, 9 * c, c);
+                    kernels::add_bias(&mut h1, pp[1].f32s());
+                    kernels::relu(&mut h1);
+                    let cols2 = kernels::im2col(&h1, b, hw, c, 3, 1, 1);
+                    let mut y = kernels::matmul(&cols2, pp[2].f32s(), rows, 9 * c, c);
+                    kernels::add_bias(&mut y, pp[3].f32s());
+                    for (v, &xv) in y.iter_mut().zip(cur.iter()) {
+                        *v += xv;
+                    }
+                    kernels::relu(&mut y);
+                    (y, Aux::ConvPair { h1 })
+                }
+                Plan::AvgPool { hw, c, kernel, stride } =>
+                    (kernels::avgpool(cur, b, hw, c, kernel, stride), Aux::AvgPool),
+                Plan::GlobalAvg { hw, c } =>
+                    (kernels::global_avgpool(cur, b, hw, c), Aux::GlobalAvg),
+                Plan::Attention { seq, d } => {
+                    let mut q = kernels::matmul(cur, pp[0].f32s(), b, d, d);
+                    kernels::add_bias(&mut q, pp[1].f32s());
+                    let mut kk = kernels::matmul(cur, pp[2].f32s(), b, d, d);
+                    kernels::add_bias(&mut kk, pp[3].f32s());
+                    let mut v = kernels::matmul(cur, pp[4].f32s(), b, d, d);
+                    kernels::add_bias(&mut v, pp[5].f32s());
+                    let scale = 1.0 / (d as f32).sqrt();
+                    let mut probs = vec![0.0f32; b * seq];
+                    let mut ctx = vec![0.0f32; b * d];
+                    for g in 0..b / seq {
+                        let span = g * seq * d..(g + 1) * seq * d;
+                        let mut s = kernels::matmul_nt(&q[span.clone()],
+                                                       &kk[span.clone()], seq, d, seq);
+                        for sv in s.iter_mut() {
+                            *sv *= scale;
+                        }
+                        kernels::causal_softmax(&mut s, seq);
+                        ctx[span].copy_from_slice(
+                            &kernels::matmul(&s, &v[g * seq * d..(g + 1) * seq * d],
+                                             seq, seq, d));
+                        probs[g * seq * seq..(g + 1) * seq * seq].copy_from_slice(&s);
+                    }
+                    let mut y = kernels::matmul(&ctx, pp[6].f32s(), b, d, d);
+                    kernels::add_bias(&mut y, pp[7].f32s());
+                    for (yv, &xv) in y.iter_mut().zip(cur.iter()) {
+                        *yv += xv;
+                    }
+                    (y, Aux::Attention { q, k: kk, v, probs, ctx })
                 }
             };
             if traced {
@@ -480,6 +786,114 @@ impl NativeModule {
                     grads[off] = Some(tensor2(vocab, d, de));
                     grad = Vec::new();
                 }
+                (Plan::Conv { hw, cin, cout, k, stride, pad, ohw, relu }, Aux::Conv) => {
+                    let mut dz = grad;
+                    if relu {
+                        kernels::relu_bwd(&mut dz, y);
+                    }
+                    let rows = b * ohw * ohw;
+                    // the patch matrix is recomputed from the (replayed)
+                    // input rather than cached — backward is self-contained
+                    // given (params, input), the backend contract
+                    let cols = kernels::im2col(x, b, hw, cin, k, stride, pad);
+                    let dw = kernels::matmul_tn(&cols, &dz, rows, k * k * cin, cout);
+                    let db = kernels::bias_grad(&dz, cout);
+                    grads[off] = Some(tensor_shaped(vec![k, k, cin, cout], dw));
+                    grads[off + 1] = Some(tensor1(db));
+                    grad = if need_dx {
+                        let dcols = kernels::matmul_nt(&dz, pp[0].f32s(),
+                                                       rows, cout, k * k * cin);
+                        kernels::col2im(&dcols, b, hw, cin, k, stride, pad)
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::ConvPair { hw, c }, Aux::ConvPair { h1 }) => {
+                    let mut ds = grad;
+                    kernels::relu_bwd(&mut ds, y);
+                    let rows = b * hw * hw;
+                    // upper conv: z2 = conv(h1, w2) + b2
+                    let cols2 = kernels::im2col(h1, b, hw, c, 3, 1, 1);
+                    let dw2 = kernels::matmul_tn(&cols2, &ds, rows, 9 * c, c);
+                    let db2 = kernels::bias_grad(&ds, c);
+                    let dcols2 = kernels::matmul_nt(&ds, pp[2].f32s(), rows, c, 9 * c);
+                    let mut dz1 = kernels::col2im(&dcols2, b, hw, c, 3, 1, 1);
+                    kernels::relu_bwd(&mut dz1, h1);
+                    // lower conv: z1 = conv(x, w1) + b1
+                    let cols1 = kernels::im2col(x, b, hw, c, 3, 1, 1);
+                    let dw1 = kernels::matmul_tn(&cols1, &dz1, rows, 9 * c, c);
+                    let db1 = kernels::bias_grad(&dz1, c);
+                    grads[off] = Some(tensor_shaped(vec![3, 3, c, c], dw1));
+                    grads[off + 1] = Some(tensor1(db1));
+                    grads[off + 2] = Some(tensor_shaped(vec![3, 3, c, c], dw2));
+                    grads[off + 3] = Some(tensor1(db2));
+                    grad = if need_dx {
+                        let dcols1 = kernels::matmul_nt(&dz1, pp[0].f32s(),
+                                                        rows, c, 9 * c);
+                        let mut dx = kernels::col2im(&dcols1, b, hw, c, 3, 1, 1);
+                        for (v, &sv) in dx.iter_mut().zip(&ds) {
+                            *v += sv; // skip connection
+                        }
+                        dx
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::AvgPool { hw, c, kernel, stride }, Aux::AvgPool) => {
+                    grad = if need_dx {
+                        kernels::avgpool_bwd(&grad, b, hw, c, kernel, stride)
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::GlobalAvg { hw, c }, Aux::GlobalAvg) => {
+                    grad = if need_dx {
+                        kernels::global_avgpool_bwd(&grad, b, hw, c)
+                    } else {
+                        Vec::new()
+                    };
+                }
+                (Plan::Attention { seq, d },
+                 Aux::Attention { q, k: kk, v, probs, ctx }) => {
+                    let dy = grad;
+                    // output projection: y = x + ctx wo + bo
+                    let dwo = kernels::matmul_tn(ctx, &dy, b, d, d);
+                    let dbo = kernels::bias_grad(&dy, d);
+                    let dctx = kernels::matmul_nt(&dy, pp[6].f32s(), b, d, d);
+                    let scale = 1.0 / (d as f32).sqrt();
+                    let mut dq = vec![0.0f32; b * d];
+                    let mut dk = vec![0.0f32; b * d];
+                    let mut dv = vec![0.0f32; b * d];
+                    for g in 0..b / seq {
+                        let span = g * seq * d..(g + 1) * seq * d;
+                        let a = &probs[g * seq * seq..(g + 1) * seq * seq];
+                        let da = kernels::matmul_nt(&dctx[span.clone()],
+                                                    &v[span.clone()], seq, d, seq);
+                        dv[span.clone()].copy_from_slice(
+                            &kernels::matmul_tn(a, &dctx[span.clone()], seq, seq, d));
+                        let ds = kernels::softmax_bwd_scaled(a, &da, seq, scale);
+                        dq[span.clone()].copy_from_slice(
+                            &kernels::matmul(&ds, &kk[span.clone()], seq, seq, d));
+                        dk[span.clone()].copy_from_slice(
+                            &kernels::matmul_tn(&ds, &q[span], seq, seq, d));
+                    }
+                    grads[off] = Some(tensor2(d, d, kernels::matmul_tn(x, &dq, b, d, d)));
+                    grads[off + 1] = Some(tensor1(kernels::bias_grad(&dq, d)));
+                    grads[off + 2] = Some(tensor2(d, d, kernels::matmul_tn(x, &dk, b, d, d)));
+                    grads[off + 3] = Some(tensor1(kernels::bias_grad(&dk, d)));
+                    grads[off + 4] = Some(tensor2(d, d, kernels::matmul_tn(x, &dv, b, d, d)));
+                    grads[off + 5] = Some(tensor1(kernels::bias_grad(&dv, d)));
+                    grads[off + 6] = Some(tensor2(d, d, dwo));
+                    grads[off + 7] = Some(tensor1(dbo));
+                    // dx = dy (skip) + dq wqᵀ + dk wkᵀ + dv wvᵀ
+                    let mut dx = kernels::matmul_nt(&dq, pp[0].f32s(), b, d, d);
+                    let dxk = kernels::matmul_nt(&dk, pp[2].f32s(), b, d, d);
+                    let dxv = kernels::matmul_nt(&dv, pp[4].f32s(), b, d, d);
+                    for i in 0..dx.len() {
+                        dx[i] += dxk[i] + dxv[i] + dy[i];
+                    }
+                    grad = dx;
+                }
                 _ => unreachable!("plan/aux built together"),
             }
         }
@@ -498,6 +912,10 @@ fn tensor1(data: Vec<f32>) -> Tensor {
 
 fn tensor2(r: usize, c: usize, data: Vec<f32>) -> Tensor {
     Tensor::from_f32(vec![r, c], data).expect("length matches by construction")
+}
+
+fn tensor_shaped(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+    Tensor::from_f32(shape, data).expect("length matches by construction")
 }
 
 impl ModuleExec for NativeModule {
@@ -751,12 +1169,47 @@ struct LayerDesc {
     op: NativeOp,
     param_shapes: Vec<Vec<usize>>,
     out_shape: Vec<usize>,
+    /// Output spatial side (`OpSig::out_side`; 0 for non-spatial ops) —
+    /// lets builders chain conv geometry without re-deriving it.
+    out_side: usize,
     flops: u64,
     act_bytes: usize,
 }
 
-/// Everything about a procedural model that is not its layer list; shared by
-/// [`native_mlp_manifest`] and [`native_lm_manifest`].
+impl LayerDesc {
+    /// Build a layer through [`NativeOp::signature`] — the same shape/cost
+    /// authority the executor validates against, so manifest accounting
+    /// (flops, activation bytes, boundary widths feeding
+    /// `coordinator::memory`) always matches what runs.
+    fn new(name: impl Into<String>, op: NativeOp, rows: usize, in_width: usize,
+           param_shapes: Vec<Vec<usize>>) -> Result<LayerDesc> {
+        let name = name.into();
+        let sig = op.signature(rows, in_width, &param_shapes)
+            .with_context(|| format!("layer {name}"))?;
+        Ok(LayerDesc {
+            name,
+            op,
+            param_shapes,
+            out_shape: vec![rows, sig.out_width],
+            out_side: sig.out_side,
+            flops: sig.flops,
+            act_bytes: sig.act_bytes,
+        })
+    }
+}
+
+/// Hidden width of a DNI gradient synthesizer at a boundary of width `d`:
+/// the MLP stays square on narrow (vector) boundaries and bottlenecks on
+/// wide (feature-map) boundaries so conv configs don't pay `O(d²)` synth
+/// parameters (the paper treats synthesizers as small conv nets; see
+/// docs/DESIGN.md §Memory model).
+fn synth_hidden(d: usize) -> usize {
+    d.min(128)
+}
+
+/// Everything about a procedural model that is not its layer list; shared
+/// by [`native_mlp_manifest`], [`native_conv_manifest`] and
+/// [`native_lm_manifest`].
 struct GraphDesc {
     config: String,
     model_type: &'static str,
@@ -819,10 +1272,11 @@ fn partition_manifest(desc: GraphDesc, layers: Vec<LayerDesc>) -> Result<Manifes
     let synth: Vec<SynthSpec> = (0..desc.k.saturating_sub(1))
         .map(|boundary| {
             let d = modules[boundary].out_shape[1];
+            let h = synth_hidden(d);
             SynthSpec {
                 boundary,
                 param_shapes: vec![
-                    vec![d, d], vec![d], vec![d, d], vec![d], vec![d, d], vec![d],
+                    vec![d, h], vec![h], vec![h, h], vec![h], vec![h, d], vec![d],
                 ],
                 pred_file: "<native>".into(),
                 train_file: "<native>".into(),
@@ -857,32 +1311,16 @@ pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
     }
     let (b, h) = (cfg.batch, cfg.hidden);
     let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 2);
-    layers.push(LayerDesc {
-        name: "stem".into(),
-        op: NativeOp::Dense { relu: true },
-        param_shapes: vec![vec![cfg.input_dim, h], vec![h]],
-        out_shape: vec![b, h],
-        flops: 2 * (b * cfg.input_dim * h) as u64,
-        act_bytes: 4 * b * h * 2,
-    });
+    layers.push(LayerDesc::new("stem", NativeOp::Dense { relu: true }, b,
+                               cfg.input_dim,
+                               vec![vec![cfg.input_dim, h], vec![h]])?);
     for i in 0..cfg.depth {
-        layers.push(LayerDesc {
-            name: format!("res{i}"),
-            op: NativeOp::ResidualPair,
-            param_shapes: vec![vec![h, h], vec![h], vec![h, h], vec![h]],
-            out_shape: vec![b, h],
-            flops: 4 * (b * h * h) as u64,
-            act_bytes: 4 * b * h * 4,
-        });
+        layers.push(LayerDesc::new(format!("res{i}"), NativeOp::ResidualPair, b, h,
+                                   vec![vec![h, h], vec![h], vec![h, h], vec![h]])?);
     }
-    layers.push(LayerDesc {
-        name: "head".into(),
-        op: NativeOp::Dense { relu: false },
-        param_shapes: vec![vec![h, cfg.num_classes], vec![cfg.num_classes]],
-        out_shape: vec![b, cfg.num_classes],
-        flops: 2 * (b * h * cfg.num_classes) as u64,
-        act_bytes: 4 * b * cfg.num_classes * 2,
-    });
+    layers.push(LayerDesc::new("head", NativeOp::Dense { relu: false }, b, h,
+                               vec![vec![h, cfg.num_classes],
+                                    vec![cfg.num_classes]])?);
     partition_manifest(GraphDesc {
         config: format!("mlp_native_k{}", cfg.k),
         model_type: "mlp",
@@ -895,16 +1333,140 @@ pub fn native_mlp_manifest(cfg: &NativeMlpSpec) -> Result<Manifest> {
     }, layers)
 }
 
-/// Procedural char-LM config: a token embedding, `depth` position-wise
-/// residual pairs, a LayerNorm, and a vocab head — the transformer stand-in
-/// the native backend can train on the tiny-corpus data source (tokens in,
-/// next-char labels out). Positions are independent rows after the embed,
-/// so the whole trunk reuses the dense/residual kernels.
+/// Procedural CIFAR-style conv ResNet: a 3×3 conv stem, `stages` stages of
+/// 3×3 [`NativeOp::ConvResidualPair`] basic blocks (each stage after the
+/// first downsamples 2× spatially with a stride-2 3×3 conv and doubles the
+/// channels), global average pooling, and a linear head — the faithful
+/// conv op graph the paper trains on CIFAR (depth/width scaled to the
+/// 1-core testbed; see docs/DESIGN.md §Faithful op graphs). Produces a
+/// fully in-memory [`Manifest`] the native backend trains offline on
+/// synthetic CIFAR (NHWC images flattened to `(batch, hw²·3)` rows).
+#[derive(Clone, Debug)]
+pub struct NativeConvSpec {
+    pub batch: usize,
+    /// Input spatial side (32 for the synthetic-CIFAR data source).
+    pub hw: usize,
+    /// Input channels (3 for the synthetic-CIFAR data source).
+    pub in_ch: usize,
+    /// Stem output channels; stage `s` runs at `stem_ch << s` channels.
+    pub stem_ch: usize,
+    /// Number of resolution stages (≥ 1).
+    pub stages: usize,
+    /// [`NativeOp::ConvResidualPair`] blocks per stage.
+    pub blocks_per_stage: usize,
+    /// Insert a 2×2/stride-2 [`NativeOp::AvgPool2d`] before the global
+    /// pool (numerically identical output — uniform means compose — but it
+    /// exercises the pooled backward in a trained config).
+    pub pool_before_gap: bool,
+    pub num_classes: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl NativeConvSpec {
+    /// A CIFAR-shaped config (batch 8, 32×32×3 input) with the given
+    /// stem width / stage count / blocks per stage.
+    pub fn cifar(stem_ch: usize, stages: usize, blocks_per_stage: usize,
+                 num_classes: usize, k: usize) -> NativeConvSpec {
+        NativeConvSpec {
+            batch: 8,
+            hw: 32,
+            in_ch: 3,
+            stem_ch,
+            stages,
+            blocks_per_stage,
+            pool_before_gap: false,
+            num_classes,
+            k,
+            seed: 0,
+        }
+    }
+
+    pub fn manifest(&self) -> Result<Manifest> {
+        native_conv_manifest(self)
+    }
+}
+
+pub fn native_conv_manifest(cfg: &NativeConvSpec) -> Result<Manifest> {
+    if cfg.k == 0 || cfg.batch == 0 || cfg.stem_ch == 0 || cfg.stages == 0
+        || cfg.num_classes == 0 || cfg.hw < 2 {
+        bail!("degenerate native conv config {cfg:?}");
+    }
+    let b = cfg.batch;
+    let mut side = cfg.hw;
+    let mut c = cfg.stem_ch;
+    let mut width = cfg.hw * cfg.hw * cfg.in_ch;
+    let mut layers: Vec<LayerDesc> = Vec::new();
+    // `side` chains through OpSig::out_side — the conv/pool geometry is
+    // derived once, inside NativeOp::signature.
+    let mut push = |layers: &mut Vec<LayerDesc>, width: &mut usize, side: &mut usize,
+                    name: String, op: NativeOp, shapes: Vec<Vec<usize>>|
+                    -> Result<()> {
+        let l = LayerDesc::new(name, op, b, *width, shapes)?;
+        *width = l.out_shape[1];
+        if l.out_side > 0 {
+            *side = l.out_side;
+        }
+        layers.push(l);
+        Ok(())
+    };
+    let stem = NativeOp::Conv2d { hw: side, stride: 1, pad: 1, relu: true };
+    push(&mut layers, &mut width, &mut side, "stem".into(), stem,
+         vec![vec![3, 3, cfg.in_ch, c], vec![c]])?;
+    for s in 0..cfg.stages {
+        if s > 0 {
+            if side < 2 {
+                bail!("config {cfg:?}: stage {s} cannot downsample side {side}");
+            }
+            let down = NativeOp::Conv2d { hw: side, stride: 2, pad: 1, relu: true };
+            push(&mut layers, &mut width, &mut side, format!("down{s}"), down,
+                 vec![vec![3, 3, c, 2 * c], vec![2 * c]])?;
+            c *= 2;
+        }
+        for blk in 0..cfg.blocks_per_stage {
+            let pair = NativeOp::ConvResidualPair { hw: side };
+            push(&mut layers, &mut width, &mut side, format!("s{s}b{blk}"), pair,
+                 vec![vec![3, 3, c, c], vec![c], vec![3, 3, c, c], vec![c]])?;
+        }
+    }
+    if cfg.pool_before_gap {
+        if side < 2 {
+            bail!("config {cfg:?}: pool_before_gap needs a trunk side >= 2, \
+                   got {side}");
+        }
+        let pool = NativeOp::AvgPool2d { hw: side, kernel: 2, stride: 2 };
+        push(&mut layers, &mut width, &mut side, "pool".into(), pool, vec![])?;
+    }
+    let gap = NativeOp::GlobalAvgPool { hw: side };
+    push(&mut layers, &mut width, &mut side, "gap".into(), gap, vec![])?;
+    push(&mut layers, &mut width, &mut side, "head".into(),
+         NativeOp::Dense { relu: false },
+         vec![vec![c, cfg.num_classes], vec![cfg.num_classes]])?;
+    partition_manifest(GraphDesc {
+        config: format!("conv_native_k{}", cfg.k),
+        model_type: "resnet",
+        input_shape: vec![b, cfg.hw * cfg.hw * cfg.in_ch],
+        input_dtype: DType::F32,
+        label_shape: vec![b],
+        num_classes: cfg.num_classes,
+        k: cfg.k,
+        seed: cfg.seed,
+    }, layers)
+}
+
+/// Procedural char-LM transformer config: a token embedding, `depth`
+/// blocks of causal single-head [`NativeOp::Attention`] followed by a
+/// position-wise [`NativeOp::ResidualPair`] MLP, a LayerNorm, and a vocab
+/// head — the faithful (scaled-down) transformer op graph the native
+/// backend trains on the tiny-corpus data source (tokens in, next-char
+/// labels out). Attention mixes positions *within* each sequence; every
+/// other op is position-wise over the `(batch·seq, d_model)` rows.
 #[derive(Clone, Debug)]
 pub struct NativeLmSpec {
     pub batch: usize,
     pub seq: usize,
     pub d_model: usize,
+    /// Number of attention + MLP blocks.
     pub depth: usize,
     /// Must stay `data::tiny_corpus::VOCAB` to match the char data source.
     pub vocab: usize,
@@ -936,41 +1498,22 @@ pub fn native_lm_manifest(cfg: &NativeLmSpec) -> Result<Manifest> {
         bail!("degenerate native LM config {cfg:?}");
     }
     let (d, rows) = (cfg.d_model, cfg.batch * cfg.seq);
-    let mut layers: Vec<LayerDesc> = Vec::with_capacity(cfg.depth + 3);
-    layers.push(LayerDesc {
-        name: "embed".into(),
-        op: NativeOp::Embed,
-        param_shapes: vec![vec![cfg.vocab, d]],
-        out_shape: vec![rows, d],
-        flops: (rows * d) as u64,
-        act_bytes: 4 * rows * d,
-    });
+    let mut layers: Vec<LayerDesc> = Vec::with_capacity(2 * cfg.depth + 3);
+    layers.push(LayerDesc::new("embed", NativeOp::Embed, rows, 0,
+                               vec![vec![cfg.vocab, d]])?);
     for i in 0..cfg.depth {
-        layers.push(LayerDesc {
-            name: format!("res{i}"),
-            op: NativeOp::ResidualPair,
-            param_shapes: vec![vec![d, d], vec![d], vec![d, d], vec![d]],
-            out_shape: vec![rows, d],
-            flops: 4 * (rows * d * d) as u64,
-            act_bytes: 4 * rows * d * 4,
-        });
+        layers.push(LayerDesc::new(
+            format!("attn{i}"), NativeOp::Attention { seq: cfg.seq }, rows, d,
+            vec![vec![d, d], vec![d], vec![d, d], vec![d],
+                 vec![d, d], vec![d], vec![d, d], vec![d]])?);
+        layers.push(LayerDesc::new(
+            format!("mlp{i}"), NativeOp::ResidualPair, rows, d,
+            vec![vec![d, d], vec![d], vec![d, d], vec![d]])?);
     }
-    layers.push(LayerDesc {
-        name: "norm".into(),
-        op: NativeOp::LayerNorm,
-        param_shapes: vec![vec![d], vec![d]],
-        out_shape: vec![rows, d],
-        flops: (8 * rows * d) as u64,
-        act_bytes: 4 * rows * d * 2,
-    });
-    layers.push(LayerDesc {
-        name: "head".into(),
-        op: NativeOp::Dense { relu: false },
-        param_shapes: vec![vec![d, cfg.vocab], vec![cfg.vocab]],
-        out_shape: vec![rows, cfg.vocab],
-        flops: 2 * (rows * d * cfg.vocab) as u64,
-        act_bytes: 4 * rows * cfg.vocab * 2,
-    });
+    layers.push(LayerDesc::new("norm", NativeOp::LayerNorm, rows, d,
+                               vec![vec![d], vec![d]])?);
+    layers.push(LayerDesc::new("head", NativeOp::Dense { relu: false }, rows, d,
+                               vec![vec![d, cfg.vocab], vec![cfg.vocab]])?);
     partition_manifest(GraphDesc {
         config: format!("lm_native_k{}", cfg.k),
         model_type: "char_lm",
@@ -1333,6 +1876,261 @@ mod tests {
         let mut bad = m.modules[1].clone();
         bad.native_ops.insert(0, NativeOp::Embed);
         assert!(NativeModule::build(bad).is_err());
+    }
+
+    #[test]
+    fn im2col_hand_values() {
+        // 1 image, 1 channel, 2x2, k=3 s=1 p=1: patch rows are the padded
+        // 3x3 neighborhoods in (ky, kx, c) order.
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let cols = kernels::im2col(&x, 1, 2, 1, 3, 1, 1);
+        assert_eq!(cols.len(), 4 * 9);
+        // output (0,0): rows of the padded neighborhood around pixel (0,0)
+        assert_eq!(&cols[0..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // output (1,1): neighborhood around pixel (1,1)
+        assert_eq!(&cols[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> for random x, c — the defining
+        // property of the conv input gradient.
+        let mut rng = Rng::new(31);
+        let (b, hw, c, k, stride, pad) = (2usize, 5usize, 3usize, 3usize, 2usize, 1usize);
+        let x: Vec<f32> = (0..b * hw * hw * c).map(|_| rng.normal()).collect();
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let cols: Vec<f32> = (0..b * ohw * ohw * k * k * c).map(|_| rng.normal()).collect();
+        let ix = kernels::im2col(&x, b, hw, c, k, stride, pad);
+        let cx = kernels::col2im(&cols, b, hw, c, k, stride, pad);
+        let lhs: f64 = ix.iter().zip(&cols).map(|(&a, &bb)| (a * bb) as f64).sum();
+        let rhs: f64 = x.iter().zip(&cx).map(|(&a, &bb)| (a * bb) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "adjoint mismatch {lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn pooling_hand_values_and_composition() {
+        // 1 image, 1 channel, 4x4 ramp
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let p = kernels::avgpool(&x, 1, 4, 1, 2, 2);
+        assert_eq!(p, vec![2.5, 4.5, 10.5, 12.5]);
+        let g = kernels::global_avgpool(&x, 1, 4, 1);
+        assert_eq!(g, vec![7.5]);
+        // uniform means compose: avgpool(2,2) then GAP == GAP directly
+        let g2 = kernels::global_avgpool(&p, 1, 2, 1);
+        assert!((g2[0] - g[0]).abs() < 1e-6);
+        // backward distributes dy/k^2 per window
+        let dx = kernels::avgpool_bwd(&[4.0, 0.0, 0.0, 0.0], 1, 4, 1, 2, 2);
+        assert_eq!(&dx[0..2], &[1.0, 1.0]);
+        assert_eq!(&dx[4..6], &[1.0, 1.0]);
+        assert_eq!(dx.iter().sum::<f32>(), 4.0);
+        let dg = kernels::global_avgpool_bwd(&[16.0], 1, 4, 1);
+        assert!(dg.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn causal_softmax_masks_and_normalizes() {
+        let mut s = vec![0.5f32; 9];
+        kernels::causal_softmax(&mut s, 3);
+        // row 0 attends only to itself
+        assert_eq!(&s[0..3], &[1.0, 0.0, 0.0]);
+        // every row sums to 1 and is zero above the diagonal
+        for i in 0..3 {
+            let row = &s[i * 3..(i + 1) * 3];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+            for &v in &row[i + 1..] {
+                assert_eq!(v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_finite_differences() {
+        // A k=1 conv stack: stem conv, residual pair, stride-2 downsample,
+        // second-stage pair, 2x2 avgpool, global pool, head — every
+        // parameter gradient of the fused loss head checked against
+        // central differences.
+        let cfg = NativeConvSpec {
+            batch: 2, hw: 8, in_ch: 2, stem_ch: 3, stages: 2,
+            blocks_per_stage: 1, pool_before_gap: true, num_classes: 3,
+            k: 1, seed: 5,
+        };
+        let m = cfg.manifest().unwrap();
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 0).unwrap();
+        let mut params = ResidentParams::new(
+            backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
+        let mut rng = Rng::new(9);
+        let n_in: usize = m.input_shape.iter().product();
+        let x = Tensor::from_f32(m.input_shape.clone(),
+            (0..n_in).map(|_| rng.normal()).collect()).unwrap();
+        let labels = Tensor::from_i32(vec![2], vec![0, 2]).unwrap();
+
+        let base = exec.loss_backward(&params, &x, &labels).unwrap();
+        assert!(base.loss.is_finite());
+        let eps = 1e-3f32;
+        for p_idx in 0..m.modules[0].param_shapes.len() {
+            let n = params[p_idx].len();
+            for i in [0, n / 2, n - 1] {
+                let orig = params[p_idx].f32s()[i];
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig + eps;
+                let lp = exec.loss_backward(&params, &x, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig - eps;
+                let lm = exec.loss_backward(&params, &x, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = base.grads[p_idx].f32s()[i];
+                // acceptance bar: 1e-3 (absolute floor; 5% relative slack
+                // for large gradients, where f32 central differences at
+                // eps=1e-3 carry proportional noise)
+                assert!((fd - an).abs() < 1e-3 + 0.05 * an.abs(),
+                        "conv param {p_idx}[{i}]: finite-diff {fd} vs analytic {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_input_gradient_matches_finite_differences() {
+        // delta_in of the second conv module checked against perturbing the
+        // boundary feature map.
+        let cfg = NativeConvSpec {
+            batch: 2, hw: 8, in_ch: 2, stem_ch: 3, stages: 2,
+            blocks_per_stage: 1, pool_before_gap: false, num_classes: 3,
+            k: 2, seed: 3,
+        };
+        let m = cfg.manifest().unwrap();
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 1).unwrap();
+        let params = ResidentParams::new(
+            backend.init_params(&m, "module1", &m.modules[1].param_shapes).unwrap());
+        let mut rng = Rng::new(7);
+        let n_in: usize = m.modules[1].in_shape.iter().product();
+        let mut h: Vec<f32> = (0..n_in).map(|_| rng.normal()).collect();
+        let labels = Tensor::from_i32(vec![2], vec![1, 0]).unwrap();
+        let shape = m.modules[1].in_shape.clone();
+
+        let base = exec.loss_backward(
+            &params, &Tensor::from_f32(shape.clone(), h.clone()).unwrap(),
+            &labels).unwrap();
+        let din = base.delta_in.expect("module 1 emits delta_in");
+        let eps = 1e-3f32;
+        for i in [0usize, n_in / 3, n_in - 1] {
+            let orig = h[i];
+            h[i] = orig + eps;
+            let lp = exec.loss_backward(
+                &params, &Tensor::from_f32(shape.clone(), h.clone()).unwrap(),
+                &labels).unwrap().loss;
+            h[i] = orig - eps;
+            let lm = exec.loss_backward(
+                &params, &Tensor::from_f32(shape.clone(), h.clone()).unwrap(),
+                &labels).unwrap().loss;
+            h[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = din.f32s()[i];
+            assert!((fd - an).abs() < 1e-3 + 0.05 * an.abs(),
+                    "conv h[{i}]: finite-diff {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_differences() {
+        // k=1 LM with one attention + MLP block: every parameter of the
+        // attention projections (and the embed table upstream of them)
+        // checked against central differences through the causal softmax.
+        let cfg = NativeLmSpec {
+            batch: 2, seq: 4, d_model: 4, depth: 1, vocab: 5, k: 1, seed: 21,
+        };
+        let m = cfg.manifest().unwrap();
+        // layer walk: embed (1 param) then attention (8 params)
+        assert_eq!(m.modules[0].native_ops[1], NativeOp::Attention { seq: 4 });
+        let backend = NativeBackend;
+        let exec = backend.load_module(&m, 0).unwrap();
+        let mut params = ResidentParams::new(
+            backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
+        let mut rng = Rng::new(2);
+        // non-zero biases so their gradients are exercised away from init
+        for p in params.tensors_mut() {
+            if p.shape.len() == 1 {
+                for v in p.f32s_mut() {
+                    *v += 0.05 * rng.normal();
+                }
+            }
+        }
+        let tokens = Tensor::from_i32(vec![2, 4], vec![0, 3, 1, 4, 2, 2, 0, 1]).unwrap();
+        let labels = Tensor::from_i32(vec![8], vec![1, 0, 4, 2, 3, 0, 2, 1]).unwrap();
+
+        let base = exec.loss_backward(&params, &tokens, &labels).unwrap();
+        assert!(base.loss.is_finite());
+        let eps = 1e-3f32;
+        for p_idx in 0..m.modules[0].param_shapes.len() {
+            let n = params[p_idx].len();
+            for i in [0, n / 2, n - 1] {
+                let orig = params[p_idx].f32s()[i];
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig + eps;
+                let lp = exec.loss_backward(&params, &tokens, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig - eps;
+                let lm = exec.loss_backward(&params, &tokens, &labels).unwrap().loss;
+                params.tensors_mut()[p_idx].f32s_mut()[i] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = base.grads[p_idx].f32s()[i];
+                assert!((fd - an).abs() < 1e-3 + 0.05 * an.abs(),
+                        "lm param {p_idx}[{i}]: finite-diff {fd} vs analytic {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_manifest_shapes_chain() {
+        let cfg = NativeConvSpec::cifar(8, 3, 1, 10, 4);
+        let m = cfg.manifest().unwrap();
+        assert_eq!(m.k, 4);
+        assert_eq!(m.input_shape, vec![8, 32 * 32 * 3]);
+        assert_eq!(m.num_layers, 8); // stem, pair, down, pair, down, pair, gap, head
+        assert_eq!(m.logits_shape, vec![8, 10]);
+        for w in m.modules.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        // boundary activations are real feature maps: the first module ends
+        // mid-trunk with a spatial map, not a pooled vector
+        assert!(m.modules[0].out_shape[1] >= 32 * 32 * 8 / 4,
+                "boundary {:?} is not a feature map", m.modules[0].out_shape);
+        let backend = NativeBackend;
+        for k in 0..m.k {
+            backend.load_module(&m, k).unwrap();
+        }
+        // synthesizers bottleneck on wide boundaries
+        for s in &m.synth {
+            assert!(s.param_shapes[0][1] <= 128);
+            assert_eq!(s.param_shapes[0][0], m.modules[s.boundary].out_shape[1]);
+        }
+    }
+
+    #[test]
+    fn signature_rejects_mismatched_graphs() {
+        // conv weight that does not match the declared spatial side
+        let err = NativeOp::Conv2d { hw: 4, stride: 1, pad: 1, relu: true }
+            .signature(2, 4 * 4 * 3, &[vec![3, 3, 2, 8], vec![8]])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("Conv2d"));
+        // attention rows must tile into sequences
+        assert!(NativeOp::Attention { seq: 3 }
+            .signature(8, 4, &[vec![4, 4], vec![4], vec![4, 4], vec![4],
+                               vec![4, 4], vec![4], vec![4, 4], vec![4]])
+            .is_err());
+        // pooling needs an NHWC width
+        assert!(NativeOp::GlobalAvgPool { hw: 5 }.signature(2, 21, &[]).is_err());
+        // bias shapes are validated too, not just weights
+        assert!(NativeOp::Conv2d { hw: 4, stride: 1, pad: 1, relu: true }
+            .signature(2, 4 * 4 * 3, &[vec![3, 3, 3, 8], vec![9]])
+            .is_err());
+        assert!(NativeOp::Dense { relu: false }
+            .signature(2, 4, &[vec![4, 3], vec![4]])
+            .is_err());
+        // every tensor of a conv pair is checked against the channel count
+        assert!(NativeOp::ConvResidualPair { hw: 4 }
+            .signature(2, 4 * 4 * 3, &[vec![3, 3, 3, 3], vec![3],
+                                       vec![3, 3, 3, 6], vec![3]])
+            .is_err());
     }
 
     #[test]

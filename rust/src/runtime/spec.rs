@@ -12,18 +12,112 @@ use super::tensor::DType;
 /// directly (no HLO). Disk manifests (AOT artifacts) carry an empty op list
 /// and require the `pjrt` backend; procedural configs (see
 /// `runtime::native`) fill it in.
+///
+/// Activations between ops are always rank-2 `(rows, width)` matrices.
+/// Image-shaped ops (`Conv2d`, `ConvResidualPair`, `AvgPool2d`,
+/// `GlobalAvgPool`) interpret `width` as an NHWC feature map flattened to
+/// `hw * hw * c` (the spatial side `hw` rides in the variant, channels are
+/// derived as `width / hw²`); sequence-shaped ops (`Attention`) interpret
+/// `rows` as `batch * seq` token positions. Every variant documents its
+/// forward formula and the backward it hand-derives in
+/// `runtime::native::kernels`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NativeOp {
     /// `y = x @ w + b`, optionally ReLU'd. Params: `w (din, dout)`, `b (dout)`.
+    ///
+    /// Backward: `dz = dy ⊙ 1[y>0]` (if ReLU'd), `dw = xᵀ dz`,
+    /// `db = Σ_rows dz`, `dx = dz wᵀ`.
     Dense { relu: bool },
-    /// `y = relu(x + dense2(relu(dense1(x))))`. Params: `w1, b1, w2, b2`.
+    /// `y = relu(x + dense2(relu(dense1(x))))`. Params: `w1, b1, w2, b2`
+    /// (both dense layers square, `d × d`).
+    ///
+    /// Backward: `ds = dy ⊙ 1[y>0]` flows through dense2, its input grad is
+    /// masked by `1[h1>0]` and flows through dense1; the skip connection
+    /// adds `ds` to `dx` directly.
     ResidualPair,
     /// LayerNorm over the last axis. Params: `gamma (d)`, `beta (d)`.
+    ///
+    /// Forward: `y = γ ⊙ (x − μ)/√(σ² + ε) + β` per row. Backward uses the
+    /// cached `(x̂, 1/σ)`: `dx = rstd (dx̂ − mean(dx̂) − x̂ mean(dx̂ ⊙ x̂))`
+    /// with `dx̂ = dy ⊙ γ`; `dγ = Σ dy ⊙ x̂`, `dβ = Σ dy`.
     LayerNorm,
     /// Token embedding lookup: `(b, seq)` i32 tokens -> `(b*seq, d)` rows.
     /// Params: `E (vocab, d)`. Only valid as the first op of module 0 — the
-    /// entry point of the char-LM configs (every later op is position-wise).
+    /// entry point of the char-LM configs (every later op is position-wise
+    /// or attends within each sequence).
+    ///
+    /// Backward: tokens carry no gradient; `dE` scatter-adds each row of
+    /// `dy` at its token index.
     Embed,
+    /// 2-D convolution over an NHWC map of side `hw`, computed as im2col +
+    /// matmul, optionally ReLU'd. Params: `w (k, k, cin, cout)`, `b (cout)`
+    /// (kernel side `k` and the channel counts come from the weight shape;
+    /// the weight flattens row-major to the `(k²·cin, cout)` im2col
+    /// matrix). Output side: `ohw = (hw + 2·pad − k) / stride + 1`.
+    ///
+    /// Backward (with `cols = im2col(x)` recomputed from the replayed
+    /// input): `dz = dy ⊙ 1[y>0]` (if ReLU'd), `dw = colsᵀ dz`,
+    /// `db = Σ dz`, `dx = col2im(dz wᵀ)`.
+    Conv2d { hw: usize, stride: usize, pad: usize, relu: bool },
+    /// Residual pair of 3×3 same-convolutions (stride 1, pad 1) on an NHWC
+    /// map of side `hw`: `y = relu(x + conv2(relu(conv1(x))))`. Params:
+    /// `w1 (3,3,c,c), b1 (c), w2 (3,3,c,c), b2 (c)` — the basic CIFAR
+    /// ResNet block with an identity skip.
+    ///
+    /// Backward mirrors [`NativeOp::ResidualPair`] with the two dense
+    /// layers replaced by [`NativeOp::Conv2d`] backwards (im2col/col2im);
+    /// the skip adds the outer ReLU-masked `dy` to `dx`.
+    ConvResidualPair { hw: usize },
+    /// Average pooling with a `kernel × kernel` window at `stride` (no
+    /// padding) over an NHWC map of side `hw`. No params. Output side:
+    /// `ohw = (hw − kernel) / stride + 1`.
+    ///
+    /// Backward: each pooled output distributes `dy / kernel²` back to its
+    /// window (positions a strided window never covers get zero gradient).
+    AvgPool2d { hw: usize, kernel: usize, stride: usize },
+    /// Global average pool: `(rows, hw²·c) -> (rows, c)`, the CIFAR ResNet
+    /// head pool. No params.
+    ///
+    /// Backward: `dx = dy / hw²` broadcast over all spatial positions.
+    GlobalAvgPool { hw: usize },
+    /// Single-head causal self-attention with a residual connection, over
+    /// sequences of length `seq` (`rows` must be a multiple of `seq`; each
+    /// group of `seq` consecutive rows is one sequence). Params:
+    /// `wq, bq, wk, bk, wv, bv, wo, bo` — four `(d, d)` projections with
+    /// `(d,)` biases.
+    ///
+    /// Forward per sequence: `q/k/v = x w + b`, scores
+    /// `s = q kᵀ / √d` with `s[i, j>i] = −∞` (causal mask), `a = softmax(s)`
+    /// rows, context `ctx = a v`, output `y = x + ctx wo + bo`.
+    ///
+    /// Backward: `dwo = ctxᵀ dy`, `dctx = dy woᵀ`; per sequence
+    /// `da = dctx vᵀ`, `dv = aᵀ dctx`, softmax backward
+    /// `ds = a ⊙ (da − Σ_j da ⊙ a)` (masked entries have `a = 0`, so their
+    /// gradient vanishes), `dq = ds k / √d`, `dk = dsᵀ q / √d`; then
+    /// `dx = dy + dq wqᵀ + dk wkᵀ + dv wvᵀ` (the `dy` term is the skip).
+    Attention { seq: usize },
+}
+
+/// Shape/cost signature of one [`NativeOp`] applied at a given activation
+/// size — what [`NativeOp::signature`] returns. This is the single
+/// authority both the procedural graph builders (`runtime::native`) and the
+/// native executor's plan validation use, so the manifest numbers that feed
+/// `coordinator::memory` (Fig 5 / Table 1) always agree with what actually
+/// runs.
+#[derive(Clone, Copy, Debug)]
+pub struct OpSig {
+    /// Output feature width (activations stay rank-2 `(rows, width)`).
+    pub out_width: usize,
+    /// Output spatial side for image-shaped ops (`ohw` for `Conv2d` /
+    /// `AvgPool2d`, the unchanged side for `ConvResidualPair`, 1 for
+    /// `GlobalAvgPool`); 0 for non-spatial ops. Lets callers chain conv
+    /// geometry without re-deriving the stride/pad arithmetic.
+    pub out_side: usize,
+    /// Forward FLOPs at these shapes (multiply-add counted as 2).
+    pub flops: u64,
+    /// Activation bytes the op materializes for one in-flight batch
+    /// (outputs + backward caches) — what BP-style per-layer storage costs.
+    pub act_bytes: usize,
 }
 
 impl NativeOp {
@@ -37,48 +131,254 @@ impl NativeOp {
             NativeOp::ResidualPair => 4,
             NativeOp::LayerNorm => 2,
             NativeOp::Embed => 1,
+            NativeOp::Conv2d { .. } => 2,
+            NativeOp::ConvResidualPair { .. } => 4,
+            NativeOp::AvgPool2d { .. } => 0,
+            NativeOp::GlobalAvgPool { .. } => 0,
+            NativeOp::Attention { .. } => 8,
         }
+    }
+
+    /// Validate this op against the incoming activation `(rows, in_width)`
+    /// and its parameter-shape run (whose length must equal
+    /// [`NativeOp::param_tensors`]), and return its [`OpSig`].
+    ///
+    /// For [`NativeOp::Embed`], `rows` is the number of token positions
+    /// (`batch · seq`) and `in_width` is ignored (the input is the i32
+    /// token matrix, not an f32 activation).
+    pub fn signature(self, rows: usize, in_width: usize,
+                     param_shapes: &[Vec<usize>]) -> Result<OpSig> {
+        if param_shapes.len() != self.param_tensors() {
+            bail!("{self:?}: expected {} param tensors, got {}",
+                  self.param_tensors(), param_shapes.len());
+        }
+        let sig = match self {
+            NativeOp::Dense { .. } => {
+                let w = &param_shapes[0];
+                if w.len() != 2 || w[0] != in_width {
+                    bail!("Dense: weight {w:?} does not accept width {in_width}");
+                }
+                if param_shapes[1].as_slice() != [w[1]] {
+                    bail!("Dense: bias {:?} does not match weight {w:?}",
+                          param_shapes[1]);
+                }
+                OpSig {
+                    out_width: w[1],
+                    out_side: 0,
+                    flops: 2 * (rows * in_width * w[1]) as u64,
+                    act_bytes: 4 * rows * w[1] * 2,
+                }
+            }
+            NativeOp::ResidualPair => {
+                let d = in_width;
+                for (i, w) in param_shapes.iter().enumerate() {
+                    let want: &[usize] = if i % 2 == 0 { &[d, d] } else { &[d] };
+                    if w.as_slice() != want {
+                        bail!("ResidualPair: param {i} is {w:?}, want {want:?} \
+                               at width {d}");
+                    }
+                }
+                OpSig {
+                    out_width: in_width,
+                    out_side: 0,
+                    flops: 4 * (rows * in_width * in_width) as u64,
+                    act_bytes: 4 * rows * in_width * 4,
+                }
+            }
+            NativeOp::LayerNorm => {
+                for (i, g) in param_shapes.iter().enumerate() {
+                    if g.as_slice() != [in_width] {
+                        bail!("LayerNorm: param {i} is {g:?}, want \
+                               [{in_width}]");
+                    }
+                }
+                OpSig {
+                    out_width: in_width,
+                    out_side: 0,
+                    flops: (8 * rows * in_width) as u64,
+                    act_bytes: 4 * rows * in_width * 2,
+                }
+            }
+            NativeOp::Embed => {
+                let e = &param_shapes[0];
+                if e.len() != 2 {
+                    bail!("Embed: table must be rank-2 (vocab, d), got {e:?}");
+                }
+                OpSig {
+                    out_width: e[1],
+                    out_side: 0,
+                    flops: (rows * e[1]) as u64,
+                    act_bytes: 4 * rows * e[1],
+                }
+            }
+            NativeOp::Conv2d { hw, stride, pad, .. } => {
+                let cin = spatial(self, hw, in_width)?;
+                let w = &param_shapes[0];
+                if w.len() != 4 || w[0] != w[1] || w[2] != cin {
+                    bail!("Conv2d: weight {w:?} must be (k, k, {cin}, cout) \
+                           for width {in_width} at hw {hw}");
+                }
+                let (k, cout) = (w[0], w[3]);
+                if param_shapes[1].as_slice() != [cout] {
+                    bail!("Conv2d: bias {:?} does not match weight {w:?}",
+                          param_shapes[1]);
+                }
+                if stride == 0 || hw + 2 * pad < k {
+                    bail!("Conv2d: kernel {k} at stride {stride} pad {pad} \
+                           does not fit side {hw}");
+                }
+                let ohw = (hw + 2 * pad - k) / stride + 1;
+                OpSig {
+                    out_width: ohw * ohw * cout,
+                    out_side: ohw,
+                    flops: 2 * (rows * ohw * ohw * k * k * cin * cout) as u64,
+                    act_bytes: 4 * rows * ohw * ohw * cout * 2,
+                }
+            }
+            NativeOp::ConvResidualPair { hw } => {
+                let c = spatial(self, hw, in_width)?;
+                for (i, w) in param_shapes.iter().enumerate() {
+                    let want: &[usize] = if i % 2 == 0 { &[3, 3, c, c] } else { &[c] };
+                    if w.as_slice() != want {
+                        bail!("ConvResidualPair: param {i} is {w:?}, want \
+                               {want:?} at {c} channels");
+                    }
+                }
+                OpSig {
+                    out_width: in_width,
+                    out_side: hw,
+                    flops: 2 * 2 * (rows * hw * hw * 9 * c * c) as u64,
+                    act_bytes: 4 * rows * in_width * 4,
+                }
+            }
+            NativeOp::AvgPool2d { hw, kernel, stride } => {
+                let c = spatial(self, hw, in_width)?;
+                if kernel == 0 || stride == 0 || kernel > hw {
+                    bail!("AvgPool2d: kernel {kernel} stride {stride} does \
+                           not fit side {hw}");
+                }
+                let ohw = (hw - kernel) / stride + 1;
+                OpSig {
+                    out_width: ohw * ohw * c,
+                    out_side: ohw,
+                    flops: (rows * ohw * ohw * c * kernel * kernel) as u64,
+                    act_bytes: 4 * rows * ohw * ohw * c,
+                }
+            }
+            NativeOp::GlobalAvgPool { hw } => {
+                let c = spatial(self, hw, in_width)?;
+                OpSig {
+                    out_width: c,
+                    out_side: 1,
+                    flops: (rows * in_width) as u64,
+                    act_bytes: 4 * rows * c,
+                }
+            }
+            NativeOp::Attention { seq } => {
+                let d = in_width;
+                if seq == 0 || rows % seq != 0 {
+                    bail!("Attention: {rows} rows are not a multiple of \
+                           seq {seq}");
+                }
+                for (i, w) in param_shapes.iter().enumerate() {
+                    let want: &[usize] = if i % 2 == 0 { &[d, d] } else { &[d] };
+                    if w.as_slice() != want {
+                        bail!("Attention: param {i} is {w:?}, want {want:?} \
+                               at width {d}");
+                    }
+                }
+                OpSig {
+                    out_width: d,
+                    out_side: 0,
+                    // 4 projections + scores + context
+                    flops: (8 * rows * d * d + 4 * rows * seq * d) as u64,
+                    // q, k, v, ctx, out (rows·d each) + probs (rows·seq)
+                    act_bytes: 4 * (5 * rows * d + rows * seq),
+                }
+            }
+        };
+        Ok(sig)
     }
 }
 
+/// Channel count of an image-shaped width `hw²·c`, rejecting widths that
+/// do not tile into the op's declared spatial side.
+fn spatial(op: NativeOp, hw: usize, in_width: usize) -> Result<usize> {
+    let area = hw * hw;
+    if hw == 0 || in_width == 0 || in_width % area != 0 {
+        bail!("{op:?}: width {in_width} is not an NHWC map of side {hw}");
+    }
+    Ok(in_width / area)
+}
+
+/// One module of the K-way partition: its layer list, parameter shapes,
+/// boundary shapes, cost accounting, and how to execute it (HLO artifact
+/// files for the `pjrt` backend, a [`NativeOp`] graph for the native one).
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// Position in the stack (0 = input module, K-1 carries the loss head).
     pub index: usize,
+    /// Human-readable layer names, in execution order.
     pub layers: Vec<String>,
+    /// Per-layer activation bytes (the DDG stash / BP per-layer costs).
     pub layer_act_bytes: Vec<usize>,
+    /// Parameter tensor shapes, concatenated in layer order.
     pub param_shapes: Vec<Vec<usize>>,
+    /// Input activation shape (always rank-2 on the native backend).
     pub in_shape: Vec<usize>,
+    /// Input dtype: i32 for the token entry module, f32 everywhere else.
     pub in_dtype: DType,
+    /// Output activation shape (rank-2, f32).
     pub out_shape: Vec<usize>,
+    /// Forward FLOPs of the whole module.
     pub flops: u64,
+    /// Activation bytes one in-flight batch materializes in this module.
     pub act_bytes: usize,
+    /// HLO forward program (`"<native>"` for procedural configs).
     pub fwd_file: String,
+    /// HLO backward program (`"<native>"` for procedural configs).
     pub bwd_file: String,
+    /// Fused fwd+loss+bwd program; `Some` only on the last module.
     pub loss_file: Option<String>,
     /// Procedural op graph for the native backend (empty for AOT artifacts).
     pub native_ops: Vec<NativeOp>,
 }
 
 impl ModuleSpec {
+    /// Total parameter *scalars* across the module (cf.
+    /// [`NativeOp::param_tensors`], which counts tensors per op).
     pub fn param_count(&self) -> usize {
         self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
     }
 
-    /// Bytes of the module's *input* activation (what FR's history stores).
+    /// Bytes of the module's *input* activation — what one slot of FR's
+    /// replay history stores. Uses the input dtype (token modules replay
+    /// i32 token matrices, everything downstream replays f32 feature maps).
     pub fn in_bytes(&self) -> usize {
-        self.in_shape.iter().product::<usize>() * 4
+        self.in_shape.iter().product::<usize>() * self.in_dtype.size_bytes()
     }
 
+    /// Bytes of the module's output activation (boundary activations are
+    /// always f32 — what one pending delta costs too).
     pub fn out_bytes(&self) -> usize {
         self.out_shape.iter().product::<usize>() * 4
     }
 }
 
+/// A DNI gradient synthesizer at one module boundary (see
+/// `coordinator::dni`): a small MLP predicting the error gradient from the
+/// boundary activation.
 #[derive(Clone, Debug)]
 pub struct SynthSpec {
+    /// Boundary index: the synthesizer feeds module `boundary` from the
+    /// activation it sends up to module `boundary + 1`.
     pub boundary: usize,
+    /// Parameter tensor shapes `(w1, b1, w2, b2, w3, b3)`; wide boundaries
+    /// use a bottleneck hidden width (see `runtime::native`).
     pub param_shapes: Vec<Vec<usize>>,
+    /// HLO predict program (`"<native>"` for procedural configs).
     pub pred_file: String,
+    /// HLO train-step program (`"<native>"` for procedural configs).
     pub train_file: String,
 }
 
@@ -187,10 +487,12 @@ impl Manifest {
         Manifest::load(&root.join(format!("{config}_k{k}")))
     }
 
+    /// Absolute path of an HLO program file named by a module/synth spec.
     pub fn hlo_path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }
 
+    /// Absolute path of parameter dump `i` for `stem` (e.g. "module0").
     pub fn param_path(&self, stem: &str, i: usize) -> PathBuf {
         self.dir.join("params").join(format!("{stem}_p{i}.bin"))
     }

@@ -224,7 +224,7 @@ impl Tensor {
             .sum()
     }
 
-    /// Load a raw little-endian f32 dump (artifacts/<cfg>/params/*.bin),
+    /// Load a raw little-endian f32 dump (`artifacts/<cfg>/params/*.bin`),
     /// decoding in bulk rather than element-at-a-time.
     pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
         let bytes = std::fs::read(path)?;

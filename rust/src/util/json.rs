@@ -94,7 +94,7 @@ impl Json {
         }
     }
 
-    /// [1, 2, 3] -> Vec<usize> (shape lists in the manifest).
+    /// `[1, 2, 3]` -> `Vec<usize>` (shape lists in the manifest).
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|j| j.as_usize()).collect()
     }

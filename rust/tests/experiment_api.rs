@@ -126,8 +126,9 @@ fn parallel_session_runs_and_shuts_down() {
 }
 
 #[test]
-fn char_lm_stand_in_trains_on_token_stream() {
-    // the Embed-op path end to end: i32 tokens in, per-position labels out
+fn char_lm_transformer_trains_on_token_stream() {
+    // the Embed + causal-attention path end to end: i32 tokens in,
+    // per-position labels out
     let res = Experiment::new("transformer_tiny")
         .k(4)
         .algo(Algo::Fr)

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: build + test (tier-1), example build + smoke, then
-# fmt/clippy hygiene.
+# CI entry point: build + test (tier-1), rustdoc (warning-free), example
+# build + smoke, then fmt/clippy hygiene.
 #
 #   scripts/ci.sh            # tier-1 + examples hard-fail; fmt/clippy advisory
 #   scripts/ci.sh --strict   # fmt/clippy failures also fail the run
@@ -33,6 +33,9 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== docs: cargo doc --no-deps (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== examples: cargo build --release --examples =="
 cargo build --release --examples
