@@ -20,12 +20,19 @@ fn main() -> Result<()> {
     let steps = std::env::var("FR_STEPS").ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(60);
+    // Kernel worker threads: 0 = auto (available cores), 1 = single-thread
+    // reference. Either way the trajectory is bitwise identical — the pool
+    // only changes wall-clock.
+    let threads = std::env::var("FR_THREADS").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
 
     let mut session = Experiment::new("mlp_tiny")
         .k(4)
         .algo(Algo::Fr)
         .steps(steps)
         .lr(0.01)
+        .threads(threads)
         .eval_every(10)
         .eval_batches(4)
         .steps_per_epoch(20)

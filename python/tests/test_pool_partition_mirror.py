@@ -1,0 +1,190 @@
+"""Mirror of the PR's pool-partitioned kernels (rust/src/runtime/native.rs).
+
+The Rust worker pool splits each kernel's OUTPUT rows into contiguous
+chunks, one chunk per task, and each task runs the exact single-thread
+inner loop over its rows. The claim the Rust parity tests assert — and
+this mirror verifies independently in float32 — is that chunking never
+changes a single output bit, because every output element is produced by
+the same multiply-adds in the same order regardless of which chunk owns
+its row.
+
+Mirrored partition schemes:
+  - matmul / matmul_nt: chunk rows of the left operand (ikj order kept)
+  - matmul_tn:          chunk columns of `a` = output rows, `r` stays the
+                        outer accumulation loop (same order, same `a == 0`
+                        skip behavior)
+  - im2col / col2im:    chunk the batch (per-image slabs are disjoint)
+
+Run: python3 test_pool_partition_mirror.py
+"""
+
+import numpy as np
+
+
+# -- single-thread references (transliterated from native.rs, f32 ops) ----
+
+def matmul_ref(a, b, m, k, n):
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for p in range(k):
+            # f32 fused row update, same order as the ikj loop
+            out[i] += np.float32(a[i, p]) * b[p]
+    return out
+
+
+def matmul_tn_ref(a, b, rows, m, n, i0=0, i1=None):
+    """aT @ b with the ReLU-zero skip; [i0, i1) mirrors matmul_tn_cols."""
+    if i1 is None:
+        i1 = m
+    out = np.zeros((i1 - i0, n), np.float32)
+    for r in range(rows):
+        for ii, i in enumerate(range(i0, i1)):
+            if a[r, i] == 0.0:
+                continue
+            out[ii] += np.float32(a[r, i]) * b[r]
+    return out
+
+
+def matmul_nt_ref(a, bt, m, k, n):
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for j in range(n):
+            acc = np.float32(0.0)
+            for p in range(k):
+                acc = np.float32(acc + np.float32(a[i, p] * bt[j, p]))
+            out[i, j] = acc
+    return out
+
+
+def im2col_ref(x, b, hw, c, k, stride, pad):
+    ohw = (hw + 2 * pad - k) // stride + 1
+    cols = np.zeros((b, ohw * ohw, k * k * c), np.float32)
+    for bi in range(b):
+        img = x[bi].reshape(hw, hw, c)
+        for oy in range(ohw):
+            for ox in range(ohw):
+                row = cols[bi, oy * ohw + ox].reshape(k, k, c)
+                for ky in range(k):
+                    iy = oy * stride + ky - pad
+                    if iy < 0 or iy >= hw:
+                        continue
+                    for kx in range(k):
+                        ix = ox * stride + kx - pad
+                        if ix < 0 or ix >= hw:
+                            continue
+                        row[ky, kx] = img[iy, ix]
+    return cols
+
+
+def col2im_ref(cols, b, hw, c, k, stride, pad):
+    ohw = (hw + 2 * pad - k) // stride + 1
+    dx = np.zeros((b, hw, hw, c), np.float32)
+    for bi in range(b):
+        for oy in range(ohw):
+            for ox in range(ohw):
+                row = cols[bi, oy * ohw + ox].reshape(k, k, c)
+                for ky in range(k):
+                    iy = oy * stride + ky - pad
+                    if iy < 0 or iy >= hw:
+                        continue
+                    for kx in range(k):
+                        ix = ox * stride + kx - pad
+                        if ix < 0 or ix >= hw:
+                            continue
+                        dx[bi, iy, ix] += row[ky, kx]
+    return dx
+
+
+# -- chunked variants (what a T-thread pool computes) ---------------------
+
+def chunks(rows, tasks):
+    if rows == 0:
+        return []
+    chunk = -(-rows // min(rows, tasks))
+    return [(i0, min(i0 + chunk, rows)) for i0 in range(0, rows, chunk)]
+
+
+def matmul_chunked(a, b, m, k, n, tasks):
+    out = np.zeros((m, n), np.float32)
+    for i0, i1 in chunks(m, tasks):
+        out[i0:i1] = matmul_ref(a[i0:i1], b, i1 - i0, k, n)
+    return out
+
+
+def matmul_tn_chunked(a, b, rows, m, n, tasks):
+    out = np.zeros((m, n), np.float32)
+    for i0, i1 in chunks(m, tasks):
+        out[i0:i1] = matmul_tn_ref(a, b, rows, m, n, i0, i1)
+    return out
+
+
+def matmul_nt_chunked(a, bt, m, k, n, tasks):
+    out = np.zeros((m, n), np.float32)
+    for i0, i1 in chunks(m, tasks):
+        out[i0:i1] = matmul_nt_ref(a[i0:i1], bt, i1 - i0, k, n)
+    return out
+
+
+def main():
+    rng = np.random.default_rng(41)
+    failures = 0
+
+    def norm(shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    def check(name, ref, got):
+        nonlocal failures
+        if ref.shape != got.shape or not np.array_equal(
+                ref.view(np.uint32), got.view(np.uint32)):
+            print(f"FAIL {name}: chunked result is not bitwise equal")
+            failures += 1
+        else:
+            print(f"ok   {name}")
+
+    for (m, k, n) in [(1, 5, 1), (3, 1, 4), (7, 129, 33), (64, 64, 64),
+                      (130, 70, 19)]:
+        a, b = norm((m, k)), norm((k, n))
+        for tasks in (2, 3, 8):
+            check(f"matmul {m}x{k}x{n} tasks={tasks}",
+                  matmul_ref(a, b, m, k, n),
+                  matmul_chunked(a, b, m, k, n, tasks))
+        bt = norm((n, k))
+        for tasks in (2, 3, 8):
+            check(f"matmul_nt {m}x{k}x{n} tasks={tasks}",
+                  matmul_nt_ref(a, bt, m, k, n),
+                  matmul_nt_chunked(a, bt, m, k, n, tasks))
+
+    for (rows, m, n) in [(5, 1, 3), (4, 33, 7), (9, 130, 17)]:
+        a, b = norm((rows, m)), norm((rows, n))
+        a[a < 0.3] = 0.0  # exercise the ReLU-zero skip across chunk edges
+        for tasks in (2, 3, 8):
+            check(f"matmul_tn {rows}x{m}x{n} tasks={tasks}",
+                  matmul_tn_ref(a, b, rows, m, n),
+                  matmul_tn_chunked(a, b, rows, m, n, tasks))
+
+    # batch-partitioned im2col / col2im: per-image computation is already
+    # the reference body, so batch chunking == running images in any split
+    for (b, hw, c, k, stride, pad) in [(2, 5, 3, 3, 2, 1), (5, 8, 2, 3, 1, 1)]:
+        x = norm((b, hw * hw * c))
+        full = im2col_ref(x, b, hw, c, k, stride, pad)
+        per_image = np.concatenate(
+            [im2col_ref(x[bi:bi + 1], 1, hw, c, k, stride, pad)
+             for bi in range(b)])
+        check(f"im2col b{b} hw{hw} c{c}", full, per_image)
+        ohw = (hw + 2 * pad - k) // stride + 1
+        cols = norm((b, ohw * ohw, k * k * c))
+        full = col2im_ref(cols, b, hw, c, k, stride, pad)
+        per_image = np.concatenate(
+            [col2im_ref(cols[bi:bi + 1], 1, hw, c, k, stride, pad)
+             for bi in range(b)])
+        check(f"col2im b{b} hw{hw} c{c}", full, per_image)
+
+    if failures:
+        print(f"\n{failures} failure(s)")
+        return 1
+    print("\nall chunked kernels bitwise-match the single-thread reference")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+//! Thread-count sweep of the pool-partitioned native kernels: times the
+//! matmul family, im2col/col2im, and a full resnet_s module fwd/bwd at
+//! `threads = 1` (the bitwise single-thread reference) and `threads = max`
+//! (available parallelism), then writes `BENCH_kernels.json` at the repo
+//! root — the perf-trajectory artifact later PRs diff against.
+//!
+//! Run with `cargo bench --bench bench_kernels` (FR_BENCH_QUICK=1 for a
+//! fast pass) or `scripts/ci.sh --bench`.
+
+use std::path::PathBuf;
+
+fn main() {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..").join("BENCH_kernels.json");
+    let report = features_replay::bench::kernels::run_kernel_sweep(&out).unwrap();
+    if report.threads.len() == 2 {
+        let worst = report.speedups.iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if let Some((name, sp)) = worst {
+            println!("slowest-scaling kernel: {name} at {sp:.2}x");
+        }
+    }
+}

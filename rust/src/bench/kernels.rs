@@ -1,0 +1,166 @@
+//! Kernel thread-count sweep: the `BENCH_kernels.json` source.
+//!
+//! Times the row-partitioned hot kernels (matmul family, im2col/col2im)
+//! and a full conv module fwd/bwd at `threads = 1` (the single-thread
+//! reference) and `threads = max` (available parallelism), then writes one
+//! JSON report with per-kernel speedups so the perf trajectory can be
+//! diffed across PRs. Run via `cargo bench --bench bench_kernels` or
+//! `scripts/ci.sh --bench`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::native::kernels;
+use crate::runtime::pool::{resolve_threads, Pool};
+use crate::runtime::{Engine, ModuleRuntime, NativeConvSpec, Tensor};
+use crate::util::json::{arr, num, obj};
+
+use super::{write_bench_json, BenchResult, Bencher};
+
+/// Result of one sweep: every timed point plus the max-thread speedup per
+/// benched kernel (mean_ms at threads=1 divided by mean_ms at threads=max).
+pub struct SweepReport {
+    pub results: Vec<BenchResult>,
+    pub threads: Vec<usize>,
+    pub speedups: Vec<(String, f64)>,
+}
+
+/// Deterministic pseudo-random operand (no RNG dependency in benches; the
+/// values only need to be non-uniform so the ReLU-zero skip in `matmul_tn`
+/// sees a realistic mix).
+fn operand(n: usize, seed: u32) -> Vec<f32> {
+    let mut state = seed | 1;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            let v = (state >> 8) as f32 / (1 << 24) as f32 - 0.5;
+            if v.abs() < 0.05 { 0.0 } else { v }
+        })
+        .collect()
+}
+
+/// Bench every hot kernel on a pool of `t` threads; returns
+/// `(short name, mean_ms)` per kernel (names are thread-count free so the
+/// sweep can match them up across thread counts).
+fn bench_at(b: &mut Bencher, t: usize) -> Result<Vec<(String, f64)>> {
+    let pool = Pool::new(t);
+    let mut means = Vec::new();
+    let mut record = |name: &str, r: BenchResult| {
+        means.push((name.to_string(), r.mean_ms));
+    };
+
+    // matmul family at a conv-scale shape (256x1024x256 = 67M MACs)
+    let (m, k, n) = (256usize, 1024usize, 256usize);
+    let a = operand(m * k, 1);
+    let w = operand(k * n, 2);
+    let r = b.bench(&format!("t{t}/matmul {m}x{k}x{n}"), || {
+        let _ = kernels::matmul_p(&pool, &a, &w, m, k, n);
+    });
+    record("matmul", r);
+
+    // dW shape: (rows, m)ᵀ @ (rows, n) with post-ReLU zeros in `a`
+    let (rows, tm, tn) = (1024usize, 512usize, 256usize);
+    let at = operand(rows * tm, 3);
+    let dy = operand(rows * tn, 4);
+    let r = b.bench(&format!("t{t}/matmul_tn {rows}x{tm}x{tn}"), || {
+        let _ = kernels::matmul_tn_p(&pool, &at, &dy, rows, tm, tn);
+    });
+    record("matmul_tn", r);
+
+    let bt = operand(n * k, 5);
+    let r = b.bench(&format!("t{t}/matmul_nt {m}x{k}x{n}"), || {
+        let _ = kernels::matmul_nt_p(&pool, &a, &bt, m, k, n);
+    });
+    record("matmul_nt", r);
+
+    // im2col / col2im at the resnet_s trunk shape (b=8, 32x32, 16 ch)
+    let (ib, hw, c) = (8usize, 32usize, 16usize);
+    let x = operand(ib * hw * hw * c, 6);
+    let r = b.bench(&format!("t{t}/im2col b{ib} {hw}x{hw}x{c} k3"), || {
+        let _ = kernels::im2col_p(&pool, &x, ib, hw, c, 3, 1, 1);
+    });
+    record("im2col", r);
+    let cols = operand(ib * hw * hw * 9 * c, 7);
+    let r = b.bench(&format!("t{t}/col2im b{ib} {hw}x{hw}x{c} k3"), || {
+        let _ = kernels::col2im_p(&pool, &cols, ib, hw, c, 3, 1, 1);
+    });
+    record("col2im", r);
+
+    // End-to-end: the first resnet_s module (conv stem + residual pairs)
+    // fwd and bwd through an engine whose backend owns a `t`-thread pool.
+    // Inputs/deltas must be non-zero: on all-zero activations the
+    // `matmul_tn` ReLU-zero skip elides the dW accumulations entirely and
+    // the backward timing degenerates.
+    let manifest = NativeConvSpec::cifar(8, 3, 1, 10, 4).manifest()?;
+    let engine = Engine::native_with_threads(t);
+    let module = ModuleRuntime::load(&engine, &manifest, 0)?;
+    let n_in: usize = module.spec.in_shape.iter().product();
+    let h = Tensor::from_f32(module.spec.in_shape.clone(), operand(n_in, 8))?;
+    let r = b.bench(&format!("t{t}/resnet_s module0 fwd"), || {
+        module.forward(&h).unwrap();
+    });
+    record("resnet_s module0 fwd", r);
+    let n_out: usize = module.spec.out_shape.iter().product();
+    let delta = Tensor::from_f32(module.spec.out_shape.clone(), operand(n_out, 9))?;
+    let r = b.bench(&format!("t{t}/resnet_s module0 bwd"), || {
+        module.backward(&h, &delta).unwrap();
+    });
+    record("resnet_s module0 bwd", r);
+
+    Ok(means)
+}
+
+/// Run the sweep at `threads = 1` and `threads = max` and write
+/// `BENCH_kernels.json` to `out`.
+pub fn run_kernel_sweep(out: &Path) -> Result<SweepReport> {
+    let max_t = resolve_threads(0);
+    let mut threads = vec![1usize];
+    if max_t > 1 {
+        threads.push(max_t);
+    }
+    let mut b = Bencher::new();
+    let mut per_thread: Vec<Vec<(String, f64)>> = Vec::new();
+    for &t in &threads {
+        println!("-- native kernels @ threads={t} --");
+        per_thread.push(bench_at(&mut b, t)?);
+    }
+
+    // threads=max speedup over the threads=1 reference, per kernel
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    if per_thread.len() == 2 {
+        for ((name, t1_ms), (_, tmax_ms)) in per_thread[0].iter().zip(&per_thread[1]) {
+            speedups.push((name.clone(), t1_ms / tmax_ms));
+        }
+        println!("\nspeedup @ threads={max_t} (vs threads=1):");
+        for (name, sp) in &speedups {
+            println!("  {name:<24} {sp:>5.2}x");
+        }
+    } else {
+        println!("\n(single hardware thread — no speedup column)");
+    }
+
+    let extra = vec![
+        ("threads_swept", arr(threads.iter().map(|&t| num(t as f64)))),
+        ("parallelism_available", num(max_t as f64)),
+        ("speedup_at_max_threads",
+         obj(speedups.iter().map(|(nm, v)| (nm.as_str(), num(*v))).collect())),
+    ];
+    write_bench_json(out, "kernels", &b.results, extra)?;
+    println!("wrote {}", out.display());
+    Ok(SweepReport { results: b.results, threads, speedups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_is_deterministic_with_exact_zeros() {
+        let a = operand(1000, 7);
+        assert_eq!(a, operand(1000, 7));
+        assert_ne!(a, operand(1000, 8));
+        assert!(a.iter().any(|&v| v == 0.0), "tn skip path needs zeros");
+        assert!(a.iter().any(|&v| v != 0.0));
+    }
+}

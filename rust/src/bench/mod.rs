@@ -2,6 +2,11 @@
 //! offline sandbox (no criterion crate). Warmup + timed iterations,
 //! mean/median/stddev, an aligned table, and a machine-readable JSON report
 //! (`BENCH_*.json`) so the perf trajectory is tracked across PRs.
+//!
+//! [`kernels`] is the thread-count sweep over the pool-partitioned native
+//! kernels (`BENCH_kernels.json`, also runnable via `scripts/ci.sh --bench`).
+
+pub mod kernels;
 
 use std::path::Path;
 use std::time::Instant;

@@ -10,11 +10,25 @@
 //!
 //! Every payload crossing a channel is an Arc-backed [`Tensor`], so the
 //! hand-offs (input feed, boundary activations, deltas) are refcount bumps
-//! — no buffer is copied on the worker graph. On the 1-core testbed the
-//! threads interleave rather than overlap; the correctness (identical
-//! gradients to `FrTrainer`) is what this module demonstrates, covered by
-//! an integration test asserting parity with the single-timeline
-//! implementation on the native backend.
+//! — no buffer is copied on the worker graph. Each worker's engine runs the
+//! native kernels on its own [`crate::runtime::Pool`] sized by
+//! `TrainConfig::threads`; correctness (identical gradients to `FrTrainer`
+//! at any thread count) is covered by an integration test asserting parity
+//! with the single-timeline implementation on the native backend.
+//!
+//! Timing semantics (what `StepTiming` reports): each worker starts its
+//! forward clock **after** `act_rx.recv()` returns, so `fwd_ms` measures
+//! the module's own compute, not upstream pipeline latency billed to the
+//! wrong module. The last module performs no forward during Play (it only
+//! stores the input + labels, ~0 ms); its forward is *recomputed* inside
+//! the fused loss head during Replay, so it is accounted in
+//! `bwd_ms[K-1]` — see [`StepTiming`].
+//!
+//! Failure semantics: a worker whose step errors reports the root cause to
+//! the leader on the done channel before exiting; the leader then tears the
+//! fleet down (closing every leader-held sender so blocked peers cascade
+//! out), joins the threads, and surfaces every underlying error — not just
+//! "worker died mid-step".
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -47,6 +61,18 @@ struct WorkerDone {
     loss: Option<f32>,
     logits: Option<Tensor>,
     history_bytes: usize,
+    /// Set when the worker's step failed: the rendered root-cause chain,
+    /// reported to the leader before the worker thread exits.
+    error: Option<String>,
+}
+
+impl WorkerDone {
+    fn failure(worker: usize, error: String) -> WorkerDone {
+        WorkerDone {
+            worker, fwd_ms: 0.0, bwd_ms: 0.0, loss: None, logits: None,
+            history_bytes: 0, error: Some(error),
+        }
+    }
 }
 
 struct WorkerHandles {
@@ -128,6 +154,13 @@ impl ParallelFr {
         self.k
     }
 
+    fn ensure_live(&self) -> Result<()> {
+        if self.workers.is_empty() {
+            bail!("worker fleet already shut down after an earlier failure");
+        }
+        Ok(())
+    }
+
     fn broadcast(&self, make: impl Fn() -> Command) -> Result<()> {
         for w in &self.workers {
             w.cmd_tx.send(make()).map_err(|_| anyhow::anyhow!("worker hung up"))?;
@@ -135,8 +168,59 @@ impl ParallelFr {
         Ok(())
     }
 
+    /// Collect one done message; a closed channel or an error report from a
+    /// worker converts into a fleet teardown with the root causes attached.
+    fn recv_done(&mut self, phase: &str) -> Result<WorkerDone> {
+        match self.done_rx.recv() {
+            Ok(d) => match d.error {
+                None => Ok(d),
+                Some(e) => Err(self.fleet_failure(Some((d.worker, e)), phase)),
+            },
+            Err(_) => Err(self.fleet_failure(None, phase)),
+        }
+    }
+
+    /// Tear down a failed fleet: close every leader-held sender (so workers
+    /// blocked on a channel cascade out), join the threads, and aggregate
+    /// every worker's root-cause error into one message.
+    fn fleet_failure(&mut self, primary: Option<(usize, String)>, phase: &str)
+                     -> anyhow::Error {
+        // Closing the command + input feeds unblocks idling workers; a
+        // worker that exits drops its own forward/delta senders, which
+        // unblocks its neighbours in turn.
+        let (dead_tx, _) = channel();
+        drop(std::mem::replace(&mut self.input_tx, dead_tx));
+        let mut joins = Vec::with_capacity(self.workers.len());
+        for w in self.workers.drain(..) {
+            drop(w.cmd_tx);
+            joins.push(w.join);
+        }
+        let primary_idx = primary.as_ref().map(|(w, _)| *w);
+        let mut causes: Vec<String> = Vec::new();
+        if let Some((w, e)) = primary {
+            causes.push(format!("worker {w}: {e}"));
+        }
+        for (i, join) in joins.into_iter().enumerate() {
+            match join.join() {
+                Ok(Ok(())) => {}
+                // the primary worker's own Err would repeat the reported cause
+                Ok(Err(e)) if Some(i) != primary_idx =>
+                    causes.push(format!("worker {i}: {e:#}")),
+                Ok(Err(_)) => {}
+                Err(_) if Some(i) != primary_idx =>
+                    causes.push(format!("worker {i}: panicked")),
+                Err(_) => {}
+            }
+        }
+        if causes.is_empty() {
+            causes.push("worker exited without reporting a cause".into());
+        }
+        anyhow::anyhow!("{phase} failed: {}", causes.join("; "))
+    }
+
     /// One Algorithm-1 iteration across the worker fleet.
     pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        self.ensure_live()?;
         self.broadcast(|| Command::Forward { eval: false })?;
         self.input_tx.send((batch.input.clone(), Some(batch.labels.clone())))
             .map_err(|_| anyhow::anyhow!("worker 0 hung up"))?;
@@ -146,7 +230,7 @@ impl ParallelFr {
         let mut loss = f32::NAN;
         let mut history_bytes = 0usize;
         for _ in 0..self.k {
-            let d: WorkerDone = self.done_rx.recv().context("worker died mid-step")?;
+            let d = self.recv_done("train step")?;
             timing.fwd_ms[d.worker] = d.fwd_ms;
             timing.bwd_ms[d.worker] = d.bwd_ms;
             if let Some(l) = d.loss {
@@ -160,12 +244,13 @@ impl ParallelFr {
 
     /// Forward-only pass returning (mean loss, error rate) on one batch.
     pub fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
+        self.ensure_live()?;
         self.broadcast(|| Command::Forward { eval: true })?;
         self.input_tx.send((batch.input.clone(), Some(batch.labels.clone())))
             .map_err(|_| anyhow::anyhow!("worker 0 hung up"))?;
         let mut logits = None;
         for _ in 0..self.k {
-            let d = self.done_rx.recv().context("worker died mid-eval")?;
+            let d = self.recv_done("eval")?;
             if d.logits.is_some() {
                 logits = d.logits;
             }
@@ -189,6 +274,12 @@ impl ParallelFr {
     }
 }
 
+/// Thread entry: run the worker loop and, if it fails — by `Err` *or* by
+/// panic (e.g. a kernel task panic re-raised by the pool) — report the
+/// rendered root cause to the leader before exiting (best effort — the
+/// leader may already be gone). Without the panic report the leader could
+/// hang in `recv_done`: idle peers keep the done channel open and nothing
+/// cascades, so no teardown would ever start.
 #[allow(clippy::too_many_arguments)]
 fn worker_main(
     k: usize,
@@ -202,9 +293,53 @@ fn worker_main(
     delta_rx: Option<Receiver<Tensor>>,
     done: Sender<WorkerDone>,
 ) -> Result<()> {
-    // Each worker builds its own engine + module runtime ("one GPU").
-    let engine = backend.engine()?;
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        worker_loop(k, manifest, backend, config, cmd_rx, act_rx,
+                    next_tx, delta_tx, delta_rx, &done)
+    })) {
+        Ok(r) => {
+            if let Err(e) = &r {
+                done.send(WorkerDone::failure(k, format!("{e:#}"))).ok();
+            }
+            r
+        }
+        Err(payload) => {
+            let msg = payload.downcast_ref::<&str>().copied()
+                .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+                .unwrap_or("non-string panic payload");
+            done.send(WorkerDone::failure(k, format!("panicked: {msg}"))).ok();
+            std::panic::resume_unwind(payload)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    k: usize,
+    manifest: Manifest,
+    backend: BackendKind,
+    config: TrainConfig,
+    cmd_rx: Receiver<Command>,
+    act_rx: Receiver<(Tensor, Option<Tensor>)>,
+    next_tx: Option<Sender<(Tensor, Option<Tensor>)>>,
+    delta_tx: Option<Sender<Tensor>>,
+    delta_rx: Option<Receiver<Tensor>>,
+    done: &Sender<WorkerDone>,
+) -> Result<()> {
+    // Each worker builds its own engine + module runtime ("one GPU"), with
+    // its own kernel pool sized by the threads knob. `threads = 0` (auto)
+    // splits the machine's parallelism across the K workers instead of
+    // giving every worker all cores: K pools × all-cores would oversubscribe
+    // during pipeline overlap and the contention would land in the very
+    // fwd_ms/bwd_ms clocks this module keeps honest. An explicit `threads`
+    // value is taken as written (per worker).
     let kk = manifest.k;
+    let worker_threads = if config.threads == 0 {
+        crate::runtime::pool::resolve_threads(0).div_ceil(kk).max(1)
+    } else {
+        config.threads
+    };
+    let engine = backend.engine_with_threads(worker_threads)?;
     let mut module = ModuleRuntime::load(&engine, &manifest, k)?;
     let mut opt = SgdMomentum::new(&module.params, config.momentum, config.weight_decay);
     let lag = kk - 1 - k;
@@ -218,15 +353,17 @@ fn worker_main(
         match cmd_rx.recv() {
             Err(_) | Ok(Command::Shutdown) => return Ok(()),
             Ok(Command::Forward { eval }) => {
-                let mut timer = Timer::new();
                 let (h, lbl) = act_rx.recv().context("activation feed closed")?;
+                // Start the clock only once the input is here: fwd_ms is
+                // this module's compute, not upstream pipeline wait.
+                let mut timer = Timer::new();
                 if eval {
                     if is_last {
                         let logits = module.forward(&h)?;
                         done.send(WorkerDone {
                             worker: k, fwd_ms: timer.lap_ms(), bwd_ms: 0.0,
                             loss: None, logits: Some(logits),
-                            history_bytes: history.bytes(),
+                            history_bytes: history.bytes(), error: None,
                         }).ok();
                     } else {
                         let out = module.forward(&h)?;
@@ -235,12 +372,15 @@ fn worker_main(
                         done.send(WorkerDone {
                             worker: k, fwd_ms: timer.lap_ms(), bwd_ms: 0.0,
                             loss: None, logits: None,
-                            history_bytes: history.bytes(),
+                            history_bytes: history.bytes(), error: None,
                         }).ok();
                     }
                     continue;
                 }
                 if is_last {
+                    // No forward here: the loss head replays it during
+                    // Backward, so the recompute lands in bwd_ms (see the
+                    // module docs / StepTiming).
                     history.push(h);
                     labels = lbl;
                 } else {
@@ -295,6 +435,7 @@ fn worker_main(
                     loss,
                     logits: None,
                     history_bytes: history.bytes(),
+                    error: None,
                 }).ok();
             }
         }

@@ -19,11 +19,16 @@ pub struct TrainConfig {
     pub momentum: f32,
     pub weight_decay: f32,
     pub seed: u64,
+    /// Native-kernel worker threads per engine (0 = auto: available
+    /// parallelism; 1 = the exact single-thread reference). Multi-thread
+    /// kernels are bitwise identical to `threads = 1` — the knob only
+    /// changes wall-clock, never the trajectory.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { lr: 0.01, momentum: 0.9, weight_decay: 5e-4, seed: 0 }
+        TrainConfig { lr: 0.01, momentum: 0.9, weight_decay: 5e-4, seed: 0, threads: 0 }
     }
 }
 

@@ -10,6 +10,14 @@ use crate::data::Batch;
 /// On the 1-core testbed these phases run sequentially; the simulator uses
 /// them to compute the K-device makespan of each algorithm's dependency
 /// graph (DESIGN.md substitution 1).
+///
+/// Semantics in the threaded deployment ([`super::parallel::ParallelFr`]):
+/// every per-module clock starts only once that module's input has
+/// arrived, so `fwd_ms[k]` is module k's own compute — blocked channel
+/// wait (upstream pipeline latency) is never billed to a module. The
+/// *last* module does no forward during Play (it stores input + labels);
+/// its forward is recomputed inside the fused loss head during Replay, so
+/// `fwd_ms[K-1]` is ~0 and that recompute is part of `bwd_ms[K-1]`.
 #[derive(Clone, Debug, Default)]
 pub struct StepTiming {
     pub fwd_ms: Vec<f64>,

@@ -128,6 +128,15 @@ impl Experiment {
         self
     }
 
+    /// Native-kernel worker threads per engine. Default 0 = auto (available
+    /// parallelism); 1 = the exact single-thread reference path. The
+    /// partitioned kernels are bitwise identical at every thread count, so
+    /// this knob changes wall-clock only — never the training trajectory.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.config.threads = threads;
+        self
+    }
+
     pub fn momentum(mut self, momentum: f32) -> Self {
         self.config.momentum = momentum;
         self
@@ -216,7 +225,7 @@ impl Experiment {
     /// `session()?.run()`.
     pub fn session(&self) -> Result<Session> {
         let resolved = self.resolve()?;
-        let engine = resolved.backend.engine()?;
+        let engine = resolved.backend.engine_with_threads(self.config.threads)?;
         let trainer = make_trainer(&engine, &resolved.manifest, self.algo,
                                    self.config.clone())?;
         let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
@@ -239,7 +248,7 @@ impl Experiment {
     /// not `dyn Trainer`). Ignores `algo`.
     pub fn build_fr(&self) -> Result<FrSession> {
         let resolved = self.resolve()?;
-        let engine = resolved.backend.engine()?;
+        let engine = resolved.backend.engine_with_threads(self.config.threads)?;
         let stack = ModuleStack::load(&engine, resolved.manifest.clone(),
                                       self.config.clone())?;
         let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;

@@ -33,6 +33,8 @@ const OPTS: &[(&str, &str)] = &[
     ("steps", "training steps (default 100)"),
     ("lr", "base stepsize (default 0.01)"),
     ("seed", "data/init seed (default 0)"),
+    ("threads", "native kernel threads per engine (default 0 = auto, 1 = \
+                 single-thread reference; results are bitwise identical)"),
     ("eval-every", "eval cadence in steps (default 25)"),
     ("artifacts", "artifacts root (default ./artifacts)"),
     ("out", "write a JSON report to this path"),
@@ -66,6 +68,7 @@ fn main() -> Result<()> {
     let steps = args.usize_or("steps", 100).map_err(|e| anyhow::anyhow!(e))?;
     let lr = args.f64_or("lr", 0.01).map_err(|e| anyhow::anyhow!(e))? as f32;
     let seed = args.u64_or("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let threads = args.usize_or("threads", 0).map_err(|e| anyhow::anyhow!(e))?;
     let eval_every = args.usize_or("eval-every", 25).map_err(|e| anyhow::anyhow!(e))?;
 
     // One builder carries every CLI knob; subcommands refine it.
@@ -74,6 +77,7 @@ fn main() -> Result<()> {
         .steps(steps)
         .lr(lr)
         .seed(seed)
+        .threads(threads)
         .eval_every(eval_every)
         .verbose(args.flag("verbose"));
     if let Some(b) = args.get("backend") {

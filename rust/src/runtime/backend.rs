@@ -143,10 +143,21 @@ impl BackendKind {
     }
 
     pub fn engine(self) -> Result<super::engine::Engine> {
+        self.engine_with_threads(0)
+    }
+
+    /// Build the engine with an explicit kernel thread count (native
+    /// backend only; 0 = auto, 1 = the exact single-thread reference).
+    /// PJRT ignores the knob — its parallelism lives in the XLA runtime.
+    pub fn engine_with_threads(self, threads: usize) -> Result<super::engine::Engine> {
         match self {
-            BackendKind::Native => Ok(super::engine::Engine::native()),
+            BackendKind::Native =>
+                Ok(super::engine::Engine::native_with_threads(threads)),
             #[cfg(feature = "pjrt")]
-            BackendKind::Pjrt => super::engine::Engine::pjrt_cpu(),
+            BackendKind::Pjrt => {
+                let _ = threads;
+                super::engine::Engine::pjrt_cpu()
+            }
         }
     }
 }

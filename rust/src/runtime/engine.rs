@@ -25,9 +25,21 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// The pure-Rust CPU backend (always available, no artifacts needed).
+    /// The pure-Rust CPU backend (always available, no artifacts needed)
+    /// with kernel parallelism set to auto (available cores). Multi-thread
+    /// kernels are bitwise identical to the single-thread reference, so
+    /// this changes nothing but wall-clock.
     pub fn native() -> Engine {
-        Engine { backend: Rc::new(NativeBackend), kind: BackendKind::Native }
+        Engine::native_with_threads(0)
+    }
+
+    /// The native CPU backend with an explicit kernel thread count
+    /// (0 = auto, 1 = the exact single-thread reference path).
+    pub fn native_with_threads(threads: usize) -> Engine {
+        Engine {
+            backend: Rc::new(NativeBackend::new(threads)),
+            kind: BackendKind::Native,
+        }
     }
 
     /// The PJRT backend over a CPU client (cargo feature `pjrt`).

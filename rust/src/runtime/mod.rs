@@ -6,6 +6,8 @@
 //! - [`backend`]: the `Backend`/`ModuleExec`/`SynthExec` traits and the
 //!   resident-parameter buffer
 //! - [`native`]: pure-Rust CPU backend (default; fully offline)
+//! - [`pool`]: dependency-free scoped worker pool the native kernels
+//!   row-partition over (bitwise-identical at every thread count)
 //! - `pjrt` (cargo feature `pjrt`): PJRT client + compiled-HLO backend
 //! - [`engine`]: per-worker backend handle
 //! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers
@@ -16,6 +18,7 @@ pub mod module;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 pub mod spec;
 pub mod tensor;
 
@@ -23,5 +26,6 @@ pub use backend::{Backend, BackendKind, LossOutput, ModuleExec, ResidentParams, 
 pub use engine::Engine;
 pub use module::{ModuleRuntime, SynthRuntime};
 pub use native::{NativeBackend, NativeConvSpec, NativeLmSpec, NativeMlpSpec};
+pub use pool::Pool;
 pub use spec::{Manifest, ModuleSpec, NativeOp, OpSig, SynthSpec};
 pub use tensor::{copy_metrics, DType, Tensor};

@@ -17,24 +17,71 @@
 //! Parameters are resident by construction: the executor reads the host
 //! `Arc` buffers in place on every call — zero marshaling, which is the
 //! whole point of the backend split (see BENCH_hotpath.json).
+//!
+//! The hot kernels (matmul family, im2col/col2im) are row-partitioned over
+//! a [`Pool`] owned by the backend: each output row is computed by exactly
+//! one worker running the identical single-thread loop, so results are
+//! **bitwise equal** at every thread count (asserted by the parity tests
+//! below). `NativeBackend::new(1)` is the exact single-thread reference.
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::rng::Rng;
 
 use super::backend::{Backend, LossOutput, ModuleExec, ResidentParams, SynthExec};
+use super::pool::Pool;
 use super::spec::{Manifest, ModuleSpec, NativeOp, SynthSpec};
 use super::tensor::{DType, Tensor};
 
 /// The f32 slice kernels (also used directly by benches and tests).
+///
+/// Each hot kernel comes in two forms: the single-thread reference (the
+/// bare name) and a pool-partitioned variant (`*_p`) that chunks **output
+/// rows** across [`Pool`] workers. Every output element is produced by the
+/// identical inner loop in the identical accumulation order whichever
+/// worker owns its row, so the `*_p` kernels are bitwise equal to the
+/// reference at any thread count; small operands (below the pool's work
+/// threshold) fall back to the reference path outright.
 pub mod kernels {
+    use crate::runtime::pool::Pool;
+
+    /// Shared output pointer for row-partitioned kernels. Each pool task
+    /// materializes a mutable view of *its own* disjoint row range, so no
+    /// two tasks ever alias.
+    #[derive(Clone, Copy)]
+    struct OutPtr(*mut f32);
+
+    // SAFETY: tasks write disjoint row ranges (enforced by the chunking in
+    // every `*_p` kernel) and `Pool::run` joins before the buffer moves.
+    unsafe impl Send for OutPtr {}
+    unsafe impl Sync for OutPtr {}
+
+    impl OutPtr {
+        /// Rows `r0..r1` of a row-major `(_, n)` buffer.
+        ///
+        /// SAFETY: caller guarantees the range is in bounds, disjoint from
+        /// every other task's range, and that the allocation outlives the
+        /// pool run (all three hold for the `*_p` kernels below).
+        unsafe fn rows(self, r0: usize, r1: usize, n: usize) -> &'static mut [f32] {
+            std::slice::from_raw_parts_mut(self.0.add(r0 * n), (r1 - r0) * n)
+        }
+    }
+
     /// `(m, k) @ (k, n) -> (m, n)`, row-major, fresh output (ikj order).
     pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(a, b, m, k, n, &mut out);
+        out
+    }
+
+    /// [`matmul`] into a zeroed caller buffer (the row-chunk work unit).
+    fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
-        let mut out = vec![0.0f32; m * n];
+        debug_assert_eq!(out.len(), m * n);
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
@@ -45,6 +92,25 @@ pub mod kernels {
                 }
             }
         }
+    }
+
+    /// [`matmul`] with output rows partitioned across `pool` — bitwise
+    /// equal to the reference at every thread count.
+    pub fn matmul_p(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                    -> Vec<f32> {
+        if m < 2 || !pool.should_par(m * k * n) {
+            return matmul(a, b, m, k, n);
+        }
+        let mut out = vec![0.0f32; m * n];
+        let (tasks, chunk) = pool.row_chunks(m);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let i0 = t * chunk;
+            let i1 = (i0 + chunk).min(m);
+            // SAFETY: task t exclusively owns output rows i0..i1.
+            let orows = unsafe { optr.rows(i0, i1, n) };
+            matmul_into(&a[i0 * k..i1 * k], b, i1 - i0, k, n, orows);
+        });
         out
     }
 
@@ -55,31 +121,69 @@ pub mod kernels {
     /// fine for gradients (a NaN blow-up still reaches the loss through the
     /// forward pass), and roughly halves the dW work after ReLU.
     pub fn matmul_tn(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        matmul_tn_cols(a, b, rows, m, n, 0, m, &mut out);
+        out
+    }
+
+    /// [`matmul_tn`] restricted to columns `i0..i1` of `a` — i.e. output
+    /// rows `i0..i1` — into a zeroed `(i1-i0, n)` buffer. The accumulation
+    /// over `r` runs in the same increasing order as the full kernel (and
+    /// the `a == 0.0` skip fires on the same elements), so restricting the
+    /// column range never changes an output bit.
+    fn matmul_tn_cols(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize,
+                      i0: usize, i1: usize, out: &mut [f32]) {
         debug_assert_eq!(a.len(), rows * m);
         debug_assert_eq!(b.len(), rows * n);
-        let mut out = vec![0.0f32; m * n];
+        debug_assert_eq!(out.len(), (i1 - i0) * n);
         for r in 0..rows {
-            let arow = &a[r * m..(r + 1) * m];
+            let arow = &a[r * m + i0..r * m + i1];
             let brow = &b[r * n..(r + 1) * n];
-            for (i, &av) in arow.iter().enumerate() {
+            for (ii, &av) in arow.iter().enumerate() {
                 if av == 0.0 {
                     continue;
                 }
-                let orow = &mut out[i * n..(i + 1) * n];
+                let orow = &mut out[ii * n..(ii + 1) * n];
                 for (o, &bv) in orow.iter_mut().zip(brow) {
                     *o += av * bv;
                 }
             }
         }
+    }
+
+    /// [`matmul_tn`] with output rows partitioned across `pool` — bitwise
+    /// equal to the reference at every thread count.
+    pub fn matmul_tn_p(pool: &Pool, a: &[f32], b: &[f32], rows: usize, m: usize, n: usize)
+                       -> Vec<f32> {
+        if m < 2 || !pool.should_par(rows * m * n) {
+            return matmul_tn(a, b, rows, m, n);
+        }
+        let mut out = vec![0.0f32; m * n];
+        let (tasks, chunk) = pool.row_chunks(m);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let i0 = t * chunk;
+            let i1 = (i0 + chunk).min(m);
+            // SAFETY: task t exclusively owns output rows i0..i1.
+            let orows = unsafe { optr.rows(i0, i1, n) };
+            matmul_tn_cols(a, b, rows, m, n, i0, i1, orows);
+        });
         out
     }
 
     /// `a @ bᵀ` where `a` is `(m, k)` and `b` is `(n, k)` -> `(m, n)`.
     /// (The `dx = dy Wᵀ` kernel — both operands walk contiguously.)
     pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        matmul_nt_into(a, b, m, k, n, &mut out);
+        out
+    }
+
+    /// [`matmul_nt`] into a caller buffer (the row-chunk work unit).
+    fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
-        let mut out = vec![0.0f32; m * n];
+        debug_assert_eq!(out.len(), m * n);
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
@@ -92,6 +196,25 @@ pub mod kernels {
                 *o = acc;
             }
         }
+    }
+
+    /// [`matmul_nt`] with output rows partitioned across `pool` — bitwise
+    /// equal to the reference at every thread count.
+    pub fn matmul_nt_p(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                       -> Vec<f32> {
+        if m < 2 || !pool.should_par(m * k * n) {
+            return matmul_nt(a, b, m, k, n);
+        }
+        let mut out = vec![0.0f32; m * n];
+        let (tasks, chunk) = pool.row_chunks(m);
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let i0 = t * chunk;
+            let i1 = (i0 + chunk).min(m);
+            // SAFETY: task t exclusively owns output rows i0..i1.
+            let orows = unsafe { optr.rows(i0, i1, n) };
+            matmul_nt_into(&a[i0 * k..i1 * k], b, i1 - i0, k, n, orows);
+        });
         out
     }
 
@@ -232,27 +355,60 @@ pub mod kernels {
         let mut cols = vec![0.0f32; b * ohw * ohw * patch];
         for bi in 0..b {
             let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
-            for oy in 0..ohw {
-                for ox in 0..ohw {
-                    let row = &mut cols[((bi * ohw + oy) * ohw + ox) * patch..][..patch];
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        if iy < 0 || iy >= hw as isize {
+            let dst = &mut cols[bi * ohw * ohw * patch..(bi + 1) * ohw * ohw * patch];
+            im2col_image(img, hw, c, k, stride, pad, ohw, dst);
+        }
+        cols
+    }
+
+    /// [`im2col`] for one image into its zeroed `(ohw·ohw, k·k·c)` slab
+    /// (the per-image work unit — images are independent, so the pool
+    /// variant partitions the batch).
+    fn im2col_image(img: &[f32], hw: usize, c: usize, k: usize, stride: usize,
+                    pad: usize, ohw: usize, cols: &mut [f32]) {
+        let patch = k * k * c;
+        for oy in 0..ohw {
+            for ox in 0..ohw {
+                let row = &mut cols[(oy * ohw + ox) * patch..][..patch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= hw as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= hw as isize {
                             continue;
                         }
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            if ix < 0 || ix >= hw as isize {
-                                continue;
-                            }
-                            let src = (iy as usize * hw + ix as usize) * c;
-                            let dst = (ky * k + kx) * c;
-                            row[dst..dst + c].copy_from_slice(&img[src..src + c]);
-                        }
+                        let src = (iy as usize * hw + ix as usize) * c;
+                        let dst = (ky * k + kx) * c;
+                        row[dst..dst + c].copy_from_slice(&img[src..src + c]);
                     }
                 }
             }
         }
+    }
+
+    /// [`im2col`] with the batch partitioned across `pool` (each image's
+    /// patch slab is written by exactly one task) — bitwise equal to the
+    /// reference at every thread count.
+    pub fn im2col_p(pool: &Pool, x: &[f32], b: usize, hw: usize, c: usize,
+                    k: usize, stride: usize, pad: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let patch = k * k * c;
+        if b < 2 || !pool.should_par(b * ohw * ohw * patch) {
+            return im2col(x, b, hw, c, k, stride, pad);
+        }
+        let mut cols = vec![0.0f32; b * ohw * ohw * patch];
+        let slab = ohw * ohw * patch;
+        let optr = OutPtr(cols.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            // SAFETY: task bi exclusively owns image bi's patch slab.
+            let dst = unsafe { optr.rows(bi, bi + 1, slab) };
+            im2col_image(img, hw, c, k, stride, pad, ohw, dst);
+        });
         cols
     }
 
@@ -267,31 +423,64 @@ pub mod kernels {
         debug_assert_eq!(cols.len(), b * ohw * ohw * patch);
         let mut dx = vec![0.0f32; b * hw * hw * c];
         for bi in 0..b {
+            let src = &cols[bi * ohw * ohw * patch..(bi + 1) * ohw * ohw * patch];
             let img = &mut dx[bi * hw * hw * c..(bi + 1) * hw * hw * c];
-            for oy in 0..ohw {
-                for ox in 0..ohw {
-                    let row = &cols[((bi * ohw + oy) * ohw + ox) * patch..][..patch];
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        if iy < 0 || iy >= hw as isize {
+            col2im_image(src, hw, c, k, stride, pad, ohw, img);
+        }
+        dx
+    }
+
+    /// [`col2im`] for one image: scatter-add its patch slab onto its zeroed
+    /// `(hw·hw·c)` gradient (strided windows overlap only *within* an
+    /// image, so the batch partitions cleanly).
+    fn col2im_image(cols: &[f32], hw: usize, c: usize, k: usize, stride: usize,
+                    pad: usize, ohw: usize, img: &mut [f32]) {
+        let patch = k * k * c;
+        for oy in 0..ohw {
+            for ox in 0..ohw {
+                let row = &cols[(oy * ohw + ox) * patch..][..patch];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= hw as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= hw as isize {
                             continue;
                         }
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            if ix < 0 || ix >= hw as isize {
-                                continue;
-                            }
-                            let dst = (iy as usize * hw + ix as usize) * c;
-                            let src = (ky * k + kx) * c;
-                            for (d, &v) in img[dst..dst + c].iter_mut()
-                                .zip(&row[src..src + c]) {
-                                *d += v;
-                            }
+                        let dst = (iy as usize * hw + ix as usize) * c;
+                        let src = (ky * k + kx) * c;
+                        for (d, &v) in img[dst..dst + c].iter_mut()
+                            .zip(&row[src..src + c]) {
+                            *d += v;
                         }
                     }
                 }
             }
         }
+    }
+
+    /// [`col2im`] with the batch partitioned across `pool` (each image's
+    /// input gradient is accumulated by exactly one task, in the reference
+    /// order) — bitwise equal to the reference at every thread count.
+    pub fn col2im_p(pool: &Pool, cols: &[f32], b: usize, hw: usize, c: usize,
+                    k: usize, stride: usize, pad: usize) -> Vec<f32> {
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let patch = k * k * c;
+        debug_assert_eq!(cols.len(), b * ohw * ohw * patch);
+        if b < 2 || !pool.should_par(b * ohw * ohw * patch) {
+            return col2im(cols, b, hw, c, k, stride, pad);
+        }
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        let slab = hw * hw * c;
+        let optr = OutPtr(dx.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let src = &cols[bi * ohw * ohw * patch..(bi + 1) * ohw * ohw * patch];
+            // SAFETY: task bi exclusively owns image bi's gradient slab.
+            let img = unsafe { optr.rows(bi, bi + 1, slab) };
+            col2im_image(src, hw, c, k, stride, pad, ohw, img);
+        });
         dx
     }
 
@@ -499,10 +688,13 @@ pub struct NativeModule {
     offsets: Vec<usize>,
     batch: usize,
     is_first: bool,
+    /// The backend's kernel worker pool (size 1 = the exact single-thread
+    /// reference; larger pools are bitwise identical by row ownership).
+    pool: Arc<Pool>,
 }
 
 impl NativeModule {
-    fn build(spec: ModuleSpec) -> Result<NativeModule> {
+    fn build(spec: ModuleSpec, pool: Arc<Pool>) -> Result<NativeModule> {
         if spec.native_ops.is_empty() {
             bail!("module {}: manifest carries no native op graph — AOT \
                    artifacts need the `pjrt` backend (cargo feature), or use \
@@ -587,7 +779,7 @@ impl NativeModule {
                    out {:?}", spec.index, spec.out_shape);
         }
         let is_first = spec.index == 0;
-        Ok(NativeModule { spec, plans, offsets, batch, is_first })
+        Ok(NativeModule { spec, plans, offsets, batch, is_first, pool })
     }
 
     /// Forward keeping per-plan activations when `traced`: `outs[p]` is the
@@ -598,6 +790,7 @@ impl NativeModule {
     fn run_forward(&self, params: &[Tensor], h_in: &Tensor, traced: bool)
                    -> (Vec<Vec<f32>>, Vec<Aux>) {
         let b = self.batch;
+        let pool = &*self.pool;
         let mut outs: Vec<Vec<f32>> =
             Vec::with_capacity(if traced { self.plans.len() } else { 1 });
         let mut aux: Vec<Aux> = Vec::with_capacity(self.plans.len());
@@ -612,7 +805,7 @@ impl NativeModule {
             };
             let (out, a) = match *plan {
                 Plan::Dense { din, dout, relu } => {
-                    let mut y = kernels::matmul(cur, pp[0].f32s(), b, din, dout);
+                    let mut y = kernels::matmul_p(pool, cur, pp[0].f32s(), b, din, dout);
                     kernels::add_bias(&mut y, pp[1].f32s());
                     if relu {
                         kernels::relu(&mut y);
@@ -620,10 +813,10 @@ impl NativeModule {
                     (y, Aux::Dense)
                 }
                 Plan::Residual { d } => {
-                    let mut h1 = kernels::matmul(cur, pp[0].f32s(), b, d, d);
+                    let mut h1 = kernels::matmul_p(pool, cur, pp[0].f32s(), b, d, d);
                     kernels::add_bias(&mut h1, pp[1].f32s());
                     kernels::relu(&mut h1);
-                    let mut y = kernels::matmul(&h1, pp[2].f32s(), b, d, d);
+                    let mut y = kernels::matmul_p(pool, &h1, pp[2].f32s(), b, d, d);
                     kernels::add_bias(&mut y, pp[3].f32s());
                     for (v, &xv) in y.iter_mut().zip(cur.iter()) {
                         *v += xv;
@@ -641,9 +834,9 @@ impl NativeModule {
                     (y, Aux::Embed)
                 }
                 Plan::Conv { hw, cin, cout, k, stride, pad, ohw, relu } => {
-                    let cols = kernels::im2col(cur, b, hw, cin, k, stride, pad);
-                    let mut y = kernels::matmul(&cols, pp[0].f32s(),
-                                                b * ohw * ohw, k * k * cin, cout);
+                    let cols = kernels::im2col_p(pool, cur, b, hw, cin, k, stride, pad);
+                    let mut y = kernels::matmul_p(pool, &cols, pp[0].f32s(),
+                                                  b * ohw * ohw, k * k * cin, cout);
                     kernels::add_bias(&mut y, pp[1].f32s());
                     if relu {
                         kernels::relu(&mut y);
@@ -652,12 +845,12 @@ impl NativeModule {
                 }
                 Plan::ConvPair { hw, c } => {
                     let rows = b * hw * hw;
-                    let cols1 = kernels::im2col(cur, b, hw, c, 3, 1, 1);
-                    let mut h1 = kernels::matmul(&cols1, pp[0].f32s(), rows, 9 * c, c);
+                    let cols1 = kernels::im2col_p(pool, cur, b, hw, c, 3, 1, 1);
+                    let mut h1 = kernels::matmul_p(pool, &cols1, pp[0].f32s(), rows, 9 * c, c);
                     kernels::add_bias(&mut h1, pp[1].f32s());
                     kernels::relu(&mut h1);
-                    let cols2 = kernels::im2col(&h1, b, hw, c, 3, 1, 1);
-                    let mut y = kernels::matmul(&cols2, pp[2].f32s(), rows, 9 * c, c);
+                    let cols2 = kernels::im2col_p(pool, &h1, b, hw, c, 3, 1, 1);
+                    let mut y = kernels::matmul_p(pool, &cols2, pp[2].f32s(), rows, 9 * c, c);
                     kernels::add_bias(&mut y, pp[3].f32s());
                     for (v, &xv) in y.iter_mut().zip(cur.iter()) {
                         *v += xv;
@@ -670,11 +863,14 @@ impl NativeModule {
                 Plan::GlobalAvg { hw, c } =>
                     (kernels::global_avgpool(cur, b, hw, c), Aux::GlobalAvg),
                 Plan::Attention { seq, d } => {
-                    let mut q = kernels::matmul(cur, pp[0].f32s(), b, d, d);
+                    // Q/K/V/out projections run on the pool; the per-group
+                    // (seq × d) score/context matmuls stay serial — they sit
+                    // under the parallelism threshold at testbed shapes.
+                    let mut q = kernels::matmul_p(pool, cur, pp[0].f32s(), b, d, d);
                     kernels::add_bias(&mut q, pp[1].f32s());
-                    let mut kk = kernels::matmul(cur, pp[2].f32s(), b, d, d);
+                    let mut kk = kernels::matmul_p(pool, cur, pp[2].f32s(), b, d, d);
                     kernels::add_bias(&mut kk, pp[3].f32s());
-                    let mut v = kernels::matmul(cur, pp[4].f32s(), b, d, d);
+                    let mut v = kernels::matmul_p(pool, cur, pp[4].f32s(), b, d, d);
                     kernels::add_bias(&mut v, pp[5].f32s());
                     let scale = 1.0 / (d as f32).sqrt();
                     let mut probs = vec![0.0f32; b * seq];
@@ -692,7 +888,7 @@ impl NativeModule {
                                              seq, seq, d));
                         probs[g * seq * seq..(g + 1) * seq * seq].copy_from_slice(&s);
                     }
-                    let mut y = kernels::matmul(&ctx, pp[6].f32s(), b, d, d);
+                    let mut y = kernels::matmul_p(pool, &ctx, pp[6].f32s(), b, d, d);
                     kernels::add_bias(&mut y, pp[7].f32s());
                     for (yv, &xv) in y.iter_mut().zip(cur.iter()) {
                         *yv += xv;
@@ -719,6 +915,7 @@ impl NativeModule {
     fn backprop(&self, params: &[Tensor], h_in: &Tensor, outs: &[Vec<f32>], aux: &[Aux],
                 dout: Vec<f32>) -> (Vec<Tensor>, Option<Vec<f32>>) {
         let b = self.batch;
+        let pool = &*self.pool;
         let mut grads: Vec<Option<Tensor>> = (0..params.len()).map(|_| None).collect();
         let mut grad = dout;
         for (pi, plan) in self.plans.iter().enumerate().rev() {
@@ -737,12 +934,12 @@ impl NativeModule {
                     if relu {
                         kernels::relu_bwd(&mut dz, y);
                     }
-                    let dw = kernels::matmul_tn(x, &dz, b, din, dout);
+                    let dw = kernels::matmul_tn_p(pool, x, &dz, b, din, dout);
                     let db = kernels::bias_grad(&dz, dout);
                     grads[off] = Some(tensor2(din, dout, dw));
                     grads[off + 1] = Some(tensor1(db));
                     grad = if need_dx {
-                        kernels::matmul_nt(&dz, pp[0].f32s(), b, dout, din)
+                        kernels::matmul_nt_p(pool, &dz, pp[0].f32s(), b, dout, din)
                     } else {
                         Vec::new()
                     };
@@ -751,19 +948,19 @@ impl NativeModule {
                     let mut ds = grad;
                     kernels::relu_bwd(&mut ds, y);
                     // upper dense: z2 = h1 w2 + b2
-                    let dw2 = kernels::matmul_tn(h1, &ds, b, d, d);
+                    let dw2 = kernels::matmul_tn_p(pool, h1, &ds, b, d, d);
                     let db2 = kernels::bias_grad(&ds, d);
-                    let mut dz1 = kernels::matmul_nt(&ds, pp[2].f32s(), b, d, d);
+                    let mut dz1 = kernels::matmul_nt_p(pool, &ds, pp[2].f32s(), b, d, d);
                     kernels::relu_bwd(&mut dz1, h1);
                     // lower dense: z1 = x w1 + b1
-                    let dw1 = kernels::matmul_tn(x, &dz1, b, d, d);
+                    let dw1 = kernels::matmul_tn_p(pool, x, &dz1, b, d, d);
                     let db1 = kernels::bias_grad(&dz1, d);
                     grads[off] = Some(tensor2(d, d, dw1));
                     grads[off + 1] = Some(tensor1(db1));
                     grads[off + 2] = Some(tensor2(d, d, dw2));
                     grads[off + 3] = Some(tensor1(db2));
                     grad = if need_dx {
-                        let mut dx = kernels::matmul_nt(&dz1, pp[0].f32s(), b, d, d);
+                        let mut dx = kernels::matmul_nt_p(pool, &dz1, pp[0].f32s(), b, d, d);
                         for (v, &sv) in dx.iter_mut().zip(&ds) {
                             *v += sv; // skip connection
                         }
@@ -795,15 +992,15 @@ impl NativeModule {
                     // the patch matrix is recomputed from the (replayed)
                     // input rather than cached — backward is self-contained
                     // given (params, input), the backend contract
-                    let cols = kernels::im2col(x, b, hw, cin, k, stride, pad);
-                    let dw = kernels::matmul_tn(&cols, &dz, rows, k * k * cin, cout);
+                    let cols = kernels::im2col_p(pool, x, b, hw, cin, k, stride, pad);
+                    let dw = kernels::matmul_tn_p(pool, &cols, &dz, rows, k * k * cin, cout);
                     let db = kernels::bias_grad(&dz, cout);
                     grads[off] = Some(tensor_shaped(vec![k, k, cin, cout], dw));
                     grads[off + 1] = Some(tensor1(db));
                     grad = if need_dx {
-                        let dcols = kernels::matmul_nt(&dz, pp[0].f32s(),
-                                                       rows, cout, k * k * cin);
-                        kernels::col2im(&dcols, b, hw, cin, k, stride, pad)
+                        let dcols = kernels::matmul_nt_p(pool, &dz, pp[0].f32s(),
+                                                         rows, cout, k * k * cin);
+                        kernels::col2im_p(pool, &dcols, b, hw, cin, k, stride, pad)
                     } else {
                         Vec::new()
                     };
@@ -813,24 +1010,24 @@ impl NativeModule {
                     kernels::relu_bwd(&mut ds, y);
                     let rows = b * hw * hw;
                     // upper conv: z2 = conv(h1, w2) + b2
-                    let cols2 = kernels::im2col(h1, b, hw, c, 3, 1, 1);
-                    let dw2 = kernels::matmul_tn(&cols2, &ds, rows, 9 * c, c);
+                    let cols2 = kernels::im2col_p(pool, h1, b, hw, c, 3, 1, 1);
+                    let dw2 = kernels::matmul_tn_p(pool, &cols2, &ds, rows, 9 * c, c);
                     let db2 = kernels::bias_grad(&ds, c);
-                    let dcols2 = kernels::matmul_nt(&ds, pp[2].f32s(), rows, c, 9 * c);
-                    let mut dz1 = kernels::col2im(&dcols2, b, hw, c, 3, 1, 1);
+                    let dcols2 = kernels::matmul_nt_p(pool, &ds, pp[2].f32s(), rows, c, 9 * c);
+                    let mut dz1 = kernels::col2im_p(pool, &dcols2, b, hw, c, 3, 1, 1);
                     kernels::relu_bwd(&mut dz1, h1);
                     // lower conv: z1 = conv(x, w1) + b1
-                    let cols1 = kernels::im2col(x, b, hw, c, 3, 1, 1);
-                    let dw1 = kernels::matmul_tn(&cols1, &dz1, rows, 9 * c, c);
+                    let cols1 = kernels::im2col_p(pool, x, b, hw, c, 3, 1, 1);
+                    let dw1 = kernels::matmul_tn_p(pool, &cols1, &dz1, rows, 9 * c, c);
                     let db1 = kernels::bias_grad(&dz1, c);
                     grads[off] = Some(tensor_shaped(vec![3, 3, c, c], dw1));
                     grads[off + 1] = Some(tensor1(db1));
                     grads[off + 2] = Some(tensor_shaped(vec![3, 3, c, c], dw2));
                     grads[off + 3] = Some(tensor1(db2));
                     grad = if need_dx {
-                        let dcols1 = kernels::matmul_nt(&dz1, pp[0].f32s(),
-                                                        rows, c, 9 * c);
-                        let mut dx = kernels::col2im(&dcols1, b, hw, c, 3, 1, 1);
+                        let dcols1 = kernels::matmul_nt_p(pool, &dz1, pp[0].f32s(),
+                                                          rows, c, 9 * c);
+                        let mut dx = kernels::col2im_p(pool, &dcols1, b, hw, c, 3, 1, 1);
                         for (v, &sv) in dx.iter_mut().zip(&ds) {
                             *v += sv; // skip connection
                         }
@@ -857,9 +1054,9 @@ impl NativeModule {
                  Aux::Attention { q, k: kk, v, probs, ctx }) => {
                     let dy = grad;
                     // output projection: y = x + ctx wo + bo
-                    let dwo = kernels::matmul_tn(ctx, &dy, b, d, d);
+                    let dwo = kernels::matmul_tn_p(pool, ctx, &dy, b, d, d);
                     let dbo = kernels::bias_grad(&dy, d);
-                    let dctx = kernels::matmul_nt(&dy, pp[6].f32s(), b, d, d);
+                    let dctx = kernels::matmul_nt_p(pool, &dy, pp[6].f32s(), b, d, d);
                     let scale = 1.0 / (d as f32).sqrt();
                     let mut dq = vec![0.0f32; b * d];
                     let mut dk = vec![0.0f32; b * d];
@@ -877,18 +1074,18 @@ impl NativeModule {
                         dk[span.clone()].copy_from_slice(
                             &kernels::matmul_tn(&ds, &q[span], seq, seq, d));
                     }
-                    grads[off] = Some(tensor2(d, d, kernels::matmul_tn(x, &dq, b, d, d)));
+                    grads[off] = Some(tensor2(d, d, kernels::matmul_tn_p(pool, x, &dq, b, d, d)));
                     grads[off + 1] = Some(tensor1(kernels::bias_grad(&dq, d)));
-                    grads[off + 2] = Some(tensor2(d, d, kernels::matmul_tn(x, &dk, b, d, d)));
+                    grads[off + 2] = Some(tensor2(d, d, kernels::matmul_tn_p(pool, x, &dk, b, d, d)));
                     grads[off + 3] = Some(tensor1(kernels::bias_grad(&dk, d)));
-                    grads[off + 4] = Some(tensor2(d, d, kernels::matmul_tn(x, &dv, b, d, d)));
+                    grads[off + 4] = Some(tensor2(d, d, kernels::matmul_tn_p(pool, x, &dv, b, d, d)));
                     grads[off + 5] = Some(tensor1(kernels::bias_grad(&dv, d)));
                     grads[off + 6] = Some(tensor2(d, d, dwo));
                     grads[off + 7] = Some(tensor1(dbo));
                     // dx = dy (skip) + dq wqᵀ + dk wkᵀ + dv wvᵀ
-                    let mut dx = kernels::matmul_nt(&dq, pp[0].f32s(), b, d, d);
-                    let dxk = kernels::matmul_nt(&dk, pp[2].f32s(), b, d, d);
-                    let dxv = kernels::matmul_nt(&dv, pp[4].f32s(), b, d, d);
+                    let mut dx = kernels::matmul_nt_p(pool, &dq, pp[0].f32s(), b, d, d);
+                    let dxk = kernels::matmul_nt_p(pool, &dk, pp[2].f32s(), b, d, d);
+                    let dxv = kernels::matmul_nt_p(pool, &dv, pp[4].f32s(), b, d, d);
                     for i in 0..dx.len() {
                         dx[i] += dxk[i] + dxv[i] + dy[i];
                     }
@@ -962,10 +1159,11 @@ impl ModuleExec for NativeModule {
 pub struct NativeSynth {
     d: usize,
     hd: usize,
+    pool: Arc<Pool>,
 }
 
 impl NativeSynth {
-    fn build(spec: &SynthSpec) -> Result<NativeSynth> {
+    fn build(spec: &SynthSpec, pool: Arc<Pool>) -> Result<NativeSynth> {
         if spec.param_shapes.len() != 6 {
             bail!("synth {}: native synth wants 6 params (w1,b1,w2,b2,w3,b3), \
                    manifest lists {}", spec.boundary, spec.param_shapes.len());
@@ -976,19 +1174,20 @@ impl NativeSynth {
             bail!("synth {}: unsupported param shapes {:?}", spec.boundary,
                   spec.param_shapes);
         }
-        Ok(NativeSynth { d: w1[0], hd: w1[1] })
+        Ok(NativeSynth { d: w1[0], hd: w1[1], pool })
     }
 
     /// Forward keeping the hidden activations for backward.
     fn fwd(&self, params: &[Tensor], h: &[f32], b: usize)
            -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let mut a1 = kernels::matmul(h, params[0].f32s(), b, self.d, self.hd);
+        let pool = &*self.pool;
+        let mut a1 = kernels::matmul_p(pool, h, params[0].f32s(), b, self.d, self.hd);
         kernels::add_bias(&mut a1, params[1].f32s());
         kernels::relu(&mut a1);
-        let mut a2 = kernels::matmul(&a1, params[2].f32s(), b, self.hd, self.hd);
+        let mut a2 = kernels::matmul_p(pool, &a1, params[2].f32s(), b, self.hd, self.hd);
         kernels::add_bias(&mut a2, params[3].f32s());
         kernels::relu(&mut a2);
-        let mut out = kernels::matmul(&a2, params[4].f32s(), b, self.hd, self.d);
+        let mut out = kernels::matmul_p(pool, &a2, params[4].f32s(), b, self.hd, self.d);
         kernels::add_bias(&mut out, params[5].f32s());
         (a1, a2, out)
     }
@@ -1012,6 +1211,7 @@ impl SynthExec for NativeSynth {
                   h.len(), delta_true.len());
         }
         let b = h.len() / self.d;
+        let pool = &*self.pool;
         let (a1, a2, out) = self.fwd(params, h.f32s(), b);
         let target = delta_true.f32s();
         let n = out.len();
@@ -1024,17 +1224,17 @@ impl SynthExec for NativeSynth {
         }
         let mse = (mse / n as f64) as f32;
         // layer 3 (linear): out = a2 w3 + b3
-        let dw3 = kernels::matmul_tn(&a2, &dout, b, self.hd, self.d);
+        let dw3 = kernels::matmul_tn_p(pool, &a2, &dout, b, self.hd, self.d);
         let db3 = kernels::bias_grad(&dout, self.d);
-        let mut da2 = kernels::matmul_nt(&dout, params[4].f32s(), b, self.d, self.hd);
+        let mut da2 = kernels::matmul_nt_p(pool, &dout, params[4].f32s(), b, self.d, self.hd);
         kernels::relu_bwd(&mut da2, &a2);
         // layer 2: a2 = relu(a1 w2 + b2)
-        let dw2 = kernels::matmul_tn(&a1, &da2, b, self.hd, self.hd);
+        let dw2 = kernels::matmul_tn_p(pool, &a1, &da2, b, self.hd, self.hd);
         let db2 = kernels::bias_grad(&da2, self.hd);
-        let mut da1 = kernels::matmul_nt(&da2, params[2].f32s(), b, self.hd, self.hd);
+        let mut da1 = kernels::matmul_nt_p(pool, &da2, params[2].f32s(), b, self.hd, self.hd);
         kernels::relu_bwd(&mut da1, &a1);
         // layer 1: a1 = relu(h w1 + b1)
-        let dw1 = kernels::matmul_tn(h.f32s(), &da1, b, self.d, self.hd);
+        let dw1 = kernels::matmul_tn_p(pool, h.f32s(), &da1, b, self.d, self.hd);
         let db1 = kernels::bias_grad(&da1, self.hd);
         Ok((mse, vec![
             tensor2(self.d, self.hd, dw1), tensor1(db1),
@@ -1044,8 +1244,36 @@ impl SynthExec for NativeSynth {
     }
 }
 
-/// The native backend object (stateless; programs are built per load).
-pub struct NativeBackend;
+/// The native backend object: programs are built per load and share the
+/// backend's kernel worker [`Pool`].
+pub struct NativeBackend {
+    pool: Arc<Pool>,
+}
+
+impl NativeBackend {
+    /// Backend with a kernel pool of `threads` total workers (0 = auto:
+    /// available parallelism; 1 = the exact single-thread reference).
+    pub fn new(threads: usize) -> NativeBackend {
+        NativeBackend { pool: Arc::new(Pool::new(threads)) }
+    }
+
+    /// Backend over an existing pool (tests use this to force the parallel
+    /// path on tiny shapes via [`Pool::with_min_work`]).
+    pub fn with_pool(pool: Arc<Pool>) -> NativeBackend {
+        NativeBackend { pool }
+    }
+
+    /// Total kernel parallelism (calling thread included).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend::new(0)
+    }
+}
 
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
@@ -1056,13 +1284,13 @@ impl Backend for NativeBackend {
         let spec = manifest.modules.get(k)
             .with_context(|| format!("module {k} out of range"))?
             .clone();
-        Ok(Rc::new(NativeModule::build(spec)?))
+        Ok(Rc::new(NativeModule::build(spec, Arc::clone(&self.pool))?))
     }
 
     fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>> {
         let spec = manifest.synth.iter().find(|s| s.boundary == boundary)
             .with_context(|| format!("no synthesizer for boundary {boundary}"))?;
-        Ok(Rc::new(NativeSynth::build(spec)?))
+        Ok(Rc::new(NativeSynth::build(spec, Arc::clone(&self.pool))?))
     }
 
     fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
@@ -1590,7 +1818,7 @@ mod tests {
             k: 1, seed: 7,
         };
         let m = cfg.manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 0).unwrap();
         let mut params = ResidentParams::new(
             backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
@@ -1627,7 +1855,7 @@ mod tests {
             k: 2, seed: 11,
         };
         let m = cfg.manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 1).unwrap();
         let params = ResidentParams::new(
             backend.init_params(&m, "module1", &m.modules[1].param_shapes).unwrap());
@@ -1720,7 +1948,7 @@ mod tests {
             pred_file: "<native>".into(),
             train_file: "<native>".into(),
         };
-        let synth = NativeSynth::build(&spec).unwrap();
+        let synth = NativeSynth::build(&spec, Arc::new(Pool::new(1))).unwrap();
         // He-init ALL layers (not the usual zero output init) so the MSE
         // gradients are non-trivial for every parameter.
         let mut params_v = procedural_init(3, "module_fake", &spec.param_shapes);
@@ -1768,7 +1996,7 @@ mod tests {
         }
         assert!(m.total_params() > 0);
         // every module has a runnable native graph
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         for k in 0..m.k {
             backend.load_module(&m, k).unwrap();
         }
@@ -1817,7 +2045,7 @@ mod tests {
             assert_eq!(w[0].out_shape, w[1].in_shape);
         }
         // every module has a runnable native graph, incl. the token module
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         for k in 0..m.k {
             backend.load_module(&m, k).unwrap();
         }
@@ -1844,7 +2072,7 @@ mod tests {
             batch: 2, seq: 3, d_model: 4, depth: 1, vocab: 5, k: 1, seed: 13,
         };
         let m = cfg.manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 0).unwrap();
         let mut params = ResidentParams::new(
             backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
@@ -1875,7 +2103,7 @@ mod tests {
         let m = NativeLmSpec::tiny(2).manifest().unwrap();
         let mut bad = m.modules[1].clone();
         bad.native_ops.insert(0, NativeOp::Embed);
-        assert!(NativeModule::build(bad).is_err());
+        assert!(NativeModule::build(bad, Arc::new(Pool::new(1))).is_err());
     }
 
     #[test]
@@ -1956,7 +2184,7 @@ mod tests {
             k: 1, seed: 5,
         };
         let m = cfg.manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 0).unwrap();
         let mut params = ResidentParams::new(
             backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
@@ -1999,7 +2227,7 @@ mod tests {
             k: 2, seed: 3,
         };
         let m = cfg.manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 1).unwrap();
         let params = ResidentParams::new(
             backend.init_params(&m, "module1", &m.modules[1].param_shapes).unwrap());
@@ -2043,7 +2271,7 @@ mod tests {
         let m = cfg.manifest().unwrap();
         // layer walk: embed (1 param) then attention (8 params)
         assert_eq!(m.modules[0].native_ops[1], NativeOp::Attention { seq: 4 });
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let exec = backend.load_module(&m, 0).unwrap();
         let mut params = ResidentParams::new(
             backend.init_params(&m, "module0", &m.modules[0].param_shapes).unwrap());
@@ -2094,7 +2322,7 @@ mod tests {
         // mid-trunk with a spatial map, not a pooled vector
         assert!(m.modules[0].out_shape[1] >= 32 * 32 * 8 / 4,
                 "boundary {:?} is not a feature map", m.modules[0].out_shape);
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         for k in 0..m.k {
             backend.load_module(&m, k).unwrap();
         }
@@ -2134,9 +2362,108 @@ mod tests {
     }
 
     #[test]
+    fn pool_matmul_kernels_bitwise_match_reference() {
+        // min_work = 0 forces the pool path even on tiny operands, so the
+        // awkward shapes (single row/col, tile-non-divisible chunking,
+        // empty outputs) really exercise the partitioned code.
+        let pool = Pool::with_min_work(4, 0);
+        let mut rng = Rng::new(41);
+        for &(m, k, n) in &[(1usize, 5usize, 1usize), (1, 1, 1), (3, 1, 4),
+                            (7, 129, 33), (64, 64, 64), (130, 70, 19),
+                            (5, 3, 0), (0, 4, 3)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            assert_eq!(kernels::matmul_p(&pool, &a, &b, m, k, n),
+                       kernels::matmul(&a, &b, m, k, n), "matmul {m}x{k}x{n}");
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            assert_eq!(kernels::matmul_nt_p(&pool, &a, &bt, m, k, n),
+                       kernels::matmul_nt(&a, &bt, m, k, n), "nt {m}x{k}x{n}");
+        }
+        // tn: exact zeros sprinkled into `a` to exercise the skip path on
+        // both sides of the chunk boundaries
+        for &(rows, m, n) in &[(1usize, 1usize, 1usize), (5, 1, 3), (4, 33, 7),
+                               (9, 130, 17), (3, 8, 0), (0, 6, 2)] {
+            let mut a: Vec<f32> = (0..rows * m).map(|_| rng.normal()).collect();
+            for v in a.iter_mut().step_by(3) {
+                *v = 0.0;
+            }
+            let b: Vec<f32> = (0..rows * n).map(|_| rng.normal()).collect();
+            assert_eq!(kernels::matmul_tn_p(&pool, &a, &b, rows, m, n),
+                       kernels::matmul_tn(&a, &b, rows, m, n), "tn {rows}x{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn pool_im2col_col2im_bitwise_match_reference() {
+        let pool = Pool::with_min_work(4, 0);
+        let mut rng = Rng::new(43);
+        for &(b, hw, c, k, stride, pad) in &[
+            (1usize, 2usize, 1usize, 3usize, 1usize, 1usize), // single image
+            (2, 5, 3, 3, 2, 1),                               // strided + padded
+            (5, 8, 2, 3, 1, 1),                               // batch > pool tasks
+            (2, 4, 1, 2, 2, 0),                               // no padding
+        ] {
+            let x: Vec<f32> = (0..b * hw * hw * c).map(|_| rng.normal()).collect();
+            assert_eq!(kernels::im2col_p(&pool, &x, b, hw, c, k, stride, pad),
+                       kernels::im2col(&x, b, hw, c, k, stride, pad),
+                       "im2col b{b} hw{hw} c{c} k{k} s{stride} p{pad}");
+            let ohw = (hw + 2 * pad - k) / stride + 1;
+            let cols: Vec<f32> = (0..b * ohw * ohw * k * k * c)
+                .map(|_| rng.normal()).collect();
+            assert_eq!(kernels::col2im_p(&pool, &cols, b, hw, c, k, stride, pad),
+                       kernels::col2im(&cols, b, hw, c, k, stride, pad),
+                       "col2im b{b} hw{hw} c{c} k{k} s{stride} p{pad}");
+        }
+    }
+
+    /// Whole-module gradients must be bitwise identical between the
+    /// single-thread reference backend and a forced-parallel pool — the
+    /// guarantee every trainer inherits. Covers the conv stack (im2col /
+    /// col2im / conv pairs) and the LM stack (embed + attention + dense).
+    #[test]
+    fn module_grads_bitwise_identical_across_thread_counts() {
+        let conv = NativeConvSpec {
+            batch: 3, hw: 8, in_ch: 2, stem_ch: 3, stages: 2,
+            blocks_per_stage: 1, pool_before_gap: true, num_classes: 3,
+            k: 1, seed: 5,
+        }.manifest().unwrap();
+        let lm = NativeLmSpec {
+            batch: 2, seq: 4, d_model: 4, depth: 1, vocab: 5, k: 1, seed: 21,
+        }.manifest().unwrap();
+        let single = NativeBackend::new(1);
+        let multi = NativeBackend::with_pool(Arc::new(Pool::with_min_work(4, 0)));
+        for m in [&conv, &lm] {
+            let e1 = single.load_module(m, 0).unwrap();
+            let e4 = multi.load_module(m, 0).unwrap();
+            let params = ResidentParams::new(
+                single.init_params(m, "module0", &m.modules[0].param_shapes).unwrap());
+            let x = if m.input_dtype == DType::I32 {
+                Tensor::from_i32(m.input_shape.clone(),
+                    (0..m.input_shape.iter().product::<usize>())
+                        .map(|i| (i % 5) as i32).collect()).unwrap()
+            } else {
+                let mut rng = Rng::new(9);
+                Tensor::from_f32(m.input_shape.clone(),
+                    (0..m.input_shape.iter().product::<usize>())
+                        .map(|_| rng.normal()).collect()).unwrap()
+            };
+            let nb: usize = m.label_shape.iter().product();
+            let labels = Tensor::from_i32(m.label_shape.clone(),
+                (0..nb).map(|i| (i % m.num_classes) as i32).collect()).unwrap();
+            let o1 = e1.loss_backward(&params, &x, &labels).unwrap();
+            let o4 = e4.loss_backward(&params, &x, &labels).unwrap();
+            assert_eq!(o1.loss.to_bits(), o4.loss.to_bits(), "{}: loss bits", m.config);
+            assert_eq!(o1.logits.f32s(), o4.logits.f32s(), "{}: logits", m.config);
+            for (i, (g1, g4)) in o1.grads.iter().zip(&o4.grads).enumerate() {
+                assert_eq!(g1.f32s(), g4.f32s(), "{}: grad {i}", m.config);
+            }
+        }
+    }
+
+    #[test]
     fn forward_shapes_through_whole_stack() {
         let m = NativeMlpSpec::tiny(3).manifest().unwrap();
-        let backend = NativeBackend;
+        let backend = NativeBackend::new(1);
         let mut h = Tensor::zeros(&m.input_shape, m.input_dtype);
         for k in 0..m.k {
             let exec = backend.load_module(&m, k).unwrap();

@@ -1,0 +1,359 @@
+//! A dependency-free scoped worker pool for the native CPU kernels.
+//!
+//! The sandbox is offline (no rayon), so this is the std-only equivalent of
+//! a scoped thread pool: `threads - 1` persistent OS threads plus the
+//! calling thread cooperatively drain a task-index counter. The closure and
+//! its borrows never outlive a [`Pool::run`] call — the caller blocks until
+//! every worker has acknowledged the job — which is what makes handing a
+//! stack-borrowed closure to persistent threads sound.
+//!
+//! Determinism contract: the pool only *schedules*; it never changes what a
+//! task computes. Kernels built on it partition their **output** so each
+//! task owns a disjoint row range and runs the exact single-thread loop
+//! over that range — float accumulation order per output element is
+//! identical at every thread count, so results are bitwise equal to the
+//! `threads = 1` reference (asserted by the parity tests in
+//! [`super::native`]).
+//!
+//! Workers are spawned lazily on the first parallel `run`, so the many
+//! short-lived engines built by unit tests pay nothing unless a kernel
+//! actually crosses the parallelism threshold.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once};
+use std::thread::JoinHandle;
+
+/// First panic payload caught inside a job's tasks (re-raised by the
+/// caller so the original message/location survive).
+type PanicSlot = Mutex<Option<Box<dyn Any + Send>>>;
+
+/// Minimum per-call work (inner-loop multiply-adds or element copies) below
+/// which pool-aware kernels stay on the single-thread path: a cross-thread
+/// dispatch costs tens of microseconds, so small operands are faster serial.
+pub const PAR_MIN_WORK: usize = 1 << 17;
+
+/// Resolve a thread-count knob: `0` means auto (available parallelism).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// One job broadcast to the workers: a lifetime-erased task closure plus the
+/// caller-stack atomics coordinating it. See the SAFETY notes in
+/// [`Pool::run`] for why the erased borrows cannot dangle.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    pending: *const AtomicUsize,
+    panic: *const PanicSlot,
+    tasks: usize,
+}
+
+// SAFETY: the pointers target caller-stack values that `Pool::run` keeps
+// alive until every worker has decremented `pending` (the completion
+// barrier), and the closure itself is `Sync`.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped per job; workers use it to run each job exactly once.
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch (or shutdown).
+    work_cv: Condvar,
+    /// The caller waits here for `pending` to reach zero.
+    done_cv: Condvar,
+}
+
+/// The scoped worker pool. `threads` counts total parallelism *including*
+/// the calling thread; `threads <= 1` runs every task inline (exactly the
+/// old single-thread behavior, no worker threads ever spawned).
+pub struct Pool {
+    threads: usize,
+    /// Work threshold for the pool-aware kernels (defaults to
+    /// [`PAR_MIN_WORK`]; tests force 0 to exercise the parallel path on
+    /// tiny shapes).
+    min_work: usize,
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    spawn_once: Once,
+    /// Serializes concurrent [`Pool::run`] callers: the epoch/pending
+    /// protocol supports one in-flight job, so a second caller waits here
+    /// until the first job's barrier completes (the pool is `Sync` and may
+    /// be shared behind an `Arc`). Do not call `run` from inside a task —
+    /// that self-wait would deadlock.
+    run_lock: Mutex<()>,
+}
+
+impl Pool {
+    /// Pool with `threads` total workers (0 = auto: available parallelism).
+    pub fn new(threads: usize) -> Pool {
+        Pool::with_min_work(threads, PAR_MIN_WORK)
+    }
+
+    /// Like [`Pool::new`] with an explicit kernel parallelism threshold
+    /// (`min_work = 0` parallelizes every eligible call — the parity tests
+    /// use this to drive the pool path on awkward tiny shapes).
+    pub fn with_min_work(threads: usize, min_work: usize) -> Pool {
+        Pool {
+            threads: resolve_threads(threads),
+            min_work,
+            shared: Arc::new(Shared {
+                state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            spawn_once: Once::new(),
+            run_lock: Mutex::new(()),
+        }
+    }
+
+    /// Total parallelism (calling thread included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether a kernel with this much inner-loop work should take the
+    /// parallel path on this pool.
+    pub fn should_par(&self, work: usize) -> bool {
+        self.threads > 1 && work >= self.min_work
+    }
+
+    /// Split `rows` into (tasks, chunk) so [`Pool::run`] gets a few tasks
+    /// per worker for load balance: task `t` owns rows
+    /// `t*chunk .. min((t+1)*chunk, rows)`.
+    pub fn row_chunks(&self, rows: usize) -> (usize, usize) {
+        if rows == 0 {
+            return (0, 1);
+        }
+        let want = rows.min(self.threads * 4);
+        let chunk = rows.div_ceil(want);
+        (rows.div_ceil(chunk), chunk)
+    }
+
+    fn ensure_spawned(&self) {
+        self.spawn_once.call_once(|| {
+            let mut hs = self.handles.lock().unwrap();
+            for i in 0..self.threads.saturating_sub(1) {
+                let shared = Arc::clone(&self.shared);
+                hs.push(std::thread::Builder::new()
+                    .name(format!("fr-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker thread"));
+            }
+        });
+    }
+
+    /// Run `f(0)`, `f(1)`, …, `f(tasks - 1)`, each exactly once, across the
+    /// pool (the calling thread participates). Blocks until all tasks have
+    /// finished *and* every worker has released the job — only then can the
+    /// borrows inside `f` expire. If a task panicked, the first payload is
+    /// re-raised here (with its original message) after the barrier.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.threads <= 1 || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_spawned();
+        // One job in flight at a time; a concurrent caller queues here. A
+        // poisoned lock just means an earlier caller panicked after its
+        // barrier (task-panic re-raise below) — the pool state is clean, so
+        // recover the guard rather than propagating the poison.
+        let _exclusive = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let next = AtomicUsize::new(0);
+        let pending = AtomicUsize::new(self.threads - 1);
+        let panic_slot: PanicSlot = Mutex::new(None);
+        // SAFETY: erasing the closure's lifetime is sound because this
+        // function does not return until `pending == 0`, i.e. until every
+        // worker that can observe the job is done touching it.
+        let job = Job {
+            f: unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync),
+                                      *const (dyn Fn(usize) + Sync)>(f)
+            },
+            next: &next,
+            pending: &pending,
+            panic: &panic_slot,
+            tasks,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            self.shared.work_cv.notify_all();
+        }
+        // The caller drains indices alongside the workers.
+        run_tasks(f, &next, tasks, &panic_slot);
+        // Completion barrier: wait for every worker to ack this epoch.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while pending.load(Ordering::Acquire) != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        let caught = panic_slot.lock().unwrap().take();
+        if let Some(payload) = caught {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and run task indices until the counter runs out. On a task panic,
+/// park the first payload in the job's slot and stop claiming (the caller
+/// re-raises it after the barrier, preserving the original message).
+fn run_tasks(f: &(dyn Fn(usize) + Sync), next: &AtomicUsize, tasks: usize,
+             panic_slot: &PanicSlot) {
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= tasks {
+            return;
+        }
+        if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+            let mut slot = panic_slot.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+            return;
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && (st.job.is_none() || st.epoch == last_epoch) {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            last_epoch = st.epoch;
+            st.job.expect("job present while epoch is ahead")
+        };
+        // SAFETY: `Pool::run` keeps the job's borrows alive until this
+        // worker's `pending` decrement below — the last thing we do with
+        // them.
+        unsafe {
+            run_tasks(&*job.f, &*job.next, job.tasks, &*job.panic);
+            let pending = &*job.pending;
+            if pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Notify under the lock so the caller cannot miss the wakeup
+                // between its `pending` check and its wait.
+                let _guard = shared.state.lock().unwrap();
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = Pool::with_min_work(4, 0);
+        for tasks in [0usize, 1, 3, 4, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = Pool::with_min_work(3, 0);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 400);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::with_min_work(1, 0);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, &|i| order.lock().unwrap().push(i));
+        // inline execution is strictly in order — the old serial behavior
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert!(!pool.should_par(usize::MAX));
+    }
+
+    #[test]
+    fn resolve_and_chunking() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        let pool = Pool::new(2);
+        assert!(pool.should_par(PAR_MIN_WORK));
+        assert!(!pool.should_par(PAR_MIN_WORK - 1));
+        // chunks cover the rows exactly
+        for rows in [0usize, 1, 2, 7, 8, 9, 1000] {
+            let (tasks, chunk) = pool.row_chunks(rows);
+            if rows == 0 {
+                assert_eq!(tasks, 0);
+                continue;
+            }
+            assert!(tasks >= 1 && (tasks - 1) * chunk < rows && tasks * chunk >= rows,
+                    "rows {rows}: tasks {tasks} chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = Pool::with_min_work(2, 0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, &|i| {
+                if i == 40 {
+                    panic!("task failure");
+                }
+            });
+        }));
+        // the original payload is re-raised, not a generic pool message
+        let payload = r.expect_err("panic inside a task must re-raise at the caller");
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("task failure"));
+        // and the pool still works afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(16, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+}

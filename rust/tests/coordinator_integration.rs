@@ -167,6 +167,54 @@ fn parallel_fr_matches_sequential_fr() {
     par.shutdown().unwrap();
 }
 
+/// A worker whose step fails must surface the root cause through
+/// `train_step` — not a bare "worker died mid-step" — and leave the fleet
+/// cleanly torn down (later calls fail fast instead of hanging).
+#[test]
+fn parallel_fr_worker_error_surfaces_root_cause() {
+    let m = manifest_k(2);
+    let mut par = coordinator::parallel::ParallelFr::spawn(
+        m.clone(), TrainConfig::default(), BackendKind::Native).unwrap();
+    let mut data = DataSource::for_manifest(&m, 7).unwrap();
+    // one good step so every worker is past its iteration-0 paths
+    let good = data.train_batch();
+    par.train_step(&good, 0.01).unwrap();
+    // corrupt the labels: the last worker's fused loss head rejects them
+    let mut bad = data.train_batch();
+    bad.labels = Tensor::from_i32(vec![3], vec![0, 1, 2]).unwrap();
+    let err = par.train_step(&bad, 0.01).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("labels"),
+            "error should carry the worker's root cause, got: {msg}");
+    // the fleet is down; subsequent steps error cleanly
+    let next = data.train_batch();
+    let err2 = par.train_step(&next, 0.01).unwrap_err();
+    assert!(format!("{err2:#}").contains("shut down"), "{err2:#}");
+    par.shutdown().unwrap();
+}
+
+/// threads=1 (the exact old single-thread path) and a multi-thread pool
+/// must produce bitwise-identical training trajectories: the pool only
+/// partitions output rows, it never reorders a float accumulation.
+#[test]
+fn thread_counts_train_bitwise_identically() {
+    let m = manifest_k(2);
+    let e1 = Engine::native_with_threads(1);
+    let e4 = Engine::native_with_threads(4);
+    let mut t1 = coordinator::fr::FrTrainer::new(
+        ModuleStack::load(&e1, m.clone(), TrainConfig::default()).unwrap());
+    let mut t4 = coordinator::fr::FrTrainer::new(
+        ModuleStack::load(&e4, m.clone(), TrainConfig::default()).unwrap());
+    let mut d1 = DataSource::for_manifest(&m, 5).unwrap();
+    let mut d4 = DataSource::for_manifest(&m, 5).unwrap();
+    for step in 0..6 {
+        let s1 = t1.train_step(&d1.train_batch(), 0.01).unwrap();
+        let s4 = t4.train_step(&d4.train_batch(), 0.01).unwrap();
+        assert_eq!(s1.loss.to_bits(), s4.loss.to_bits(),
+                   "step {step}: {} vs {}", s1.loss, s4.loss);
+    }
+}
+
 /// Memory reports: FR holds history+deltas; BP holds only activations; the
 /// live DDG stash grows until the pipeline fills.
 #[test]

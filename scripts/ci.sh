@@ -7,6 +7,8 @@
 #   scripts/ci.sh --pjrt     # additionally build+test with --features pjrt
 #                            # (links the offline xla stub)
 #   scripts/ci.sh --no-smoke # skip running the example smoke (build only)
+#   scripts/ci.sh --bench    # run the kernel thread sweep (threads=1 vs
+#                            # threads=max) and write BENCH_kernels.json
 #
 # The toolchain is pinned by rust-toolchain.toml (stable + rustfmt/clippy
 # components); fmt/clippy stay advisory by default because a non-rustup
@@ -19,11 +21,13 @@ cd "$(dirname "$0")/../rust"
 STRICT=0
 PJRT=0
 SMOKE=1
+BENCH=0
 for arg in "$@"; do
     case "$arg" in
         --strict) STRICT=1 ;;
         --pjrt) PJRT=1 ;;
         --no-smoke) SMOKE=0 ;;
+        --bench) BENCH=1 ;;
         *) echo "unknown arg: $arg" >&2; exit 2 ;;
     esac
 done
@@ -55,9 +59,21 @@ if [ "$PJRT" = 1 ]; then
     cargo test -q --features pjrt
 fi
 
+if [ "$BENCH" = 1 ]; then
+    # Kernel thread sweep: threads=1 (bitwise reference) vs threads=max.
+    # Writes BENCH_kernels.json at the repo root so later PRs can diff the
+    # perf trajectory.
+    echo "== bench: kernel thread sweep (BENCH_kernels.json) =="
+    cargo bench --bench bench_kernels
+fi
+
+# Probe the actual component, not `cargo` itself (which is trivially present
+# by this point): non-rustup toolchains may ship cargo without rustfmt or
+# clippy, and those runs should skip cleanly instead of printing FAILED.
 advisory() {
-    local name="$1"; shift
-    if ! command -v cargo >/dev/null; then
+    local name="$1" probe_sub="$2"; shift 2
+    if ! cargo "$probe_sub" --version >/dev/null 2>&1; then
+        echo "== $name == skipped (cargo $probe_sub unavailable on this toolchain)"
         return 0
     fi
     echo "== $name =="
@@ -71,7 +87,7 @@ advisory() {
     fi
 }
 
-advisory "cargo fmt --check" cargo fmt --all -- --check
-advisory "cargo clippy -D warnings" cargo clippy --all-targets -- -D warnings
+advisory "cargo fmt --check" fmt cargo fmt --all -- --check
+advisory "cargo clippy -D warnings" clippy cargo clippy --all-targets -- -D warnings
 
 echo "== ci.sh done =="
