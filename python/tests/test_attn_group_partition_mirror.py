@@ -1,0 +1,292 @@
+"""Mirror of the PR's group-parallel attention + pooled-batch kernels
+(rust/src/runtime/native.rs).
+
+The Rust worker pool runs attention's score/context matmuls (forward AND
+backward) with whole sequence groups as the partition unit: each task owns
+a contiguous chunk of groups and writes those groups' `(seq, seq)`
+probability blocks and `(seq, d)` q/k/v gradient blocks, running the exact
+single-thread loops over them. The claim the Rust parity properties assert
+— and this mirror verifies independently in float32 — is that chunking the
+groups never changes a single output bit, because groups never interact:
+every output element is produced by the same multiply-adds in the same
+order regardless of which chunk owns its group.
+
+Mirrored partition schemes:
+  - attn_scores:      per group `s = q kT * scale`, causal softmax
+                      (sequential f32 max/sum per row, like the Rust loop)
+  - attn_context:     per group `ctx = a v` (ikj order kept)
+  - attn_context_bwd: per group `da = dctx vT`, `dv = aT dctx` (with the
+                      `a == 0` skip firing on the causal-masked zeros)
+  - attn_scores_bwd:  per group softmax-Jacobian `ds`, `dq = ds k`,
+                      `dk = dsT q`
+  - avgpool / global_avgpool (+ backwards): chunk the batch — windows
+                      never cross images, so per-image slabs are disjoint
+
+Run: python3 test_attn_group_partition_mirror.py
+"""
+
+import numpy as np
+
+
+# -- single-thread references (transliterated from native.rs, f32 ops) ----
+
+def matmul_ref(a, b):
+    """(m, k) @ (k, n), ikj order: per output row, one fused f32 row
+    update per k-step — the accumulation order of the Rust loop."""
+    m, k = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for p in range(k):
+            out[i] += np.float32(a[i, p]) * b[p]
+    return out
+
+
+def matmul_nt_ref(a, bt):
+    """(m, k) @ (n, k)T with a sequential f32 scalar accumulator."""
+    m, k = a.shape
+    n = bt.shape[0]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for j in range(n):
+            acc = np.float32(0.0)
+            for p in range(k):
+                acc = np.float32(acc + np.float32(a[i, p] * bt[j, p]))
+            out[i, j] = acc
+    return out
+
+
+def matmul_tn_ref(a, b):
+    """(rows, m)T @ (rows, n) with the `a == 0` row skip (fires on the
+    causal-masked probability zeros, exactly like the Rust kernel)."""
+    rows, m = a.shape
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for r in range(rows):
+        for i in range(m):
+            if a[r, i] == 0.0:
+                continue
+            out[i] += np.float32(a[r, i]) * b[r]
+    return out
+
+
+def causal_softmax_ref(s):
+    """Row i normalizes over columns 0..=i with sequential f32 max and sum
+    (np.sum would pairwise-sum — different bits); masked entries become
+    exact zeros."""
+    seq = s.shape[0]
+    out = s.copy()
+    for i in range(seq):
+        row = out[i]
+        m = np.float32(-np.inf)
+        for j in range(i + 1):
+            m = max(m, row[j])
+        total = np.float32(0.0)
+        for j in range(i + 1):
+            row[j] = np.float32(np.exp(np.float32(row[j] - m)))
+            total = np.float32(total + row[j])
+        inv = np.float32(np.float32(1.0) / total)
+        for j in range(i + 1):
+            row[j] = np.float32(row[j] * inv)
+        row[i + 1:] = 0.0
+    return out
+
+
+def softmax_bwd_scaled_ref(a, da, scale):
+    """ds = scale * a * (da - sum_j da*a) per row, sequential f32 dot."""
+    seq = a.shape[0]
+    ds = np.zeros((seq, seq), np.float32)
+    for i in range(seq):
+        dot = np.float32(0.0)
+        for j in range(seq):
+            dot = np.float32(dot + np.float32(a[i, j] * da[i, j]))
+        for j in range(seq):
+            ds[i, j] = np.float32(
+                np.float32(scale) * np.float32(a[i, j] * np.float32(da[i, j] - dot)))
+    return ds
+
+
+def attn_scores_ref(q, k, scale):
+    """One group: s = q kT * scale, then the causal softmax."""
+    s = matmul_nt_ref(q, k)
+    for i in range(s.shape[0]):
+        for j in range(s.shape[1]):
+            s[i, j] = np.float32(s[i, j] * np.float32(scale))
+    return causal_softmax_ref(s)
+
+
+def attn_bwd_ref(a, q, k, v, dctx, scale):
+    """One group's backward: (da, dv) then (dq, dk) via the Jacobian."""
+    da = matmul_nt_ref(dctx, v)
+    dv = matmul_tn_ref(a, dctx)
+    ds = softmax_bwd_scaled_ref(a, da, scale)
+    dq = matmul_ref(ds, k)
+    dk = matmul_tn_ref(ds, q)
+    return da, dv, dq, dk
+
+
+def avgpool_ref(x, hw, c, kernel, stride):
+    """One image: mean over each kernel x kernel window (f32 fused adds in
+    window order, like the Rust loop)."""
+    ohw = (hw - kernel) // stride + 1
+    inv = np.float32(1.0 / (kernel * kernel))
+    img = x.reshape(hw, hw, c)
+    out = np.zeros((ohw, ohw, c), np.float32)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            for ky in range(kernel):
+                for kx in range(kernel):
+                    out[oy, ox] += img[oy * stride + ky, ox * stride + kx] * inv
+    return out
+
+
+def avgpool_bwd_ref(dy, hw, c, kernel, stride):
+    ohw = (hw - kernel) // stride + 1
+    inv = np.float32(1.0 / (kernel * kernel))
+    dx = np.zeros((hw, hw, c), np.float32)
+    for oy in range(ohw):
+        for ox in range(ohw):
+            for ky in range(kernel):
+                for kx in range(kernel):
+                    dx[oy * stride + ky, ox * stride + kx] += dy[oy, ox] * inv
+    return dx
+
+
+def global_avgpool_ref(x, hw, c):
+    inv = np.float32(1.0 / (hw * hw))
+    out = np.zeros(c, np.float32)
+    for px in x.reshape(hw * hw, c):
+        out += px * inv
+    return out
+
+
+def global_avgpool_bwd_ref(dy, hw, c):
+    inv = np.float32(1.0 / (hw * hw))
+    dx = np.zeros((hw * hw, c), np.float32)
+    for r in range(hw * hw):
+        dx[r] += dy * inv
+    return dx
+
+
+# -- group-chunked variants (what a T-thread pool computes) ---------------
+
+def chunks(units, tasks):
+    if units == 0:
+        return []
+    chunk = -(-units // min(units, tasks))
+    return [(g0, min(g0 + chunk, units)) for g0 in range(0, units, chunk)]
+
+
+def attn_fwd_chunked(q, k, v, groups, seq, d, scale, tasks):
+    """Chunk the groups; each chunk runs the per-group reference into its
+    own slab — the pool task body."""
+    probs = np.zeros((groups, seq, seq), np.float32)
+    ctx = np.zeros((groups, seq, d), np.float32)
+    for g0, g1 in chunks(groups, tasks):
+        for g in range(g0, g1):
+            probs[g] = attn_scores_ref(q[g], k[g], scale)
+            ctx[g] = matmul_ref(probs[g], v[g])
+    return probs, ctx
+
+
+def attn_bwd_chunked(probs, q, k, v, dctx, groups, scale, tasks):
+    seq, d = q.shape[1], q.shape[2]
+    da = np.zeros((groups, seq, seq), np.float32)
+    dv = np.zeros((groups, seq, d), np.float32)
+    dq = np.zeros((groups, seq, d), np.float32)
+    dk = np.zeros((groups, seq, d), np.float32)
+    for g0, g1 in chunks(groups, tasks):
+        for g in range(g0, g1):
+            da[g], dv[g], dq[g], dk[g] = attn_bwd_ref(
+                probs[g], q[g], k[g], v[g], dctx[g], scale)
+    return da, dv, dq, dk
+
+
+def main():
+    rng = np.random.default_rng(53)
+    failures = 0
+
+    def norm(shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    def check(name, ref, got):
+        nonlocal failures
+        ref, got = np.asarray(ref), np.asarray(got)
+        if ref.shape != got.shape or not np.array_equal(
+                ref.view(np.uint32), got.view(np.uint32)):
+            print(f"FAIL {name}: chunked result is not bitwise equal")
+            failures += 1
+        else:
+            print(f"ok   {name}")
+
+    # attention: degenerate corners (one group = whole batch, seq=1, d=1)
+    # plus tile-non-divisible chunkings
+    for (groups, seq, d) in [(1, 4, 4), (3, 1, 5), (4, 3, 1), (5, 8, 6),
+                             (8, 4, 4)]:
+        scale = np.float32(1.0 / np.sqrt(np.float32(d)))
+        q, k, v = norm((groups, seq, d)), norm((groups, seq, d)), norm((groups, seq, d))
+        probs_ref = np.stack([attn_scores_ref(q[g], k[g], scale)
+                              for g in range(groups)])
+        ctx_ref = np.stack([matmul_ref(probs_ref[g], v[g])
+                            for g in range(groups)])
+        # masked entries must be exact zeros for the matmul_tn skip to fire
+        for g in range(groups):
+            assert all(probs_ref[g][i, j] == 0.0
+                       for i in range(seq) for j in range(i + 1, seq))
+        dctx = norm((groups, seq, d))
+        bwd_ref = attn_bwd_chunked(probs_ref, q, k, v, dctx, groups, scale, 1)
+        for tasks in (2, 3, 8):
+            probs_c, ctx_c = attn_fwd_chunked(q, k, v, groups, seq, d, scale, tasks)
+            check(f"attn fwd g{groups} s{seq} d{d} tasks={tasks}",
+                  np.concatenate([probs_ref.ravel(), ctx_ref.ravel()]),
+                  np.concatenate([probs_c.ravel(), ctx_c.ravel()]))
+            bwd_c = attn_bwd_chunked(probs_ref, q, k, v, dctx, groups, scale, tasks)
+            check(f"attn bwd g{groups} s{seq} d{d} tasks={tasks}",
+                  np.concatenate([r.ravel() for r in bwd_ref]),
+                  np.concatenate([r.ravel() for r in bwd_c]))
+
+    # batch-partitioned pooling: per-image computation is already the
+    # reference body, so batch chunking == running images in any split
+    for (b, hw, c, kernel, stride) in [(1, 4, 2, 2, 2), (3, 5, 1, 3, 1),
+                                       (5, 8, 3, 2, 2)]:
+        x = norm((b, hw * hw * c))
+        full = np.stack([avgpool_ref(x[bi], hw, c, kernel, stride)
+                         for bi in range(b)])
+        for tasks in (2, 3, 8):
+            got = np.zeros_like(full)
+            for b0, b1 in chunks(b, tasks):
+                for bi in range(b0, b1):
+                    got[bi] = avgpool_ref(x[bi], hw, c, kernel, stride)
+            check(f"avgpool b{b} hw{hw} c{c} tasks={tasks}", full, got)
+        ohw = (hw - kernel) // stride + 1
+        dy = norm((b, ohw, ohw, c))
+        full_b = np.stack([avgpool_bwd_ref(dy[bi], hw, c, kernel, stride)
+                           for bi in range(b)])
+        got_b = np.zeros_like(full_b)
+        for b0, b1 in chunks(b, 3):
+            for bi in range(b0, b1):
+                got_b[bi] = avgpool_bwd_ref(dy[bi], hw, c, kernel, stride)
+        check(f"avgpool_bwd b{b} hw{hw} c{c}", full_b, got_b)
+        gap = np.stack([global_avgpool_ref(x[bi], hw, c) for bi in range(b)])
+        got_g = np.zeros_like(gap)
+        for b0, b1 in chunks(b, 2):
+            for bi in range(b0, b1):
+                got_g[bi] = global_avgpool_ref(x[bi], hw, c)
+        check(f"global_avgpool b{b} hw{hw} c{c}", gap, got_g)
+        dg = norm((b, c))
+        gapb = np.stack([global_avgpool_bwd_ref(dg[bi], hw, c) for bi in range(b)])
+        got_gb = np.zeros_like(gapb)
+        for b0, b1 in chunks(b, 8):
+            for bi in range(b0, b1):
+                got_gb[bi] = global_avgpool_bwd_ref(dg[bi], hw, c)
+        check(f"global_avgpool_bwd b{b} hw{hw} c{c}", gapb, got_gb)
+
+    if failures:
+        print(f"\n{failures} failure(s)")
+        return 1
+    print("\nall group/batch-chunked kernels bitwise-match the serial reference")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

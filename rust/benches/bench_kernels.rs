@@ -1,8 +1,9 @@
 //! Thread-count sweep of the pool-partitioned native kernels: times the
-//! matmul family, im2col/col2im, and a full resnet_s module fwd/bwd at
-//! `threads = 1` (the bitwise single-thread reference) and `threads = max`
-//! (available parallelism), then writes `BENCH_kernels.json` at the repo
-//! root — the perf-trajectory artifact later PRs diff against.
+//! matmul family, im2col/col2im, the group-parallel attention kernels, and
+//! full resnet_s + transformer_tiny module fwd/bwd steps at `threads = 1`
+//! (the bitwise single-thread reference) and `threads = max` (available
+//! parallelism), then writes `BENCH_kernels.json` at the repo root — the
+//! perf-trajectory artifact later PRs diff against.
 //!
 //! Run with `cargo bench --bench bench_kernels` (FR_BENCH_QUICK=1 for a
 //! fast pass) or `scripts/ci.sh --bench`.

@@ -1,10 +1,11 @@
 //! Kernel thread-count sweep: the `BENCH_kernels.json` source.
 //!
-//! Times the row-partitioned hot kernels (matmul family, im2col/col2im)
-//! and a full conv module fwd/bwd at `threads = 1` (the single-thread
-//! reference) and `threads = max` (available parallelism), then writes one
-//! JSON report with per-kernel speedups so the perf trajectory can be
-//! diffed across PRs. Run via `cargo bench --bench bench_kernels` or
+//! Times the pool-partitioned hot kernels (matmul family, im2col/col2im,
+//! the group-parallel attention kernels) and full conv + transformer
+//! module fwd/bwd steps at `threads = 1` (the single-thread reference) and
+//! `threads = max` (available parallelism), then writes one JSON report
+//! with per-kernel speedups so the perf trajectory can be diffed across
+//! PRs. Run via `cargo bench --bench bench_kernels` or
 //! `scripts/ci.sh --bench`.
 
 use std::path::Path;
@@ -13,7 +14,7 @@ use anyhow::Result;
 
 use crate::runtime::native::kernels;
 use crate::runtime::pool::{resolve_threads, Pool};
-use crate::runtime::{Engine, ModuleRuntime, NativeConvSpec, Tensor};
+use crate::runtime::{Engine, ModuleRuntime, NativeConvSpec, NativeLmSpec, Tensor};
 use crate::util::json::{arr, num, obj};
 
 use super::{write_bench_json, BenchResult, Bencher};
@@ -87,6 +88,34 @@ fn bench_at(b: &mut Bencher, t: usize) -> Result<Vec<(String, f64)>> {
     });
     record("col2im", r);
 
+    // group-parallel attention at an LM-heavy shape (16 sequences of 64
+    // tokens, width 64: 4.2M score MACs — well above PAR_MIN_WORK)
+    let (gg, seq, ad) = (16usize, 64usize, 64usize);
+    let scale = 1.0 / (ad as f32).sqrt();
+    let q = operand(gg * seq * ad, 10);
+    let kq = operand(gg * seq * ad, 11);
+    let v = operand(gg * seq * ad, 12);
+    let r = b.bench(&format!("t{t}/attn_scores g{gg} s{seq} d{ad}"), || {
+        let _ = kernels::attn_scores_p(&pool, &q, &kq, gg, seq, ad, scale);
+    });
+    record("attn_scores", r);
+    let probs = kernels::attn_scores_p(&pool, &q, &kq, gg, seq, ad, scale);
+    let r = b.bench(&format!("t{t}/attn_context g{gg} s{seq} d{ad}"), || {
+        let _ = kernels::attn_context_p(&pool, &probs, &v, gg, seq, ad);
+    });
+    record("attn_context", r);
+    let dctx = operand(gg * seq * ad, 13);
+    let r = b.bench(&format!("t{t}/attn_context_bwd g{gg} s{seq} d{ad}"), || {
+        let _ = kernels::attn_context_bwd_p(&pool, &probs, &v, &dctx, gg, seq, ad);
+    });
+    record("attn_context_bwd", r);
+    let (da, _) = kernels::attn_context_bwd_p(&pool, &probs, &v, &dctx, gg, seq, ad);
+    let r = b.bench(&format!("t{t}/attn_scores_bwd g{gg} s{seq} d{ad}"), || {
+        let _ = kernels::attn_scores_bwd_p(&pool, &probs, &da, &q, &kq,
+                                           gg, seq, ad, scale);
+    });
+    record("attn_scores_bwd", r);
+
     // End-to-end: the first resnet_s module (conv stem + residual pairs)
     // fwd and bwd through an engine whose backend owns a `t`-thread pool.
     // Inputs/deltas must be non-zero: on all-zero activations the
@@ -107,6 +136,27 @@ fn bench_at(b: &mut Bencher, t: usize) -> Result<Vec<(String, f64)>> {
         module.backward(&h, &delta).unwrap();
     });
     record("resnet_s module0 bwd", r);
+
+    // LM path: transformer_tiny's first module (token embed + causal
+    // attention block) fwd and bwd — the group-parallel attention kernels
+    // as a trainer actually drives them.
+    let lm = NativeLmSpec::tiny(4).manifest()?;
+    let lm_module = ModuleRuntime::load(&engine, &lm, 0)?;
+    let n_tok: usize = lm_module.spec.in_shape.iter().product();
+    let tokens = Tensor::from_i32(
+        lm_module.spec.in_shape.clone(),
+        (0..n_tok).map(|i| (i % lm.num_classes) as i32).collect())?;
+    let r = b.bench(&format!("t{t}/transformer_tiny module0 fwd"), || {
+        lm_module.forward(&tokens).unwrap();
+    });
+    record("transformer_tiny module0 fwd", r);
+    let n_lm_out: usize = lm_module.spec.out_shape.iter().product();
+    let lm_delta = Tensor::from_f32(lm_module.spec.out_shape.clone(),
+                                    operand(n_lm_out, 14))?;
+    let r = b.bench(&format!("t{t}/transformer_tiny module0 bwd"), || {
+        lm_module.backward(&tokens, &lm_delta).unwrap();
+    });
+    record("transformer_tiny module0 bwd", r);
 
     Ok(means)
 }

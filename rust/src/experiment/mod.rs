@@ -129,8 +129,11 @@ impl Experiment {
     }
 
     /// Native-kernel worker threads per engine. Default 0 = auto (available
-    /// parallelism); 1 = the exact single-thread reference path. The
-    /// partitioned kernels are bitwise identical at every thread count, so
+    /// parallelism); 1 = the exact single-thread reference path. Every hot
+    /// kernel partitions on the pool — matmuls by output rows, conv/pool
+    /// kernels by per-image slabs, attention (fwd + bwd) by whole sequence
+    /// groups — and all of them are bitwise identical at every thread
+    /// count (randomized parity properties in `tests/properties.rs`), so
     /// this knob changes wall-clock only — never the training trajectory.
     pub fn threads(mut self, threads: usize) -> Self {
         self.config.threads = threads;

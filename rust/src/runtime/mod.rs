@@ -7,7 +7,8 @@
 //!   resident-parameter buffer
 //! - [`native`]: pure-Rust CPU backend (default; fully offline)
 //! - [`pool`]: dependency-free scoped worker pool the native kernels
-//!   row-partition over (bitwise-identical at every thread count)
+//!   partition over — output rows, per-image slabs, or whole sequence
+//!   groups (bitwise-identical at every thread count)
 //! - `pjrt` (cargo feature `pjrt`): PJRT client + compiled-HLO backend
 //! - [`engine`]: per-worker backend handle
 //! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers

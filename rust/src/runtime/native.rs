@@ -18,11 +18,15 @@
 //! `Arc` buffers in place on every call — zero marshaling, which is the
 //! whole point of the backend split (see BENCH_hotpath.json).
 //!
-//! The hot kernels (matmul family, im2col/col2im) are row-partitioned over
-//! a [`Pool`] owned by the backend: each output row is computed by exactly
-//! one worker running the identical single-thread loop, so results are
-//! **bitwise equal** at every thread count (asserted by the parity tests
-//! below). `NativeBackend::new(1)` is the exact single-thread reference.
+//! The hot kernels are partitioned over a [`Pool`] owned by the backend:
+//! the matmul family by output rows, im2col/col2im and the pooling kernels
+//! by per-image slabs, and the attention score/context kernels (forward
+//! *and* backward) by whole `seq × d` sequence groups. In every case each
+//! output region is computed by exactly one worker running the identical
+//! single-thread loop, so results are **bitwise equal** at every thread
+//! count (asserted by the parity tests below and the randomized property
+//! harness in `tests/properties.rs`). `NativeBackend::new(1)` is the exact
+//! single-thread reference.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -39,18 +43,22 @@ use super::tensor::{DType, Tensor};
 /// The f32 slice kernels (also used directly by benches and tests).
 ///
 /// Each hot kernel comes in two forms: the single-thread reference (the
-/// bare name) and a pool-partitioned variant (`*_p`) that chunks **output
-/// rows** across [`Pool`] workers. Every output element is produced by the
-/// identical inner loop in the identical accumulation order whichever
-/// worker owns its row, so the `*_p` kernels are bitwise equal to the
-/// reference at any thread count; small operands (below the pool's work
-/// threshold) fall back to the reference path outright.
+/// bare name) and a pool-partitioned variant (`*_p`) that chunks disjoint
+/// **output units** across [`Pool`] workers — matrix rows for the matmul
+/// family, per-image slabs for im2col/col2im and the pooling kernels,
+/// whole `seq × d` sequence groups for the attention kernels. Every output
+/// element is produced by the identical inner loop in the identical
+/// accumulation order whichever worker owns its unit, so the `*_p` kernels
+/// are bitwise equal to the reference at any thread count; small operands
+/// (below the pool's work threshold) fall back to the reference path
+/// outright.
 pub mod kernels {
     use crate::runtime::pool::Pool;
 
-    /// Shared output pointer for row-partitioned kernels. Each pool task
-    /// materializes a mutable view of *its own* disjoint row range, so no
-    /// two tasks ever alias.
+    /// Shared output pointer for pool-partitioned kernels. Each pool task
+    /// materializes a mutable view of *its own* disjoint unit range (rows,
+    /// per-image slabs, or sequence-group blocks), so no two tasks ever
+    /// alias.
     #[derive(Clone, Copy)]
     struct OutPtr(*mut f32);
 
@@ -102,7 +110,7 @@ pub mod kernels {
             return matmul(a, b, m, k, n);
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.row_chunks(m);
+        let (tasks, chunk) = pool.chunks(m);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
@@ -159,7 +167,7 @@ pub mod kernels {
             return matmul_tn(a, b, rows, m, n);
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.row_chunks(m);
+        let (tasks, chunk) = pool.chunks(m);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
@@ -206,7 +214,7 @@ pub mod kernels {
             return matmul_nt(a, b, m, k, n);
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.row_chunks(m);
+        let (tasks, chunk) = pool.chunks(m);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
@@ -491,24 +499,55 @@ pub mod kernels {
                    kernel: usize, stride: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), b * hw * hw * c);
         let ohw = (hw - kernel) / stride + 1;
-        let inv = 1.0 / (kernel * kernel) as f32;
         let mut out = vec![0.0f32; b * ohw * ohw * c];
         for bi in 0..b {
             let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
-            for oy in 0..ohw {
-                for ox in 0..ohw {
-                    let dst = &mut out[((bi * ohw + oy) * ohw + ox) * c..][..c];
-                    for ky in 0..kernel {
-                        for kx in 0..kernel {
-                            let src = ((oy * stride + ky) * hw + ox * stride + kx) * c;
-                            for (d, &v) in dst.iter_mut().zip(&img[src..src + c]) {
-                                *d += v * inv;
-                            }
+            let dst = &mut out[bi * ohw * ohw * c..(bi + 1) * ohw * ohw * c];
+            avgpool_image(img, hw, c, kernel, stride, ohw, dst);
+        }
+        out
+    }
+
+    /// [`avgpool`] for one image into its zeroed `(ohw·ohw·c)` slab (the
+    /// per-image work unit — images are independent, so the pool variant
+    /// partitions the batch).
+    fn avgpool_image(img: &[f32], hw: usize, c: usize, kernel: usize,
+                     stride: usize, ohw: usize, out: &mut [f32]) {
+        let inv = 1.0 / (kernel * kernel) as f32;
+        for oy in 0..ohw {
+            for ox in 0..ohw {
+                let dst = &mut out[(oy * ohw + ox) * c..][..c];
+                for ky in 0..kernel {
+                    for kx in 0..kernel {
+                        let src = ((oy * stride + ky) * hw + ox * stride + kx) * c;
+                        for (d, &v) in dst.iter_mut().zip(&img[src..src + c]) {
+                            *d += v * inv;
                         }
                     }
                 }
             }
         }
+    }
+
+    /// [`avgpool`] with the batch partitioned across `pool` (each image's
+    /// pooled slab is written by exactly one task) — bitwise equal to the
+    /// reference at every thread count.
+    pub fn avgpool_p(pool: &Pool, x: &[f32], b: usize, hw: usize, c: usize,
+                     kernel: usize, stride: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        let ohw = (hw - kernel) / stride + 1;
+        if b < 2 || !pool.should_par(b * ohw * ohw * kernel * kernel * c) {
+            return avgpool(x, b, hw, c, kernel, stride);
+        }
+        let mut out = vec![0.0f32; b * ohw * ohw * c];
+        let slab = ohw * ohw * c;
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            // SAFETY: task bi exclusively owns image bi's pooled slab.
+            let dst = unsafe { optr.rows(bi, bi + 1, slab) };
+            avgpool_image(img, hw, c, kernel, stride, ohw, dst);
+        });
         out
     }
 
@@ -519,24 +558,55 @@ pub mod kernels {
                        kernel: usize, stride: usize) -> Vec<f32> {
         let ohw = (hw - kernel) / stride + 1;
         debug_assert_eq!(dy.len(), b * ohw * ohw * c);
-        let inv = 1.0 / (kernel * kernel) as f32;
         let mut dx = vec![0.0f32; b * hw * hw * c];
         for bi in 0..b {
+            let src = &dy[bi * ohw * ohw * c..(bi + 1) * ohw * ohw * c];
             let img = &mut dx[bi * hw * hw * c..(bi + 1) * hw * hw * c];
-            for oy in 0..ohw {
-                for ox in 0..ohw {
-                    let src = &dy[((bi * ohw + oy) * ohw + ox) * c..][..c];
-                    for ky in 0..kernel {
-                        for kx in 0..kernel {
-                            let dst = ((oy * stride + ky) * hw + ox * stride + kx) * c;
-                            for (d, &v) in img[dst..dst + c].iter_mut().zip(src) {
-                                *d += v * inv;
-                            }
+            avgpool_bwd_image(src, hw, c, kernel, stride, ohw, img);
+        }
+        dx
+    }
+
+    /// [`avgpool_bwd`] for one image: scatter its `(ohw·ohw·c)` gradient
+    /// slab onto its zeroed `(hw·hw·c)` input gradient (windows overlap
+    /// only *within* an image, so the batch partitions cleanly).
+    fn avgpool_bwd_image(dy: &[f32], hw: usize, c: usize, kernel: usize,
+                         stride: usize, ohw: usize, img: &mut [f32]) {
+        let inv = 1.0 / (kernel * kernel) as f32;
+        for oy in 0..ohw {
+            for ox in 0..ohw {
+                let src = &dy[(oy * ohw + ox) * c..][..c];
+                for ky in 0..kernel {
+                    for kx in 0..kernel {
+                        let dst = ((oy * stride + ky) * hw + ox * stride + kx) * c;
+                        for (d, &v) in img[dst..dst + c].iter_mut().zip(src) {
+                            *d += v * inv;
                         }
                     }
                 }
             }
         }
+    }
+
+    /// [`avgpool_bwd`] with the batch partitioned across `pool` (each
+    /// image's input gradient is accumulated by exactly one task, in the
+    /// reference order) — bitwise equal at every thread count.
+    pub fn avgpool_bwd_p(pool: &Pool, dy: &[f32], b: usize, hw: usize, c: usize,
+                         kernel: usize, stride: usize) -> Vec<f32> {
+        let ohw = (hw - kernel) / stride + 1;
+        debug_assert_eq!(dy.len(), b * ohw * ohw * c);
+        if b < 2 || !pool.should_par(b * ohw * ohw * kernel * kernel * c) {
+            return avgpool_bwd(dy, b, hw, c, kernel, stride);
+        }
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        let slab = hw * hw * c;
+        let optr = OutPtr(dx.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let src = &dy[bi * ohw * ohw * c..(bi + 1) * ohw * ohw * c];
+            // SAFETY: task bi exclusively owns image bi's gradient slab.
+            let img = unsafe { optr.rows(bi, bi + 1, slab) };
+            avgpool_bwd_image(src, hw, c, kernel, stride, ohw, img);
+        });
         dx
     }
 
@@ -544,16 +614,41 @@ pub mod kernels {
     /// every spatial position per channel.
     pub fn global_avgpool(x: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
         debug_assert_eq!(x.len(), b * hw * hw * c);
-        let inv = 1.0 / (hw * hw) as f32;
         let mut out = vec![0.0f32; b * c];
         for bi in 0..b {
-            let dst = &mut out[bi * c..(bi + 1) * c];
-            for px in x[bi * hw * hw * c..(bi + 1) * hw * hw * c].chunks_exact(c) {
-                for (d, &v) in dst.iter_mut().zip(px) {
-                    *d += v * inv;
-                }
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            global_avgpool_image(img, hw, c, &mut out[bi * c..(bi + 1) * c]);
+        }
+        out
+    }
+
+    /// [`global_avgpool`] for one image into its zeroed `(c,)` slab (the
+    /// per-image work unit).
+    fn global_avgpool_image(img: &[f32], hw: usize, c: usize, dst: &mut [f32]) {
+        let inv = 1.0 / (hw * hw) as f32;
+        for px in img.chunks_exact(c) {
+            for (d, &v) in dst.iter_mut().zip(px) {
+                *d += v * inv;
             }
         }
+    }
+
+    /// [`global_avgpool`] with the batch partitioned across `pool` —
+    /// bitwise equal to the reference at every thread count.
+    pub fn global_avgpool_p(pool: &Pool, x: &[f32], b: usize, hw: usize,
+                            c: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * c);
+        if b < 2 || !pool.should_par(b * hw * hw * c) {
+            return global_avgpool(x, b, hw, c);
+        }
+        let mut out = vec![0.0f32; b * c];
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let img = &x[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            // SAFETY: task bi exclusively owns image bi's channel means.
+            let dst = unsafe { optr.rows(bi, bi + 1, c) };
+            global_avgpool_image(img, hw, c, dst);
+        });
         out
     }
 
@@ -561,16 +656,43 @@ pub mod kernels {
     /// spatial position.
     pub fn global_avgpool_bwd(dy: &[f32], b: usize, hw: usize, c: usize) -> Vec<f32> {
         debug_assert_eq!(dy.len(), b * c);
-        let inv = 1.0 / (hw * hw) as f32;
         let mut dx = vec![0.0f32; b * hw * hw * c];
         for bi in 0..b {
             let src = &dy[bi * c..(bi + 1) * c];
-            for px in dx[bi * hw * hw * c..(bi + 1) * hw * hw * c].chunks_exact_mut(c) {
-                for (d, &v) in px.iter_mut().zip(src) {
-                    *d += v * inv;
-                }
+            let img = &mut dx[bi * hw * hw * c..(bi + 1) * hw * hw * c];
+            global_avgpool_bwd_image(src, hw, c, img);
+        }
+        dx
+    }
+
+    /// [`global_avgpool_bwd`] for one image: broadcast its `(c,)` gradient
+    /// over its zeroed `(hw·hw·c)` slab.
+    fn global_avgpool_bwd_image(dy: &[f32], hw: usize, c: usize, img: &mut [f32]) {
+        let inv = 1.0 / (hw * hw) as f32;
+        for px in img.chunks_exact_mut(c) {
+            for (d, &v) in px.iter_mut().zip(dy) {
+                *d += v * inv;
             }
         }
+    }
+
+    /// [`global_avgpool_bwd`] with the batch partitioned across `pool` —
+    /// bitwise equal to the reference at every thread count.
+    pub fn global_avgpool_bwd_p(pool: &Pool, dy: &[f32], b: usize, hw: usize,
+                                c: usize) -> Vec<f32> {
+        debug_assert_eq!(dy.len(), b * c);
+        if b < 2 || !pool.should_par(b * hw * hw * c) {
+            return global_avgpool_bwd(dy, b, hw, c);
+        }
+        let mut dx = vec![0.0f32; b * hw * hw * c];
+        let slab = hw * hw * c;
+        let optr = OutPtr(dx.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let src = &dy[bi * c..(bi + 1) * c];
+            // SAFETY: task bi exclusively owns image bi's gradient slab.
+            let img = unsafe { optr.rows(bi, bi + 1, slab) };
+            global_avgpool_bwd_image(src, hw, c, img);
+        });
         dx
     }
 
@@ -612,6 +734,242 @@ pub mod kernels {
             }
         }
         ds
+    }
+
+    /// Causal attention probabilities for `groups` independent sequences:
+    /// per group, scores `s = q kᵀ · scale` (a `(seq, seq)` block) pushed
+    /// through [`causal_softmax`]. `q`/`k` are `(groups·seq, d)`; returns
+    /// the `(groups·seq, seq)` probability blocks. Groups never interact —
+    /// that independence is what makes the whole group the pool's
+    /// partition unit in [`attn_scores_p`].
+    pub fn attn_scores(q: &[f32], k: &[f32], groups: usize, seq: usize,
+                       d: usize, scale: f32) -> Vec<f32> {
+        debug_assert_eq!(q.len(), groups * seq * d);
+        debug_assert_eq!(k.len(), groups * seq * d);
+        let mut probs = vec![0.0f32; groups * seq * seq];
+        for g in 0..groups {
+            attn_scores_group(&q[g * seq * d..(g + 1) * seq * d],
+                              &k[g * seq * d..(g + 1) * seq * d],
+                              seq, d, scale,
+                              &mut probs[g * seq * seq..(g + 1) * seq * seq]);
+        }
+        probs
+    }
+
+    /// [`attn_scores`] for one sequence group into its zeroed `(seq, seq)`
+    /// probability block (the per-group work unit).
+    fn attn_scores_group(q: &[f32], k: &[f32], seq: usize, d: usize,
+                         scale: f32, s: &mut [f32]) {
+        matmul_nt_into(q, k, seq, d, seq, s);
+        for sv in s.iter_mut() {
+            *sv *= scale;
+        }
+        causal_softmax(s, seq);
+    }
+
+    /// [`attn_scores`] with whole sequence groups partitioned across `pool`
+    /// (each group's probability block is written by exactly one task
+    /// running the identical serial loop) — bitwise equal to the reference
+    /// at every thread count.
+    pub fn attn_scores_p(pool: &Pool, q: &[f32], k: &[f32], groups: usize,
+                         seq: usize, d: usize, scale: f32) -> Vec<f32> {
+        if groups < 2 || !pool.should_par(groups * seq * seq * d) {
+            return attn_scores(q, k, groups, seq, d, scale);
+        }
+        let mut probs = vec![0.0f32; groups * seq * seq];
+        let (tasks, chunk) = pool.chunks(groups);
+        let optr = OutPtr(probs.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let g0 = t * chunk;
+            let g1 = (g0 + chunk).min(groups);
+            // SAFETY: task t exclusively owns groups g0..g1's blocks.
+            let out = unsafe { optr.rows(g0, g1, seq * seq) };
+            for (gi, g) in (g0..g1).enumerate() {
+                attn_scores_group(&q[g * seq * d..(g + 1) * seq * d],
+                                  &k[g * seq * d..(g + 1) * seq * d],
+                                  seq, d, scale,
+                                  &mut out[gi * seq * seq..(gi + 1) * seq * seq]);
+            }
+        });
+        probs
+    }
+
+    /// Attention context for `groups` independent sequences: per group,
+    /// `ctx = a v` where `a` is the group's `(seq, seq)` probability block
+    /// and `v` its `(seq, d)` values. Returns `(groups·seq, d)`.
+    pub fn attn_context(probs: &[f32], v: &[f32], groups: usize, seq: usize,
+                        d: usize) -> Vec<f32> {
+        debug_assert_eq!(probs.len(), groups * seq * seq);
+        debug_assert_eq!(v.len(), groups * seq * d);
+        let mut ctx = vec![0.0f32; groups * seq * d];
+        for g in 0..groups {
+            matmul_into(&probs[g * seq * seq..(g + 1) * seq * seq],
+                        &v[g * seq * d..(g + 1) * seq * d], seq, seq, d,
+                        &mut ctx[g * seq * d..(g + 1) * seq * d]);
+        }
+        ctx
+    }
+
+    /// [`attn_context`] with whole sequence groups partitioned across
+    /// `pool` — bitwise equal to the reference at every thread count.
+    pub fn attn_context_p(pool: &Pool, probs: &[f32], v: &[f32], groups: usize,
+                          seq: usize, d: usize) -> Vec<f32> {
+        if groups < 2 || !pool.should_par(groups * seq * seq * d) {
+            return attn_context(probs, v, groups, seq, d);
+        }
+        let mut ctx = vec![0.0f32; groups * seq * d];
+        let (tasks, chunk) = pool.chunks(groups);
+        let optr = OutPtr(ctx.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let g0 = t * chunk;
+            let g1 = (g0 + chunk).min(groups);
+            // SAFETY: task t exclusively owns groups g0..g1's context rows.
+            let out = unsafe { optr.rows(g0, g1, seq * d) };
+            for (gi, g) in (g0..g1).enumerate() {
+                matmul_into(&probs[g * seq * seq..(g + 1) * seq * seq],
+                            &v[g * seq * d..(g + 1) * seq * d], seq, seq, d,
+                            &mut out[gi * seq * d..(gi + 1) * seq * d]);
+            }
+        });
+        ctx
+    }
+
+    /// Backward of [`attn_context`]: per group, `da = dctx vᵀ` (the
+    /// probability gradient, fed to [`attn_scores_bwd`]) and `dv = aᵀ dctx`
+    /// (via the [`matmul_tn`] loop, whose `a == 0` skip fires on the
+    /// causal-masked entries). Returns `(da (groups·seq, seq),
+    /// dv (groups·seq, d))`.
+    pub fn attn_context_bwd(probs: &[f32], v: &[f32], dctx: &[f32],
+                            groups: usize, seq: usize, d: usize)
+                            -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(probs.len(), groups * seq * seq);
+        debug_assert_eq!(v.len(), groups * seq * d);
+        debug_assert_eq!(dctx.len(), groups * seq * d);
+        let mut da = vec![0.0f32; groups * seq * seq];
+        let mut dv = vec![0.0f32; groups * seq * d];
+        for g in 0..groups {
+            attn_context_bwd_group(
+                &probs[g * seq * seq..(g + 1) * seq * seq],
+                &v[g * seq * d..(g + 1) * seq * d],
+                &dctx[g * seq * d..(g + 1) * seq * d], seq, d,
+                &mut da[g * seq * seq..(g + 1) * seq * seq],
+                &mut dv[g * seq * d..(g + 1) * seq * d]);
+        }
+        (da, dv)
+    }
+
+    /// [`attn_context_bwd`] for one sequence group (the per-group work
+    /// unit): `da`/`dv` are the group's zeroed output blocks.
+    fn attn_context_bwd_group(a: &[f32], v: &[f32], dctx: &[f32], seq: usize,
+                              d: usize, da: &mut [f32], dv: &mut [f32]) {
+        matmul_nt_into(dctx, v, seq, d, seq, da);
+        matmul_tn_cols(a, dctx, seq, seq, d, 0, seq, dv);
+    }
+
+    /// [`attn_context_bwd`] with whole sequence groups partitioned across
+    /// `pool` (each group's `da` and `dv` blocks are written by exactly one
+    /// task) — bitwise equal to the reference at every thread count.
+    pub fn attn_context_bwd_p(pool: &Pool, probs: &[f32], v: &[f32],
+                              dctx: &[f32], groups: usize, seq: usize,
+                              d: usize) -> (Vec<f32>, Vec<f32>) {
+        if groups < 2 || !pool.should_par(2 * groups * seq * seq * d) {
+            return attn_context_bwd(probs, v, dctx, groups, seq, d);
+        }
+        let mut da = vec![0.0f32; groups * seq * seq];
+        let mut dv = vec![0.0f32; groups * seq * d];
+        let (tasks, chunk) = pool.chunks(groups);
+        let daptr = OutPtr(da.as_mut_ptr());
+        let dvptr = OutPtr(dv.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let g0 = t * chunk;
+            let g1 = (g0 + chunk).min(groups);
+            // SAFETY: task t exclusively owns groups g0..g1's blocks in
+            // both output buffers.
+            let dao = unsafe { daptr.rows(g0, g1, seq * seq) };
+            let dvo = unsafe { dvptr.rows(g0, g1, seq * d) };
+            for (gi, g) in (g0..g1).enumerate() {
+                attn_context_bwd_group(
+                    &probs[g * seq * seq..(g + 1) * seq * seq],
+                    &v[g * seq * d..(g + 1) * seq * d],
+                    &dctx[g * seq * d..(g + 1) * seq * d], seq, d,
+                    &mut dao[gi * seq * seq..(gi + 1) * seq * seq],
+                    &mut dvo[gi * seq * d..(gi + 1) * seq * d]);
+            }
+        });
+        (da, dv)
+    }
+
+    /// Backward of [`attn_scores`]: per group, the softmax-Jacobian pass
+    /// `ds = a ⊙ (da − Σ_j da ⊙ a) · scale` ([`softmax_bwd_scaled`], which
+    /// zeroes the causal-masked entries since their `a = 0`), then
+    /// `dq = ds k` and `dk = dsᵀ q`. Returns `(dq, dk)`, both
+    /// `(groups·seq, d)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_scores_bwd(probs: &[f32], da: &[f32], q: &[f32], k: &[f32],
+                           groups: usize, seq: usize, d: usize, scale: f32)
+                           -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(probs.len(), groups * seq * seq);
+        debug_assert_eq!(da.len(), groups * seq * seq);
+        debug_assert_eq!(q.len(), groups * seq * d);
+        debug_assert_eq!(k.len(), groups * seq * d);
+        let mut dq = vec![0.0f32; groups * seq * d];
+        let mut dk = vec![0.0f32; groups * seq * d];
+        for g in 0..groups {
+            attn_scores_bwd_group(
+                &probs[g * seq * seq..(g + 1) * seq * seq],
+                &da[g * seq * seq..(g + 1) * seq * seq],
+                &q[g * seq * d..(g + 1) * seq * d],
+                &k[g * seq * d..(g + 1) * seq * d], seq, d, scale,
+                &mut dq[g * seq * d..(g + 1) * seq * d],
+                &mut dk[g * seq * d..(g + 1) * seq * d]);
+        }
+        (dq, dk)
+    }
+
+    /// [`attn_scores_bwd`] for one sequence group (the per-group work
+    /// unit): `dq`/`dk` are the group's zeroed output blocks; `ds` is a
+    /// task-local temporary, so tasks share nothing.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_scores_bwd_group(a: &[f32], da: &[f32], q: &[f32], k: &[f32],
+                             seq: usize, d: usize, scale: f32,
+                             dq: &mut [f32], dk: &mut [f32]) {
+        let ds = softmax_bwd_scaled(a, da, seq, scale);
+        matmul_into(&ds, k, seq, seq, d, dq);
+        matmul_tn_cols(&ds, q, seq, seq, d, 0, seq, dk);
+    }
+
+    /// [`attn_scores_bwd`] with whole sequence groups partitioned across
+    /// `pool` — bitwise equal to the reference at every thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_scores_bwd_p(pool: &Pool, probs: &[f32], da: &[f32],
+                             q: &[f32], k: &[f32], groups: usize, seq: usize,
+                             d: usize, scale: f32) -> (Vec<f32>, Vec<f32>) {
+        if groups < 2 || !pool.should_par(2 * groups * seq * seq * d) {
+            return attn_scores_bwd(probs, da, q, k, groups, seq, d, scale);
+        }
+        let mut dq = vec![0.0f32; groups * seq * d];
+        let mut dk = vec![0.0f32; groups * seq * d];
+        let (tasks, chunk) = pool.chunks(groups);
+        let dqptr = OutPtr(dq.as_mut_ptr());
+        let dkptr = OutPtr(dk.as_mut_ptr());
+        pool.run(tasks, &|t| {
+            let g0 = t * chunk;
+            let g1 = (g0 + chunk).min(groups);
+            // SAFETY: task t exclusively owns groups g0..g1's blocks in
+            // both output buffers.
+            let dqo = unsafe { dqptr.rows(g0, g1, seq * d) };
+            let dko = unsafe { dkptr.rows(g0, g1, seq * d) };
+            for (gi, g) in (g0..g1).enumerate() {
+                attn_scores_bwd_group(
+                    &probs[g * seq * seq..(g + 1) * seq * seq],
+                    &da[g * seq * seq..(g + 1) * seq * seq],
+                    &q[g * seq * d..(g + 1) * seq * d],
+                    &k[g * seq * d..(g + 1) * seq * d], seq, d, scale,
+                    &mut dqo[gi * seq * d..(gi + 1) * seq * d],
+                    &mut dko[gi * seq * d..(gi + 1) * seq * d]);
+            }
+        });
+        (dq, dk)
     }
 
     /// Mean softmax cross-entropy over `(b, c)` logits with `(b,)` i32
@@ -859,13 +1217,16 @@ impl NativeModule {
                     (y, Aux::ConvPair { h1 })
                 }
                 Plan::AvgPool { hw, c, kernel, stride } =>
-                    (kernels::avgpool(cur, b, hw, c, kernel, stride), Aux::AvgPool),
+                    (kernels::avgpool_p(pool, cur, b, hw, c, kernel, stride),
+                     Aux::AvgPool),
                 Plan::GlobalAvg { hw, c } =>
-                    (kernels::global_avgpool(cur, b, hw, c), Aux::GlobalAvg),
+                    (kernels::global_avgpool_p(pool, cur, b, hw, c), Aux::GlobalAvg),
                 Plan::Attention { seq, d } => {
-                    // Q/K/V/out projections run on the pool; the per-group
-                    // (seq × d) score/context matmuls stay serial — they sit
-                    // under the parallelism threshold at testbed shapes.
+                    // Q/K/V/out projections row-partition on the pool; the
+                    // per-group (seq × d) score/context matmuls partition by
+                    // whole sequence groups (kernels::attn_scores_p /
+                    // attn_context_p) — one task owns a group's blocks in
+                    // every output, so the bitwise guarantee holds.
                     let mut q = kernels::matmul_p(pool, cur, pp[0].f32s(), b, d, d);
                     kernels::add_bias(&mut q, pp[1].f32s());
                     let mut kk = kernels::matmul_p(pool, cur, pp[2].f32s(), b, d, d);
@@ -873,21 +1234,11 @@ impl NativeModule {
                     let mut v = kernels::matmul_p(pool, cur, pp[4].f32s(), b, d, d);
                     kernels::add_bias(&mut v, pp[5].f32s());
                     let scale = 1.0 / (d as f32).sqrt();
-                    let mut probs = vec![0.0f32; b * seq];
-                    let mut ctx = vec![0.0f32; b * d];
-                    for g in 0..b / seq {
-                        let span = g * seq * d..(g + 1) * seq * d;
-                        let mut s = kernels::matmul_nt(&q[span.clone()],
-                                                       &kk[span.clone()], seq, d, seq);
-                        for sv in s.iter_mut() {
-                            *sv *= scale;
-                        }
-                        kernels::causal_softmax(&mut s, seq);
-                        ctx[span].copy_from_slice(
-                            &kernels::matmul(&s, &v[g * seq * d..(g + 1) * seq * d],
-                                             seq, seq, d));
-                        probs[g * seq * seq..(g + 1) * seq * seq].copy_from_slice(&s);
-                    }
+                    let groups = b / seq;
+                    let probs = kernels::attn_scores_p(pool, &q, &kk, groups,
+                                                       seq, d, scale);
+                    let ctx = kernels::attn_context_p(pool, &probs, &v, groups,
+                                                      seq, d);
                     let mut y = kernels::matmul_p(pool, &ctx, pp[6].f32s(), b, d, d);
                     kernels::add_bias(&mut y, pp[7].f32s());
                     for (yv, &xv) in y.iter_mut().zip(cur.iter()) {
@@ -1038,14 +1389,14 @@ impl NativeModule {
                 }
                 (Plan::AvgPool { hw, c, kernel, stride }, Aux::AvgPool) => {
                     grad = if need_dx {
-                        kernels::avgpool_bwd(&grad, b, hw, c, kernel, stride)
+                        kernels::avgpool_bwd_p(pool, &grad, b, hw, c, kernel, stride)
                     } else {
                         Vec::new()
                     };
                 }
                 (Plan::GlobalAvg { hw, c }, Aux::GlobalAvg) => {
                     grad = if need_dx {
-                        kernels::global_avgpool_bwd(&grad, b, hw, c)
+                        kernels::global_avgpool_bwd_p(pool, &grad, b, hw, c)
                     } else {
                         Vec::new()
                     };
@@ -1058,22 +1409,14 @@ impl NativeModule {
                     let dbo = kernels::bias_grad(&dy, d);
                     let dctx = kernels::matmul_nt_p(pool, &dy, pp[6].f32s(), b, d, d);
                     let scale = 1.0 / (d as f32).sqrt();
-                    let mut dq = vec![0.0f32; b * d];
-                    let mut dk = vec![0.0f32; b * d];
-                    let mut dv = vec![0.0f32; b * d];
-                    for g in 0..b / seq {
-                        let span = g * seq * d..(g + 1) * seq * d;
-                        let a = &probs[g * seq * seq..(g + 1) * seq * seq];
-                        let da = kernels::matmul_nt(&dctx[span.clone()],
-                                                    &v[span.clone()], seq, d, seq);
-                        dv[span.clone()].copy_from_slice(
-                            &kernels::matmul_tn(a, &dctx[span.clone()], seq, seq, d));
-                        let ds = kernels::softmax_bwd_scaled(a, &da, seq, scale);
-                        dq[span.clone()].copy_from_slice(
-                            &kernels::matmul(&ds, &kk[span.clone()], seq, seq, d));
-                        dk[span.clone()].copy_from_slice(
-                            &kernels::matmul_tn(&ds, &q[span], seq, seq, d));
-                    }
+                    // per-group backward, group-partitioned like the
+                    // forward: context backward (da, dv) then the
+                    // softmax-Jacobian + score backward (dq, dk)
+                    let groups = b / seq;
+                    let (da, dv) = kernels::attn_context_bwd_p(
+                        pool, probs, v, &dctx, groups, seq, d);
+                    let (dq, dk) = kernels::attn_scores_bwd_p(
+                        pool, probs, &da, q, kk, groups, seq, d, scale);
                     grads[off] = Some(tensor2(d, d, kernels::matmul_tn_p(pool, x, &dq, b, d, d)));
                     grads[off + 1] = Some(tensor1(kernels::bias_grad(&dq, d)));
                     grads[off + 2] = Some(tensor2(d, d, kernels::matmul_tn_p(pool, x, &dk, b, d, d)));

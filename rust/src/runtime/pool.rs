@@ -8,12 +8,15 @@
 //! stack-borrowed closure to persistent threads sound.
 //!
 //! Determinism contract: the pool only *schedules*; it never changes what a
-//! task computes. Kernels built on it partition their **output** so each
-//! task owns a disjoint row range and runs the exact single-thread loop
-//! over that range — float accumulation order per output element is
-//! identical at every thread count, so results are bitwise equal to the
-//! `threads = 1` reference (asserted by the parity tests in
-//! [`super::native`]).
+//! task computes. Kernels built on it partition their **output** into
+//! disjoint units — matrix rows for the matmul family, per-image slabs for
+//! im2col/col2im and the pooling kernels, whole `seq × d` sequence groups
+//! for the attention kernels — so each task owns a disjoint unit range and
+//! runs the exact single-thread loop over it. Float accumulation order per
+//! output element is identical at every thread count, so results are
+//! bitwise equal to the `threads = 1` reference (asserted by the parity
+//! tests in [`super::native`] and the randomized property harness in
+//! `tests/properties.rs`).
 //!
 //! Workers are spawned lazily on the first parallel `run`, so the many
 //! short-lived engines built by unit tests pay nothing unless a kernel
@@ -28,9 +31,13 @@ use std::thread::JoinHandle;
 /// caller so the original message/location survive).
 type PanicSlot = Mutex<Option<Box<dyn Any + Send>>>;
 
-/// Minimum per-call work (inner-loop multiply-adds or element copies) below
-/// which pool-aware kernels stay on the single-thread path: a cross-thread
-/// dispatch costs tens of microseconds, so small operands are faster serial.
+/// Default minimum per-call work (inner-loop multiply-adds or element
+/// copies) below which pool-aware kernels stay on the single-thread path: a
+/// cross-thread dispatch costs tens of microseconds, so small operands are
+/// faster serial. This is the default for [`Pool::new`]; the threshold is a
+/// per-pool constructor knob ([`Pool::with_min_work`]) so tests can force
+/// the parallel path on tiny shapes (`min_work = 0`) and deployments with
+/// cheaper or costlier dispatch can retune without touching the kernels.
 pub const PAR_MIN_WORK: usize = 1 << 17;
 
 /// Resolve a thread-count knob: `0` means auto (available parallelism).
@@ -123,22 +130,29 @@ impl Pool {
         self.threads
     }
 
+    /// The kernel parallelism threshold this pool was built with (see
+    /// [`PAR_MIN_WORK`]).
+    pub fn min_work(&self) -> usize {
+        self.min_work
+    }
+
     /// Whether a kernel with this much inner-loop work should take the
     /// parallel path on this pool.
     pub fn should_par(&self, work: usize) -> bool {
         self.threads > 1 && work >= self.min_work
     }
 
-    /// Split `rows` into (tasks, chunk) so [`Pool::run`] gets a few tasks
-    /// per worker for load balance: task `t` owns rows
-    /// `t*chunk .. min((t+1)*chunk, rows)`.
-    pub fn row_chunks(&self, rows: usize) -> (usize, usize) {
-        if rows == 0 {
+    /// Split `units` independent work units — output rows, per-image slabs,
+    /// or whole sequence groups — into (tasks, chunk) so [`Pool::run`] gets
+    /// a few tasks per worker for load balance: task `t` owns units
+    /// `t*chunk .. min((t+1)*chunk, units)`.
+    pub fn chunks(&self, units: usize) -> (usize, usize) {
+        if units == 0 {
             return (0, 1);
         }
-        let want = rows.min(self.threads * 4);
-        let chunk = rows.div_ceil(want);
-        (rows.div_ceil(chunk), chunk)
+        let want = units.min(self.threads * 4);
+        let chunk = units.div_ceil(want);
+        (units.div_ceil(chunk), chunk)
     }
 
     fn ensure_spawned(&self) {
@@ -322,17 +336,18 @@ mod tests {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(3), 3);
         let pool = Pool::new(2);
+        assert_eq!(pool.min_work(), PAR_MIN_WORK);
         assert!(pool.should_par(PAR_MIN_WORK));
         assert!(!pool.should_par(PAR_MIN_WORK - 1));
-        // chunks cover the rows exactly
-        for rows in [0usize, 1, 2, 7, 8, 9, 1000] {
-            let (tasks, chunk) = pool.row_chunks(rows);
-            if rows == 0 {
+        // chunks cover the units exactly
+        for units in [0usize, 1, 2, 7, 8, 9, 1000] {
+            let (tasks, chunk) = pool.chunks(units);
+            if units == 0 {
                 assert_eq!(tasks, 0);
                 continue;
             }
-            assert!(tasks >= 1 && (tasks - 1) * chunk < rows && tasks * chunk >= rows,
-                    "rows {rows}: tasks {tasks} chunk {chunk}");
+            assert!(tasks >= 1 && (tasks - 1) * chunk < units && tasks * chunk >= units,
+                    "units {units}: tasks {tasks} chunk {chunk}");
         }
     }
 

@@ -74,11 +74,19 @@ pub enum NativeOp {
     ///
     /// Backward: each pooled output distributes `dy / kernel²` back to its
     /// window (positions a strided window never covers get zero gradient).
+    ///
+    /// Parallelism: windows never cross images, so both directions
+    /// partition the batch into per-image slabs on the worker pool
+    /// (`avgpool_p` / `avgpool_bwd_p`) — bitwise identical at every thread
+    /// count.
     AvgPool2d { hw: usize, kernel: usize, stride: usize },
     /// Global average pool: `(rows, hw²·c) -> (rows, c)`, the CIFAR ResNet
     /// head pool. No params.
     ///
     /// Backward: `dx = dy / hw²` broadcast over all spatial positions.
+    ///
+    /// Parallelism: per-image slabs, like [`NativeOp::AvgPool2d`]
+    /// (`global_avgpool_p` / `global_avgpool_bwd_p`).
     GlobalAvgPool { hw: usize },
     /// Single-head causal self-attention with a residual connection, over
     /// sequences of length `seq` (`rows` must be a multiple of `seq`; each
@@ -95,6 +103,15 @@ pub enum NativeOp {
     /// `ds = a ⊙ (da − Σ_j da ⊙ a)` (masked entries have `a = 0`, so their
     /// gradient vanishes), `dq = ds k / √d`, `dk = dsᵀ q / √d`; then
     /// `dx = dy + dq wqᵀ + dk wkᵀ + dv wvᵀ` (the `dy` term is the skip).
+    ///
+    /// Parallelism: sequences never interact in the score/context stage,
+    /// so forward and backward partition the `rows / seq` groups across
+    /// the worker pool — each task owns whole `(seq, seq)` probability and
+    /// `(seq, d)` q/k/v blocks and runs the identical serial loops
+    /// (`attn_scores_p` / `attn_context_p` and the `*_bwd_p` twins in
+    /// `runtime::native::kernels`), keeping results bitwise identical at
+    /// every thread count. The x/q/k/v/out *projections* row-partition
+    /// like any dense matmul.
     Attention { seq: usize },
 }
 

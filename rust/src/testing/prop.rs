@@ -1,7 +1,14 @@
 //! Property-test driver: N seeded random cases per property, size-ramped so
 //! early cases are small (readable counterexamples), failures reported with
 //! the reproducing seed.
+//!
+//! Besides the scalar draws, [`Gen`] knows how to generate the inputs of
+//! the kernel parity properties (`tests/properties.rs`): matrix dimensions
+//! biased toward the degenerate values the pool partition must survive
+//! (0, 1), and whole [`Pool`]s with a random thread count and a random
+//! `min_work` threshold so the serial-fallback gating is itself under test.
 
+use crate::runtime::pool::{Pool, PAR_MIN_WORK};
 use crate::util::rng::Rng;
 
 /// Case generator handed to properties: seeded RNG + a size hint that grows
@@ -28,6 +35,39 @@ impl Gen {
 
     pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
         (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// A matrix dimension in `[0, hi]` biased toward the degenerate values
+    /// a partitioned kernel must survive: ~1/8 of draws are 0 (empty
+    /// output), ~1/8 are 1 (single row/column), the rest ramp with size.
+    pub fn dim(&mut self, hi: usize) -> usize {
+        match self.rng.below(8) {
+            0 => 0,
+            1 => hi.min(1),
+            _ => self.usize_in(hi.min(1), hi),
+        }
+    }
+
+    /// Like [`Gen::dim`] but never 0 — for dimensions a kernel requires to
+    /// be positive (e.g. attention's `seq`).
+    pub fn dim1(&mut self, hi: usize) -> usize {
+        self.dim(hi).max(1)
+    }
+
+    /// A kernel thread count for a parity case: 1 (the serial twin), or a
+    /// small multi-thread pool up to 8 total workers.
+    pub fn threads(&mut self) -> usize {
+        [1, 2, 3, 4, 8][self.rng.below(5)]
+    }
+
+    /// A worker [`Pool`] for a parity case: random thread count plus a
+    /// `min_work` threshold drawn from {0 (always parallel), a small value
+    /// (threshold straddles the generated shapes), [`PAR_MIN_WORK`] (mostly
+    /// serial fallback)} — so the parity property also covers the gating
+    /// that decides *whether* to partition.
+    pub fn pool(&mut self) -> Pool {
+        let min_work = [0, 64, PAR_MIN_WORK][self.rng.below(3)];
+        Pool::with_min_work(self.threads(), min_work)
     }
 }
 
@@ -71,6 +111,39 @@ mod tests {
     #[should_panic(expected = "property")]
     fn reports_failures() {
         check("always_fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn dims_cover_degenerates_and_pools_vary() {
+        let (mut zeros, mut ones, mut multi, mut serial, mut always_par) =
+            (0usize, 0usize, 0usize, 0usize, 0usize);
+        check("gen_shapes", 200, |g| {
+            let d = g.dim(64);
+            if d == 0 {
+                zeros += 1;
+            } else if d == 1 {
+                ones += 1;
+            }
+            if d > 64 {
+                return Err(format!("dim {d} above hi"));
+            }
+            if g.dim1(64) == 0 {
+                return Err("dim1 returned 0".to_string());
+            }
+            let pool = g.pool();
+            if pool.threads() > 1 {
+                multi += 1;
+            } else {
+                serial += 1;
+            }
+            if pool.min_work() == 0 {
+                always_par += 1;
+            }
+            Ok(())
+        });
+        assert!(zeros > 0 && ones > 0, "degenerate dims never drawn");
+        assert!(multi > 0 && serial > 0, "thread counts never varied");
+        assert!(always_par > 0, "min_work = 0 never drawn");
     }
 
     #[test]

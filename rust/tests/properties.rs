@@ -1,16 +1,32 @@
 //! Property-based tests (mini-proptest) over the coordinator's pure
-//! invariants: replay buffers, optimizer algebra, JSON round-trips, the
-//! pipeline simulator, and the memory model's monotonicity.
+//! invariants — replay buffers, optimizer algebra, JSON round-trips, the
+//! pipeline simulator, the memory model's monotonicity — and the native
+//! kernels' parallelism contract: every pool-partitioned `*_p` kernel is
+//! **bitwise identical** to its serial twin across randomized shapes,
+//! thread counts, and `min_work` thresholds (including the degenerate
+//! shapes — empty outputs, single rows/columns, `seq = 1`, one sequence
+//! group — where partition bookkeeping is most likely to slip).
 
 use features_replay::coordinator::history::ReplayBuffer;
 use features_replay::coordinator::pipeline_sim::{
     bp_data_parallel_ms, bp_iteration_ms, decoupled_iteration_ms, CommModel,
     MeasuredCosts,
 };
+use features_replay::coordinator::{self, ModuleStack, TrainConfig, Trainer};
+use features_replay::data::DataSource;
 use features_replay::optim::SgdMomentum;
-use features_replay::runtime::{DType, Tensor};
+use features_replay::runtime::native::kernels;
+use features_replay::runtime::pool::resolve_threads;
+use features_replay::runtime::{DType, Engine, NativeLmSpec, Tensor};
 use features_replay::testing::check;
 use features_replay::util::json::Json;
+
+/// Bitwise slice equality — the pool determinism contract is `to_bits`
+/// equality, stricter than `==` (distinguishes -0.0 from 0.0 and never
+/// equates NaNs away).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
 
 #[test]
 fn replay_buffer_returns_exact_lag() {
@@ -210,6 +226,180 @@ fn tensor_clone_shares_until_write_then_detaches() {
         }
         Ok(())
     });
+}
+
+// ---- kernel parity: every `*_p` kernel == its serial twin, bitwise ------
+
+#[test]
+fn pool_matmul_family_bitwise_parity() {
+    check("matmul_family_parity", 100, |g| {
+        let pool = g.pool();
+        let tag = format!("threads={} min_work={}", pool.threads(), pool.min_work());
+        let (m, k, n) = (g.dim(64), g.dim(64), g.dim(64));
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        if !bits_eq(&kernels::matmul_p(&pool, &a, &b, m, k, n),
+                    &kernels::matmul(&a, &b, m, k, n)) {
+            return Err(format!("matmul {m}x{k}x{n} {tag}"));
+        }
+        let bt = g.vec_f32(n * k, -1.0, 1.0);
+        if !bits_eq(&kernels::matmul_nt_p(&pool, &a, &bt, m, k, n),
+                    &kernels::matmul_nt(&a, &bt, m, k, n)) {
+            return Err(format!("matmul_nt {m}x{k}x{n} {tag}"));
+        }
+        // tn reads `a` as (rows=m, cols=k); exact zeros exercise the
+        // ReLU-skip on both sides of every chunk boundary
+        let mut az = a;
+        for v in az.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let dy = g.vec_f32(m * n, -1.0, 1.0);
+        if !bits_eq(&kernels::matmul_tn_p(&pool, &az, &dy, m, k, n),
+                    &kernels::matmul_tn(&az, &dy, m, k, n)) {
+            return Err(format!("matmul_tn {m}x{k}x{n} {tag}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_im2col_col2im_bitwise_parity() {
+    check("im2col_parity", 100, |g| {
+        let pool = g.pool();
+        let (b, c) = (g.dim1(5), g.dim1(4));
+        let k = g.usize_in(1, 3);
+        let stride = g.usize_in(1, 2);
+        let pad = g.usize_in(0, 1);
+        // the window must fit the padded image at least once
+        let hw = g.usize_in(k.saturating_sub(2 * pad).max(1), 8);
+        let tag = format!("b{b} hw{hw} c{c} k{k} s{stride} p{pad} threads={} \
+                           min_work={}", pool.threads(), pool.min_work());
+        let x = g.vec_f32(b * hw * hw * c, -1.0, 1.0);
+        if !bits_eq(&kernels::im2col_p(&pool, &x, b, hw, c, k, stride, pad),
+                    &kernels::im2col(&x, b, hw, c, k, stride, pad)) {
+            return Err(format!("im2col {tag}"));
+        }
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let cols = g.vec_f32(b * ohw * ohw * k * k * c, -1.0, 1.0);
+        if !bits_eq(&kernels::col2im_p(&pool, &cols, b, hw, c, k, stride, pad),
+                    &kernels::col2im(&cols, b, hw, c, k, stride, pad)) {
+            return Err(format!("col2im {tag}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_attention_kernels_bitwise_parity() {
+    check("attention_parity", 100, |g| {
+        let pool = g.pool();
+        // dim1 biases toward 1, so seq = 1, a single group (b = seq), and
+        // d = 1 all occur across the run
+        let (groups, seq, d) = (g.dim1(6), g.dim1(8), g.dim1(8));
+        let tag = format!("g{groups} seq{seq} d{d} threads={} min_work={}",
+                          pool.threads(), pool.min_work());
+        let scale = 1.0 / (d as f32).sqrt();
+        let q = g.vec_f32(groups * seq * d, -1.0, 1.0);
+        let k = g.vec_f32(groups * seq * d, -1.0, 1.0);
+        let v = g.vec_f32(groups * seq * d, -1.0, 1.0);
+        let probs = kernels::attn_scores(&q, &k, groups, seq, d, scale);
+        if !bits_eq(&kernels::attn_scores_p(&pool, &q, &k, groups, seq, d, scale),
+                    &probs) {
+            return Err(format!("attn_scores {tag}"));
+        }
+        if !bits_eq(&kernels::attn_context_p(&pool, &probs, &v, groups, seq, d),
+                    &kernels::attn_context(&probs, &v, groups, seq, d)) {
+            return Err(format!("attn_context {tag}"));
+        }
+        let dctx = g.vec_f32(groups * seq * d, -1.0, 1.0);
+        let (da, dv) = kernels::attn_context_bwd(&probs, &v, &dctx, groups, seq, d);
+        let (da_p, dv_p) =
+            kernels::attn_context_bwd_p(&pool, &probs, &v, &dctx, groups, seq, d);
+        if !bits_eq(&da_p, &da) || !bits_eq(&dv_p, &dv) {
+            return Err(format!("attn_context_bwd {tag}"));
+        }
+        let (dq, dk) =
+            kernels::attn_scores_bwd(&probs, &da, &q, &k, groups, seq, d, scale);
+        let (dq_p, dk_p) =
+            kernels::attn_scores_bwd_p(&pool, &probs, &da, &q, &k, groups, seq, d, scale);
+        if !bits_eq(&dq_p, &dq) || !bits_eq(&dk_p, &dk) {
+            return Err(format!("attn_scores_bwd {tag}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_pooling_kernels_bitwise_parity() {
+    check("pooling_parity", 100, |g| {
+        let pool = g.pool();
+        let (b, c) = (g.dim1(5), g.dim1(4));
+        let kernel = g.usize_in(1, 3);
+        let stride = g.usize_in(1, 2);
+        let hw = g.usize_in(kernel, 8);
+        let tag = format!("b{b} hw{hw} c{c} k{kernel} s{stride} threads={} \
+                           min_work={}", pool.threads(), pool.min_work());
+        let x = g.vec_f32(b * hw * hw * c, -1.0, 1.0);
+        if !bits_eq(&kernels::avgpool_p(&pool, &x, b, hw, c, kernel, stride),
+                    &kernels::avgpool(&x, b, hw, c, kernel, stride)) {
+            return Err(format!("avgpool {tag}"));
+        }
+        let ohw = (hw - kernel) / stride + 1;
+        let dy = g.vec_f32(b * ohw * ohw * c, -1.0, 1.0);
+        if !bits_eq(&kernels::avgpool_bwd_p(&pool, &dy, b, hw, c, kernel, stride),
+                    &kernels::avgpool_bwd(&dy, b, hw, c, kernel, stride)) {
+            return Err(format!("avgpool_bwd {tag}"));
+        }
+        if !bits_eq(&kernels::global_avgpool_p(&pool, &x, b, hw, c),
+                    &kernels::global_avgpool(&x, b, hw, c)) {
+            return Err(format!("global_avgpool {tag}"));
+        }
+        let dg = g.vec_f32(b * c, -1.0, 1.0);
+        if !bits_eq(&kernels::global_avgpool_bwd_p(&pool, &dg, b, hw, c),
+                    &kernels::global_avgpool_bwd(&dg, b, hw, c)) {
+            return Err(format!("global_avgpool_bwd {tag}"));
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end attention-path parity: `transformer_tiny`'s op graph (embed +
+/// causal attention + MLP blocks) trained for a few FR steps at
+/// `threads ∈ {1, 2, max}` must produce bit-identical loss trajectories
+/// AND bit-identical parameters — the attention-path twin of
+/// `thread_counts_train_bitwise_identically` in coordinator_integration.
+/// The tiny config's shapes sit *above* `PAR_MIN_WORK`, so the multi-thread
+/// runs really take the partitioned kernels.
+#[test]
+fn transformer_tiny_trains_bitwise_identically_across_thread_counts() {
+    let m = NativeLmSpec::tiny(2).manifest().unwrap();
+    let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+    for t in [1usize, 2, resolve_threads(0)] {
+        let engine = Engine::native_with_threads(t);
+        let mut tr = coordinator::fr::FrTrainer::new(
+            ModuleStack::load(&engine, m.clone(), TrainConfig::default()).unwrap());
+        let mut data = DataSource::for_manifest(&m, 5).unwrap();
+        let mut losses = Vec::with_capacity(4);
+        for _ in 0..4 {
+            losses.push(tr.train_step(&data.train_batch(), 0.01).unwrap().loss.to_bits());
+        }
+        // FNV over every parameter bit of every module, in manifest order
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for module in &tr.stack_ref().modules {
+            for p in module.params.iter() {
+                for &v in p.f32s() {
+                    h ^= v.to_bits() as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+        }
+        runs.push((losses, h));
+    }
+    let (ref_losses, ref_hash) = runs[0].clone();
+    for (i, (losses, hash)) in runs.iter().enumerate().skip(1) {
+        assert_eq!(&ref_losses, losses, "loss trajectory diverged (run {i})");
+        assert_eq!(ref_hash, *hash, "parameter hash diverged (run {i})");
+    }
 }
 
 #[test]

@@ -2,8 +2,8 @@
 # CI entry point: build + test (tier-1), rustdoc (warning-free), example
 # build + smoke, then fmt/clippy hygiene.
 #
-#   scripts/ci.sh            # tier-1 + examples hard-fail; fmt/clippy advisory
-#   scripts/ci.sh --strict   # fmt/clippy failures also fail the run
+#   scripts/ci.sh            # tier-1 + examples + property/mirror suites
+#   scripts/ci.sh --strict   # retained for compatibility (see below)
 #   scripts/ci.sh --pjrt     # additionally build+test with --features pjrt
 #                            # (links the offline xla stub)
 #   scripts/ci.sh --no-smoke # skip running the example smoke (build only)
@@ -11,9 +11,11 @@
 #                            # threads=max) and write BENCH_kernels.json
 #
 # The toolchain is pinned by rust-toolchain.toml (stable + rustfmt/clippy
-# components); fmt/clippy stay advisory by default because a non-rustup
-# cargo may ship without the components — flip to --strict where the pinned
-# toolchain is honored.
+# components). Where the pinned toolchain is honored (the `cargo fmt
+# --version` / `cargo clippy --version` probes succeed) fmt/clippy failures
+# FAIL the run; on bare toolchains that ship cargo without the components
+# the checks skip cleanly — that is the only remaining advisory path, so
+# --strict is now a no-op kept for script compatibility.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -37,6 +39,25 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# The randomized parity property harness (every pool-partitioned kernel
+# bitwise-equal to its serial twin, plus the transformer_tiny end-to-end
+# thread-count property) already RAN as part of `cargo test -q` above;
+# don't re-run it (it is the most expensive target). This step only
+# asserts the target stays registered and enumerable.
+echo "== properties: target registered (runs under tier-1 cargo test) =="
+cargo test -q --test properties -- --list >/dev/null
+
+# Numpy mirrors: independent float32 re-derivations of the partition
+# schemes, runnable without cargo. Skip cleanly where python3/numpy are
+# absent (the Rust parity tests still cover the claim).
+if python3 -c "import numpy" >/dev/null 2>&1; then
+    echo "== numpy mirrors: pool + attention group partitions =="
+    python3 ../python/tests/test_pool_partition_mirror.py
+    python3 ../python/tests/test_attn_group_partition_mirror.py
+else
+    echo "== numpy mirrors == skipped (python3/numpy unavailable)"
+fi
 
 echo "== docs: cargo doc --no-deps (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -69,8 +90,10 @@ fi
 
 # Probe the actual component, not `cargo` itself (which is trivially present
 # by this point): non-rustup toolchains may ship cargo without rustfmt or
-# clippy, and those runs should skip cleanly instead of printing FAILED.
-advisory() {
+# clippy, and those runs skip cleanly. Where the probe succeeds the pinned
+# toolchain is honored, so failures are enforced (the ROADMAP "flip to
+# --strict" item); $STRICT no longer changes behavior.
+hygiene() {
     local name="$1" probe_sub="$2"; shift 2
     if ! cargo "$probe_sub" --version >/dev/null 2>&1; then
         echo "== $name == skipped (cargo $probe_sub unavailable on this toolchain)"
@@ -79,15 +102,13 @@ advisory() {
     echo "== $name =="
     if "$@"; then
         echo "$name: ok"
-    elif [ "$STRICT" = 1 ]; then
-        echo "$name: FAILED (strict mode)" >&2
-        exit 1
     else
-        echo "$name: FAILED (advisory — rerun with --strict to enforce)" >&2
+        echo "$name: FAILED (pinned toolchain present — enforced)" >&2
+        exit 1
     fi
 }
 
-advisory "cargo fmt --check" fmt cargo fmt --all -- --check
-advisory "cargo clippy -D warnings" clippy cargo clippy --all-targets -- -D warnings
+hygiene "cargo fmt --check" fmt cargo fmt --all -- --check
+hygiene "cargo clippy -D warnings" clippy cargo clippy --all-targets -- -D warnings
 
 echo "== ci.sh done =="
