@@ -1,0 +1,587 @@
+//! Versioned, self-describing training checkpoints (crash safety).
+//!
+//! A checkpoint captures everything the training timeline depends on —
+//! resident parameters, optimizer momentum, the per-module replay-history
+//! ring with its cursor, the pending cross-iteration deltas, the LR-schedule
+//! position (the step counter plus a schedule fingerprint), and the
+//! data-loader RNG state — so a run killed at step s and resumed from its
+//! last checkpoint produces a loss trajectory and final parameter hash
+//! bit-identical to an uninterrupted run. What is *not* saved: anything
+//! rebuilt from the manifest (module programs, engines, worker threads,
+//! channels) — the fleet is respawned, then injected with this state.
+//!
+//! File layout (little-endian):
+//!
+//! ```text
+//! [0..8)   magic  "FRCKPT\0\0"
+//! [8..12)  format version (u32) — mismatches are a typed error, never a
+//!          best-effort parse
+//! [12..20) payload length (u64)
+//! [20..28) FNV-1a-64 checksum of the payload
+//! [28..)   payload (wire.rs encoding of Meta + data RNG + module states)
+//! ```
+//!
+//! Writes are atomic: the file is written to a `.tmp.<pid>` sibling, synced,
+//! then renamed over the target, so a reader never observes a half-written
+//! checkpoint — a torn write leaves the previous checkpoint intact and at
+//! worst an orphaned tmp file. Readers verify magic, version, length and
+//! checksum before decoding a single field.
+//!
+//! All APIs here return the concrete [`CheckpointError`] (which the vendored
+//! string-based `anyhow` shim cannot downcast through), so callers and tests
+//! can match on the exact failure variant; `?` still converts it into
+//! `anyhow::Error` at integration boundaries.
+
+pub mod wire;
+
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::tensor::{DType, Tensor};
+
+pub use wire::fnv1a64;
+
+/// Magic prefix of every checkpoint file.
+pub const MAGIC: [u8; 8] = *b"FRCKPT\0\0";
+/// Current format version; bump on any layout change.
+pub const VERSION: u32 = 1;
+/// Header bytes before the payload: magic + version + length + checksum.
+pub const HEADER_LEN: usize = 28;
+
+/// Typed checkpoint failures. Every variant names what was violated so a
+/// refused resume is diagnosable without re-reading the file in a hex editor.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem-level failure (open/write/rename/...).
+    Io { path: PathBuf, source: std::io::Error },
+    /// No checkpoint at the given path (or an empty checkpoint dir).
+    NotFound { path: PathBuf },
+    /// The file does not start with [`MAGIC`] — not a checkpoint at all.
+    BadMagic { found: [u8; 8] },
+    /// The file's format version is not the one this build reads.
+    VersionMismatch { found: u32, supported: u32 },
+    /// The file is shorter than its header claims (torn copy, partial
+    /// download — never produced by the atomic writer).
+    Truncated { expected: usize, got: usize },
+    /// Payload bytes do not hash to the header checksum.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Checksum passed but a field failed to decode (layout drift / writer
+    /// bug within the same version).
+    Corrupt { detail: String },
+    /// The checkpoint decodes fine but belongs to a different run setup
+    /// (model config, K, algorithm, LR schedule, or shape mismatch).
+    Mismatch { detail: String },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io { path, source } => {
+                write!(f, "checkpoint I/O on {}: {source}", path.display())
+            }
+            CheckpointError::NotFound { path } => {
+                write!(f, "no checkpoint found at {}", path.display())
+            }
+            CheckpointError::BadMagic { found } => {
+                write!(f, "not a checkpoint file (magic {found:02x?})")
+            }
+            CheckpointError::VersionMismatch { found, supported } => {
+                write!(f, "checkpoint format version {found} (this build reads \
+                           version {supported})")
+            }
+            CheckpointError::Truncated { expected, got } => {
+                write!(f, "checkpoint truncated: {got} bytes, header promises {expected}")
+            }
+            CheckpointError::ChecksumMismatch { stored, computed } => {
+                write!(f, "checkpoint checksum mismatch: header {stored:#018x}, \
+                           payload hashes to {computed:#018x}")
+            }
+            CheckpointError::Corrupt { detail } => {
+                write!(f, "checkpoint payload corrupt: {detail}")
+            }
+            CheckpointError::Mismatch { detail } => {
+                write!(f, "checkpoint does not match this run: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Run identity: what produced this checkpoint and where it stopped. Resume
+/// refuses a checkpoint whose identity disagrees with the current run setup
+/// (see [`Checkpoint::validate_matches`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Meta {
+    /// Manifest config name (e.g. "mlp_tiny", "transformer_tiny").
+    pub config: String,
+    /// Number of modules K.
+    pub k: usize,
+    /// Trainer name ("FR", "BP", ...).
+    pub algo: String,
+    /// Training steps completed; resume starts at this step index.
+    pub step: usize,
+    /// Data/init seed the run was launched with (informational — the data
+    /// RNG *state* below is what actually restores the batch stream).
+    pub seed: u64,
+    /// LR-schedule fingerprint ([`crate::optim::LrSchedule::fingerprint`]).
+    /// The schedule itself is a pure function of the step, so position is
+    /// fully determined by `step` — but resuming under a *different*
+    /// schedule would silently fork the trajectory, hence the check.
+    pub schedule: String,
+}
+
+/// A replay ring frozen mid-run: the slots plus the cursor state that makes
+/// `stale(lag)` / `warmed(lag)` land on the same tensors after restore.
+#[derive(Clone, Debug)]
+pub struct RingState {
+    pub slots: Vec<Tensor>,
+    pub head: usize,
+    pub pushes: usize,
+}
+
+/// Everything one module worker owns that survives a crash.
+#[derive(Clone, Debug)]
+pub struct ModuleState {
+    /// Resident parameter tensors, in `param_shapes` order.
+    pub params: Vec<Tensor>,
+    /// Optimizer momentum buffers (one per parameter tensor).
+    pub velocity: Vec<Vec<f32>>,
+    /// The module's input-history ring (empty for methods without one).
+    pub history: RingState,
+    /// δ produced by the module above at the last completed iteration
+    /// (`None` for the last module and for methods without pending deltas).
+    pub pending_delta: Option<Tensor>,
+    /// Backward steps this module has completed (drives the iteration-0
+    /// "no delta yet" branch in the parallel workers).
+    pub train_steps: usize,
+}
+
+/// A full training snapshot: run identity + data RNG + per-module state.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub meta: Meta,
+    /// Tagged data-source RNG state ([`crate::data::DataSource::rng_state`]).
+    pub data_rng: Vec<u64>,
+    pub modules: Vec<ModuleState>,
+}
+
+impl Checkpoint {
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = wire::Writer::new();
+        w.str(&self.meta.config);
+        w.usize(self.meta.k);
+        w.str(&self.meta.algo);
+        w.usize(self.meta.step);
+        w.u64(self.meta.seed);
+        w.str(&self.meta.schedule);
+        w.u64s(&self.data_rng);
+        w.usize(self.modules.len());
+        for m in &self.modules {
+            w.usize(m.params.len());
+            for p in &m.params {
+                w.tensor(p);
+            }
+            w.usize(m.velocity.len());
+            for v in &m.velocity {
+                w.f32s(v);
+            }
+            w.usize(m.history.slots.len());
+            for s in &m.history.slots {
+                w.tensor(s);
+            }
+            w.usize(m.history.head);
+            w.usize(m.history.pushes);
+            match &m.pending_delta {
+                Some(d) => {
+                    w.u8(1);
+                    w.tensor(d);
+                }
+                None => w.u8(0),
+            }
+            w.usize(m.train_steps);
+        }
+        w.into_bytes()
+    }
+
+    fn decode_payload(buf: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        let mut r = wire::Reader::new(buf);
+        let meta = Meta {
+            config: r.str()?,
+            k: r.usize()?,
+            algo: r.str()?,
+            step: r.usize()?,
+            seed: r.u64()?,
+            schedule: r.str()?,
+        };
+        let data_rng = r.u64s()?;
+        let n_modules = r.usize()?;
+        if n_modules != meta.k {
+            return Err(CheckpointError::Corrupt {
+                detail: format!("{n_modules} module states for K={}", meta.k),
+            });
+        }
+        let mut modules = Vec::with_capacity(n_modules);
+        for _ in 0..n_modules {
+            let n_params = r.usize()?;
+            let params = (0..n_params).map(|_| r.tensor()).collect::<Result<_, _>>()?;
+            let n_vel = r.usize()?;
+            let velocity = (0..n_vel).map(|_| r.f32s()).collect::<Result<_, _>>()?;
+            let n_slots = r.usize()?;
+            let slots = (0..n_slots).map(|_| r.tensor()).collect::<Result<_, _>>()?;
+            let history = RingState { slots, head: r.usize()?, pushes: r.usize()? };
+            let pending_delta = match r.u8()? {
+                0 => None,
+                1 => Some(r.tensor()?),
+                other => {
+                    return Err(CheckpointError::Corrupt {
+                        detail: format!("pending-delta flag byte {other}"),
+                    })
+                }
+            };
+            let train_steps = r.usize()?;
+            modules.push(ModuleState { params, velocity, history, pending_delta, train_steps });
+        }
+        r.finish()?;
+        Ok(Checkpoint { meta, data_rng, modules })
+    }
+
+    /// Serialize to the on-disk byte layout (header + payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse and verify the byte layout: magic, version, length, checksum,
+    /// then field decoding — each failure its own typed error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(CheckpointError::Truncated { expected: HEADER_LEN, got: bytes.len() });
+        }
+        if bytes[..8] != MAGIC {
+            let mut found = [0u8; 8];
+            found.copy_from_slice(&bytes[..8]);
+            return Err(CheckpointError::BadMagic { found });
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(CheckpointError::VersionMismatch { found: version, supported: VERSION });
+        }
+        let payload_len =
+            u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let expected = HEADER_LEN
+            .checked_add(payload_len)
+            .ok_or(CheckpointError::Corrupt { detail: "payload length overflows".into() })?;
+        if bytes.len() < expected {
+            return Err(CheckpointError::Truncated { expected, got: bytes.len() });
+        }
+        if bytes.len() > expected {
+            return Err(CheckpointError::Corrupt {
+                detail: format!("{} bytes past the declared payload", bytes.len() - expected),
+            });
+        }
+        let stored = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        let computed = fnv1a64(payload);
+        if stored != computed {
+            return Err(CheckpointError::ChecksumMismatch { stored, computed });
+        }
+        Checkpoint::decode_payload(payload)
+    }
+
+    /// Atomically write to `path`: temp sibling, sync, rename. Creates the
+    /// parent directory if needed.
+    pub fn write_atomic(&self, path: &Path) -> Result<(), CheckpointError> {
+        let io = |source| CheckpointError::Io { path: path.to_path_buf(), source };
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(io)?;
+            }
+        }
+        let file_name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "checkpoint".into());
+        let tmp = path.with_file_name(format!("{file_name}.tmp.{}", std::process::id()));
+        let bytes = self.to_bytes();
+        let result = (|| {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, path)
+        })();
+        if result.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        result.map_err(io)
+    }
+
+    /// Read and verify a checkpoint file.
+    pub fn read(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                CheckpointError::NotFound { path: path.to_path_buf() }
+            } else {
+                CheckpointError::Io { path: path.to_path_buf(), source: e }
+            }
+        })?;
+        Checkpoint::from_bytes(&bytes)
+    }
+
+    /// Refuse to resume into a different run setup: the model config, K,
+    /// algorithm and LR-schedule fingerprint must all match. (The seed is
+    /// informational — the saved RNG *state* overrides whatever seed the
+    /// resuming process was launched with.)
+    pub fn validate_matches(&self, config: &str, k: usize, algo: &str, schedule: &str)
+                            -> Result<(), CheckpointError> {
+        let mismatch = |what: &str, ckpt: &str, run: &str| CheckpointError::Mismatch {
+            detail: format!("{what}: checkpoint has {ckpt:?}, this run has {run:?}"),
+        };
+        if self.meta.config != config {
+            return Err(mismatch("model config", &self.meta.config, config));
+        }
+        if self.meta.k != k {
+            return Err(mismatch("module count K", &self.meta.k.to_string(), &k.to_string()));
+        }
+        if self.meta.algo != algo {
+            return Err(mismatch("algorithm", &self.meta.algo, algo));
+        }
+        if self.meta.schedule != schedule {
+            return Err(mismatch("LR schedule", &self.meta.schedule, schedule));
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over every f32 parameter bit (i32 tensors hash their raw bits
+/// too) — the run-identity fingerprint the bit-identical-resume tests
+/// compare, same idiom as the thread-count parity properties.
+pub fn params_hash<'a>(tensors: impl IntoIterator<Item = &'a Tensor>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for t in tensors {
+        match t.dtype {
+            DType::F32 => t.f32s().iter().for_each(|v| mix(v.to_bits() as u64)),
+            DType::I32 => t.i32s().iter().for_each(|v| mix(*v as u32 as u64)),
+        }
+    }
+    h
+}
+
+/// Canonical file name for the checkpoint written after `step` steps.
+pub fn checkpoint_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("ckpt-{step:08}.fckpt"))
+}
+
+/// The step a canonically-named checkpoint file was written at.
+fn parse_step(path: &Path) -> Option<usize> {
+    let name = path.file_name()?.to_str()?;
+    let stem = name.strip_prefix("ckpt-")?.strip_suffix(".fckpt")?;
+    stem.parse().ok()
+}
+
+/// Highest-step checkpoint in `dir` (None when the dir is empty or has no
+/// canonically-named files; tmp leftovers never match).
+pub fn latest_in_dir(dir: &Path) -> Result<Option<PathBuf>, CheckpointError> {
+    let io = |source| CheckpointError::Io { path: dir.to_path_buf(), source };
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).map_err(io)? {
+        let path = entry.map_err(io)?.path();
+        if let Some(step) = parse_step(&path) {
+            if best.as_ref().map_or(true, |(s, _)| step > *s) {
+                best = Some((step, path));
+            }
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+/// Resolve a `--resume` argument: a directory means its latest checkpoint,
+/// a file means itself; either missing is a typed `NotFound`.
+pub fn resolve_resume(path: &Path) -> Result<PathBuf, CheckpointError> {
+    if path.is_dir() {
+        latest_in_dir(path)?.ok_or(CheckpointError::NotFound { path: path.to_path_buf() })
+    } else if path.is_file() {
+        Ok(path.to_path_buf())
+    } else {
+        Err(CheckpointError::NotFound { path: path.to_path_buf() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            meta: Meta {
+                config: "mlp_tiny".into(),
+                k: 2,
+                algo: "FR".into(),
+                step: 5,
+                seed: 7,
+                schedule: "const(0.01)".into(),
+            },
+            data_rng: vec![1, 2, 3, 4, 5],
+            modules: vec![
+                ModuleState {
+                    params: vec![Tensor::from_f32(vec![2, 2], vec![1.0, -2.0, 0.5, 3.0]).unwrap()],
+                    velocity: vec![vec![0.1, 0.2, 0.3, 0.4]],
+                    history: RingState {
+                        slots: vec![Tensor::from_f32(vec![2], vec![9.0, 8.0]).unwrap(),
+                                    Tensor::zeros(&[2], DType::F32)],
+                        head: 1,
+                        pushes: 3,
+                    },
+                    pending_delta: Some(Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap()),
+                    train_steps: 5,
+                },
+                ModuleState {
+                    params: vec![Tensor::from_f32(vec![2], vec![4.0, 5.0]).unwrap()],
+                    velocity: vec![vec![0.0, -0.1]],
+                    history: RingState {
+                        slots: vec![Tensor::from_i32(vec![3], vec![1, 2, 3]).unwrap()],
+                        head: 0,
+                        pushes: 5,
+                    },
+                    pending_delta: None,
+                    train_steps: 5,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_everything() {
+        let c = sample();
+        let r = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(r.meta, c.meta);
+        assert_eq!(r.data_rng, c.data_rng);
+        assert_eq!(r.modules.len(), 2);
+        assert_eq!(r.modules[0].params[0].f32s(), c.modules[0].params[0].f32s());
+        assert_eq!(r.modules[0].velocity, c.modules[0].velocity);
+        assert_eq!(r.modules[0].history.head, 1);
+        assert_eq!(r.modules[0].history.pushes, 3);
+        assert_eq!(r.modules[0].history.slots[0].f32s(), &[9.0, 8.0]);
+        assert_eq!(r.modules[0].pending_delta.as_ref().unwrap().f32s(), &[0.5, -0.5]);
+        assert!(r.modules[1].pending_delta.is_none());
+        assert_eq!(r.modules[1].history.slots[0].i32s(), &[1, 2, 3]);
+        assert_eq!(params_hash(r.modules[0].params.iter()),
+                   params_hash(c.modules[0].params.iter()));
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = sample().to_bytes();
+        assert!(matches!(Checkpoint::from_bytes(&bytes[..10]),
+                         Err(CheckpointError::Truncated { .. })));
+        assert!(matches!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]),
+                         Err(CheckpointError::Truncated { .. })));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut bytes = sample().to_bytes();
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert!(matches!(Checkpoint::from_bytes(&wrong),
+                         Err(CheckpointError::BadMagic { .. })));
+        bytes[8] = 99; // version field
+        match Checkpoint::from_bytes(&bytes) {
+            Err(CheckpointError::VersionMismatch { found, supported }) => {
+                assert_eq!(found, 99);
+                assert_eq!(supported, VERSION);
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_bitflip_fails_checksum() {
+        let mut bytes = sample().to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        assert!(matches!(Checkpoint::from_bytes(&bytes),
+                         Err(CheckpointError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn validate_matches_rejects_each_field() {
+        let c = sample();
+        c.validate_matches("mlp_tiny", 2, "FR", "const(0.01)").unwrap();
+        for (cfg, k, algo, sched) in [
+            ("other", 2, "FR", "const(0.01)"),
+            ("mlp_tiny", 3, "FR", "const(0.01)"),
+            ("mlp_tiny", 2, "BP", "const(0.01)"),
+            ("mlp_tiny", 2, "FR", "paper(0.1@[5,7])"),
+        ] {
+            assert!(matches!(c.validate_matches(cfg, k, algo, sched),
+                             Err(CheckpointError::Mismatch { .. })));
+        }
+    }
+
+    #[test]
+    fn atomic_write_then_read() {
+        let dir = std::env::temp_dir()
+            .join(format!("fr_ckpt_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = checkpoint_path(&dir, 5);
+        let c = sample();
+        c.write_atomic(&path).unwrap();
+        let r = Checkpoint::read(&path).unwrap();
+        assert_eq!(r.meta, c.meta);
+        // no tmp litter after a successful write
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap()
+            .filter(|e| e.as_ref().unwrap().file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_and_resolve_resume() {
+        let dir = std::env::temp_dir()
+            .join(format!("fr_ckpt_latest_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_in_dir(&dir).unwrap().is_none());
+        assert!(matches!(resolve_resume(&dir),
+                         Err(CheckpointError::NotFound { .. })));
+        let c = sample();
+        c.write_atomic(&checkpoint_path(&dir, 2)).unwrap();
+        c.write_atomic(&checkpoint_path(&dir, 10)).unwrap();
+        c.write_atomic(&checkpoint_path(&dir, 6)).unwrap();
+        let latest = latest_in_dir(&dir).unwrap().unwrap();
+        assert_eq!(latest, checkpoint_path(&dir, 10));
+        assert_eq!(resolve_resume(&dir).unwrap(), latest);
+        assert_eq!(resolve_resume(&latest).unwrap(), latest);
+        assert!(matches!(resolve_resume(&dir.join("nope.fckpt")),
+                         Err(CheckpointError::NotFound { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_not_found() {
+        let p = std::env::temp_dir().join("fr_ckpt_definitely_missing.fckpt");
+        assert!(matches!(Checkpoint::read(&p), Err(CheckpointError::NotFound { .. })));
+    }
+}

@@ -1,0 +1,327 @@
+//! Byte-level wire primitives for the checkpoint format: a little-endian
+//! writer/reader pair over a flat buffer, plus the FNV-1a checksum the file
+//! header carries. No external crates; every read is bounds-checked and
+//! surfaces a typed [`CheckpointError`] instead of panicking or allocating
+//! from attacker-controlled lengths.
+
+use crate::runtime::tensor::{DType, Tensor};
+
+use super::CheckpointError;
+
+/// FNV-1a over raw bytes — the header checksum (same constants as the
+/// parameter-hash idiom in tests/properties.rs).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only little-endian encoder.
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn u64s(&mut self, xs: &[u64]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.u64(x);
+        }
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Tensor: dtype tag, rank, dims, then raw element data (length implied
+    /// by the shape product).
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.u8(match t.dtype {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        });
+        self.usize(t.shape.len());
+        for &d in &t.shape {
+            self.usize(d);
+        }
+        match t.dtype {
+            DType::F32 => {
+                for &x in t.f32s() {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                for &x in t.i32s() {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a checksummed payload. The
+/// checksum has already passed by the time this runs, so a failed read
+/// means a writer bug or a layout drift within the same version — reported
+/// as [`CheckpointError::Corrupt`] with the offset.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if n > self.buf.len() - self.pos {
+            return Err(CheckpointError::Corrupt {
+                detail: format!(
+                    "payload ends at byte {} of {} (wanted {n} more)",
+                    self.pos,
+                    self.buf.len()
+                ),
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// A u64 that must fit in usize AND, used as an element count, must not
+    /// imply more bytes than the payload still holds (prevents huge
+    /// allocations from a corrupt length field).
+    pub fn usize(&mut self) -> Result<usize, CheckpointError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| CheckpointError::Corrupt {
+            detail: format!("length field {v} does not fit this platform's usize"),
+        })
+    }
+
+    fn checked_count(&self, n: usize, elem_bytes: usize) -> Result<(), CheckpointError> {
+        let need = n.checked_mul(elem_bytes);
+        match need {
+            Some(need) if need <= self.buf.len() - self.pos => Ok(()),
+            _ => Err(CheckpointError::Corrupt {
+                detail: format!(
+                    "count {n} x {elem_bytes} B exceeds the {} payload bytes left",
+                    self.buf.len() - self.pos
+                ),
+            }),
+        }
+    }
+
+    pub fn str(&mut self) -> Result<String, CheckpointError> {
+        let n = self.usize()?;
+        self.checked_count(n, 1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CheckpointError::Corrupt {
+            detail: "string field is not UTF-8".into(),
+        })
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, CheckpointError> {
+        let n = self.usize()?;
+        self.checked_count(n, 8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, CheckpointError> {
+        let n = self.usize()?;
+        self.checked_count(n, 4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor, CheckpointError> {
+        let dtype = match self.u8()? {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => {
+                return Err(CheckpointError::Corrupt {
+                    detail: format!("unknown tensor dtype tag {other}"),
+                })
+            }
+        };
+        let rank = self.usize()?;
+        if rank > 8 {
+            return Err(CheckpointError::Corrupt {
+                detail: format!("tensor rank {rank} is implausible"),
+            });
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut n = 1usize;
+        for _ in 0..rank {
+            let d = self.usize()?;
+            n = n.checked_mul(d).ok_or_else(|| CheckpointError::Corrupt {
+                detail: "tensor shape product overflows".into(),
+            })?;
+            shape.push(d);
+        }
+        self.checked_count(n, dtype.size_bytes())?;
+        let t = match dtype {
+            DType::F32 => {
+                let bytes = self.take(n * 4)?;
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_f32(shape, data)
+            }
+            DType::I32 => {
+                let bytes = self.take(n * 4)?;
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_i32(shape, data)
+            }
+        };
+        t.map_err(|e| CheckpointError::Corrupt { detail: format!("{e:#}") })
+    }
+
+    /// Decoding must consume the payload exactly — trailing bytes mean the
+    /// writer and reader disagree on the layout.
+    pub fn finish(self) -> Result<(), CheckpointError> {
+        if self.pos != self.buf.len() {
+            return Err(CheckpointError::Corrupt {
+                detail: format!(
+                    "{} trailing payload bytes after the last field",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.str("fr");
+        w.u64s(&[1, 2, 3]);
+        w.f32s(&[1.5, -0.25]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.str().unwrap(), "fr");
+        assert_eq!(r.u64s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -0.25]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn tensor_roundtrip_both_dtypes() {
+        let tf = Tensor::from_f32(vec![2, 3], vec![0.0, 1.0, -2.5, 3.25, 4.0, 5.5]).unwrap();
+        let ti = Tensor::from_i32(vec![4], vec![-1, 0, 7, 42]).unwrap();
+        let mut w = Writer::new();
+        w.tensor(&tf);
+        w.tensor(&ti);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        let rf = r.tensor().unwrap();
+        let ri = r.tensor().unwrap();
+        assert_eq!(rf.shape, tf.shape);
+        assert_eq!(rf.f32s(), tf.f32s());
+        assert_eq!(ri.shape, ti.shape);
+        assert_eq!(ri.i32s(), ti.i32s());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn short_buffer_is_corrupt_not_panic() {
+        let mut w = Writer::new();
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf[..buf.len() - 2]);
+        assert!(matches!(r.f32s(), Err(CheckpointError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn huge_length_field_rejected_without_alloc() {
+        let mut w = Writer::new();
+        w.u64(u64::MAX / 2); // insane element count
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.f32s(), Err(CheckpointError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut w = Writer::new();
+        w.u8(1);
+        w.u8(2);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        r.u8().unwrap();
+        assert!(matches!(r.finish(), Err(CheckpointError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn fnv_matches_reference_values() {
+        // FNV-1a 64 reference vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

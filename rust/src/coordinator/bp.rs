@@ -5,8 +5,9 @@
 //! its backward until k+1 finished (the locking FR removes). Gradients are
 //! bit-identical to monolithic BP (verified in python/tests/test_model.py).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::checkpoint::{ModuleState, RingState};
 use crate::data::Batch;
 use crate::runtime::Tensor;
 use crate::util::Timer;
@@ -73,5 +74,33 @@ impl Trainer for BpTrainer {
 
     fn stack_mut(&mut self) -> &mut ModuleStack {
         &mut self.stack
+    }
+
+    /// BP keeps no cross-iteration buffers: params + momentum are the whole
+    /// state (empty ring, no pending delta).
+    fn snapshot_modules(&self) -> Result<Vec<ModuleState>> {
+        Ok(self.stack.modules.iter().zip(&self.stack.optimizers)
+            .map(|(m, opt)| ModuleState {
+                params: m.params.to_vec(),
+                velocity: opt.velocity().to_vec(),
+                history: RingState { slots: Vec::new(), head: 0, pushes: 0 },
+                pending_delta: None,
+                train_steps: 0,
+            })
+            .collect())
+    }
+
+    fn restore_modules(&mut self, modules: &[ModuleState]) -> Result<()> {
+        if modules.len() != self.stack.k() {
+            bail!("checkpoint has {} module states, trainer has K={}",
+                  modules.len(), self.stack.k());
+        }
+        for (k, m) in modules.iter().enumerate() {
+            self.stack.modules[k].restore_params(m.params.clone())
+                .with_context(|| format!("restoring module {k} params"))?;
+            self.stack.optimizers[k].restore_velocity(m.velocity.clone())
+                .with_context(|| format!("restoring module {k} optimizer"))?;
+        }
+        Ok(())
     }
 }

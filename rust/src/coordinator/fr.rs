@@ -15,8 +15,9 @@
 //! runs concurrently — see `parallel.rs` for the threaded version and
 //! `pipeline_sim.rs` for the K-device timing model).
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
+use crate::checkpoint::{ModuleState, RingState};
 use crate::data::Batch;
 use crate::runtime::Tensor;
 use crate::util::Timer;
@@ -158,5 +159,55 @@ impl Trainer for FrTrainer {
 
     fn stack_mut(&mut self) -> &mut ModuleStack {
         &mut self.stack
+    }
+
+    /// FR's full cross-iteration state: at the end of step t, module k holds
+    /// its params + momentum, its input ring, and (for k < K-1) the delta
+    /// module k+1 produced at t — consumed at t+1. All tensor captures are
+    /// Arc bumps.
+    fn snapshot_modules(&self) -> Result<Vec<ModuleState>> {
+        let kk = self.stack.k();
+        Ok((0..kk)
+            .map(|k| ModuleState {
+                params: self.stack.modules[k].params.to_vec(),
+                velocity: self.stack.optimizers[k].velocity().to_vec(),
+                history: RingState {
+                    slots: self.history[k].slots().to_vec(),
+                    head: self.history[k].head(),
+                    pushes: self.history[k].pushes(),
+                },
+                pending_delta: (k + 1 < kk).then(|| self.pending_delta[k].clone()),
+                train_steps: self.step,
+            })
+            .collect())
+    }
+
+    fn restore_modules(&mut self, modules: &[ModuleState]) -> Result<()> {
+        let kk = self.stack.k();
+        if modules.len() != kk {
+            bail!("checkpoint has {} module states, trainer has K={kk}", modules.len());
+        }
+        for (k, m) in modules.iter().enumerate() {
+            self.stack.modules[k].restore_params(m.params.clone())
+                .with_context(|| format!("restoring module {k} params"))?;
+            self.stack.optimizers[k].restore_velocity(m.velocity.clone())
+                .with_context(|| format!("restoring module {k} optimizer"))?;
+            self.history[k].restore(m.history.slots.clone(), m.history.head,
+                                    m.history.pushes)
+                .with_context(|| format!("restoring module {k} replay ring"))?;
+            if k + 1 < kk {
+                let d = m.pending_delta.as_ref()
+                    .with_context(|| format!("module {k}: checkpoint lacks the \
+                                              pending delta FR requires"))?;
+                let want = &self.stack.modules[k].spec.out_shape;
+                if &d.shape != want {
+                    bail!("module {k}: pending delta shape {:?}, expected {want:?}",
+                          d.shape);
+                }
+                self.pending_delta[k] = d.clone();
+            }
+        }
+        self.step = modules[0].train_steps;
+        Ok(())
     }
 }

@@ -53,6 +53,47 @@ impl ReplayBuffer {
     pub fn warmed(&self, lag: usize) -> bool {
         self.pushes > lag
     }
+
+    /// Ring contents in slot order (checkpointing; Arc bumps, no copies).
+    pub fn slots(&self) -> &[Tensor] {
+        &self.ring
+    }
+
+    /// Slot the next push writes (checkpointing).
+    pub fn head(&self) -> usize {
+        self.head
+    }
+
+    /// Total pushes so far — the warm-up counter (checkpointing).
+    pub fn pushes(&self) -> usize {
+        self.pushes
+    }
+
+    /// Install a checkpointed ring. Slot count, shapes and the head cursor
+    /// must be consistent with this buffer's capacity, so `stale(lag)` and
+    /// `warmed(lag)` resume on exactly the tensors the saved run would use.
+    pub fn restore(&mut self, slots: Vec<Tensor>, head: usize, pushes: usize)
+                   -> anyhow::Result<()> {
+        if slots.len() != self.ring.len() {
+            anyhow::bail!("checkpoint ring has {} slots, buffer capacity is {}",
+                          slots.len(), self.ring.len());
+        }
+        if head >= self.ring.len() {
+            anyhow::bail!("checkpoint ring head {head} out of range for \
+                           capacity {}", self.ring.len());
+        }
+        for (i, (s, cur)) in slots.iter().zip(&self.ring).enumerate() {
+            if s.shape != cur.shape || s.dtype != cur.dtype {
+                anyhow::bail!("checkpoint ring slot {i}: shape {:?} {:?}, \
+                               buffer expects {:?} {:?}",
+                              s.shape, s.dtype, cur.shape, cur.dtype);
+            }
+        }
+        self.ring = slots;
+        self.head = head;
+        self.pushes = pushes;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +148,33 @@ mod tests {
     fn lag_beyond_capacity_panics() {
         let buf = ReplayBuffer::new(2, &[1], DType::F32);
         buf.stale(2);
+    }
+
+    #[test]
+    fn restore_resumes_cursor_exactly() {
+        let mut a = ReplayBuffer::new(3, &[1], DType::F32);
+        for i in 1..=4 {
+            a.push(t(i as f32));
+        }
+        let mut b = ReplayBuffer::new(3, &[1], DType::F32);
+        b.restore(a.slots().to_vec(), a.head(), a.pushes()).unwrap();
+        for lag in 0..3 {
+            assert_eq!(b.stale(lag).f32s(), a.stale(lag).f32s());
+            assert_eq!(b.warmed(lag), a.warmed(lag));
+        }
+        // both advance identically after the restore point
+        a.push(t(9.0));
+        b.push(t(9.0));
+        assert_eq!(b.stale(1).f32s(), a.stale(1).f32s());
+    }
+
+    #[test]
+    fn restore_rejects_bad_layout() {
+        let mut b = ReplayBuffer::new(2, &[1], DType::F32);
+        assert!(b.restore(vec![t(1.0)], 0, 1).is_err(), "slot count");
+        assert!(b.restore(vec![t(1.0), t(2.0)], 2, 1).is_err(), "head range");
+        let wrong = Tensor::zeros(&[2], DType::F32);
+        assert!(b.restore(vec![t(1.0), wrong], 0, 1).is_err(), "slot shape");
     }
 
     #[test]

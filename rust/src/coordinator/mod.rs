@@ -22,8 +22,11 @@ pub mod sigma;
 pub mod stack;
 pub mod strategy;
 
-use anyhow::{bail, Result};
+use std::path::PathBuf;
 
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{self, Checkpoint, Meta};
 use crate::data::DataSource;
 use crate::metrics::{Curve, CurvePoint};
 use crate::optim::LrSchedule;
@@ -68,6 +71,14 @@ pub struct RunOptions {
     pub verbose: bool,
     /// Abort (and mark the curve diverged) if train loss exceeds this.
     pub divergence_loss: f64,
+    /// Write a checkpoint every N completed steps (only when
+    /// `checkpoint_dir` is set; diverged steps are never checkpointed).
+    pub checkpoint_every: usize,
+    /// Directory for `ckpt-<step>.fckpt` files; None disables checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from this checkpoint file — or, for a directory, its latest
+    /// checkpoint — before the first step.
+    pub resume_from: Option<PathBuf>,
 }
 
 impl Default for RunOptions {
@@ -79,6 +90,9 @@ impl Default for RunOptions {
             steps_per_epoch: 50,
             verbose: false,
             divergence_loss: 1e4,
+            checkpoint_every: 25,
+            checkpoint_dir: None,
+            resume_from: None,
         }
     }
 }
@@ -102,7 +116,30 @@ pub fn run_training(trainer: &mut dyn Trainer, data: &mut DataSource,
     let mut diverged = false;
     let mut sim_accum = 0.0;
 
-    for step in 0..opts.steps {
+    // Resume before the first step: the checkpoint's RNG state overrides
+    // the fresh data source, and the loop continues at the saved step, so
+    // the trajectory is bit-identical to a run that never stopped.
+    let mut start_step = 0;
+    if let Some(resume) = &opts.resume_from {
+        let path = checkpoint::resolve_resume(resume)?;
+        let ckpt = Checkpoint::read(&path)?;
+        ckpt.validate_matches(&trainer.stack().manifest.config, trainer.stack().k(),
+                              trainer.name(), &schedule.fingerprint())?;
+        trainer.restore_modules(&ckpt.modules)?;
+        data.restore_rng_state(&ckpt.data_rng)
+            .with_context(|| format!("restoring data RNG from {}", path.display()))?;
+        start_step = ckpt.meta.step;
+        if start_step >= opts.steps {
+            bail!("checkpoint {} is at step {start_step}, nothing left of the \
+                   {}-step budget", path.display(), opts.steps);
+        }
+        if opts.verbose {
+            println!("[{}] resumed from {} at step {start_step}",
+                     trainer.name(), path.display());
+        }
+    }
+
+    for step in start_step..opts.steps {
         let batch = data.train_batch();
         let lr = schedule.lr(step);
         let stats = trainer.train_step(&batch, lr)?;
@@ -135,6 +172,25 @@ pub fn run_training(trainer: &mut dyn Trainer, data: &mut DataSource,
             break;
         }
         timings.push(stats.timing.clone());
+
+        if let Some(dir) = &opts.checkpoint_dir {
+            if opts.checkpoint_every > 0 && (step + 1) % opts.checkpoint_every == 0 {
+                let stack = trainer.stack();
+                let ckpt = Checkpoint {
+                    meta: Meta {
+                        config: stack.manifest.config.clone(),
+                        k: stack.k(),
+                        algo: trainer.name().to_string(),
+                        step: step + 1,
+                        seed: stack.config.seed,
+                        schedule: schedule.fingerprint(),
+                    },
+                    data_rng: data.rng_state(),
+                    modules: trainer.snapshot_modules()?,
+                };
+                ckpt.write_atomic(&checkpoint::checkpoint_path(dir, step + 1))?;
+            }
+        }
 
         let last = step + 1 == opts.steps;
         if step % opts.eval_every == 0 || last {

@@ -28,14 +28,30 @@
 //! the leader on the done channel before exiting; the leader then tears the
 //! fleet down (closing every leader-held sender so blocked peers cascade
 //! out), joins the threads, and surfaces every underlying error — not just
-//! "worker died mid-step".
+//! "worker died mid-step". A worker that goes *silent* (hung kernel,
+//! injected stall) can never send that report, so every leader-side wait is
+//! bounded by `TrainConfig::recv_timeout_ms` with one retry window; on the
+//! second timeout the leader names the unresponsive workers, closes its
+//! senders, and detaches the hung threads (joining them would hang the
+//! leader too).
+//!
+//! Crash safety: [`ParallelFr::snapshot`] freezes the fleet between
+//! iterations into a [`Checkpoint`] — each worker replies with its params,
+//! momentum, replay ring, and the in-flight delta it pre-pulls from its
+//! channel (workers send delta *before* done, so once the leader has all K
+//! dones of step t, every step-t delta is guaranteed to be in its channel).
+//! [`ParallelFr::resume`] rebuilds a bit-identical fleet from that state:
+//! worker threads, engines, and channels are recreated (they are not part
+//! of a snapshot), the tensors and cursors are installed as saved.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::Batch;
+use crate::checkpoint::{Checkpoint, Meta, ModuleState, RingState};
+use crate::data::{Batch, DataSource};
 use crate::metrics::xent_and_acc;
 use crate::optim::SgdMomentum;
 use crate::runtime::{BackendKind, DType, Manifest, ModuleRuntime, Tensor};
@@ -51,6 +67,10 @@ enum Command {
     Forward { eval: bool },
     /// Replay phase: backward with stored stale input + pending delta.
     Backward { lr: f32 },
+    /// Freeze this worker's crash-surviving state (params, momentum, ring,
+    /// in-flight delta) and reply. Only valid between iterations — i.e.
+    /// after the leader collected every done of the previous step.
+    Snapshot { reply: Sender<(usize, Result<Box<ModuleState>, String>)> },
     Shutdown,
 }
 
@@ -87,6 +107,8 @@ pub struct ParallelFr {
     done_rx: Receiver<WorkerDone>,
     k: usize,
     step: usize,
+    manifest: Manifest,
+    config: TrainConfig,
 }
 
 impl ParallelFr {
@@ -95,6 +117,36 @@ impl ParallelFr {
     /// runtime from it (procedural configs need no disk at all).
     pub fn spawn(manifest: Manifest, config: TrainConfig, backend: BackendKind)
                  -> Result<ParallelFr> {
+        Self::spawn_with(manifest, config, backend, None)
+    }
+
+    /// Rebuild a fleet from a checkpoint: fresh threads, engines, and
+    /// channels (none of that is snapshotted), with every worker's tensors
+    /// and cursors installed exactly as saved. Blocks until all K workers
+    /// acknowledge their install, so a checkpoint whose shapes disagree
+    /// with `manifest` surfaces here as an attributed error — not as a
+    /// hung-up channel three calls later. Callers validate the run
+    /// *identity* (config/K/algo/schedule) via
+    /// [`Checkpoint::validate_matches`] first.
+    pub fn resume(manifest: Manifest, config: TrainConfig, backend: BackendKind,
+                  ckpt: &Checkpoint) -> Result<ParallelFr> {
+        if ckpt.modules.len() != manifest.k {
+            bail!("checkpoint has {} module states, manifest has K={}",
+                  ckpt.modules.len(), manifest.k);
+        }
+        let mut par = Self::spawn_with(manifest, config, backend,
+                                       Some(&ckpt.modules))?;
+        par.step = ckpt.meta.step;
+        let mut remaining: Vec<usize> = (0..par.k).collect();
+        for _ in 0..par.k {
+            let d = par.recv_done("resume", &remaining)?;
+            remaining.retain(|&w| w != d.worker);
+        }
+        Ok(par)
+    }
+
+    fn spawn_with(manifest: Manifest, config: TrainConfig, backend: BackendKind,
+                  init: Option<&[ModuleState]>) -> Result<ParallelFr> {
         let kk = manifest.k;
         if kk == 0 {
             bail!("manifest has no modules");
@@ -137,21 +189,33 @@ impl ParallelFr {
             let done = done_tx.clone();
             let worker_manifest = manifest.clone();
             let cfg = config.clone();
+            // tensor clones are Arc bumps; each worker owns its state box
+            let init_k = init.map(|states| Box::new(states[k].clone()));
             let join = std::thread::Builder::new()
                 .name(format!("fr-worker-{k}"))
                 .spawn(move || {
-                    worker_main(k, worker_manifest, backend, cfg, cmd_rx, act_rx,
-                                next_tx, delta_tx, delta_rx, done)
+                    worker_main(k, worker_manifest, backend, cfg, init_k, cmd_rx,
+                                act_rx, next_tx, delta_tx, delta_rx, done)
                 })
                 .context("spawning worker thread")?;
             workers.push(WorkerHandles { cmd_tx, join });
         }
 
-        Ok(ParallelFr { workers, input_tx, done_rx, k: kk, step: 0 })
+        Ok(ParallelFr { workers, input_tx, done_rx, k: kk, step: 0,
+                        manifest, config })
     }
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// Training steps completed by the fleet.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    fn timeout(&self) -> Duration {
+        Duration::from_millis(self.config.recv_timeout_ms.max(1))
     }
 
     fn ensure_live(&self) -> Result<()> {
@@ -170,14 +234,26 @@ impl ParallelFr {
 
     /// Collect one done message; a closed channel or an error report from a
     /// worker converts into a fleet teardown with the root causes attached.
-    fn recv_done(&mut self, phase: &str) -> Result<WorkerDone> {
-        match self.done_rx.recv() {
-            Ok(d) => match d.error {
-                None => Ok(d),
-                Some(e) => Err(self.fleet_failure(Some((d.worker, e)), phase)),
-            },
-            Err(_) => Err(self.fleet_failure(None, phase)),
+    /// The wait is bounded: one `recv_timeout_ms` window, then ONE retry
+    /// window (a single slow kernel on a loaded machine is not a hang) —
+    /// two consecutive windows with zero fleet progress is diagnosed as a
+    /// stall naming the workers in `remaining` that never reported.
+    fn recv_done(&mut self, phase: &str, remaining: &[usize]) -> Result<WorkerDone> {
+        let timeout = self.timeout();
+        for attempt in 0..2 {
+            match self.done_rx.recv_timeout(timeout) {
+                Ok(d) => match d.error {
+                    None => return Ok(d),
+                    Some(e) => return Err(self.fleet_failure(Some((d.worker, e)), phase)),
+                },
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.fleet_failure(None, phase));
+                }
+                Err(RecvTimeoutError::Timeout) if attempt == 0 => continue,
+                Err(RecvTimeoutError::Timeout) => break,
+            }
         }
+        Err(self.stall_failure(phase, remaining))
     }
 
     /// Tear down a failed fleet: close every leader-held sender (so workers
@@ -218,6 +294,29 @@ impl ParallelFr {
         anyhow::anyhow!("{phase} failed: {}", causes.join("; "))
     }
 
+    /// Teardown for a fleet that went *silent*: close the leader's senders
+    /// so still-live workers cascade out, then detach the threads — a hung
+    /// worker cannot be joined without hanging the leader with it. The
+    /// error names who never reported, so "which module stalled" is in the
+    /// message, not in a debugger.
+    fn stall_failure(&mut self, phase: &str, remaining: &[usize]) -> anyhow::Error {
+        let waited_ms = 2 * self.config.recv_timeout_ms.max(1);
+        let (dead_tx, _) = channel();
+        drop(std::mem::replace(&mut self.input_tx, dead_tx));
+        for w in self.workers.drain(..) {
+            drop(w.cmd_tx);
+            drop(w.join); // detach
+        }
+        let who = if remaining.is_empty() {
+            "unknown".to_string()
+        } else {
+            remaining.iter().map(|w| format!("worker {w}"))
+                .collect::<Vec<_>>().join(", ")
+        };
+        anyhow::anyhow!("{phase} stalled: no done message within {waited_ms} ms \
+                         (unresponsive: {who}); fleet detached")
+    }
+
     /// One Algorithm-1 iteration across the worker fleet.
     pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
         self.ensure_live()?;
@@ -229,8 +328,10 @@ impl ParallelFr {
         let mut timing = StepTiming::new(self.k);
         let mut loss = f32::NAN;
         let mut history_bytes = 0usize;
+        let mut remaining: Vec<usize> = (0..self.k).collect();
         for _ in 0..self.k {
-            let d = self.recv_done("train step")?;
+            let d = self.recv_done("train step", &remaining)?;
+            remaining.retain(|&w| w != d.worker);
             timing.fwd_ms[d.worker] = d.fwd_ms;
             timing.bwd_ms[d.worker] = d.bwd_ms;
             if let Some(l) = d.loss {
@@ -249,8 +350,10 @@ impl ParallelFr {
         self.input_tx.send((batch.input.clone(), Some(batch.labels.clone())))
             .map_err(|_| anyhow::anyhow!("worker 0 hung up"))?;
         let mut logits = None;
+        let mut remaining: Vec<usize> = (0..self.k).collect();
         for _ in 0..self.k {
-            let d = self.recv_done("eval")?;
+            let d = self.recv_done("eval", &remaining)?;
+            remaining.retain(|&w| w != d.worker);
             if d.logits.is_some() {
                 logits = d.logits;
             }
@@ -258,6 +361,62 @@ impl ParallelFr {
         let logits = logits.context("no logits returned from eval")?;
         let (l, a) = xent_and_acc(&logits, &batch.labels);
         Ok((l, 1.0 - a))
+    }
+
+    /// Freeze the fleet into a [`Checkpoint`]. Must be called between
+    /// iterations (after `train_step` returned). Each worker pre-pulls the
+    /// delta its upper neighbour sent this step — guaranteed to be in the
+    /// channel because workers send delta before done — so the snapshot
+    /// holds FR's complete cross-iteration state and the write can happen
+    /// leader-side without stopping the world any longer than one reply
+    /// round-trip.
+    pub fn snapshot(&mut self, data: &DataSource, schedule_fingerprint: &str)
+                    -> Result<Checkpoint> {
+        self.ensure_live()?;
+        let (reply_tx, reply_rx) = channel();
+        for w in &self.workers {
+            w.cmd_tx.send(Command::Snapshot { reply: reply_tx.clone() })
+                .map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+        drop(reply_tx);
+        let timeout = self.timeout();
+        let mut states: Vec<Option<ModuleState>> = (0..self.k).map(|_| None).collect();
+        for _ in 0..self.k {
+            let mut retried = false;
+            let (w, state) = loop {
+                match reply_rx.recv_timeout(timeout) {
+                    Ok(r) => break r,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(self.fleet_failure(None, "snapshot"));
+                    }
+                    // same one-retry policy as recv_done
+                    Err(RecvTimeoutError::Timeout) if !retried => retried = true,
+                    Err(RecvTimeoutError::Timeout) => {
+                        let remaining: Vec<usize> = states.iter().enumerate()
+                            .filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect();
+                        return Err(self.stall_failure("snapshot", &remaining));
+                    }
+                }
+            };
+            match state {
+                Ok(st) => states[w] = Some(*st),
+                Err(e) => return Err(self.fleet_failure(Some((w, e)), "snapshot")),
+            }
+        }
+        Ok(Checkpoint {
+            meta: Meta {
+                config: self.manifest.config.clone(),
+                k: self.k,
+                algo: "FR".to_string(),
+                step: self.step,
+                seed: self.config.seed,
+                schedule: schedule_fingerprint.to_string(),
+            },
+            data_rng: data.rng_state(),
+            modules: states.into_iter()
+                .map(|s| s.expect("one state per worker"))
+                .collect(),
+        })
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -274,6 +433,28 @@ impl ParallelFr {
     }
 }
 
+/// Dropping a live fleet must not leak the worker threads (or hang their
+/// owner): best-effort Shutdown, close the leader-held senders so any
+/// worker blocked in a recv cascades out, then join. `shutdown`,
+/// `fleet_failure`, and `stall_failure` all drain `workers`, so this body
+/// is a no-op after any orderly or failure-path teardown.
+impl Drop for ParallelFr {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(Command::Shutdown);
+        }
+        let (dead_tx, _) = channel();
+        drop(std::mem::replace(&mut self.input_tx, dead_tx));
+        for w in self.workers.drain(..) {
+            drop(w.cmd_tx);
+            let _ = w.join.join();
+        }
+    }
+}
+
 /// Thread entry: run the worker loop and, if it fails — by `Err` *or* by
 /// panic (e.g. a kernel task panic re-raised by the pool) — report the
 /// rendered root cause to the leader before exiting (best effort — the
@@ -286,6 +467,7 @@ fn worker_main(
     manifest: Manifest,
     backend: BackendKind,
     config: TrainConfig,
+    init: Option<Box<ModuleState>>,
     cmd_rx: Receiver<Command>,
     act_rx: Receiver<(Tensor, Option<Tensor>)>,
     next_tx: Option<Sender<(Tensor, Option<Tensor>)>>,
@@ -294,7 +476,7 @@ fn worker_main(
     done: Sender<WorkerDone>,
 ) -> Result<()> {
     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        worker_loop(k, manifest, backend, config, cmd_rx, act_rx,
+        worker_loop(k, manifest, backend, config, init, cmd_rx, act_rx,
                     next_tx, delta_tx, delta_rx, &done)
     })) {
         Ok(r) => {
@@ -319,6 +501,7 @@ fn worker_loop(
     manifest: Manifest,
     backend: BackendKind,
     config: TrainConfig,
+    init: Option<Box<ModuleState>>,
     cmd_rx: Receiver<Command>,
     act_rx: Receiver<(Tensor, Option<Tensor>)>,
     next_tx: Option<Sender<(Tensor, Option<Tensor>)>>,
@@ -348,6 +531,40 @@ fn worker_loop(
     let mut labels: Option<Tensor> = None;
     let is_last = k == kk - 1;
     let mut train_steps = 0usize;
+    // True when `pending_delta` already holds the delta for the *next*
+    // Backward (pre-pulled by a Snapshot, or installed from a checkpoint),
+    // so that Backward must not pull another one from the channel.
+    let mut delta_prefetched = false;
+    let recv_timeout = Duration::from_millis(config.recv_timeout_ms.max(1));
+
+    if let Some(st) = init {
+        let st = *st;
+        module.restore_params(st.params)
+            .context("installing checkpoint params")?;
+        opt.restore_velocity(st.velocity)
+            .context("installing checkpoint momentum")?;
+        history.restore(st.history.slots, st.history.head, st.history.pushes)
+            .context("installing checkpoint replay ring")?;
+        train_steps = st.train_steps;
+        if !is_last {
+            let d = st.pending_delta
+                .context("checkpoint lacks the pending delta FR requires")?;
+            if d.shape != module.spec.out_shape {
+                bail!("checkpoint pending delta shape {:?}, module expects {:?}",
+                      d.shape, module.spec.out_shape);
+            }
+            pending_delta = d;
+            // The saved delta is the one the snapshot pre-pulled from the
+            // channel — it is already here, so the first Backward after
+            // resume must not wait for another.
+            delta_prefetched = train_steps > 0;
+        }
+        // install ack: ParallelFr::resume blocks on one of these per worker
+        done.send(WorkerDone {
+            worker: k, fwd_ms: 0.0, bwd_ms: 0.0, loss: None, logits: None,
+            history_bytes: history.bytes(), error: None,
+        }).ok();
+    }
 
     loop {
         match cmd_rx.recv() {
@@ -377,6 +594,10 @@ fn worker_loop(
                     }
                     continue;
                 }
+                #[cfg(feature = "fault-inject")]
+                if let Some(f) = &config.fault {
+                    f.fire(k, train_steps, crate::testing::faults::FaultPhase::Forward)?;
+                }
                 if is_last {
                     // No forward here: the loss head replays it during
                     // Backward, so the recompute lands in bwd_ms (see the
@@ -396,6 +617,10 @@ fn worker_loop(
                 FWD_MS.with(|c| c.set(fwd_ms));
             }
             Ok(Command::Backward { lr }) => {
+                #[cfg(feature = "fault-inject")]
+                if let Some(f) = &config.fault {
+                    f.fire(k, train_steps, crate::testing::faults::FaultPhase::Backward)?;
+                }
                 let mut timer = Timer::new();
                 let mut loss = None;
                 if is_last {
@@ -404,6 +629,11 @@ fn worker_loop(
                         &h_in, labels.as_ref().context("no labels stored")?)?;
                     loss = Some(out.loss);
                     opt.step_resident(&mut module.params, &out.grads, lr)?;
+                    #[cfg(feature = "fault-inject")]
+                    if let Some(f) = &config.fault {
+                        f.fire(k, train_steps,
+                               crate::testing::faults::FaultPhase::OptimWriteBack)?;
+                    }
                     if let (Some(tx), Some(d)) = (&delta_tx, out.delta_in) {
                         tx.send(d).ok();
                     }
@@ -411,9 +641,13 @@ fn worker_loop(
                     // Consume exactly ONE delta per iteration — the one the
                     // upper worker emitted at iteration t-1 (FIFO discipline
                     // keeps Algorithm 1's staleness exact even though all
-                    // workers run concurrently). Iteration 0 has none yet.
+                    // workers run concurrently). Iteration 0 has none yet;
+                    // after a Snapshot (or a resume) it is already in
+                    // `pending_delta`.
                     if train_steps > 0 {
-                        if let Some(rx) = &delta_rx {
+                        if delta_prefetched {
+                            delta_prefetched = false;
+                        } else if let Some(rx) = &delta_rx {
                             pending_delta = rx.recv()
                                 .context("delta feed closed")?;
                         }
@@ -422,6 +656,11 @@ fn worker_loop(
                     let (grads, delta_in) = module.backward(&h_replay, &pending_delta)?;
                     if history.warmed(lag) {
                         opt.step_resident(&mut module.params, &grads, lr)?;
+                    }
+                    #[cfg(feature = "fault-inject")]
+                    if let Some(f) = &config.fault {
+                        f.fire(k, train_steps,
+                               crate::testing::faults::FaultPhase::OptimWriteBack)?;
                     }
                     if let (Some(tx), Some(d)) = (&delta_tx, delta_in) {
                         tx.send(d).ok();
@@ -437,6 +676,42 @@ fn worker_loop(
                     history_bytes: history.bytes(),
                     error: None,
                 }).ok();
+            }
+            Ok(Command::Snapshot { reply }) => {
+                // The delta produced *this* step by worker k+1 is normally
+                // still in our channel (k+1 sends delta before done, and the
+                // leader snapshots only after collecting all dones). Pull it
+                // in now so the state is complete; the flag makes the next
+                // Backward skip its recv.
+                let mut install_err = None;
+                if !is_last && train_steps > 0 && !delta_prefetched {
+                    if let Some(rx) = &delta_rx {
+                        match rx.recv_timeout(recv_timeout) {
+                            Ok(d) => {
+                                pending_delta = d;
+                                delta_prefetched = true;
+                            }
+                            Err(_) => install_err = Some(
+                                "snapshot: in-flight delta never arrived \
+                                 (upper worker dead or stalled)".to_string()),
+                        }
+                    }
+                }
+                let msg = match install_err {
+                    Some(e) => (k, Err(e)),
+                    None => (k, Ok(Box::new(ModuleState {
+                        params: module.params.to_vec(),
+                        velocity: opt.velocity().to_vec(),
+                        history: RingState {
+                            slots: history.slots().to_vec(),
+                            head: history.head(),
+                            pushes: history.pushes(),
+                        },
+                        pending_delta: (!is_last).then(|| pending_delta.clone()),
+                        train_steps,
+                    }))),
+                };
+                reply.send(msg).ok();
             }
         }
     }

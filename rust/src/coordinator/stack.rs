@@ -24,11 +24,31 @@ pub struct TrainConfig {
     /// kernels are bitwise identical to `threads = 1` — the knob only
     /// changes wall-clock, never the trajectory.
     pub threads: usize,
+    /// How long the threaded coordinator waits for any worker's done (or
+    /// snapshot) message before diagnosing a stalled fleet. The leader
+    /// retries one more window (a single slow kernel on a loaded box is not
+    /// a hang), then tears down with the unresponsive worker ids named.
+    pub recv_timeout_ms: u64,
+    /// Deterministic fault injection for the crash-safety tests: makes one
+    /// chosen worker panic / error / stall at a chosen step and phase.
+    /// Compiled only under the `fault-inject` feature so production builds
+    /// carry no test plumbing.
+    #[cfg(feature = "fault-inject")]
+    pub fault: Option<crate::testing::faults::FaultPlan>,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { lr: 0.01, momentum: 0.9, weight_decay: 5e-4, seed: 0, threads: 0 }
+        TrainConfig {
+            lr: 0.01,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            seed: 0,
+            threads: 0,
+            recv_timeout_ms: 30_000,
+            #[cfg(feature = "fault-inject")]
+            fault: None,
+        }
     }
 }
 

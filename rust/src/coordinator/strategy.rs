@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use crate::checkpoint::ModuleState;
 use crate::data::Batch;
 
 /// Wall-clock timing of one iteration, split the way the pipeline simulator
@@ -85,4 +86,19 @@ pub trait Trainer {
     /// Access the underlying stack (for eval / sigma probing).
     fn stack(&self) -> &super::stack::ModuleStack;
     fn stack_mut(&mut self) -> &mut super::stack::ModuleStack;
+
+    /// Snapshot every module's crash-surviving state (params, momentum,
+    /// replay ring, pending delta) for a checkpoint. Methods that keep
+    /// cross-iteration state a snapshot cannot capture yet (DDG's weight
+    /// queues, DNI's synthesizers) inherit this default and refuse.
+    fn snapshot_modules(&self) -> Result<Vec<ModuleState>> {
+        anyhow::bail!("{}: checkpoint/resume not supported by this method", self.name())
+    }
+
+    /// Install a checkpoint's module states, resuming the training timeline
+    /// exactly. Counterpart of [`Trainer::snapshot_modules`].
+    fn restore_modules(&mut self, modules: &[ModuleState]) -> Result<()> {
+        let _ = modules;
+        anyhow::bail!("{}: checkpoint/resume not supported by this method", self.name())
+    }
 }

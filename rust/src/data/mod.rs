@@ -70,6 +70,45 @@ impl DataSource {
         }
     }
 
+    /// Tagged RNG state for checkpointing: a variant tag followed by the
+    /// four xoshiro words of the *train* stream (the only RNG that advances
+    /// during training; eval paths are RNG-neutral by construction).
+    pub fn rng_state(&self) -> Vec<u64> {
+        let (tag, s) = match self {
+            DataSource::Images(ds, _) => (1u64, ds.train_rng_state()),
+            DataSource::FlatImages(ds, _) => (2u64, ds.train_rng_state()),
+            DataSource::Text(ds, _, _) => (3u64, ds.rng_state()),
+        };
+        let mut out = vec![tag];
+        out.extend_from_slice(&s);
+        out
+    }
+
+    /// Restore a [`DataSource::rng_state`] snapshot; rejects a snapshot
+    /// taken from a different source variant (the tag byte) so a checkpoint
+    /// never silently drives the wrong batch layout.
+    pub fn restore_rng_state(&mut self, state: &[u64]) -> Result<()> {
+        let (tag, name) = match self {
+            DataSource::Images(..) => (1u64, "images"),
+            DataSource::FlatImages(..) => (2u64, "flat images"),
+            DataSource::Text(..) => (3u64, "text"),
+        };
+        if state.len() != 5 {
+            bail!("data RNG state has {} words, expected 5", state.len());
+        }
+        if state[0] != tag {
+            bail!("data RNG state was saved by source variant {} but this run \
+                   uses {name} (variant {tag})", state[0]);
+        }
+        let s = [state[1], state[2], state[3], state[4]];
+        match self {
+            DataSource::Images(ds, _) | DataSource::FlatImages(ds, _) =>
+                ds.restore_train_rng(s),
+            DataSource::Text(ds, _, _) => ds.restore_rng(s),
+        }
+        Ok(())
+    }
+
     pub fn test_batch(&mut self, i: usize) -> Batch {
         match self {
             DataSource::Images(ds, b) => {

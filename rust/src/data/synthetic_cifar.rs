@@ -104,6 +104,18 @@ impl SyntheticCifar {
         }
     }
 
+    /// Raw train-stream RNG state (checkpointing). Only `train_rng` mutates
+    /// across training batches — test batches clone/fork without advancing
+    /// it — so this one word-quad pins the whole future batch sequence.
+    pub fn train_rng_state(&self) -> [u64; 4] {
+        self.train_rng.state()
+    }
+
+    /// Continue the train stream exactly where a checkpointed run stopped.
+    pub fn restore_train_rng(&mut self, s: [u64; 4]) {
+        self.train_rng = Rng::from_state(s);
+    }
+
     /// Next training batch as NHWC images: `([B,32,32,3] f32, [B] i32)`.
     pub fn train_batch(&mut self, batch: usize) -> (Tensor, Tensor) {
         let mut rng = self.train_rng.fork(0);

@@ -100,6 +100,17 @@ impl TinyCorpus {
         self.tokens.len()
     }
 
+    /// Raw batcher RNG state (checkpointing); the corpus itself is a pure
+    /// function of the constructor seed, so the RNG is all that varies.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Continue window sampling exactly where a checkpointed run stopped.
+    pub fn restore_rng(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }

@@ -31,8 +31,9 @@ pub use registry::{ModelEntry, ModelRegistry, Resolved};
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::checkpoint::{self, Checkpoint};
 use crate::coordinator::{
     self, fr::FrTrainer, make_trainer, parallel::ParallelFr, Algo, ModuleStack,
     RunOptions, RunResult, TrainConfig, Trainer,
@@ -186,6 +187,46 @@ impl Experiment {
         self
     }
 
+    /// Write a checkpoint every `n` completed steps (default 25; takes
+    /// effect only once [`Experiment::checkpoint_dir`] is set; 0 disables
+    /// the cadence).
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.opts.checkpoint_every = n;
+        self
+    }
+
+    /// Enable crash-safe checkpointing: `ckpt-<step>.fckpt` files written
+    /// atomically into this directory.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.opts.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Resume from a checkpoint file — or, given a directory, from its
+    /// latest checkpoint — instead of starting at step 0. The run refuses
+    /// checkpoints whose identity (model config, K, algorithm, LR
+    /// schedule) disagrees with this experiment.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.opts.resume_from = Some(path.into());
+        self
+    }
+
+    /// Bound on the threaded coordinator's wait for any worker message
+    /// before it diagnoses a stalled fleet (default 30 000 ms; see
+    /// [`TrainConfig::recv_timeout_ms`]).
+    pub fn recv_timeout_ms(mut self, ms: u64) -> Self {
+        self.config.recv_timeout_ms = ms;
+        self
+    }
+
+    /// Schedule a deterministic fault in the threaded fleet (crash-safety
+    /// tests; `fault-inject` builds only).
+    #[cfg(feature = "fault-inject")]
+    pub fn fault(mut self, plan: crate::testing::faults::FaultPlan) -> Self {
+        self.config.fault = Some(plan);
+        self
+    }
+
     fn root(&self) -> PathBuf {
         self.artifacts_root.clone()
             .unwrap_or_else(crate::default_artifacts_root)
@@ -263,12 +304,32 @@ impl Experiment {
     }
 
     /// Spawn the threaded K-worker FR deployment for this experiment.
+    /// Honors [`Experiment::resume_from`]: the fleet is rebuilt from the
+    /// checkpoint (after an identity check) and the data RNG restored, so
+    /// the continued run is bit-identical to one that never stopped.
     pub fn spawn_parallel(&self) -> Result<ParallelSession> {
         let resolved = self.resolve()?;
-        let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
-        let par = ParallelFr::spawn(resolved.manifest.clone(),
-                                    self.config.clone(), resolved.backend)?;
-        Ok(ParallelSession { manifest: resolved.manifest, par, data })
+        let mut data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
+        let schedule = self.make_schedule();
+        let par = match &self.opts.resume_from {
+            None => ParallelFr::spawn(resolved.manifest.clone(),
+                                      self.config.clone(), resolved.backend)?,
+            Some(resume) => {
+                let path = checkpoint::resolve_resume(resume)?;
+                let ckpt = Checkpoint::read(&path)?;
+                ckpt.validate_matches(&resolved.manifest.config, resolved.manifest.k,
+                                      "FR", &schedule.fingerprint())?;
+                data.restore_rng_state(&ckpt.data_rng)
+                    .with_context(|| format!("restoring data RNG from {}",
+                                             path.display()))?;
+                ParallelFr::resume(resolved.manifest.clone(), self.config.clone(),
+                                   resolved.backend, &ckpt)?
+            }
+        };
+        Ok(ParallelSession {
+            manifest: resolved.manifest, par, data, schedule,
+            opts: self.opts.clone(),
+        })
     }
 
     /// Base stepsize currently configured (what `run` feeds the schedule).
@@ -313,9 +374,45 @@ pub struct FrSession {
 }
 
 /// [`Experiment::spawn_parallel`]'s output: the threaded deployment plus
-/// the data source wired to its manifest.
+/// the data source wired to its manifest and the experiment's LR schedule
+/// (drivers step the fleet manually but share schedule + checkpoint
+/// policy with the sequential loop).
 pub struct ParallelSession {
     pub manifest: Manifest,
     pub par: ParallelFr,
     pub data: DataSource,
+    schedule: Box<dyn LrSchedule>,
+    opts: RunOptions,
+}
+
+impl ParallelSession {
+    /// Stepsize for a given step under the experiment's schedule.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        self.schedule.lr(step)
+    }
+
+    pub fn opts(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    /// True when the checkpoint cadence says "write after this many
+    /// completed steps" (requires a checkpoint dir).
+    pub fn should_checkpoint(&self, completed_steps: usize) -> bool {
+        self.opts.checkpoint_dir.is_some()
+            && self.opts.checkpoint_every > 0
+            && completed_steps > 0
+            && completed_steps % self.opts.checkpoint_every == 0
+    }
+
+    /// Snapshot the fleet and atomically write `ckpt-<step>.fckpt` into
+    /// the configured checkpoint dir; returns the path written.
+    pub fn write_checkpoint(&mut self) -> Result<PathBuf> {
+        let dir = self.opts.checkpoint_dir.clone()
+            .context("no checkpoint dir configured")?;
+        let fingerprint = self.schedule.fingerprint();
+        let ckpt = self.par.snapshot(&self.data, &fingerprint)?;
+        let path = checkpoint::checkpoint_path(&dir, ckpt.meta.step);
+        ckpt.write_atomic(&path)?;
+        Ok(path)
+    }
 }

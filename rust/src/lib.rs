@@ -28,6 +28,7 @@
 //! uses artifacts when built). See README.md for the full tour.
 
 pub mod bench;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
 pub mod experiment;

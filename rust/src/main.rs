@@ -16,29 +16,86 @@
 //! registry resolves names to procedural native configs (always available,
 //! zero artifacts) or to AOT artifact directories (`--backend pjrt`, cargo
 //! feature `pjrt`). Without `--backend` the registry auto-selects.
+//!
+//! Crash safety: `--checkpoint-dir` makes train/parallel runs write
+//! `ckpt-<step>.fckpt` files every `--checkpoint-every` steps (atomic
+//! write-then-rename); `--resume <path>` continues bit-identically from a
+//! checkpoint file or a directory's latest checkpoint.
+//!
+//! Exit codes: 0 success, 2 configuration error (bad flags, unknown model,
+//! unusable checkpoint), 3 training-time failure (worker fleet died or
+//! stalled, I/O mid-run). On a training-time failure with checkpointing
+//! enabled, the path the run would resume from is printed to stderr.
 
-use anyhow::{bail, Context, Result};
+use std::path::Path;
 
+use anyhow::{anyhow, bail, Context, Result};
+
+use features_replay::checkpoint;
 use features_replay::coordinator::{memory, parse_algo, sigma, Algo};
 use features_replay::experiment::{Experiment, ModelRegistry};
 use features_replay::metrics::TablePrinter;
 use features_replay::runtime::{BackendKind, Manifest};
 use features_replay::util::cli::Args;
 
-const OPTS: &[(&str, &str)] = &[
-    ("model", "model config name (see `frctl models`; default mlp_tiny)"),
-    ("k", "number of modules K (default 4)"),
-    ("algo", "bp | fr | ddg | dni (train only)"),
-    ("backend", "native | pjrt (default: auto — pjrt when artifacts exist)"),
-    ("steps", "training steps (default 100)"),
-    ("lr", "base stepsize (default 0.01)"),
-    ("seed", "data/init seed (default 0)"),
-    ("threads", "native kernel threads per engine (default 0 = auto, 1 = \
-                 single-thread reference; results are bitwise identical)"),
-    ("eval-every", "eval cadence in steps (default 25)"),
-    ("artifacts", "artifacts root (default ./artifacts)"),
-    ("out", "write a JSON report to this path"),
-];
+/// Setup/configuration problem: nothing was trained.
+const EXIT_CONFIG: i32 = 2;
+/// The run itself failed (fleet death/stall, mid-run I/O).
+const EXIT_TRAINING: i32 = 3;
+
+/// An error tagged with the exit code its phase maps to.
+struct Failure {
+    code: i32,
+    err: anyhow::Error,
+}
+
+type CmdResult = std::result::Result<(), Failure>;
+
+fn config_err(err: anyhow::Error) -> Failure {
+    Failure { code: EXIT_CONFIG, err }
+}
+
+fn training_err(err: anyhow::Error) -> Failure {
+    Failure { code: EXIT_TRAINING, err }
+}
+
+/// Training-time failure path: point at the newest checkpoint (if any)
+/// before surfacing the error, so the operator sees how to continue.
+fn training_err_with_hint(err: anyhow::Error, checkpoint_dir: Option<&Path>) -> Failure {
+    if let Some(dir) = checkpoint_dir {
+        if let Ok(Some(path)) = checkpoint::latest_in_dir(dir) {
+            eprintln!("run can resume from {} (pass --resume {})",
+                      path.display(), dir.display());
+        }
+    }
+    training_err(err)
+}
+
+fn opt_specs() -> Vec<(&'static str, &'static str)> {
+    let mut opts = vec![
+        ("model", "model config name (see `frctl models`; default mlp_tiny)"),
+        ("k", "number of modules K (default 4)"),
+        ("algo", "bp | fr | ddg | dni (train only)"),
+        ("backend", "native | pjrt (default: auto — pjrt when artifacts exist)"),
+        ("steps", "training steps (default 100)"),
+        ("lr", "base stepsize (default 0.01)"),
+        ("seed", "data/init seed (default 0)"),
+        ("threads", "native kernel threads per engine (default 0 = auto, 1 = \
+                     single-thread reference; results are bitwise identical)"),
+        ("eval-every", "eval cadence in steps (default 25)"),
+        ("artifacts", "artifacts root (default ./artifacts)"),
+        ("out", "write a JSON report to this path"),
+        ("checkpoint-dir", "write ckpt-<step>.fckpt files into this directory \
+                            (train/parallel)"),
+        ("checkpoint-every", "checkpoint cadence in steps (default 25)"),
+        ("resume", "resume from a checkpoint file, or a directory's latest"),
+    ];
+    #[cfg(feature = "fault-inject")]
+    opts.push(("fault", "inject a deterministic fault into the parallel fleet: \
+                         worker:step:phase:kind[:millis], phase fwd|bwd|optwb, \
+                         kind panic|error|stall"));
+    opts
+}
 
 const FLAGS: &[(&str, &str)] = &[
     ("verbose", "log every eval point"),
@@ -46,7 +103,7 @@ const FLAGS: &[(&str, &str)] = &[
 ];
 
 fn usage() -> String {
-    let schema = Args::parse(&[], OPTS, FLAGS).unwrap();
+    let schema = Args::parse(&[], &opt_specs(), FLAGS).unwrap();
     format!(
         "frctl — Features Replay (NIPS'18) training coordinator\n\n\
          usage: frctl <models|info|train|compare|sigma|memory|parallel> \
@@ -55,21 +112,33 @@ fn usage() -> String {
     )
 }
 
-fn main() -> Result<()> {
+fn main() {
+    match run() {
+        Ok(()) => {}
+        Err(f) => {
+            eprintln!("error: {:#}", f.err);
+            std::process::exit(f.code);
+        }
+    }
+}
+
+fn run() -> CmdResult {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, OPTS, FLAGS).map_err(|e| anyhow::anyhow!(e))?;
+    let setup = |e: String| config_err(anyhow!(e));
+    let args = Args::parse(&raw, &opt_specs(), FLAGS).map_err(setup)?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{}", usage());
         return Ok(());
     }
 
     let model = args.get_or("model", "mlp_tiny").to_string();
-    let k = args.usize_or("k", 4).map_err(|e| anyhow::anyhow!(e))?;
-    let steps = args.usize_or("steps", 100).map_err(|e| anyhow::anyhow!(e))?;
-    let lr = args.f64_or("lr", 0.01).map_err(|e| anyhow::anyhow!(e))? as f32;
-    let seed = args.u64_or("seed", 0).map_err(|e| anyhow::anyhow!(e))?;
-    let threads = args.usize_or("threads", 0).map_err(|e| anyhow::anyhow!(e))?;
-    let eval_every = args.usize_or("eval-every", 25).map_err(|e| anyhow::anyhow!(e))?;
+    let k = args.usize_or("k", 4).map_err(setup)?;
+    let steps = args.usize_or("steps", 100).map_err(setup)?;
+    let lr = args.f64_or("lr", 0.01).map_err(setup)? as f32;
+    let seed = args.u64_or("seed", 0).map_err(setup)?;
+    let threads = args.usize_or("threads", 0).map_err(setup)?;
+    let eval_every = args.usize_or("eval-every", 25).map_err(setup)?;
+    let ckpt_every = args.usize_or("checkpoint-every", 25).map_err(setup)?;
 
     // One builder carries every CLI knob; subcommands refine it.
     let mut exp = Experiment::new(&model)
@@ -79,26 +148,39 @@ fn main() -> Result<()> {
         .seed(seed)
         .threads(threads)
         .eval_every(eval_every)
+        .checkpoint_every(ckpt_every)
         .verbose(args.flag("verbose"));
     if let Some(b) = args.get("backend") {
-        exp = exp.backend(BackendKind::parse(b)?);
+        exp = exp.backend(BackendKind::parse(b).map_err(config_err)?);
     }
     if let Some(root) = args.get("artifacts") {
         exp = exp.artifacts_root(root);
     }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        exp = exp.checkpoint_dir(dir);
+    }
+    if let Some(path) = args.get("resume") {
+        exp = exp.resume_from(path);
+    }
+    #[cfg(feature = "fault-inject")]
+    if let Some(plan) = args.get("fault") {
+        let plan = features_replay::testing::faults::FaultPlan::parse(plan)
+            .map_err(|e| config_err(anyhow!(e)))?;
+        exp = exp.fault(plan);
+    }
 
     match args.positional[0].as_str() {
-        "models" => cmd_models(),
-        "info" => cmd_info(&exp.manifest()?),
+        "models" => cmd_models().map_err(config_err),
+        "info" => cmd_info(&exp.manifest().map_err(config_err)?).map_err(config_err),
         "train" => {
-            let exp = exp.algo(parse_algo(args.get_or("algo", "fr"))?);
-            cmd_train(exp, args.get("out"))
+            let algo = parse_algo(args.get_or("algo", "fr")).map_err(config_err)?;
+            cmd_train(exp.algo(algo), args.get("out"))
         }
         "compare" => cmd_compare(exp),
         "sigma" => cmd_sigma(exp),
-        "memory" => cmd_memory(exp, &model),
+        "memory" => cmd_memory(exp, &model).map_err(config_err),
         "parallel" => cmd_parallel(exp),
-        other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
+        other => Err(config_err(anyhow!("unknown subcommand {other:?}\n\n{}", usage()))),
     }
 }
 
@@ -132,11 +214,13 @@ fn cmd_info(m: &Manifest) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(exp: Experiment, out: Option<&str>) -> Result<()> {
-    let mut session = exp.verbose(true).session()?;
+fn cmd_train(exp: Experiment, out: Option<&str>) -> CmdResult {
+    let mut session = exp.verbose(true).session().map_err(config_err)?;
+    let ckpt_dir = session.opts().checkpoint_dir.clone();
     println!("training {} for {} steps (backend {:?})",
              session.manifest.config, session.opts().steps, session.backend);
-    let res = session.run()?;
+    let res = session.run()
+        .map_err(|e| training_err_with_hint(e, ckpt_dir.as_deref()))?;
     println!("\nfinal: train_loss {:.4}  best test_err {:.3}  diverged: {}",
              res.curve.final_train_loss(), res.curve.best_test_err(), res.diverged);
     let mem = &res.final_memory;
@@ -144,18 +228,19 @@ fn cmd_train(exp: Experiment, out: Option<&str>) -> Result<()> {
              mem.activations, mem.history, mem.deltas, mem.synth, mem.total());
     if let Some(path) = out {
         features_replay::metrics::write_report(
-            std::path::Path::new(path), "train", &[res.curve], vec![])?;
+            std::path::Path::new(path), "train", &[res.curve], vec![])
+            .map_err(training_err)?;
         println!("report written to {path}");
     }
     Ok(())
 }
 
-fn cmd_compare(exp: Experiment) -> Result<()> {
+fn cmd_compare(exp: Experiment) -> CmdResult {
     let table = TablePrinter::new(
         &["method", "train_loss", "test_err", "mem_MB", "sim_ms/iter", "diverged"],
         &[8, 11, 9, 8, 12, 9]);
     for algo in Algo::ALL {
-        let res = exp.clone().algo(algo).run()?;
+        let res = exp.clone().algo(algo).run().map_err(training_err)?;
         let sim_per_iter = res.curve.points.last()
             .map(|p| p.sim_ms / (p.step.max(1) as f64))
             .unwrap_or(f64::NAN);
@@ -171,13 +256,14 @@ fn cmd_compare(exp: Experiment) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sigma(exp: Experiment) -> Result<()> {
+fn cmd_sigma(exp: Experiment) -> CmdResult {
     let (steps, lr) = (exp.step_budget(), exp.base_lr());
-    let mut fs = exp.build_fr()?;
+    let mut fs = exp.build_fr().map_err(config_err)?;
     println!("step  sigma per module (k=1..K), total");
     for step in 0..steps {
         let batch = fs.data.train_batch();
-        let (s, loss) = sigma::probe_step(&mut fs.fr, &batch, lr, step)?;
+        let (s, loss) = sigma::probe_step(&mut fs.fr, &batch, lr, step)
+            .map_err(training_err)?;
         if step % 5 == 0 || step + 1 == steps {
             let per: Vec<String> = s.per_module.iter()
                 .map(|v| format!("{v:6.3}"))
@@ -217,23 +303,49 @@ fn cmd_memory(exp: Experiment, model: &str) -> Result<()> {
     }
 }
 
-fn cmd_parallel(exp: Experiment) -> Result<()> {
-    let (steps, lr) = (exp.step_budget(), exp.base_lr());
-    let mut ps = exp.spawn_parallel()?;
+fn cmd_parallel(exp: Experiment) -> CmdResult {
+    let steps = exp.step_budget();
+    let mut ps = exp.spawn_parallel().map_err(config_err)?;
+    let ckpt_dir = ps.opts().checkpoint_dir.clone();
+    let fail = |e: anyhow::Error, dir: &Option<std::path::PathBuf>| {
+        training_err_with_hint(e, dir.as_deref())
+    };
     println!("threaded FR: {} workers, one engine each", ps.par.k());
-    for step in 0..steps {
+    let start = ps.par.step();
+    if start > 0 {
+        println!("resumed at step {start}");
+        if start >= steps {
+            return Err(config_err(anyhow!(
+                "checkpoint is at step {start}, nothing left of the \
+                 {steps}-step budget")));
+        }
+    }
+    for step in start..steps {
         let b = ps.data.train_batch();
-        let s = ps.par.train_step(&b, lr)?;
+        let lr = ps.lr_at(step);
+        let s = match ps.par.train_step(&b, lr) {
+            Ok(s) => s,
+            Err(e) => return Err(fail(e, &ckpt_dir)),
+        };
         if step % 10 == 0 || step + 1 == steps {
             println!("step {step:4}  loss {:.4}  slowest bwd {:.1} ms  history {} B",
                      s.loss,
                      s.timing.bwd_ms.iter().cloned().fold(0.0, f64::max),
                      s.history_bytes);
         }
+        if ps.should_checkpoint(step + 1) {
+            match ps.write_checkpoint() {
+                Ok(path) => println!("checkpoint written: {}", path.display()),
+                Err(e) => return Err(fail(e, &ckpt_dir)),
+            }
+        }
     }
     let eb = ps.data.test_batch(0);
-    let (el, ee) = ps.par.eval_batch(&eb)?;
+    let (el, ee) = match ps.par.eval_batch(&eb) {
+        Ok(r) => r,
+        Err(e) => return Err(fail(e, &ckpt_dir)),
+    };
     println!("eval: loss {el:.4} err {ee:.3}");
-    ps.par.shutdown().context("worker shutdown")?;
+    ps.par.shutdown().context("worker shutdown").map_err(training_err)?;
     Ok(())
 }

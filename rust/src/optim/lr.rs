@@ -4,6 +4,12 @@
 
 pub trait LrSchedule: Send {
     fn lr(&self, step: usize) -> f32;
+
+    /// Stable identity string stored in checkpoints. Schedules are pure
+    /// functions of the step, so the step counter alone pins the resume
+    /// *position* — the fingerprint guards against resuming under a
+    /// different schedule, which would silently fork the trajectory.
+    fn fingerprint(&self) -> String;
 }
 
 pub struct ConstantLr(pub f32);
@@ -11,6 +17,10 @@ pub struct ConstantLr(pub f32);
 impl LrSchedule for ConstantLr {
     fn lr(&self, _step: usize) -> f32 {
         self.0
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("const({})", self.0)
     }
 }
 
@@ -37,6 +47,10 @@ impl LrSchedule for StepDecay {
         let drops = self.milestones.iter().filter(|&&m| step >= m).count();
         self.base / self.factor.powi(drops as i32)
     }
+
+    fn fingerprint(&self) -> String {
+        format!("step({}/{}@{:?})", self.base, self.factor, self.milestones)
+    }
 }
 
 /// 1/sqrt(t) diminishing stepsize satisfying the Theorem 2 conditions
@@ -49,6 +63,10 @@ pub struct InverseT {
 impl LrSchedule for InverseT {
     fn lr(&self, step: usize) -> f32 {
         self.base / (1.0 + step as f32).powf(self.power)
+    }
+
+    fn fingerprint(&self) -> String {
+        format!("invt({}^{})", self.base, self.power)
     }
 }
 
@@ -71,6 +89,22 @@ mod tests {
         assert!((s.lr(150) - 0.001).abs() < 1e-9);
         assert!((s.lr(225) - 0.0001).abs() < 1e-9);
         assert!((s.lr(299) - 0.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprints_distinguish_schedules() {
+        let a = ConstantLr(0.01).fingerprint();
+        let b = ConstantLr(0.02).fingerprint();
+        let c = StepDecay::paper(0.01, 300).fingerprint();
+        let d = StepDecay::paper(0.01, 400).fingerprint();
+        let e = InverseT { base: 0.01, power: 0.5 }.fingerprint();
+        let all = [&a, &b, &c, &d, &e];
+        for (i, x) in all.iter().enumerate() {
+            for y in &all[i + 1..] {
+                assert_ne!(x, y);
+            }
+        }
+        assert_eq!(a, ConstantLr(0.01).fingerprint());
     }
 
     #[test]

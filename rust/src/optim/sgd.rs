@@ -60,6 +60,28 @@ impl SgdMomentum {
         Ok(())
     }
 
+    /// Momentum buffers, one per parameter tensor (checkpointing).
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Install checkpointed momentum buffers; buffer count and per-buffer
+    /// lengths must match the current parameter layout.
+    pub fn restore_velocity(&mut self, velocity: Vec<Vec<f32>>) -> Result<()> {
+        if velocity.len() != self.velocity.len() {
+            bail!("checkpoint has {} momentum buffers, optimizer holds {}",
+                  velocity.len(), self.velocity.len());
+        }
+        for (i, (new, cur)) in velocity.iter().zip(&self.velocity).enumerate() {
+            if new.len() != cur.len() {
+                bail!("momentum buffer {i}: checkpoint has {} elements, \
+                       optimizer holds {}", new.len(), cur.len());
+            }
+        }
+        self.velocity = velocity;
+        Ok(())
+    }
+
     /// Reset momentum buffers (used when re-initializing for a new seed).
     pub fn reset(&mut self) {
         for v in &mut self.velocity {

@@ -39,6 +39,24 @@ impl ModuleRuntime {
         self.spec.index == 0
     }
 
+    /// Install checkpointed parameter tensors. Count and shapes must match
+    /// the spec; goes through [`ResidentParams::replace`] so backends
+    /// holding device copies re-upload on the version bump.
+    pub fn restore_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if params.len() != self.spec.param_shapes.len() {
+            bail!("module {}: checkpoint has {} param tensors, spec wants {}",
+                  self.spec.index, params.len(), self.spec.param_shapes.len());
+        }
+        for (i, (p, shape)) in params.iter().zip(&self.spec.param_shapes).enumerate() {
+            if &p.shape != shape {
+                bail!("module {} param {i}: checkpoint shape {:?}, spec wants {:?}",
+                      self.spec.index, p.shape, shape);
+            }
+        }
+        self.params.replace(params);
+        Ok(())
+    }
+
     pub fn has_loss_head(&self) -> bool {
         self.spec.loss_file.is_some()
     }

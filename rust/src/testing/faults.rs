@@ -1,0 +1,160 @@
+//! Deterministic fault injection for the threaded FR fleet (crash-safety
+//! tests; `fault-inject` feature only).
+//!
+//! A [`FaultPlan`] names one worker, one step, one phase, and a failure
+//! kind. The worker loop calls [`FaultPlan::fire`] at fixed points; because
+//! the fleet's step counters are deterministic, the same plan kills the
+//! same kernel-level state every run — which is what lets the resume tests
+//! assert *bit-identical* trajectories after a crash.
+//!
+//! Plans parse from `worker:step:phase:kind[:millis]`, e.g. `1:5:bwd:panic`
+//! or `0:3:fwd:stall:5000` (the form `frctl --fault` accepts).
+
+use std::fmt;
+
+/// Where in the iteration the fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Play: after the worker received its input, before its forward.
+    Forward,
+    /// Replay: at the top of the backward, before the delta recv.
+    Backward,
+    /// After `step_resident` wrote updated params back — the worst spot for
+    /// naive checkpointing (params advanced, downstream deltas not sent).
+    OptimWriteBack,
+}
+
+impl fmt::Display for FaultPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultPhase::Forward => "fwd",
+            FaultPhase::Backward => "bwd",
+            FaultPhase::OptimWriteBack => "optwb",
+        })
+    }
+}
+
+/// How the chosen worker fails.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` in the worker thread (caught by `worker_main`, reported).
+    Panic,
+    /// Return an `Err` from the worker loop (the clean failure path).
+    Error,
+    /// Sleep for `millis` without reporting — exercises the leader's
+    /// `recv_timeout` stall diagnosis.
+    Stall { millis: u64 },
+}
+
+/// One scheduled fault: worker `worker` fails at train step `step` (the
+/// worker's own `train_steps` counter, 0-based) in `phase`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub worker: usize,
+    pub step: usize,
+    pub phase: FaultPhase,
+    pub kind: FaultKind,
+}
+
+impl FaultPlan {
+    /// Parse `worker:step:phase:kind[:millis]` where phase is
+    /// `fwd|bwd|optwb` and kind is `panic|error|stall`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 4 || parts.len() > 5 {
+            return Err(format!(
+                "fault plan {s:?}: want worker:step:phase:kind[:millis]"));
+        }
+        let worker = parts[0].parse::<usize>()
+            .map_err(|_| format!("fault plan {s:?}: bad worker index {:?}", parts[0]))?;
+        let step = parts[1].parse::<usize>()
+            .map_err(|_| format!("fault plan {s:?}: bad step {:?}", parts[1]))?;
+        let phase = match parts[2] {
+            "fwd" => FaultPhase::Forward,
+            "bwd" => FaultPhase::Backward,
+            "optwb" => FaultPhase::OptimWriteBack,
+            other => return Err(format!(
+                "fault plan {s:?}: unknown phase {other:?} (fwd|bwd|optwb)")),
+        };
+        let kind = match parts[3] {
+            "panic" => FaultKind::Panic,
+            "error" => FaultKind::Error,
+            "stall" => {
+                let millis = parts.get(4).unwrap_or(&"60000").parse::<u64>()
+                    .map_err(|_| format!("fault plan {s:?}: bad stall millis"))?;
+                FaultKind::Stall { millis }
+            }
+            other => return Err(format!(
+                "fault plan {s:?}: unknown kind {other:?} (panic|error|stall)")),
+        };
+        if matches!(kind, FaultKind::Panic | FaultKind::Error) && parts.len() == 5 {
+            return Err(format!("fault plan {s:?}: millis only applies to stall"));
+        }
+        Ok(FaultPlan { worker, step, phase, kind })
+    }
+
+    /// Fire if this call site matches the plan. `step` is the worker's own
+    /// train-step counter at the time of the call.
+    pub fn fire(&self, worker: usize, step: usize, phase: FaultPhase)
+                -> anyhow::Result<()> {
+        if worker != self.worker || step != self.step || phase != self.phase {
+            return Ok(());
+        }
+        match self.kind {
+            FaultKind::Panic => {
+                panic!("injected fault: worker {worker} panics at step {step} ({phase})")
+            }
+            FaultKind::Error => anyhow::bail!(
+                "injected fault: worker {worker} errors at step {step} ({phase})"),
+            FaultKind::Stall { millis } => {
+                std::thread::sleep(std::time::Duration::from_millis(millis));
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_forms() {
+        assert_eq!(FaultPlan::parse("1:5:bwd:panic").unwrap(), FaultPlan {
+            worker: 1, step: 5, phase: FaultPhase::Backward, kind: FaultKind::Panic,
+        });
+        assert_eq!(FaultPlan::parse("0:3:fwd:error").unwrap(), FaultPlan {
+            worker: 0, step: 3, phase: FaultPhase::Forward, kind: FaultKind::Error,
+        });
+        assert_eq!(FaultPlan::parse("2:7:optwb:stall:500").unwrap(), FaultPlan {
+            worker: 2, step: 7, phase: FaultPhase::OptimWriteBack,
+            kind: FaultKind::Stall { millis: 500 },
+        });
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in ["", "1:2:bwd", "x:2:bwd:panic", "1:y:bwd:panic",
+                    "1:2:sideways:panic", "1:2:bwd:melt", "1:2:bwd:panic:50",
+                    "1:2:bwd:stall:soon", "1:2:bwd:panic:5:6"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn fire_only_matches_exact_site() {
+        let plan = FaultPlan::parse("1:5:bwd:error").unwrap();
+        assert!(plan.fire(0, 5, FaultPhase::Backward).is_ok());
+        assert!(plan.fire(1, 4, FaultPhase::Backward).is_ok());
+        assert!(plan.fire(1, 5, FaultPhase::Forward).is_ok());
+        assert!(plan.fire(1, 5, FaultPhase::Backward).is_err());
+    }
+
+    #[test]
+    fn stall_sleeps_then_succeeds() {
+        let plan = FaultPlan::parse("0:0:fwd:stall:10").unwrap();
+        let t = std::time::Instant::now();
+        assert!(plan.fire(0, 0, FaultPhase::Forward).is_ok());
+        assert!(t.elapsed() >= std::time::Duration::from_millis(10));
+    }
+}

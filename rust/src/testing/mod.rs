@@ -5,4 +5,7 @@
 
 pub mod prop;
 
+#[cfg(feature = "fault-inject")]
+pub mod faults;
+
 pub use prop::{check, Gen};

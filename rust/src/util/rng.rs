@@ -29,6 +29,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw generator state (checkpointing). Restoring via
+    /// [`Rng::from_state`] continues the stream exactly where it stopped.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-stream from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -129,6 +140,18 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_stream() {
+        let mut a = Rng::new(13);
+        for _ in 0..5 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..20 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -5,15 +5,30 @@
 //! (The seed repo's versions self-skipped without artifacts; the native
 //! backend is what makes them actually run.)
 
+use features_replay::checkpoint::{self, Checkpoint, CheckpointError, Meta};
 use features_replay::coordinator::{
     self, make_trainer, Algo, ModuleStack, TrainConfig, Trainer,
 };
 use features_replay::data::{Batch, DataSource};
+use features_replay::experiment::{Experiment, ScheduleSpec};
 use features_replay::optim::ConstantLr;
 use features_replay::runtime::{BackendKind, Engine, Manifest, NativeMlpSpec, Tensor};
 
 fn manifest_k(k: usize) -> Manifest {
     NativeMlpSpec::tiny(k).manifest().unwrap()
+}
+
+/// Fresh scratch dir under the OS temp root (no tempfile crate offline).
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fr-itest-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn stack_params_hash(stack: &ModuleStack) -> u64 {
+    checkpoint::params_hash(stack.modules.iter().flat_map(|mm| mm.params.iter()))
 }
 
 fn load_stack(m: &Manifest, engine: &Engine) -> ModuleStack {
@@ -248,7 +263,7 @@ fn run_training_records_curves() {
     let mut data = DataSource::for_manifest(&m, 2).unwrap();
     let opts = coordinator::RunOptions {
         steps: 12, eval_every: 4, eval_batches: 2, steps_per_epoch: 4,
-        verbose: false, divergence_loss: 1e4,
+        ..Default::default()
     };
     let res = coordinator::run_training(
         t.as_mut(), &mut data, &ConstantLr(0.01), &opts).unwrap();
@@ -257,4 +272,218 @@ fn run_training_records_curves() {
     assert_eq!(res.timings.len(), 12);
     assert!(res.curve.points.iter().all(|p| p.sim_ms > 0.0));
     assert!(res.final_memory.total() > 0);
+}
+
+/// Keystone contract, sequential loop: a run checkpointed mid-way and
+/// resumed in a fresh process-equivalent (new trainer, new data source)
+/// must end bit-identical to a run that never stopped — same final
+/// parameter hash, same final recorded loss.
+#[test]
+fn sequential_checkpoint_resume_is_bit_identical() {
+    let dir = tmpdir("seq-resume");
+    let exp = |steps: usize| {
+        Experiment::new("mlp_tiny").k(4).steps(steps).seed(3)
+            .schedule(ScheduleSpec::Constant).eval_every(4).eval_batches(1)
+    };
+
+    // uninterrupted reference
+    let mut a = exp(10).session().unwrap();
+    let ra = a.run().unwrap();
+    let hash_a = stack_params_hash(a.trainer.stack());
+
+    // interrupted run: leg 1 stops after 6 steps, checkpointing at 3 and 6
+    let mut b1 = exp(6).checkpoint_dir(&dir).checkpoint_every(3)
+        .session().unwrap();
+    b1.run().unwrap();
+    assert!(checkpoint::checkpoint_path(&dir, 6).is_file());
+    // leg 2: fresh everything, resume from the directory's latest checkpoint
+    let mut b2 = exp(10).resume_from(&dir).session().unwrap();
+    let rb = b2.run().unwrap();
+    let hash_b = stack_params_hash(b2.trainer.stack());
+
+    assert_eq!(hash_a, hash_b, "resumed params differ from uninterrupted run");
+    let last_a = ra.curve.points.last().unwrap().train_loss;
+    let last_b = rb.curve.points.last().unwrap().train_loss;
+    assert_eq!(last_a.to_bits(), last_b.to_bits(),
+               "final loss {last_a} vs resumed {last_b}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Keystone contract, threaded fleet: snapshot a live fleet to disk, tear
+/// it down, rebuild from the file with `ParallelFr::resume`, and the
+/// continued per-step losses + final parameter hash are bit-identical to a
+/// fleet that ran straight through (which itself also snapshots mid-run,
+/// covering the delta-prefetch path on a surviving fleet).
+#[test]
+fn parallel_snapshot_resume_is_bit_identical() {
+    let m = manifest_k(4);
+    let dir = tmpdir("par-resume");
+    let fp = "const(0.01)";
+
+    // uninterrupted reference fleet (with a mid-run snapshot it ignores)
+    let mut par_a = coordinator::parallel::ParallelFr::spawn(
+        m.clone(), TrainConfig::default(), BackendKind::Native).unwrap();
+    let mut data_a = DataSource::for_manifest(&m, 11).unwrap();
+    let mut losses_a = Vec::new();
+    for step in 0..8 {
+        losses_a.push(par_a.train_step(&data_a.train_batch(), 0.01).unwrap()
+            .loss.to_bits());
+        if step == 3 {
+            par_a.snapshot(&data_a, fp).unwrap();
+        }
+    }
+    let hash_a = checkpoint::params_hash(
+        par_a.snapshot(&data_a, fp).unwrap().modules.iter()
+            .flat_map(|ms| ms.params.iter()));
+    par_a.shutdown().unwrap();
+
+    // crashing fleet: 4 steps, snapshot to disk, torn down
+    let mut par_b = coordinator::parallel::ParallelFr::spawn(
+        m.clone(), TrainConfig::default(), BackendKind::Native).unwrap();
+    let mut data_b = DataSource::for_manifest(&m, 11).unwrap();
+    let mut losses_b = Vec::new();
+    for _ in 0..4 {
+        losses_b.push(par_b.train_step(&data_b.train_batch(), 0.01).unwrap()
+            .loss.to_bits());
+    }
+    let ckpt = par_b.snapshot(&data_b, fp).unwrap();
+    assert_eq!(ckpt.meta.step, 4);
+    let path = checkpoint::checkpoint_path(&dir, ckpt.meta.step);
+    ckpt.write_atomic(&path).unwrap();
+    par_b.shutdown().unwrap();
+
+    // resume in a fresh fleet + fresh data source
+    let ckpt = Checkpoint::read(&path).unwrap();
+    ckpt.validate_matches(&m.config, m.k, "FR", fp).unwrap();
+    let mut par_c = coordinator::parallel::ParallelFr::resume(
+        m.clone(), TrainConfig::default(), BackendKind::Native, &ckpt).unwrap();
+    assert_eq!(par_c.step(), 4);
+    let mut data_c = DataSource::for_manifest(&m, 11).unwrap();
+    data_c.restore_rng_state(&ckpt.data_rng).unwrap();
+    for _ in 4..8 {
+        losses_b.push(par_c.train_step(&data_c.train_batch(), 0.01).unwrap()
+            .loss.to_bits());
+    }
+    let hash_c = checkpoint::params_hash(
+        par_c.snapshot(&data_c, fp).unwrap().modules.iter()
+            .flat_map(|ms| ms.params.iter()));
+    par_c.shutdown().unwrap();
+
+    assert_eq!(losses_a, losses_b, "resumed trajectory diverged");
+    assert_eq!(hash_a, hash_c, "resumed params differ from uninterrupted run");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Damaged checkpoint files must come back as *typed* errors — truncation,
+/// bitflips, foreign files, and future format versions each get their own
+/// variant (no silent half-resume, no stringly matching).
+#[test]
+fn corrupted_checkpoints_are_rejected_with_typed_errors() {
+    let dir = tmpdir("ckpt-corrupt");
+    let m = manifest_k(2);
+    let engine = Engine::native();
+    let mut fr = coordinator::fr::FrTrainer::new(load_stack(&m, &engine));
+    let mut data = DataSource::for_manifest(&m, 9).unwrap();
+    for _ in 0..3 {
+        fr.train_step(&data.train_batch(), 0.01).unwrap();
+    }
+    let ckpt = Checkpoint {
+        meta: Meta {
+            config: m.config.clone(), k: m.k, algo: "FR".into(), step: 3,
+            seed: 9, schedule: "const(0.01)".into(),
+        },
+        data_rng: data.rng_state(),
+        modules: fr.snapshot_modules().unwrap(),
+    };
+    let path = checkpoint::checkpoint_path(&dir, 3);
+    ckpt.write_atomic(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // a torn copy (atomic rename never produces one, but a backup tool can)
+    let trunc = dir.join("trunc.fckpt");
+    std::fs::write(&trunc, &bytes[..bytes.len() - 7]).unwrap();
+    match Checkpoint::read(&trunc) {
+        Err(CheckpointError::Truncated { .. }) => {}
+        other => panic!("truncated file: want Truncated, got {other:?}"),
+    }
+
+    // one flipped payload bit
+    let mut flipped = bytes.clone();
+    let n = flipped.len();
+    flipped[n - 1] ^= 0x40;
+    let flip = dir.join("flip.fckpt");
+    std::fs::write(&flip, &flipped).unwrap();
+    match Checkpoint::read(&flip) {
+        Err(CheckpointError::ChecksumMismatch { .. }) => {}
+        other => panic!("bitflip: want ChecksumMismatch, got {other:?}"),
+    }
+
+    // not a checkpoint at all
+    let mut alien = bytes.clone();
+    alien[..8].copy_from_slice(b"NOTCKPT\0");
+    let alien_path = dir.join("alien.fckpt");
+    std::fs::write(&alien_path, &alien).unwrap();
+    match Checkpoint::read(&alien_path) {
+        Err(CheckpointError::BadMagic { .. }) => {}
+        other => panic!("foreign file: want BadMagic, got {other:?}"),
+    }
+
+    // a future layout version this build must refuse to guess at
+    let mut vnext = bytes.clone();
+    vnext[8..12].copy_from_slice(&(checkpoint::VERSION + 1).to_le_bytes());
+    let vnext_path = dir.join("vnext.fckpt");
+    std::fs::write(&vnext_path, &vnext).unwrap();
+    match Checkpoint::read(&vnext_path) {
+        Err(CheckpointError::VersionMismatch { found, supported }) => {
+            assert_eq!(found, checkpoint::VERSION + 1);
+            assert_eq!(supported, checkpoint::VERSION);
+        }
+        other => panic!("future version: want VersionMismatch, got {other:?}"),
+    }
+
+    // and a missing path is NotFound, not a panic or Io guess
+    match Checkpoint::read(&dir.join("nope.fckpt")) {
+        Err(CheckpointError::NotFound { .. }) => {}
+        other => panic!("missing file: want NotFound, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming under a different LR schedule would silently fork the
+/// trajectory — the end-to-end resume path must refuse the identity
+/// mismatch before any training happens.
+#[test]
+fn resume_refuses_wrong_schedule_fingerprint() {
+    let dir = tmpdir("resume-mismatch");
+    Experiment::new("mlp_tiny").k(2).steps(4).seed(1)
+        .schedule(ScheduleSpec::Constant).eval_every(4).eval_batches(1)
+        .checkpoint_dir(&dir).checkpoint_every(2)
+        .run().unwrap();
+    let err = Experiment::new("mlp_tiny").k(2).steps(8).seed(1)
+        .schedule(ScheduleSpec::InverseT { power: 0.5 })
+        .eval_every(4).eval_batches(1)
+        .resume_from(&dir)
+        .run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("does not match"),
+            "want identity-mismatch rejection, got: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Dropping a live fleet (early return, panic unwind, test teardown) must
+/// close the channels and join the workers instead of leaking threads or
+/// hanging — with and without completed steps.
+#[test]
+fn dropping_live_fleet_joins_workers_without_hang() {
+    let m = manifest_k(4);
+    let mut par = coordinator::parallel::ParallelFr::spawn(
+        m.clone(), TrainConfig::default(), BackendKind::Native).unwrap();
+    let mut data = DataSource::for_manifest(&m, 2).unwrap();
+    par.train_step(&data.train_batch(), 0.01).unwrap();
+    par.train_step(&data.train_batch(), 0.01).unwrap();
+    drop(par); // no shutdown(): Drop does the orderly teardown
+
+    let par2 = coordinator::parallel::ParallelFr::spawn(
+        m, TrainConfig::default(), BackendKind::Native).unwrap();
+    drop(par2); // never stepped: workers are idle in cmd recv
 }

@@ -1,0 +1,170 @@
+//! Crash-safety matrix: deterministic fault injection × checkpoint/resume.
+//!
+//! Gated behind the `fault-inject` cargo feature (see `[[test]]` in
+//! Cargo.toml): run with `cargo test --features fault-inject --test faults`.
+//!
+//! The keystone contract under test: a threaded FR run killed mid-flight —
+//! any worker, any phase (forward / backward / optimizer write-back), by
+//! panic or error — and resumed from its latest checkpoint must produce a
+//! loss trajectory and final parameter hash **bit-identical** to a run
+//! that never crashed, at every thread count. A worker that *stalls*
+//! instead of dying must surface as a bounded, attributed diagnosis rather
+//! than hanging the leader.
+
+use features_replay::checkpoint;
+use features_replay::experiment::{Experiment, ParallelSession, ScheduleSpec};
+use features_replay::testing::faults::FaultPlan;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fr-faults-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const STEPS: usize = 6;
+const FP: &str = "const(0.01)"; // ScheduleSpec::Constant at the default lr
+
+fn base_exp(threads: usize) -> Experiment {
+    Experiment::new("transformer_tiny").k(2).steps(STEPS).seed(5)
+        .threads(threads)
+        .schedule(ScheduleSpec::Constant)
+        .eval_every(100).eval_batches(1)
+        .checkpoint_every(2)
+}
+
+/// Drive the fleet exactly like `frctl parallel` does: step, schedule,
+/// checkpoint cadence. Returns the loss bits of every step it completed.
+fn drive(ps: &mut ParallelSession, steps: usize) -> anyhow::Result<Vec<u32>> {
+    let from = ps.par.step();
+    let mut losses = Vec::new();
+    for step in from..steps {
+        let b = ps.data.train_batch();
+        let lr = ps.lr_at(step);
+        let s = ps.par.train_step(&b, lr)?;
+        losses.push(s.loss.to_bits());
+        if ps.should_checkpoint(step + 1) {
+            ps.write_checkpoint()?;
+        }
+    }
+    Ok(losses)
+}
+
+fn fleet_params_hash(ps: &mut ParallelSession) -> u64 {
+    let ckpt = ps.par.snapshot(&ps.data, FP).unwrap();
+    checkpoint::params_hash(ckpt.modules.iter().flat_map(|m| m.params.iter()))
+}
+
+/// Reference run: no faults, no checkpoint dir (pure channel path).
+fn uninterrupted(threads: usize) -> (Vec<u32>, u64) {
+    let mut ps = base_exp(threads).spawn_parallel().unwrap();
+    let losses = drive(&mut ps, STEPS).unwrap();
+    let hash = fleet_params_hash(&mut ps);
+    ps.par.shutdown().unwrap();
+    (losses, hash)
+}
+
+/// Crash a checkpointing run with `fault`, then resume from the latest
+/// checkpoint and finish. Returns (step resumed from, resumed-leg loss
+/// bits, final params hash, rendered crash error).
+fn crash_and_resume(threads: usize, fault: &str) -> (usize, Vec<u32>, u64, String) {
+    let dir = tmpdir(&format!("t{threads}-{}", fault.replace(':', "-")));
+    let plan = FaultPlan::parse(fault).unwrap();
+
+    let mut ps = base_exp(threads).checkpoint_dir(&dir).fault(plan)
+        .spawn_parallel().unwrap();
+    let err = match drive(&mut ps, STEPS) {
+        Ok(_) => panic!("fault {fault} never fired"),
+        Err(e) => format!("{e:#}"),
+    };
+    drop(ps); // crashed fleet: Drop must tear down without hanging
+
+    let mut ps2 = base_exp(threads).checkpoint_dir(&dir).resume_from(&dir)
+        .spawn_parallel().unwrap();
+    let resumed_from = ps2.par.step();
+    let tail = drive(&mut ps2, STEPS).unwrap();
+    let hash = fleet_params_hash(&mut ps2);
+    ps2.par.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    (resumed_from, tail, hash, err)
+}
+
+fn assert_resume_matches(fault: &str, expect_from: usize,
+                         base: &(Vec<u32>, u64),
+                         got: &(usize, Vec<u32>, u64, String)) {
+    let (base_losses, base_hash) = base;
+    let (from, tail, hash, err) = got;
+    assert!(err.contains("injected fault"),
+            "{fault}: crash error lost the root cause: {err}");
+    assert_eq!(*from, expect_from, "{fault}: resumed from the wrong step");
+    assert_eq!(&base_losses[*from..], &tail[..],
+               "{fault}: resumed loss trajectory diverged");
+    assert_eq!(base_hash, hash, "{fault}: resumed params hash diverged");
+}
+
+/// The full crash matrix at one thread count: every phase × first and last
+/// module × both failure kinds, including a crash *not* aligned with the
+/// checkpoint cadence (resumes from an earlier step and replays more).
+#[test]
+fn crash_resume_matrix_is_bit_identical() {
+    let base = uninterrupted(2);
+    // checkpoints land at steps 2 and 4; faults at worker-step 4 resume
+    // from 4, the step-3 fault resumes from 2 and replays two steps.
+    for (fault, expect_from) in [
+        ("0:4:fwd:panic", 4),
+        ("1:4:fwd:error", 4),
+        ("0:4:bwd:error", 4),
+        ("1:4:bwd:panic", 4),
+        ("0:4:optwb:panic", 4),
+        ("1:4:optwb:error", 4),
+        ("1:3:bwd:panic", 2),
+    ] {
+        let got = crash_and_resume(2, fault);
+        assert_resume_matches(fault, expect_from, &base, &got);
+    }
+}
+
+/// The keystone at every thread count: 1 (exact single-thread reference),
+/// 2, and 0 = auto (all available parallelism, split across workers) — and
+/// the final weights agree bitwise *across* thread counts too (PR 5's
+/// kernel-determinism contract extended through crash/resume).
+#[test]
+fn crash_resume_is_bit_identical_at_every_thread_count() {
+    let mut hashes = Vec::new();
+    for threads in [1usize, 2, 0] {
+        let base = uninterrupted(threads);
+        let got = crash_and_resume(threads, "1:4:bwd:panic");
+        assert_resume_matches("1:4:bwd:panic", 4, &base, &got);
+        hashes.push(base.1);
+    }
+    assert!(hashes.windows(2).all(|w| w[0] == w[1]),
+            "final params differ across thread counts: {hashes:?}");
+}
+
+/// A silent worker (stall, not death) must become a *bounded* fleet
+/// failure naming the phase and the unresponsive worker — not an
+/// indefinite leader hang — and leave the fleet cleanly unusable.
+#[test]
+fn stalled_worker_surfaces_bounded_attributed_failure() {
+    let plan = FaultPlan::parse("0:2:bwd:stall:5000").unwrap();
+    let mut ps = Experiment::new("mlp_tiny").k(2).steps(STEPS).seed(1)
+        .schedule(ScheduleSpec::Constant).eval_every(100).eval_batches(1)
+        .recv_timeout_ms(150).fault(plan)
+        .spawn_parallel().unwrap();
+    let t0 = std::time::Instant::now();
+    let err = drive(&mut ps, STEPS).unwrap_err();
+    let waited = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("stalled"), "want a stall diagnosis, got: {msg}");
+    assert!(msg.contains("train step"), "stall should name the phase: {msg}");
+    assert!(msg.contains("worker 0"), "stall should name the worker: {msg}");
+    // two 150 ms windows + step time, never the 5 s stall
+    assert!(waited < std::time::Duration::from_secs(4),
+            "leader waited {waited:?} — recv_timeout not honored");
+    // the fleet is detached: later calls fail fast instead of hanging
+    let b = ps.data.train_batch();
+    let err2 = ps.par.train_step(&b, 0.01).unwrap_err();
+    assert!(format!("{err2:#}").contains("shut down"), "{err2:#}");
+    drop(ps); // detached workers: Drop is a no-op, must not hang
+}

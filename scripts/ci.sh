@@ -48,6 +48,36 @@ cargo test -q
 echo "== properties: target registered (runs under tier-1 cargo test) =="
 cargo test -q --test properties -- --list >/dev/null
 
+# Crash-safety suite: the fault-injection hooks are compiled only under
+# --features fault-inject (tier-1 above carries none of that plumbing), and
+# tests/faults.rs is a required-features target, so it needs an explicit
+# invocation. Covers the crash-at-phase × worker resume matrix (bit-identical
+# trajectories at threads 1/2/max) and the bounded stall diagnosis.
+echo "== fault-inject: crash/resume matrix (cargo test --features fault-inject --test faults) =="
+cargo test -q --features fault-inject --test faults
+
+# Same story end-to-end through the frctl surface: a fault-injected run must
+# die with exit 3 (training-time failure, not config error) and print the
+# resume hint; resuming from the checkpoint dir must finish clean. Dev
+# profile on purpose — it shares the build cache with the test above.
+echo "== fault-inject: frctl kill-then-resume smoke =="
+CKPT_DIR="$(mktemp -d)"
+set +e
+cargo run -q --features fault-inject --bin frctl -- parallel \
+    --model mlp_tiny --k 2 --steps 8 --threads 2 --seed 7 \
+    --checkpoint-dir "$CKPT_DIR" --checkpoint-every 2 --fault 1:5:bwd:panic
+rc=$?
+set -e
+if [ "$rc" -ne 3 ]; then
+    echo "frctl faulted run: expected exit 3, got $rc" >&2
+    exit 1
+fi
+ls "$CKPT_DIR"/ckpt-*.fckpt >/dev/null  # the crash left checkpoints behind
+cargo run -q --features fault-inject --bin frctl -- parallel \
+    --model mlp_tiny --k 2 --steps 8 --threads 2 --seed 7 \
+    --checkpoint-dir "$CKPT_DIR" --resume "$CKPT_DIR"
+rm -rf "$CKPT_DIR"
+
 # Numpy mirrors: independent float32 re-derivations of the partition
 # schemes, runnable without cargo. Skip cleanly where python3/numpy are
 # absent (the Rust parity tests still cover the claim).
