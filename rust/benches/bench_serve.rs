@@ -1,0 +1,16 @@
+//! End-to-end serving benchmark: an in-process `frctl serve` on an
+//! ephemeral port, closed-loop keep-alive clients at concurrency {1, 4},
+//! exact p50/p95/p99 request latency + requests/sec written to
+//! `BENCH_serve.json` at the repo root (per-machine artifact — generated,
+//! not committed).
+//!
+//! Run with `cargo bench --bench bench_serve` (FR_BENCH_QUICK=1 for a
+//! fast pass) or `scripts/ci.sh --bench`.
+
+use std::path::PathBuf;
+
+fn main() {
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..").join("BENCH_serve.json");
+    features_replay::bench::serve::run_serve_bench(&out).unwrap();
+}

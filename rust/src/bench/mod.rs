@@ -5,8 +5,11 @@
 //!
 //! [`kernels`] is the thread-count sweep over the pool-partitioned native
 //! kernels (`BENCH_kernels.json`, also runnable via `scripts/ci.sh --bench`).
+//! [`serve`] drives the `frctl serve` HTTP stack end to end over real
+//! sockets (`BENCH_serve.json`, exact p50/p95/p99 + requests/sec).
 
 pub mod kernels;
+pub mod serve;
 
 use std::path::Path;
 use std::time::Instant;

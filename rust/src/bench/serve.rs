@@ -1,0 +1,176 @@
+//! Serving benchmark: closed-loop clients against an in-process
+//! [`crate::serve::Server`], reporting exact p50/p95/p99 request latency
+//! and requests/sec into `BENCH_serve.json`.
+//!
+//! Unlike the `/v1/metrics` histograms (log-bucketed, ~2x resolution),
+//! the bench keeps every raw latency sample and sorts, so the JSON tail
+//! numbers are exact. Scenarios sweep client concurrency {1, 4}: with one
+//! client the batcher degenerates to batch=1 (pure per-request latency);
+//! with four, micro-batching amortizes the fixed-batch forward pass.
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::{summarize, write_bench_json, BenchResult};
+use crate::serve::http::MiniClient;
+use crate::serve::{Server, ServeConfig};
+use crate::util::json::{arr, num, obj, s, Json};
+
+const MODEL: &str = "mlp_tiny";
+
+/// Deterministic full-length predict body for `mlp_tiny` (3072 features).
+fn predict_body(sample_len: usize, i: usize) -> Vec<u8> {
+    let mut body = String::with_capacity(sample_len * 8 + 16);
+    body.push_str("{\"input\":[");
+    for j in 0..sample_len {
+        if j > 0 {
+            body.push(',');
+        }
+        let v = (((i * 31 + j * 7) % 255) as f64) / 255.0 - 0.5;
+        body.push_str(&format!("{v}"));
+    }
+    body.push_str("]}");
+    body.into_bytes()
+}
+
+fn wait_healthy(addr: &str) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if let Ok((200, _)) = MiniClient::one_shot(addr, "GET", "/healthz", b"") {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    bail!("server at {addr} did not become healthy within 10 s")
+}
+
+/// `clients` keep-alive connections, each issuing `per_client` sequential
+/// predicts; returns (per-request latencies in ms, wall-clock seconds).
+fn run_scenario(addr: &str, sample_len: usize, clients: usize,
+                per_client: usize) -> Result<(Vec<f64>, f64)> {
+    let addr = addr.to_string();
+    let wall0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<Vec<f64>> {
+                let mut client = MiniClient::connect(&addr)
+                    .context("connecting bench client")?;
+                let mut lat = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let body = predict_body(sample_len, c * per_client + i);
+                    let t0 = Instant::now();
+                    let (status, resp) = client.request("POST", "/v1/predict", &body)?;
+                    lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                    if status != 200 {
+                        bail!("predict returned {status}: {}",
+                              String::from_utf8_lossy(&resp));
+                    }
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        all.extend(h.join().expect("bench client panicked")?);
+    }
+    Ok((all, wall0.elapsed().as_secs_f64()))
+}
+
+/// Exact quantile from raw samples: `sorted[ceil(q*n)-1]`.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Stand up a server on an ephemeral port, sweep client counts, write
+/// `BENCH_serve.json` (per-machine artifact — not committed).
+pub fn run_serve_bench(out: &Path) -> Result<()> {
+    let quick = std::env::var("FR_BENCH_QUICK").is_ok();
+    let per_client = if quick { 20 } else { 200 };
+
+    let manifest = crate::experiment::Experiment::new(MODEL).k(2).manifest()?;
+    let sample_len = crate::runtime::Packer::new(&manifest)?.sample_len();
+
+    let mut cfg = ServeConfig::new(MODEL);
+    cfg.addr = "127.0.0.1:0".to_string();
+    cfg.k = 2;
+    cfg.max_batch = 8;
+    cfg.max_wait_ms = 2;
+    let server = Server::bind(cfg)?;
+    let addr = server.local_addr().to_string();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    wait_healthy(&addr)?;
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut scenarios: Vec<Json> = Vec::new();
+    for clients in [1usize, 4] {
+        let name = format!("predict/{MODEL}/clients={clients}");
+        let (mut lat, wall_s) = run_scenario(&addr, sample_len, clients, per_client)?;
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let total = lat.len();
+        let rps = total as f64 / wall_s;
+        let (p50, p95, p99) = (exact_quantile(&lat, 0.50),
+                               exact_quantile(&lat, 0.95),
+                               exact_quantile(&lat, 0.99));
+        println!("{name}: {total} requests in {wall_s:.2} s -> {rps:.1} req/s  \
+                  p50 {p50:.2} ms  p95 {p95:.2} ms  p99 {p99:.2} ms");
+        results.push(summarize(&name, &lat));
+        scenarios.push(obj(vec![
+            ("name", s(&name)),
+            ("clients", num(clients as f64)),
+            ("requests", num(total as f64)),
+            ("wall_s", num(wall_s)),
+            ("rps", num(rps)),
+            ("p50_ms", num(p50)),
+            ("p95_ms", num(p95)),
+            ("p99_ms", num(p99)),
+        ]));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().expect("server thread panicked")?;
+
+    write_bench_json(out, "serve", &results, vec![
+        ("model", s(MODEL)),
+        ("max_batch", num(8.0)),
+        ("max_wait_ms", num(2.0)),
+        ("scenarios", arr(scenarios)),
+    ])?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+// run_serve_bench exercises real sockets end to end; keep a cheap unit
+// test on the quantile math only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_quantiles_pick_expected_ranks() {
+        let sorted: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(exact_quantile(&sorted, 0.50), 50.0);
+        assert_eq!(exact_quantile(&sorted, 0.95), 95.0);
+        assert_eq!(exact_quantile(&sorted, 0.99), 99.0);
+        assert_eq!(exact_quantile(&sorted, 1.0), 100.0);
+        assert_eq!(exact_quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn predict_body_is_valid_json_of_sample_len() {
+        let body = predict_body(5, 3);
+        let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let arr = json.get("input").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 5);
+    }
+}

@@ -364,6 +364,38 @@ impl Session {
     pub fn opts(&self) -> &RunOptions {
         &self.opts
     }
+
+    /// Run a micro-batch of up to `manifest.batch()` samples through the
+    /// resident-parameter module chain and return each sample's logits.
+    ///
+    /// The compiled plans fix the batch size, so the samples are packed
+    /// into one full-size batch (unused rows zero-filled) and the first
+    /// `samples.len()` logit rows sliced back out. Because every native op
+    /// is per-sample independent along the batch axis, each returned row
+    /// is bitwise identical to running that sample alone — the property
+    /// the `frctl serve` batcher coalesces requests under.
+    pub fn predict_batch(&self, samples: &[crate::runtime::Sample])
+                         -> Result<Vec<Vec<f32>>> {
+        let packer = crate::runtime::Packer::new(&self.manifest)?;
+        let input = packer.pack(samples)?;
+        let hs = self.trainer.stack().forward_chain(&input)?;
+        let logits = hs.last().context("empty module chain")?;
+        Ok(packer.unpack(logits, samples.len()))
+    }
+
+    /// Load trained parameters from a checkpoint into this session's
+    /// module stack (the serving warm-start path). The checkpoint must
+    /// come from the same model config, K and algorithm; unlike a resume,
+    /// the LR-schedule position is irrelevant — only the weights matter —
+    /// so the schedule fingerprint is not checked.
+    pub fn restore_params(&mut self, path: &std::path::Path) -> Result<usize> {
+        let resolved = checkpoint::resolve_resume(path)?;
+        let ckpt = Checkpoint::read(&resolved)?;
+        ckpt.validate_matches(&self.manifest.config, self.manifest.k,
+                              self.trainer.name(), &ckpt.meta.schedule)?;
+        self.trainer.restore_modules(&ckpt.modules)?;
+        Ok(ckpt.meta.step)
+    }
 }
 
 /// [`Experiment::build_fr`]'s output: the concrete FR trainer for probes.

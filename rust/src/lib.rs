@@ -35,6 +35,7 @@ pub mod experiment;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 

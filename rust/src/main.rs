@@ -10,6 +10,7 @@
 //! sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
 //! memory   --model <cfg>             Fig 5 / Table 1 memory model
 //! parallel --model <cfg> --k <K>     threaded K-worker FR deployment
+//! serve    --model <cfg> --addr <ip:port>   HTTP inference + train jobs
 //! ```
 //!
 //! Every subcommand goes through the `Experiment` builder: the model
@@ -36,7 +37,8 @@ use features_replay::coordinator::{memory, parse_algo, sigma, Algo};
 use features_replay::experiment::{Experiment, ModelRegistry};
 use features_replay::metrics::TablePrinter;
 use features_replay::runtime::{BackendKind, Manifest};
-use features_replay::util::cli::Args;
+use features_replay::serve::{ServeConfig, Server};
+use features_replay::util::cli::{Args, CliError};
 
 /// Setup/configuration problem: nothing was trained.
 const EXIT_CONFIG: i32 = 2;
@@ -88,7 +90,14 @@ fn opt_specs() -> Vec<(&'static str, &'static str)> {
         ("checkpoint-dir", "write ckpt-<step>.fckpt files into this directory \
                             (train/parallel)"),
         ("checkpoint-every", "checkpoint cadence in steps (default 25)"),
-        ("resume", "resume from a checkpoint file, or a directory's latest"),
+        ("resume", "resume from a checkpoint file, or a directory's latest \
+                    (serve: warm-start the served weights)"),
+        ("addr", "serve bind address (default 127.0.0.1:8484; port 0 = ephemeral)"),
+        ("max-batch", "serve micro-batch flush size (default 0 = model batch \
+                       capacity)"),
+        ("max-wait-ms", "serve micro-batch hold time in ms (default 5)"),
+        ("jobs-dir", "serve train-job metrics/checkpoint directory (default \
+                      under the system temp dir)"),
     ];
     #[cfg(feature = "fault-inject")]
     opts.push(("fault", "inject a deterministic fault into the parallel fleet: \
@@ -106,7 +115,7 @@ fn usage() -> String {
     let schema = Args::parse(&[], &opt_specs(), FLAGS).unwrap();
     format!(
         "frctl — Features Replay (NIPS'18) training coordinator\n\n\
-         usage: frctl <models|info|train|compare|sigma|memory|parallel> \
+         usage: frctl <models|info|train|compare|sigma|memory|parallel|serve> \
          [options]\n\n{}",
         schema.help()
     )
@@ -124,7 +133,7 @@ fn main() {
 
 fn run() -> CmdResult {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let setup = |e: String| config_err(anyhow!(e));
+    let setup = |e: CliError| config_err(anyhow!("{e} (see `frctl --help`)"));
     let args = Args::parse(&raw, &opt_specs(), FLAGS).map_err(setup)?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{}", usage());
@@ -180,8 +189,31 @@ fn run() -> CmdResult {
         "sigma" => cmd_sigma(exp),
         "memory" => cmd_memory(exp, &model).map_err(config_err),
         "parallel" => cmd_parallel(exp),
+        "serve" => {
+            let mut cfg = ServeConfig::new(&model);
+            if let Some(addr) = args.get("addr") {
+                cfg.addr = addr.to_string();
+            }
+            cfg.k = k;
+            cfg.threads = threads;
+            cfg.seed = seed;
+            cfg.max_batch = args.usize_or("max-batch", 0).map_err(setup)?;
+            cfg.max_wait_ms = args.u64_or("max-wait-ms", 5).map_err(setup)?;
+            if let Some(dir) = args.get("jobs-dir") {
+                cfg.jobs_dir = dir.into();
+            }
+            cfg.resume = args.get("resume").map(Into::into);
+            cmd_serve(cfg)
+        }
         other => Err(config_err(anyhow!("unknown subcommand {other:?}\n\n{}", usage()))),
     }
+}
+
+/// Bind phase failures (bad model, bad address, bad warm-start checkpoint)
+/// are configuration errors; once listening, failures are runtime errors.
+fn cmd_serve(cfg: ServeConfig) -> CmdResult {
+    let server = Server::bind(cfg).map_err(config_err)?;
+    server.run().map_err(training_err)
 }
 
 fn cmd_models() -> Result<()> {

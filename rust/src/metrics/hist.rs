@@ -1,0 +1,195 @@
+//! Lock-free latency histograms + monotonic counters, shared between the
+//! serving layer (`/v1/metrics`) and training jobs (per-step timings).
+//!
+//! Buckets are power-of-two microseconds, so `record` is an atomic
+//! increment and quantiles are read without locking at bucket resolution
+//! (~2x) — good enough for p50/p95/p99 tail tracking. Exact percentiles
+//! (the bench harness) keep raw samples instead; see
+//! [`crate::bench::serve`]. Snapshots serialize through the one
+//! [`crate::util::json`] encoder, same as every other report in the repo.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{num, obj, Json};
+
+/// Bucket count: bucket `i` holds durations in `[2^(i-1), 2^i)` µs
+/// (bucket 0 is `< 1 µs`), so 40 buckets reach ~9 minutes.
+const BUCKETS: usize = 40;
+
+/// A monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram over microsecond durations.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(micros: u64) -> usize {
+        // 0 µs -> bucket 0; otherwise 1 + floor(log2(micros)), capped
+        ((64 - micros.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record_micros(&self, micros: u64) {
+        self.buckets[Self::bucket_index(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+        self.max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, elapsed: std::time::Duration) {
+        self.record_micros(elapsed.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        self.record_micros((ms.max(0.0) * 1e3) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_micros.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Quantile estimate in ms: the upper edge of the first bucket whose
+    /// cumulative count reaches `q * total` (within ~2x of exact).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let want = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= want {
+                // bucket i upper edge is 2^i µs (bucket 0: < 1 µs)
+                let upper_micros = if i == 0 { 1u64 } else { 1u64 << i };
+                return upper_micros as f64 / 1e3;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// One JSON object with the fields `/v1/metrics` publishes per series.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count() as f64)),
+            ("mean_ms", num(self.mean_ms())),
+            ("p50_ms", num(self.quantile_ms(0.50))),
+            ("p95_ms", num(self.quantile_ms(0.95))),
+            ("p99_ms", num(self.quantile_ms(0.99))),
+            ("max_ms", num(self.max_ms())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_bracket_recorded_values() {
+        let h = Histogram::new();
+        // 90 fast (1 ms) + 10 slow (100 ms)
+        for _ in 0..90 {
+            h.record_micros(1_000);
+        }
+        for _ in 0..10 {
+            h.record_micros(100_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        assert!((1.0..=2.048).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile_ms(0.99);
+        assert!((100.0..=131.072).contains(&p99), "p99 {p99}");
+        assert_eq!(h.max_ms(), 100.0);
+        let mean = h.mean_ms();
+        assert!((10.8..11.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn bucket_edges_are_monotone() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_has_stable_fields() {
+        let h = Histogram::new();
+        h.record_ms(2.5);
+        let j = h.to_json();
+        for key in ["count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(1));
+    }
+}

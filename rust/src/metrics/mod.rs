@@ -1,5 +1,10 @@
 //! Training metrics: loss/accuracy computation, curve recording, CSV and
-//! JSON reports (what the experiment harnesses print and save).
+//! JSON reports (what the experiment harnesses print and save), plus the
+//! [`hist`] latency histograms/counters the serving layer and background
+//! train jobs share. All JSON goes through the one `util::json` encoder
+//! (string escaping, stable key order) — no hand-built JSON strings.
+
+pub mod hist;
 
 use std::io::Write;
 use std::path::Path;

@@ -9,6 +9,8 @@
 //! - [`pool`]: dependency-free scoped worker pool the native kernels
 //!   partition over — output rows, per-image slabs, or whole sequence
 //!   groups (bitwise-identical at every thread count)
+//! - [`predict`]: fixed-batch inference packing (validate, zero-pad,
+//!   slice per-sample logits) on top of the resident-parameter stack
 //! - `pjrt` (cargo feature `pjrt`): PJRT client + compiled-HLO backend
 //! - [`engine`]: per-worker backend handle
 //! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers
@@ -20,6 +22,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod pool;
+pub mod predict;
 pub mod spec;
 pub mod tensor;
 
@@ -28,5 +31,6 @@ pub use engine::Engine;
 pub use module::{ModuleRuntime, SynthRuntime};
 pub use native::{NativeBackend, NativeConvSpec, NativeLmSpec, NativeMlpSpec};
 pub use pool::Pool;
+pub use predict::{Packer, PredictError, Sample};
 pub use spec::{Manifest, ModuleSpec, NativeOp, OpSig, SynthSpec};
 pub use tensor::{copy_metrics, DType, Tensor};

@@ -1,0 +1,336 @@
+//! Batched predict entry on the resident-parameter session.
+//!
+//! Native plans bake the manifest's batch size B into every kernel and
+//! [`crate::runtime::module::ModuleRuntime::forward`] enforces the exact
+//! input shape, so inference packs up to B samples into one fixed-shape
+//! batch, zero-fills the unused rows, runs the module chain once, and
+//! slices the first N logit rows back out. Every native op is per-sample
+//! independent along the batch axis and the pool partition is bitwise
+//! invariant at every thread count (the parity properties in
+//! `tests/properties.rs`), so a sample's logits are bitwise identical
+//! whether it shares the batch with 0 or B-1 neighbours — the contract the
+//! serve-layer batcher and its coalescing integration test rely on.
+//!
+//! Validation happens here, before anything touches a kernel: the embed
+//! kernel asserts tokens are in-vocab, so an out-of-range token must be a
+//! typed [`PredictError`] at the API boundary, never a panic in the fleet.
+
+use std::fmt;
+
+use crate::runtime::spec::Manifest;
+use crate::runtime::tensor::{DType, Tensor};
+
+/// One inference input: a flat f32 feature vector (image models) or an i32
+/// token window (the char LM). Length must match the manifest's per-sample
+/// input size exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sample {
+    F32(Vec<f32>),
+    Tokens(Vec<i32>),
+}
+
+/// Typed predict-input rejections — the serve layer maps every variant to
+/// HTTP 400 with the message as the body detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PredictError {
+    /// The model wants the other input kind (f32 features vs i32 tokens).
+    WrongKind { expects: &'static str },
+    /// Sample length does not match the manifest's per-sample input size.
+    WrongLen { expects: usize, got: usize },
+    /// An f32 feature is NaN or infinite.
+    NonFinite { index: usize },
+    /// A token indexes past the embedding table.
+    TokenOutOfRange { index: usize, token: i32, vocab: usize },
+    /// More samples than the compiled batch capacity (the batcher never
+    /// produces this; direct callers can).
+    TooManySamples { capacity: usize, got: usize },
+    /// Zero samples.
+    Empty,
+}
+
+impl fmt::Display for PredictError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PredictError::WrongKind { expects } => {
+                write!(f, "this model expects {expects}")
+            }
+            PredictError::WrongLen { expects, got } => {
+                write!(f, "sample has {got} values, model expects {expects}")
+            }
+            PredictError::NonFinite { index } => {
+                write!(f, "input[{index}] is not a finite number")
+            }
+            PredictError::TokenOutOfRange { index, token, vocab } => {
+                write!(f, "tokens[{index}] = {token} outside vocab 0..{vocab}")
+            }
+            PredictError::TooManySamples { capacity, got } => {
+                write!(f, "{got} samples exceed the batch capacity {capacity}")
+            }
+            PredictError::Empty => write!(f, "no samples"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// Validates samples against a manifest's input contract and packs them
+/// into the fixed-batch tensor the compiled module plans expect.
+#[derive(Clone, Debug)]
+pub struct Packer {
+    in_shape: Vec<usize>,
+    in_dtype: DType,
+    capacity: usize,
+    sample_len: usize,
+    logits_per_sample: usize,
+    vocab: usize,
+}
+
+impl Packer {
+    pub fn new(m: &Manifest) -> Result<Packer, PredictError> {
+        let capacity = m.batch().max(1);
+        let sample_len: usize = m.input_shape.iter().skip(1).product();
+        let logits_total: usize = m.logits_shape.iter().product();
+        // logits rows are laid out batch-major for every registered model
+        // ([B, C] classifiers, [B*T, V] for the char LM), so a sample's
+        // logits are one contiguous run of logits_total / B values
+        Ok(Packer {
+            in_shape: m.input_shape.clone(),
+            in_dtype: m.input_dtype,
+            capacity,
+            sample_len,
+            logits_per_sample: logits_total / capacity,
+            vocab: m.num_classes,
+        })
+    }
+
+    /// Max samples one forward pass carries (the manifest batch size).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Values per sample (flattened input size, or tokens per window).
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    /// Logit values returned per sample.
+    pub fn logits_per_sample(&self) -> usize {
+        self.logits_per_sample
+    }
+
+    /// What `POST /v1/predict` should name the input field.
+    pub fn input_kind(&self) -> &'static str {
+        match self.in_dtype {
+            DType::F32 => "input",
+            DType::I32 => "tokens",
+        }
+    }
+
+    /// Full validation of one sample: kind, length, finiteness / vocab
+    /// range. Called at the API boundary so nothing invalid reaches a
+    /// kernel (the embed kernel asserts on out-of-vocab tokens).
+    pub fn validate(&self, sample: &Sample) -> Result<(), PredictError> {
+        match (sample, self.in_dtype) {
+            (Sample::F32(v), DType::F32) => {
+                if v.len() != self.sample_len {
+                    return Err(PredictError::WrongLen {
+                        expects: self.sample_len,
+                        got: v.len(),
+                    });
+                }
+                for (i, x) in v.iter().enumerate() {
+                    if !x.is_finite() {
+                        return Err(PredictError::NonFinite { index: i });
+                    }
+                }
+                Ok(())
+            }
+            (Sample::Tokens(v), DType::I32) => {
+                if v.len() != self.sample_len {
+                    return Err(PredictError::WrongLen {
+                        expects: self.sample_len,
+                        got: v.len(),
+                    });
+                }
+                for (i, &t) in v.iter().enumerate() {
+                    if t < 0 || t as usize >= self.vocab {
+                        return Err(PredictError::TokenOutOfRange {
+                            index: i,
+                            token: t,
+                            vocab: self.vocab,
+                        });
+                    }
+                }
+                Ok(())
+            }
+            (_, DType::F32) => Err(PredictError::WrongKind {
+                expects: "a flat f32 feature vector (\"input\")",
+            }),
+            (_, DType::I32) => Err(PredictError::WrongKind {
+                expects: "an i32 token window (\"tokens\")",
+            }),
+        }
+    }
+
+    /// Validate and pack 1..=capacity samples into the fixed `[B, ...]`
+    /// input tensor, zero-filling unused rows (pad content is irrelevant:
+    /// every op is per-sample independent along the batch axis).
+    pub fn pack(&self, samples: &[Sample]) -> Result<Tensor, PredictError> {
+        if samples.is_empty() {
+            return Err(PredictError::Empty);
+        }
+        if samples.len() > self.capacity {
+            return Err(PredictError::TooManySamples {
+                capacity: self.capacity,
+                got: samples.len(),
+            });
+        }
+        for s in samples {
+            self.validate(s)?;
+        }
+        let total = self.capacity * self.sample_len;
+        match self.in_dtype {
+            DType::F32 => {
+                let mut data = vec![0.0f32; total];
+                for (i, s) in samples.iter().enumerate() {
+                    if let Sample::F32(v) = s {
+                        data[i * self.sample_len..(i + 1) * self.sample_len]
+                            .copy_from_slice(v);
+                    }
+                }
+                Ok(Tensor::from_f32(self.in_shape.clone(), data)
+                    .expect("packed batch matches the manifest input shape"))
+            }
+            DType::I32 => {
+                let mut data = vec![0i32; total];
+                for (i, s) in samples.iter().enumerate() {
+                    if let Sample::Tokens(v) = s {
+                        data[i * self.sample_len..(i + 1) * self.sample_len]
+                            .copy_from_slice(v);
+                    }
+                }
+                Ok(Tensor::from_i32(self.in_shape.clone(), data)
+                    .expect("packed batch matches the manifest input shape"))
+            }
+        }
+    }
+
+    /// Slice the first `n` per-sample logit runs back out of the
+    /// full-batch logits tensor.
+    pub fn unpack(&self, logits: &Tensor, n: usize) -> Vec<Vec<f32>> {
+        let flat = logits.f32s();
+        (0..n.min(self.capacity))
+            .map(|i| flat[i * self.logits_per_sample..(i + 1) * self.logits_per_sample]
+                .to_vec())
+            .collect()
+    }
+
+    /// A deterministic in-range sample for smoke tests and the serving
+    /// bench: varied per `i` so distinct samples produce distinct logits.
+    pub fn synthetic_sample(&self, i: usize) -> Sample {
+        match self.in_dtype {
+            DType::F32 => Sample::F32(
+                (0..self.sample_len)
+                    .map(|j| (((i * 31 + j * 7) % 255) as f32) / 255.0 - 0.5)
+                    .collect(),
+            ),
+            DType::I32 => Sample::Tokens(
+                (0..self.sample_len)
+                    .map(|j| ((i * 13 + j * 5) % self.vocab) as i32)
+                    .collect(),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp_like_packer() -> Packer {
+        Packer {
+            in_shape: vec![4, 6],
+            in_dtype: DType::F32,
+            capacity: 4,
+            sample_len: 6,
+            logits_per_sample: 3,
+            vocab: 3,
+        }
+    }
+
+    fn lm_like_packer() -> Packer {
+        Packer {
+            in_shape: vec![2, 5],
+            in_dtype: DType::I32,
+            capacity: 2,
+            sample_len: 5,
+            logits_per_sample: 5 * 7,
+            vocab: 7,
+        }
+    }
+
+    #[test]
+    fn packs_and_zero_pads() {
+        let p = mlp_like_packer();
+        let t = p.pack(&[Sample::F32(vec![1.0; 6]), Sample::F32(vec![2.0; 6])]).unwrap();
+        assert_eq!(t.shape, vec![4, 6]);
+        let d = t.f32s();
+        assert!(d[..6].iter().all(|&x| x == 1.0));
+        assert!(d[6..12].iter().all(|&x| x == 2.0));
+        assert!(d[12..].iter().all(|&x| x == 0.0), "pad rows are zero");
+    }
+
+    #[test]
+    fn unpack_slices_per_sample_rows() {
+        let p = mlp_like_packer();
+        let logits = Tensor::from_f32(vec![4, 3],
+            (0..12).map(|x| x as f32).collect()).unwrap();
+        let rows = p.unpack(&logits, 2);
+        assert_eq!(rows, vec![vec![0.0, 1.0, 2.0], vec![3.0, 4.0, 5.0]]);
+    }
+
+    #[test]
+    fn rejects_bad_inputs_typed() {
+        let p = mlp_like_packer();
+        assert_eq!(p.pack(&[]).unwrap_err(), PredictError::Empty);
+        assert_eq!(p.validate(&Sample::F32(vec![0.0; 5])).unwrap_err(),
+                   PredictError::WrongLen { expects: 6, got: 5 });
+        assert_eq!(p.validate(&Sample::F32({
+                       let mut v = vec![0.0; 6];
+                       v[3] = f32::NAN;
+                       v
+                   })).unwrap_err(),
+                   PredictError::NonFinite { index: 3 });
+        assert!(matches!(p.validate(&Sample::Tokens(vec![0; 6])).unwrap_err(),
+                         PredictError::WrongKind { .. }));
+        let five = vec![Sample::F32(vec![0.0; 6]); 5];
+        assert_eq!(p.pack(&five).unwrap_err(),
+                   PredictError::TooManySamples { capacity: 4, got: 5 });
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_tokens() {
+        let p = lm_like_packer();
+        assert_eq!(p.validate(&Sample::Tokens(vec![0, 1, 2, 7, 4])).unwrap_err(),
+                   PredictError::TokenOutOfRange { index: 3, token: 7, vocab: 7 });
+        assert_eq!(p.validate(&Sample::Tokens(vec![0, -1, 2, 3, 4])).unwrap_err(),
+                   PredictError::TokenOutOfRange { index: 1, token: -1, vocab: 7 });
+        p.validate(&Sample::Tokens(vec![0, 1, 2, 3, 6])).unwrap();
+    }
+
+    #[test]
+    fn synthetic_samples_validate_and_differ() {
+        for p in [mlp_like_packer(), lm_like_packer()] {
+            let a = p.synthetic_sample(0);
+            let b = p.synthetic_sample(1);
+            p.validate(&a).unwrap();
+            p.validate(&b).unwrap();
+            let differ = match (&a, &b) {
+                (Sample::F32(x), Sample::F32(y)) => x != y,
+                (Sample::Tokens(x), Sample::Tokens(y)) => x != y,
+                _ => false,
+            };
+            assert!(differ, "samples 0 and 1 must differ");
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Dynamic micro-batching over the resident-parameter session.
+//!
+//! Handler threads submit validated samples; one batcher thread owns the
+//! [`crate::experiment::Session`] (the native engine is intentionally not
+//! `Send`, so the session is built *on* the batcher thread) and coalesces
+//! whatever is queued into a micro-batch: the first sample opens a batch,
+//! the batch flushes as soon as it holds `max_batch` samples or
+//! `max_wait` has passed since it opened. One fixed-batch forward pass
+//! serves the whole batch; each caller gets its own logits row back.
+//!
+//! Correctness rests on the packing contract ([`crate::runtime::Packer`]):
+//! every native op is per-sample independent along the batch axis, so a
+//! coalesced sample's logits are bitwise identical to a solo run — the
+//! batcher changes latency and throughput, never results.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::experiment::Experiment;
+use crate::runtime::Sample;
+use crate::serve::ServeMetrics;
+
+/// One coalesced predict result: the caller's logits plus the size of the
+/// micro-batch it rode in (surfaced in the response so tests and clients
+/// can observe coalescing).
+#[derive(Debug)]
+pub struct BatchResult {
+    pub logits: Vec<f32>,
+    pub batch_size: usize,
+}
+
+type ResultTx = mpsc::Sender<Result<BatchResult, String>>;
+
+struct Pending {
+    sample: Sample,
+    tx: ResultTx,
+    enqueued: Instant,
+}
+
+struct Queue {
+    jobs: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+    max_queue: usize,
+}
+
+/// Why a submit was refused (both map to HTTP 503).
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull { limit: usize },
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { limit } => {
+                write!(f, "predict queue full ({limit} waiting)")
+            }
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+pub struct Batcher {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Start the batcher thread and wait for it to build (and optionally
+    /// warm-start) its session — a model that cannot resolve or a bad
+    /// checkpoint fails here, before anything binds a port.
+    pub fn spawn(exp: Experiment, resume: Option<std::path::PathBuf>,
+                 max_batch: usize, max_wait: Duration,
+                 metrics: Arc<ServeMetrics>) -> Result<Batcher> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+            max_queue: max_batch.max(1) * 32,
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("fr-batcher".to_string())
+            .spawn(move || {
+                let mut session = match exp.session() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                if let Some(path) = &resume {
+                    match session.restore_params(path) {
+                        Ok(step) => eprintln!(
+                            "(serve: warm-started from checkpoint at step {step})"),
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!(
+                                "warm-start from {}: {e:#}", path.display())));
+                            return;
+                        }
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                batch_loop(&worker_shared, &session, &metrics);
+            })
+            .map_err(|e| anyhow!("spawning batcher thread: {e}"))?;
+        ready_rx.recv()
+            .map_err(|_| anyhow!("batcher thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Batcher { shared, worker: Mutex::new(Some(worker)) })
+    }
+
+    /// Enqueue one validated sample; the receiver yields its logits once
+    /// the micro-batch it lands in has run.
+    pub fn submit(&self, sample: Sample)
+                  -> Result<mpsc::Receiver<Result<BatchResult, String>>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().expect("batcher queue poisoned");
+        if q.shutdown {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if q.jobs.len() >= self.shared.max_queue {
+            return Err(SubmitError::QueueFull { limit: self.shared.max_queue });
+        }
+        q.jobs.push_back(Pending { sample, tx, enqueued: Instant::now() });
+        drop(q);
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Flush the queue and join the worker. Queued samples still get
+    /// served; new submits are refused.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().expect("batcher queue poisoned");
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.lock().expect("worker handle poisoned").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The batcher thread body: wait for work, hold the batch open up to
+/// `max_wait` (or until `max_batch`), run one forward pass, distribute
+/// per-row results.
+fn batch_loop(shared: &Shared, session: &crate::experiment::Session,
+              metrics: &ServeMetrics) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().expect("batcher queue poisoned");
+            while q.jobs.is_empty() && !q.shutdown {
+                q = shared.cv.wait(q).expect("batcher queue poisoned");
+            }
+            if q.jobs.is_empty() && q.shutdown {
+                return;
+            }
+            // batch opens now; hold it open for late arrivals
+            let deadline = Instant::now() + shared.max_wait;
+            while q.jobs.len() < shared.max_batch && !q.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = shared.cv
+                    .wait_timeout(q, deadline - now)
+                    .expect("batcher queue poisoned");
+                q = guard;
+            }
+            let n = q.jobs.len().min(shared.max_batch);
+            q.jobs.drain(..n).collect()
+        };
+        let n = batch.len();
+        let now = Instant::now();
+        for p in &batch {
+            metrics.queue_ms.record(now.saturating_duration_since(p.enqueued));
+        }
+        metrics.predict_batches.inc();
+        metrics.predict_samples.add(n as u64);
+
+        let samples: Vec<Sample> = batch.iter().map(|p| p.sample.clone()).collect();
+        let t0 = Instant::now();
+        let result = session.predict_batch(&samples);
+        metrics.compute_ms.record(t0.elapsed());
+        match result {
+            Ok(rows) => {
+                for (p, logits) in batch.iter().zip(rows) {
+                    let _ = p.tx.send(Ok(BatchResult { logits, batch_size: n }));
+                }
+            }
+            Err(e) => {
+                // inputs were validated at the boundary, so this is an
+                // internal failure; every waiter learns about it
+                let msg = format!("{e:#}");
+                for p in &batch {
+                    let _ = p.tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! Hand-rolled HTTP/1.1 (substrate: no hyper/tokio in the offline
+//! sandbox). One request parser with strict size/header limits and typed
+//! errors — a malformed request is always a [`HttpError`] mapped to a 400
+//! response, never a panic — plus a response writer and a minimal
+//! keep-alive client used by the integration tests, the CI smoke and the
+//! serving bench.
+//!
+//! Scope is deliberately small: `Content-Length` bodies only (chunked
+//! transfer encoding is refused with a typed error), no multiplexing, no
+//! TLS. That is all `/v1/*` needs, and every line of it is testable
+//! offline against in-memory streams.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+/// Request line limit (method + path + version).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Maximum header count per request.
+pub const MAX_HEADERS: usize = 64;
+/// Single header line limit.
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Body limit — a full-batch predict body for the largest registered
+/// model is well under 1 MB of JSON.
+pub const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// Typed request-parse failures. `is_client_fault` decides whether the
+/// connection handler answers 400 before closing or just drops the
+/// connection (I/O errors, timeouts).
+#[derive(Debug)]
+pub enum HttpError {
+    RequestLineTooLong { limit: usize },
+    BadRequestLine { line: String },
+    UnsupportedVersion { version: String },
+    TooManyHeaders { limit: usize },
+    HeaderTooLong { limit: usize },
+    BadHeader { line: String },
+    BadContentLength { value: String },
+    UnsupportedTransferEncoding,
+    BodyTooLarge { length: usize, limit: usize },
+    UnexpectedEof,
+    Io(std::io::Error),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::RequestLineTooLong { limit } => {
+                write!(f, "request line exceeds {limit} bytes")
+            }
+            HttpError::BadRequestLine { line } => {
+                write!(f, "malformed request line {line:?}")
+            }
+            HttpError::UnsupportedVersion { version } => {
+                write!(f, "unsupported HTTP version {version:?}")
+            }
+            HttpError::TooManyHeaders { limit } => {
+                write!(f, "more than {limit} headers")
+            }
+            HttpError::HeaderTooLong { limit } => {
+                write!(f, "header line exceeds {limit} bytes")
+            }
+            HttpError::BadHeader { line } => write!(f, "malformed header {line:?}"),
+            HttpError::BadContentLength { value } => {
+                write!(f, "bad Content-Length {value:?}")
+            }
+            HttpError::UnsupportedTransferEncoding => {
+                write!(f, "chunked transfer encoding is not supported")
+            }
+            HttpError::BodyTooLarge { length, limit } => {
+                write!(f, "body of {length} bytes exceeds the {limit}-byte limit")
+            }
+            HttpError::UnexpectedEof => write!(f, "connection closed mid-request"),
+            HttpError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl HttpError {
+    /// True when the peer sent something malformed (answer 400); false for
+    /// transport-level failures (close silently).
+    pub fn is_client_fault(&self) -> bool {
+        !matches!(self, HttpError::Io(_))
+    }
+
+    /// True for a read timeout on an idle keep-alive connection — the
+    /// handler polls the shutdown flag and keeps waiting.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, HttpError::Io(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut)
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// ASCII case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to close after this response.
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Read one `\n`-terminated line, refusing to buffer more than `max`
+/// bytes. Returns `None` on clean EOF at a line boundary.
+fn read_line_limited(r: &mut impl BufRead, max: usize,
+                     over: HttpError) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let mut limited = r.take(max as u64 + 1);
+    let n = limited.read_until(b'\n', &mut buf).map_err(HttpError::Io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        // either the line exceeded the cap or the stream died mid-line
+        return Err(if buf.len() > max { over } else { HttpError::UnexpectedEof });
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some)
+        .map_err(|e| HttpError::BadRequestLine {
+            line: String::from_utf8_lossy(e.as_bytes()).into_owned(),
+        })
+}
+
+/// Parse one request off the stream. `Ok(None)` means the peer closed the
+/// connection cleanly between requests (normal keep-alive end).
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>, HttpError> {
+    let line = match read_line_limited(
+        r, MAX_REQUEST_LINE,
+        HttpError::RequestLineTooLong { limit: MAX_REQUEST_LINE })? {
+        None => return Ok(None),
+        Some(l) if l.is_empty() => return Ok(None),
+        Some(l) => l,
+    };
+    let mut parts = line.split(' ').filter(|p| !p.is_empty());
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(),
+                                         parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(HttpError::BadRequestLine { line }),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::UnsupportedVersion { version: version.to_string() });
+    }
+    let (method, path) = (method.to_ascii_uppercase(), path.to_string());
+
+    let mut headers = Vec::new();
+    loop {
+        let hline = read_line_limited(
+            r, MAX_HEADER_LINE, HttpError::HeaderTooLong { limit: MAX_HEADER_LINE })?
+            .ok_or(HttpError::UnexpectedEof)?;
+        if hline.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::TooManyHeaders { limit: MAX_HEADERS });
+        }
+        let (k, v) = hline.split_once(':')
+            .ok_or(HttpError::BadHeader { line: hline.clone() })?;
+        if k.is_empty() || k.contains(' ') {
+            return Err(HttpError::BadHeader { line: hline.clone() });
+        }
+        headers.push((k.to_string(), v.trim().to_string()));
+    }
+
+    let mut req = Request { method, path, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::UnsupportedTransferEncoding);
+    }
+    if let Some(cl) = req.header("content-length") {
+        let length: usize = cl.trim().parse()
+            .map_err(|_| HttpError::BadContentLength { value: cl.to_string() })?;
+        if length > MAX_BODY {
+            return Err(HttpError::BodyTooLarge { length, limit: MAX_BODY });
+        }
+        let mut body = vec![0u8; length];
+        r.read_exact(&mut body).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                HttpError::UnexpectedEof
+            } else {
+                HttpError::Io(e)
+            }
+        })?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// A response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, value: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: value.to_string_compact().into_bytes(),
+            close: false,
+        }
+    }
+
+    /// Newline-delimited JSON stream body (job metrics).
+    pub fn ndjson(status: u16, body: Vec<u8>) -> Response {
+        Response { status, content_type: "application/x-ndjson", body, close: false }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+                   Connection: {}\r\n\r\n",
+               self.status, status_text(self.status), self.content_type,
+               self.body.len(), if self.close { "close" } else { "keep-alive" })?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Minimal keep-alive HTTP client over one TCP connection — the
+/// counterpart the integration tests, `scripts/ci.sh` smoke and
+/// `bench_serve` drive the server with. Not a general client: it reads
+/// `Content-Length` responses only (which is all the server emits).
+pub struct MiniClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl MiniClient {
+    pub fn connect(addr: &str) -> std::io::Result<MiniClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(MiniClient { reader: BufReader::new(stream) })
+    }
+
+    /// Send one request, read one response; returns (status, body).
+    pub fn request(&mut self, method: &str, path: &str, body: &[u8])
+                   -> std::io::Result<(u16, Vec<u8>)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: frctl\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            body.len());
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+
+        let bad = |what: &str| std::io::Error::new(
+            std::io::ErrorKind::InvalidData, what.to_string());
+        let mut status_line = String::new();
+        if self.reader.read_line(&mut status_line)? == 0 {
+            return Err(bad("server closed before responding"));
+        }
+        let status: u16 = status_line.split(' ').nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("bad status line"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(bad("eof in response headers"));
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse()
+                        .map_err(|_| bad("bad content-length"))?;
+                }
+            }
+        }
+        let mut resp_body = vec![0u8; content_length];
+        self.reader.read_exact(&mut resp_body)?;
+        Ok((status, resp_body))
+    }
+
+    /// One-shot helper: connect, request, disconnect.
+    pub fn one_shot(addr: &str, method: &str, path: &str, body: &[u8])
+                    -> std::io::Result<(u16, Vec<u8>)> {
+        MiniClient::connect(addr)?.request(method, path, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(bytes.to_vec()))
+    }
+
+    #[test]
+    fn parses_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(b"POST /v1/predict HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello")
+            .unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn keep_alive_reads_two_requests_then_eof() {
+        let mut stream = Cursor::new(
+            b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n"
+                .to_vec());
+        let a = read_request(&mut stream).unwrap().unwrap();
+        assert_eq!(a.path, "/a");
+        let b = read_request(&mut stream).unwrap().unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(b.wants_close());
+        assert!(read_request(&mut stream).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn rejects_oversize_request_line() {
+        let mut line = b"GET /".to_vec();
+        line.extend(std::iter::repeat(b'a').take(MAX_REQUEST_LINE));
+        line.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse(&line),
+                         Err(HttpError::RequestLineTooLong { .. })));
+    }
+
+    #[test]
+    fn rejects_too_many_headers() {
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..=MAX_HEADERS {
+            req.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        assert!(matches!(parse(&req), Err(HttpError::TooManyHeaders { .. })));
+    }
+
+    #[test]
+    fn rejects_malformed_pieces_typed() {
+        assert!(matches!(parse(b"GET\r\n\r\n"),
+                         Err(HttpError::BadRequestLine { .. })));
+        assert!(matches!(parse(b"GET / HTTP/2\r\n\r\n"),
+                         Err(HttpError::UnsupportedVersion { .. })));
+        assert!(matches!(parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+                         Err(HttpError::BadHeader { .. })));
+        assert!(matches!(parse(b"GET / HTTP/1.1\r\nContent-Length: pony\r\n\r\n"),
+                         Err(HttpError::BadContentLength { .. })));
+        assert!(matches!(parse(b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+                         Err(HttpError::UnsupportedTransferEncoding)));
+    }
+
+    #[test]
+    fn rejects_declared_oversize_body_without_reading_it() {
+        let req = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(matches!(parse(req.as_bytes()),
+                         Err(HttpError::BodyTooLarge { .. })));
+    }
+
+    #[test]
+    fn short_body_is_unexpected_eof() {
+        assert!(matches!(parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+                         Err(HttpError::UnexpectedEof)));
+    }
+
+    #[test]
+    fn response_serializes_with_length_and_connection() {
+        let mut out = Vec::new();
+        let r = Response::json(200, &Json::Bool(true));
+        r.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 4"), "{text}");
+        assert!(text.contains("Connection: keep-alive"), "{text}");
+        assert!(text.ends_with("\r\n\r\ntrue"), "{text}");
+    }
+}

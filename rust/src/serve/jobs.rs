@@ -1,0 +1,293 @@
+//! Background training jobs for `frctl serve`.
+//!
+//! `POST /v1/train-jobs` lands here: each job gets its own thread that
+//! spawns a [`crate::coordinator::parallel::ParallelFr`] fleet via the usual
+//! [`Experiment`] builder, steps it to completion, and streams per-step
+//! metrics as incrementally flushed JSON lines (`job-<id>.jsonl` under the
+//! jobs dir) so a client can tail progress mid-run. Jobs share the serve
+//! metrics (per-step latency histogram, started/completed/failed
+//! counters) and honour the PR 6 checkpoint substrate when the spec asks
+//! for a cadence.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::experiment::Experiment;
+use crate::serve::ServeMetrics;
+use crate::util::json::{num, obj, s, Json};
+
+/// Validated request for one background training run (bounds enforced by
+/// [`crate::serve::json::decode_train_job`]).
+#[derive(Clone, Debug)]
+pub struct TrainJobSpec {
+    pub model: String,
+    pub k: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub threads: usize,
+    pub checkpoint_every: usize,
+}
+
+impl TrainJobSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("k", num(self.k as f64)),
+            ("steps", num(self.steps as f64)),
+            ("lr", num(self.lr as f64)),
+            ("seed", num(self.seed as f64)),
+            ("threads", num(self.threads as f64)),
+            ("checkpoint_every", num(self.checkpoint_every as f64)),
+        ])
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobState {
+    Running,
+    Done,
+    Failed,
+    Stopped,
+}
+
+impl JobState {
+    fn as_str(self) -> &'static str {
+        match self {
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Stopped => "stopped",
+        }
+    }
+}
+
+#[derive(Default)]
+struct Progress {
+    step: usize,
+    last_loss: f64,
+    error: Option<String>,
+    eval: Option<(f64, f64)>,
+}
+
+struct Job {
+    id: usize,
+    spec: TrainJobSpec,
+    stop: AtomicBool,
+    state: Mutex<JobState>,
+    progress: Mutex<Progress>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Job {
+    fn set_state(&self, next: JobState) {
+        *self.state.lock().expect("job state poisoned") = next;
+    }
+
+    fn to_json(&self) -> Json {
+        let state = *self.state.lock().expect("job state poisoned");
+        let p = self.progress.lock().expect("job progress poisoned");
+        let mut fields = vec![
+            ("id", num(self.id as f64)),
+            ("state", s(state.as_str())),
+            ("step", num(p.step as f64)),
+            ("last_loss", num(p.last_loss)),
+            ("spec", self.spec.to_json()),
+        ];
+        if let Some(err) = &p.error {
+            fields.push(("error", s(err)));
+        }
+        if let Some((loss, errr)) = p.eval {
+            fields.push(("eval_loss", num(loss)));
+            fields.push(("eval_err", num(errr)));
+        }
+        obj(fields)
+    }
+}
+
+/// Owns every background job; the router talks only to this.
+pub struct JobRegistry {
+    dir: PathBuf,
+    metrics: Arc<ServeMetrics>,
+    jobs: Mutex<Vec<Arc<Job>>>,
+    next_id: AtomicUsize,
+}
+
+impl JobRegistry {
+    pub fn new(dir: PathBuf, metrics: Arc<ServeMetrics>) -> Result<JobRegistry> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating jobs dir {}", dir.display()))?;
+        Ok(JobRegistry {
+            dir,
+            metrics,
+            jobs: Mutex::new(Vec::new()),
+            next_id: AtomicUsize::new(1),
+        })
+    }
+
+    fn metrics_path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("job-{id}.jsonl"))
+    }
+
+    /// Start a job thread and return its id immediately; model resolution
+    /// happens on the thread, so a bad model shows up as a failed job, not
+    /// a blocked submit.
+    pub fn submit(&self, spec: TrainJobSpec) -> usize {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Arc::new(Job {
+            id,
+            spec: spec.clone(),
+            stop: AtomicBool::new(false),
+            state: Mutex::new(JobState::Running),
+            progress: Mutex::new(Progress::default()),
+            handle: Mutex::new(None),
+        });
+        self.metrics.jobs_started.inc();
+        let worker_job = Arc::clone(&job);
+        let worker_metrics = Arc::clone(&self.metrics);
+        let jsonl = self.metrics_path(id);
+        let ckpt_dir = self.dir.join(format!("job-{id}-ckpt"));
+        let handle = std::thread::Builder::new()
+            .name(format!("fr-job-{id}"))
+            .spawn(move || {
+                let outcome = run_job(&worker_job, &jsonl, &ckpt_dir, &worker_metrics);
+                match outcome {
+                    Ok(JobState::Running) => unreachable!("run_job returns a final state"),
+                    Ok(done) => {
+                        if done == JobState::Done {
+                            worker_metrics.jobs_completed.inc();
+                        }
+                        worker_job.set_state(done);
+                    }
+                    Err(e) => {
+                        worker_metrics.jobs_failed.inc();
+                        worker_job.progress.lock().expect("job progress poisoned")
+                            .error = Some(format!("{e:#}"));
+                        worker_job.set_state(JobState::Failed);
+                    }
+                }
+            })
+            .expect("spawning job thread");
+        *job.handle.lock().expect("job handle poisoned") = Some(handle);
+        self.jobs.lock().expect("job list poisoned").push(job);
+        id
+    }
+
+    pub fn list(&self) -> Json {
+        let jobs = self.jobs.lock().expect("job list poisoned");
+        obj(vec![("jobs", Json::Arr(jobs.iter().map(|j| j.to_json()).collect()))])
+    }
+
+    pub fn get(&self, id: usize) -> Option<Json> {
+        self.jobs.lock().expect("job list poisoned").iter()
+            .find(|j| j.id == id)
+            .map(|j| j.to_json())
+    }
+
+    /// Raw NDJSON step stream for a job (what the thread has flushed so
+    /// far). None if the id is unknown.
+    pub fn read_metrics(&self, id: usize) -> Option<Vec<u8>> {
+        let known = self.jobs.lock().expect("job list poisoned").iter()
+            .any(|j| j.id == id);
+        if !known {
+            return None;
+        }
+        // the file appears with the first flushed step; empty until then
+        Some(std::fs::read(self.metrics_path(id)).unwrap_or_default())
+    }
+
+    /// Ask every job to stop after its current step, then join them.
+    pub fn shutdown(&self) {
+        let jobs: Vec<Arc<Job>> = self.jobs.lock().expect("job list poisoned")
+            .clone();
+        for job in &jobs {
+            job.stop.store(true, Ordering::Relaxed);
+        }
+        for job in &jobs {
+            if let Some(h) = job.handle.lock().expect("job handle poisoned").take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The job thread body: spawn the fleet, step it (streaming one JSON line
+/// per step), checkpoint on cadence, eval at the end. Returns the final
+/// state (`Done` or `Stopped`); any error tears the fleet down and fails
+/// the job.
+fn run_job(job: &Job, jsonl: &std::path::Path, ckpt_dir: &std::path::Path,
+           metrics: &ServeMetrics) -> Result<JobState> {
+    let spec = &job.spec;
+    let mut exp = Experiment::new(&spec.model)
+        .k(spec.k)
+        .steps(spec.steps)
+        .lr(spec.lr)
+        .seed(spec.seed)
+        .threads(spec.threads);
+    if spec.checkpoint_every > 0 {
+        exp = exp.checkpoint_every(spec.checkpoint_every)
+            .checkpoint_dir(ckpt_dir);
+    }
+    let mut ps = exp.spawn_parallel()?;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(jsonl)
+        .with_context(|| format!("creating {}", jsonl.display()))?);
+    let mut stopped = false;
+    for step in 0..spec.steps {
+        if job.stop.load(Ordering::Relaxed) {
+            stopped = true;
+            break;
+        }
+        let batch = ps.data.train_batch();
+        let lr = ps.lr_at(step);
+        let t0 = Instant::now();
+        let stats = match ps.par.train_step(&batch, lr) {
+            Ok(stats) => stats,
+            Err(e) => {
+                let _ = ps.par.shutdown();
+                return Err(e.context(format!("train step {step}")));
+            }
+        };
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.train_step_ms.record(t0.elapsed());
+        let line = obj(vec![
+            ("step", num(step as f64)),
+            ("loss", num(stats.loss as f64)),
+            ("ms", num(ms)),
+        ]).to_string_compact();
+        // flush per line: clients tail this file while the job runs
+        writeln!(out, "{line}")
+            .and_then(|()| out.flush())
+            .with_context(|| format!("writing {}", jsonl.display()))?;
+        {
+            let mut p = job.progress.lock().expect("job progress poisoned");
+            p.step = step + 1;
+            p.last_loss = stats.loss as f64;
+        }
+        if ps.should_checkpoint(step + 1) {
+            if let Err(e) = ps.write_checkpoint() {
+                let _ = ps.par.shutdown();
+                return Err(e.context("writing job checkpoint"));
+            }
+        }
+    }
+    if !stopped {
+        let eval = ps.data.test_batch(0);
+        match ps.par.eval_batch(&eval) {
+            Ok((loss, err)) => {
+                job.progress.lock().expect("job progress poisoned")
+                    .eval = Some((loss, err));
+            }
+            Err(e) => {
+                let _ = ps.par.shutdown();
+                return Err(e.context("final eval"));
+            }
+        }
+    }
+    ps.par.shutdown().context("fleet shutdown")?;
+    Ok(if stopped { JobState::Stopped } else { JobState::Done })
+}

@@ -1,0 +1,182 @@
+//! Request-body decoding for the serve API.
+//!
+//! Thin typed layer over [`crate::util::json`]: each decoder returns a
+//! plain error string (the router wraps it into a 400), rejects unknown
+//! keys so typos fail loudly, and bounds every numeric field so a request
+//! can never smuggle an absurd configuration into the batcher or the job
+//! fleet.
+
+use crate::runtime::Sample;
+use crate::serve::jobs::TrainJobSpec;
+use crate::util::json::Json;
+
+fn parse_body(body: &[u8]) -> Result<Json, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))
+}
+
+fn f64_array(value: &Json, key: &str) -> Result<Vec<f64>, String> {
+    match value {
+        Json::Arr(items) => items.iter()
+            .enumerate()
+            .map(|(i, v)| v.as_f64()
+                .ok_or_else(|| format!("\"{key}\"[{i}] is not a number")))
+            .collect(),
+        _ => Err(format!("\"{key}\" must be an array of numbers")),
+    }
+}
+
+/// Decode a `POST /v1/predict` body: exactly one of
+/// `{"input": [floats...]}` or `{"tokens": [ints...]}`.
+pub fn decode_predict(body: &[u8]) -> Result<Sample, String> {
+    let json = parse_body(body)?;
+    let Json::Obj(fields) = &json else {
+        return Err("body must be a JSON object".to_string());
+    };
+    for key in fields.keys() {
+        if key != "input" && key != "tokens" {
+            return Err(format!("unknown key \"{key}\" (expected \"input\" or \"tokens\")"));
+        }
+    }
+    match (json.get("input"), json.get("tokens")) {
+        (Some(_), Some(_)) => {
+            Err("provide either \"input\" or \"tokens\", not both".to_string())
+        }
+        (Some(input), None) => {
+            let xs = f64_array(input, "input")?;
+            Ok(Sample::F32(xs.into_iter().map(|v| v as f32).collect()))
+        }
+        (None, Some(tokens)) => {
+            let xs = f64_array(tokens, "tokens")?;
+            let mut out = Vec::with_capacity(xs.len());
+            for (i, v) in xs.iter().enumerate() {
+                if v.fract() != 0.0 || *v < i32::MIN as f64 || *v > i32::MAX as f64 {
+                    return Err(format!("\"tokens\"[{i}] = {v} is not an i32 token id"));
+                }
+                out.push(*v as i32);
+            }
+            Ok(Sample::Tokens(out))
+        }
+        (None, None) => Err("body needs \"input\" or \"tokens\"".to_string()),
+    }
+}
+
+fn bounded_usize(json: &Json, key: &str, default: usize,
+                 lo: usize, hi: usize) -> Result<usize, String> {
+    match json.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let n = v.as_usize()
+                .ok_or_else(|| format!("\"{key}\" must be a non-negative integer"))?;
+            if !(lo..=hi).contains(&n) {
+                return Err(format!("\"{key}\" = {n} out of range {lo}..={hi}"));
+            }
+            Ok(n)
+        }
+    }
+}
+
+/// Decode a `POST /v1/train-jobs` body into a bounded job spec.
+pub fn decode_train_job(body: &[u8]) -> Result<TrainJobSpec, String> {
+    let json = parse_body(body)?;
+    let Json::Obj(fields) = &json else {
+        return Err("body must be a JSON object".to_string());
+    };
+    const KNOWN: [&str; 7] = ["model", "k", "steps", "lr", "seed", "threads",
+                              "checkpoint_every"];
+    for key in fields.keys() {
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(format!("unknown key \"{key}\" (expected one of {KNOWN:?})"));
+        }
+    }
+    let model = json.get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "\"model\" (string) is required".to_string())?
+        .to_string();
+    let lr = match json.get("lr") {
+        None => 0.01,
+        Some(v) => {
+            let lr = v.as_f64().ok_or_else(|| "\"lr\" must be a number".to_string())?;
+            if !lr.is_finite() || lr <= 0.0 {
+                return Err(format!("\"lr\" = {lr} must be finite and > 0"));
+            }
+            lr
+        }
+    };
+    let seed = match json.get("seed") {
+        None => 0,
+        Some(v) => {
+            let s = v.as_f64().ok_or_else(|| "\"seed\" must be a number".to_string())?;
+            if s.fract() != 0.0 || s < 0.0 || s > u32::MAX as f64 {
+                return Err(format!("\"seed\" = {s} must be an integer in 0..=2^32-1"));
+            }
+            s as u64
+        }
+    };
+    Ok(TrainJobSpec {
+        model,
+        k: bounded_usize(&json, "k", 4, 1, 16)?,
+        steps: bounded_usize(&json, "steps", 100, 1, 1_000_000)?,
+        lr: lr as f32,
+        seed,
+        threads: bounded_usize(&json, "threads", 1, 0, 256)?,
+        checkpoint_every: bounded_usize(&json, "checkpoint_every", 0, 0, 1_000_000)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_accepts_floats() {
+        let s = decode_predict(br#"{"input": [0.5, -1.0, 2]}"#).unwrap();
+        assert_eq!(s, Sample::F32(vec![0.5, -1.0, 2.0]));
+    }
+
+    #[test]
+    fn predict_accepts_tokens() {
+        let s = decode_predict(br#"{"tokens": [0, 5, 95]}"#).unwrap();
+        assert_eq!(s, Sample::Tokens(vec![0, 5, 95]));
+    }
+
+    #[test]
+    fn predict_rejects_both_and_neither() {
+        assert!(decode_predict(br#"{"input": [1], "tokens": [1]}"#)
+            .unwrap_err().contains("not both"));
+        assert!(decode_predict(br"{}").unwrap_err().contains("needs"));
+    }
+
+    #[test]
+    fn predict_rejects_fractional_token() {
+        let err = decode_predict(br#"{"tokens": [1.5]}"#).unwrap_err();
+        assert!(err.contains("tokens"), "{err}");
+    }
+
+    #[test]
+    fn predict_rejects_unknown_key_and_garbage() {
+        assert!(decode_predict(br#"{"inptu": [1]}"#).unwrap_err()
+            .contains("unknown key"));
+        assert!(decode_predict(b"not json").unwrap_err()
+            .contains("malformed JSON"));
+        assert!(decode_predict(&[0xff, 0xfe]).unwrap_err().contains("UTF-8"));
+    }
+
+    #[test]
+    fn train_job_defaults_and_bounds() {
+        let spec = decode_train_job(br#"{"model": "mlp_tiny"}"#).unwrap();
+        assert_eq!(spec.model, "mlp_tiny");
+        assert_eq!((spec.k, spec.steps, spec.threads, spec.checkpoint_every),
+                   (4, 100, 1, 0));
+        assert!((spec.lr - 0.01).abs() < 1e-9);
+
+        let err = decode_train_job(br#"{"model": "mlp_tiny", "k": 99}"#).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let err = decode_train_job(br#"{"model": "mlp_tiny", "lr": -1}"#).unwrap_err();
+        assert!(err.contains("lr"), "{err}");
+        let err = decode_train_job(br#"{"steps": 5}"#).unwrap_err();
+        assert!(err.contains("model"), "{err}");
+        let err = decode_train_job(br#"{"model": "m", "stepz": 5}"#).unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+}

@@ -1,0 +1,332 @@
+//! `frctl serve` — a std-only inference + experiment service over the
+//! resident-parameter pipeline.
+//!
+//! The same machinery the trainer built to keep K module workers busy
+//! (resident params, bounded waits, crash-safe checkpoints) is what a
+//! serving layer needs. This subsystem adds the missing front half:
+//!
+//! - [`http`]: hand-rolled HTTP/1.1 with strict limits and typed errors
+//! - [`router`]: `(method, path)` dispatch to the `/v1/*` endpoints
+//! - [`batcher`]: coalesces concurrent predict requests into dynamic
+//!   micro-batches (flush on `max_batch` or `max_wait_ms`) that run one
+//!   fixed-batch forward pass through the module chain
+//! - [`jobs`]: background training jobs on the threaded `ParallelFr`
+//!   fleet, streaming per-step metrics as JSON lines and writing
+//!   checkpoints through the crash-safety substrate
+//! - [`json`]: typed request decoding (malformed bodies → 400, never a
+//!   panic)
+//!
+//! The [`Server`] itself is two phases: [`Server::bind`] resolves the
+//! model, warms the batcher session and binds the listener (failures here
+//! are configuration errors → exit 2), then [`Server::run`] accepts
+//! connections thread-per-connection with keep-alive until SIGTERM/SIGINT
+//! (or a programmatic stop handle) and tears down gracefully.
+
+pub mod batcher;
+pub mod http;
+pub mod jobs;
+pub mod json;
+pub mod router;
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::experiment::Experiment;
+use crate::metrics::hist::{Counter, Histogram};
+use crate::runtime::Packer;
+use crate::util::json::{num, obj, Json};
+
+/// Everything `frctl serve` (and the bench/tests) configures.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed on startup).
+    pub addr: String,
+    /// Registry model served by `/v1/predict`.
+    pub model: String,
+    pub k: usize,
+    pub threads: usize,
+    pub seed: u64,
+    /// Micro-batch flush size; 0 = the model's compiled batch capacity.
+    /// Clamped to the capacity either way.
+    pub max_batch: usize,
+    /// How long the batcher holds an open micro-batch for more requests.
+    pub max_wait_ms: u64,
+    /// Where train jobs stream `job-<id>.jsonl` metrics + checkpoints.
+    pub jobs_dir: PathBuf,
+    /// Optional checkpoint (file or dir) to warm-start the served weights.
+    pub resume: Option<PathBuf>,
+}
+
+impl ServeConfig {
+    /// Defaults matching the `frctl serve` flag defaults.
+    pub fn new(model: &str) -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8484".to_string(),
+            model: model.to_string(),
+            k: 4,
+            threads: 0,
+            seed: 0,
+            max_batch: 0,
+            max_wait_ms: 5,
+            jobs_dir: std::env::temp_dir()
+                .join(format!("frctl-serve-jobs-{}", std::process::id())),
+            resume: None,
+        }
+    }
+}
+
+/// Process-wide serving metrics: latency histograms + counters, shared
+/// between the request path, the batcher and the background train jobs
+/// (`train_step_ms` is the same series the training loop feeds). Snapshot
+/// via [`ServeMetrics::to_json`] — the `/v1/metrics` body.
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Full request handling time (parse → response written).
+    pub request_ms: Histogram,
+    /// Predict time spent queued before a micro-batch flushed.
+    pub queue_ms: Histogram,
+    /// Micro-batch forward-pass time.
+    pub compute_ms: Histogram,
+    /// Background-job training step time (shared with training).
+    pub train_step_ms: Histogram,
+    pub requests_total: Counter,
+    pub predict_requests: Counter,
+    pub predict_errors: Counter,
+    /// Requests refused at the HTTP layer (malformed → 400).
+    pub http_errors: Counter,
+    pub predict_batches: Counter,
+    pub predict_samples: Counter,
+    pub jobs_started: Counter,
+    pub jobs_completed: Counter,
+    pub jobs_failed: Counter,
+}
+
+impl ServeMetrics {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests_total", num(self.requests_total.get() as f64)),
+            ("predict_requests", num(self.predict_requests.get() as f64)),
+            ("predict_errors", num(self.predict_errors.get() as f64)),
+            ("http_errors", num(self.http_errors.get() as f64)),
+            ("predict_batches", num(self.predict_batches.get() as f64)),
+            ("predict_samples", num(self.predict_samples.get() as f64)),
+            ("jobs_started", num(self.jobs_started.get() as f64)),
+            ("jobs_completed", num(self.jobs_completed.get() as f64)),
+            ("jobs_failed", num(self.jobs_failed.get() as f64)),
+            ("request_latency", self.request_ms.to_json()),
+            ("queue_latency", self.queue_ms.to_json()),
+            ("compute_latency", self.compute_ms.to_json()),
+            ("train_step_latency", self.train_step_ms.to_json()),
+        ])
+    }
+}
+
+/// SIGTERM/SIGINT flip this; the accept loop polls it. Separate from the
+/// per-server stop handle so in-process servers (tests, bench) stop
+/// without signals.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        // async-signal-safe: one relaxed atomic store
+        SIGNALLED.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        // libc is already linked by std on unix; SIG_ERR return ignored
+        // (worst case: no graceful shutdown, same as before this existed)
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Concurrent-connection cap: beyond this, new connections get an
+/// immediate 503 instead of a handler thread.
+const MAX_CONNECTIONS: usize = 128;
+
+/// A bound, ready-to-run server. See the module docs for the two-phase
+/// (bind = config errors, run = runtime errors) split.
+pub struct Server {
+    listener: TcpListener,
+    app: Arc<router::App>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Configuration phase: resolve the model through the registry, build
+    /// the batcher's session (warm-starting from `resume` if given), bind
+    /// the listener. Every failure here means nothing is serving yet.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let exp = Experiment::new(&cfg.model)
+            .k(cfg.k)
+            .threads(cfg.threads)
+            .seed(cfg.seed);
+        let manifest = exp.manifest()
+            .with_context(|| format!("resolving model {:?}", cfg.model))?;
+        let packer = Packer::new(&manifest)?;
+        let capacity = packer.capacity();
+        let max_batch = match cfg.max_batch {
+            0 => capacity,
+            n => n.min(capacity),
+        };
+        let metrics = Arc::new(ServeMetrics::default());
+        let batcher = batcher::Batcher::spawn(
+            exp, cfg.resume.clone(), max_batch,
+            Duration::from_millis(cfg.max_wait_ms), Arc::clone(&metrics))?;
+        let jobs = jobs::JobRegistry::new(cfg.jobs_dir.clone(), Arc::clone(&metrics))?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let app = Arc::new(router::App {
+            model: cfg.model.clone(),
+            manifest,
+            packer,
+            batcher,
+            jobs,
+            metrics,
+            started: Instant::now(),
+            max_batch,
+            max_wait_ms: cfg.max_wait_ms,
+        });
+        Ok(Server { listener, app, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Flip to stop an in-process server (tests/bench) — the accept loop
+    /// notices within one poll interval and tears down like SIGTERM.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop until SIGTERM/SIGINT or the stop handle flips, then
+    /// graceful teardown: drain connection handlers, stop the batcher,
+    /// stop-and-join the job fleet.
+    pub fn run(self) -> Result<()> {
+        install_signal_handlers();
+        let addr = self.local_addr();
+        // the CI smoke and tests parse this line for the ephemeral port
+        println!("frctl serve: listening on http://{addr} (model {}, \
+                  max_batch {}, max_wait {} ms)",
+                 self.app.model, self.app.max_batch, self.app.max_wait_ms);
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+
+        self.listener.set_nonblocking(true)
+            .context("listener set_nonblocking")?;
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) && !SIGNALLED.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if live.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                        let mut stream = stream;
+                        let resp = router::ApiError::Unavailable(
+                            "connection limit reached".to_string()).to_response();
+                        let _ = resp.write_to(&mut stream);
+                        continue;
+                    }
+                    live.fetch_add(1, Ordering::Relaxed);
+                    let app = Arc::clone(&self.app);
+                    let stop = Arc::clone(&self.stop);
+                    let live = Arc::clone(&live);
+                    handlers.push(std::thread::spawn(move || {
+                        handle_connection(app, stop, stream);
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+            // reap finished handlers so a long-lived server doesn't
+            // accumulate JoinHandles
+            if handlers.len() > MAX_CONNECTIONS {
+                handlers.retain(|h| !h.is_finished());
+            }
+        }
+
+        drop(self.listener);
+        // wake idle keep-alive handlers (they poll `stop` on read timeout)
+        self.stop.store(true, Ordering::Relaxed);
+        for h in handlers {
+            let _ = h.join();
+        }
+        self.app.batcher.shutdown();
+        self.app.jobs.shutdown();
+        println!("frctl serve: clean shutdown ({} requests served)",
+                 self.app.metrics.requests_total.get());
+        Ok(())
+    }
+}
+
+/// Per-connection loop: keep-alive request/response until the peer closes,
+/// a fatal parse/transport error, or server shutdown. An idle connection
+/// wakes every 500 ms to poll the stop flag.
+fn handle_connection(app: Arc<router::App>, stop: Arc<AtomicBool>,
+                     stream: std::net::TcpStream) {
+    use std::io::BufRead as _;
+
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(Duration::from_millis(500))).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        // idle wait: poll readability so a timeout can never split a
+        // request that started arriving (fill_buf consumes nothing)
+        match reader.fill_buf() {
+            Ok([]) => break, // clean EOF
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                if stop.load(Ordering::Relaxed) || SIGNALLED.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+        match http::read_request(&mut reader) {
+            Ok(None) => break,
+            Ok(Some(req)) => {
+                let t0 = Instant::now();
+                app.metrics.requests_total.inc();
+                let mut resp = router::handle(&app, &req);
+                resp.close |= req.wants_close();
+                let write_ok = resp.write_to(&mut writer).is_ok();
+                app.metrics.request_ms.record(t0.elapsed());
+                if !write_ok || resp.close {
+                    break;
+                }
+            }
+            Err(e) => {
+                if e.is_client_fault() {
+                    app.metrics.http_errors.inc();
+                    let mut resp = router::ApiError::BadRequest(e.to_string())
+                        .to_response();
+                    resp.close = true;
+                    let _ = resp.write_to(&mut writer);
+                }
+                break;
+            }
+        }
+    }
+}

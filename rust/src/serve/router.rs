@@ -1,0 +1,187 @@
+//! `(method, path)` dispatch for the serve API.
+//!
+//! Every handler returns `Result<Response, ApiError>`; the single
+//! [`handle`] entry point turns an `ApiError` into its JSON error
+//! response, so no endpoint hand-rolls status bodies. Validation happens
+//! here, synchronously, *before* a sample enters the batcher queue — the
+//! batcher thread only ever sees inputs the [`crate::runtime::Packer`]
+//! already accepted, which is why a 400 never costs a micro-batch slot.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Packer;
+use crate::runtime::spec::Manifest;
+use crate::serve::batcher::Batcher;
+use crate::serve::http::{status_text, Request, Response};
+use crate::serve::jobs::JobRegistry;
+use crate::serve::{json as body, ServeMetrics};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Typed endpoint failures; each knows its HTTP status.
+#[derive(Debug)]
+pub enum ApiError {
+    BadRequest(String),
+    NotFound(String),
+    MethodNotAllowed(&'static str),
+    Unavailable(String),
+    Internal(String),
+}
+
+impl ApiError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ApiError::BadRequest(_) => 400,
+            ApiError::NotFound(_) => 404,
+            ApiError::MethodNotAllowed(_) => 405,
+            ApiError::Unavailable(_) => 503,
+            ApiError::Internal(_) => 500,
+        }
+    }
+
+    pub fn detail(&self) -> &str {
+        match self {
+            ApiError::BadRequest(d) | ApiError::NotFound(d)
+            | ApiError::Unavailable(d) | ApiError::Internal(d) => d,
+            ApiError::MethodNotAllowed(allow) => allow,
+        }
+    }
+
+    pub fn to_response(&self) -> Response {
+        let status = self.status();
+        Response::json(status, &obj(vec![
+            ("error", s(status_text(status))),
+            ("detail", s(self.detail())),
+        ]))
+    }
+}
+
+/// Everything a request handler can reach — built once by
+/// [`crate::serve::Server::bind`], shared across connection threads.
+pub struct App {
+    pub model: String,
+    pub manifest: Manifest,
+    pub packer: Packer,
+    pub batcher: Batcher,
+    pub jobs: JobRegistry,
+    pub metrics: Arc<ServeMetrics>,
+    pub started: Instant,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+}
+
+/// Dispatch one request; never panics, never leaks an `Err` upward.
+pub fn handle(app: &App, req: &Request) -> Response {
+    let method = req.method.as_str();
+    let result = match (method, req.path.as_str()) {
+        ("GET", "/healthz") => health(app),
+        ("GET", "/v1/metrics") => Ok(Response::json(200, &app.metrics.to_json())),
+        ("POST", "/v1/predict") => predict(app, req),
+        ("POST", "/v1/train-jobs") => submit_job(app, req),
+        ("GET", "/v1/train-jobs") => Ok(Response::json(200, &app.jobs.list())),
+        ("GET" | "POST" | "PUT" | "DELETE" | "HEAD",
+         "/healthz" | "/v1/metrics" | "/v1/predict" | "/v1/train-jobs") => {
+            Err(ApiError::MethodNotAllowed(match req.path.as_str() {
+                "/v1/predict" | "/v1/train-jobs" => "use POST",
+                _ => "use GET",
+            }))
+        }
+        ("GET", path) if path.starts_with("/v1/train-jobs/") => job_route(app, path),
+        (_, path) => Err(ApiError::NotFound(format!("no route for {path}"))),
+    };
+    result.unwrap_or_else(|e| e.to_response())
+}
+
+fn health(app: &App) -> Result<Response, ApiError> {
+    Ok(Response::json(200, &obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", s(&app.model)),
+        ("k", num(app.manifest.k as f64)),
+        ("batch_capacity", num(app.packer.capacity() as f64)),
+        ("max_batch", num(app.max_batch as f64)),
+        ("max_wait_ms", num(app.max_wait_ms as f64)),
+        ("uptime_ms", num(app.started.elapsed().as_secs_f64() * 1e3)),
+    ])))
+}
+
+fn predict(app: &App, req: &Request) -> Result<Response, ApiError> {
+    app.metrics.predict_requests.inc();
+    let fail = |e: ApiError| {
+        app.metrics.predict_errors.inc();
+        e
+    };
+    let sample = body::decode_predict(&req.body)
+        .map_err(|e| fail(ApiError::BadRequest(e)))?;
+    app.packer.validate(&sample)
+        .map_err(|e| fail(ApiError::BadRequest(e.to_string())))?;
+    let rx = app.batcher.submit(sample)
+        .map_err(|e| fail(ApiError::Unavailable(e.to_string())))?;
+    // generous ceiling: max_wait plus worst-case forward passes queued ahead
+    let deadline = Duration::from_millis(app.max_wait_ms) + Duration::from_secs(30);
+    let result = rx.recv_timeout(deadline)
+        .map_err(|_| fail(ApiError::Internal("predict timed out".to_string())))?;
+    let done = result.map_err(|e| fail(ApiError::Internal(e)))?;
+    Ok(Response::json(200, &obj(vec![
+        ("model", s(&app.model)),
+        // micro-batch size this sample rode in — lets clients (and the
+        // parity test) observe coalescing
+        ("batch", num(done.batch_size as f64)),
+        ("logits", arr(done.logits.iter().map(|&v| num(v as f64)))),
+    ])))
+}
+
+fn submit_job(app: &App, req: &Request) -> Result<Response, ApiError> {
+    let spec = body::decode_train_job(&req.body).map_err(ApiError::BadRequest)?;
+    let id = app.jobs.submit(spec);
+    Ok(Response::json(202, &obj(vec![
+        ("id", num(id as f64)),
+        ("state", s("running")),
+        ("status_url", s(&format!("/v1/train-jobs/{id}"))),
+        ("metrics_url", s(&format!("/v1/train-jobs/{id}/metrics"))),
+    ])))
+}
+
+/// `/v1/train-jobs/<id>` and `/v1/train-jobs/<id>/metrics`.
+fn job_route(app: &App, path: &str) -> Result<Response, ApiError> {
+    let rest = &path["/v1/train-jobs/".len()..];
+    let (id_part, tail) = match rest.split_once('/') {
+        None => (rest, None),
+        Some((id, "metrics")) => (id, Some("metrics")),
+        Some(_) => return Err(ApiError::NotFound(format!("no route for {path}"))),
+    };
+    let id: usize = id_part.parse()
+        .map_err(|_| ApiError::BadRequest(format!("bad job id {id_part:?}")))?;
+    match tail {
+        None => app.jobs.get(id)
+            .map(|status| Response::json(200, &status))
+            .ok_or_else(|| ApiError::NotFound(format!("no job {id}"))),
+        Some(_) => app.jobs.read_metrics(id)
+            .map(|bytes| Response::ndjson(200, bytes))
+            .ok_or_else(|| ApiError::NotFound(format!("no job {id}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_errors_map_to_statuses() {
+        assert_eq!(ApiError::BadRequest(String::new()).status(), 400);
+        assert_eq!(ApiError::NotFound(String::new()).status(), 404);
+        assert_eq!(ApiError::MethodNotAllowed("use GET").status(), 405);
+        assert_eq!(ApiError::Unavailable(String::new()).status(), 503);
+        assert_eq!(ApiError::Internal(String::new()).status(), 500);
+    }
+
+    #[test]
+    fn error_response_is_json_with_detail() {
+        let resp = ApiError::BadRequest("tokens out of range".to_string())
+            .to_response();
+        assert_eq!(resp.status, 400);
+        let json = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(json.get("error").and_then(Json::as_str), Some("Bad Request"));
+        assert_eq!(json.get("detail").and_then(Json::as_str),
+                   Some("tokens out of range"));
+    }
+}

@@ -3,8 +3,44 @@
 //! Grammar: `frctl <subcommand> [--flag] [--key value] [positional...]`.
 //! `--key=value` is accepted too. Unknown flags are an error so typos fail
 //! loudly rather than silently using defaults.
+//!
+//! Every failure is a typed [`CliError`] naming the flag at fault, so the
+//! launcher can map all of them — `train` and `serve` alike — onto one
+//! exit-2-with-usage-hint path instead of mixed panic/exit behavior.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A malformed command line. Each variant carries the offending flag so the
+/// message the user sees points at exactly what to fix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CliError {
+    /// `--something` that is neither a declared option nor a flag.
+    UnknownOption { name: String },
+    /// A declared option appeared last with no value following it.
+    MissingValue { name: String },
+    /// `--flag=value` on a boolean flag.
+    FlagWithValue { name: String },
+    /// An option's value failed to parse as the type the caller wants.
+    BadValue { name: String, value: String, expects: &'static str },
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownOption { name } => write!(f, "unknown option --{name}"),
+            CliError::MissingValue { name } => write!(f, "option --{name} needs a value"),
+            CliError::FlagWithValue { name } => {
+                write!(f, "flag --{name} does not take a value")
+            }
+            CliError::BadValue { name, value, expects } => {
+                write!(f, "--{name} expects {expects}, got {value:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -21,7 +57,7 @@ impl Args {
         raw: &[String],
         known_opts: &[(&'static str, &'static str)],
         known_flags: &[(&'static str, &'static str)],
-    ) -> Result<Args, String> {
+    ) -> Result<Args, CliError> {
         let mut out = Args {
             known_opts: known_opts.to_vec(),
             known_flags: known_flags.to_vec(),
@@ -37,7 +73,7 @@ impl Args {
                 };
                 if known_flags.iter().any(|(f, _)| *f == key) {
                     if inline_val.is_some() {
-                        return Err(format!("flag --{key} does not take a value"));
+                        return Err(CliError::FlagWithValue { name: key.to_string() });
                     }
                     out.flags.push(key.to_string());
                 } else if known_opts.iter().any(|(o, _)| *o == key) {
@@ -45,13 +81,14 @@ impl Args {
                         Some(v) => v,
                         None => {
                             i += 1;
-                            raw.get(i).cloned()
-                                .ok_or(format!("option --{key} needs a value"))?
+                            raw.get(i).cloned().ok_or_else(|| CliError::MissingValue {
+                                name: key.to_string(),
+                            })?
                         }
                     };
                     out.options.insert(key.to_string(), v);
                 } else {
-                    return Err(format!("unknown option --{key}"));
+                    return Err(CliError::UnknownOption { name: key.to_string() });
                 }
             } else {
                 out.positional.push(a.clone());
@@ -73,25 +110,28 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+    fn parsed_or<T: std::str::FromStr>(&self, name: &str, default: T,
+                                       expects: &'static str) -> Result<T, CliError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                name: name.to_string(),
+                value: v.to_string(),
+                expects,
+            }),
         }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
-        match self.get(name) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
-        }
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        self.parsed_or(name, default, "an integer")
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
-        match self.get(name) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
-        }
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        self.parsed_or(name, default, "a number")
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        self.parsed_or(name, default, "an integer")
     }
 
     /// Render a help block from the declared schema.
@@ -130,17 +170,20 @@ mod tests {
 
     #[test]
     fn rejects_unknown() {
-        assert!(Args::parse(&sv(&["--nope"]), OPTS, FLAGS).is_err());
+        assert_eq!(Args::parse(&sv(&["--nope"]), OPTS, FLAGS).unwrap_err(),
+                   CliError::UnknownOption { name: "nope".into() });
     }
 
     #[test]
     fn rejects_missing_value() {
-        assert!(Args::parse(&sv(&["--model"]), OPTS, FLAGS).is_err());
+        assert_eq!(Args::parse(&sv(&["--model"]), OPTS, FLAGS).unwrap_err(),
+                   CliError::MissingValue { name: "model".into() });
     }
 
     #[test]
     fn rejects_value_on_flag() {
-        assert!(Args::parse(&sv(&["--verbose=yes"]), OPTS, FLAGS).is_err());
+        assert_eq!(Args::parse(&sv(&["--verbose=yes"]), OPTS, FLAGS).unwrap_err(),
+                   CliError::FlagWithValue { name: "verbose".into() });
     }
 
     #[test]
@@ -152,8 +195,27 @@ mod tests {
     }
 
     #[test]
-    fn bad_number_reports_option() {
+    fn bad_number_is_typed_and_names_the_option() {
         let a = Args::parse(&sv(&["--steps", "abc"]), OPTS, FLAGS).unwrap();
-        assert!(a.usize_or("steps", 0).unwrap_err().contains("steps"));
+        let err = a.usize_or("steps", 0).unwrap_err();
+        assert_eq!(err, CliError::BadValue {
+            name: "steps".into(),
+            value: "abc".into(),
+            expects: "an integer",
+        });
+        assert!(err.to_string().contains("--steps"), "{err}");
+    }
+
+    #[test]
+    fn every_variant_displays_its_flag() {
+        for (err, needle) in [
+            (CliError::UnknownOption { name: "x".into() }, "--x"),
+            (CliError::MissingValue { name: "y".into() }, "--y"),
+            (CliError::FlagWithValue { name: "z".into() }, "--z"),
+            (CliError::BadValue { name: "w".into(), value: "v".into(),
+                                  expects: "a number" }, "--w"),
+        ] {
+            assert!(err.to_string().contains(needle), "{err}");
+        }
     }
 }

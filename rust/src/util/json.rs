@@ -107,6 +107,15 @@ impl Json {
         s
     }
 
+    /// Single-line serialization — HTTP response bodies and the streamed
+    /// JSON-lines job metrics, where one value must stay on one line.
+    /// Same escaping and stable (BTreeMap) key order as the pretty form.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, n: usize| {
             if pretty {
@@ -163,7 +172,7 @@ impl Json {
                     }
                     pad(out, indent + 1);
                     Json::Str(k.clone()).write(out, indent + 1, pretty);
-                    out.push_str(": ");
+                    out.push_str(if pretty { ": " } else { ":" });
                     x.write(out, indent + 1, pretty);
                 }
                 if !m.is_empty() {
@@ -407,6 +416,29 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let back = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(j, back);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let src = r#"{"b": {"c": -3}, "a": [1, 2.5, "x\n", true, null]}"#;
+        let j = Json::parse(src).unwrap();
+        let compact = j.to_string_compact();
+        // the embedded "\n" is escaped, so the whole value stays on one line
+        assert_eq!(compact.matches('\n').count(), 0, "{compact}");
+        assert_eq!(Json::parse(&compact).unwrap(), j);
+        // stable key order: "a" before "b" regardless of insertion order
+        assert!(compact.find("\"a\"").unwrap() < compact.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn f32_survives_compact_roundtrip_bitwise() {
+        // the serve layer's bitwise-parity contract: f32 -> f64 is exact,
+        // `{}` formatting is shortest-roundtrip, parse returns the same f64
+        for v in [0.1f32, -3.7e-12, 1.0 + f32::EPSILON, 6_553.6, f32::MIN_POSITIVE] {
+            let j = Json::Num(v as f64);
+            let back = Json::parse(&j.to_string_compact()).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), (v as f64).to_bits(), "{v}");
+        }
     }
 
     #[test]

@@ -35,6 +35,47 @@ fn every_registered_model_trains_under_every_algo() {
     }
 }
 
+/// Predict-path smoke over the whole registry: every model must accept
+/// synthetic samples through `Session::predict_batch` at n = 1 and
+/// n = capacity, return one finite logits row per sample, and — the
+/// serving contract — give each sample bitwise identical logits whether
+/// it runs solo or packed into a full batch.
+#[test]
+fn every_registered_model_predicts_batched_and_solo_bitwise() {
+    use features_replay::runtime::Packer;
+
+    for entry in ModelRegistry::entries() {
+        let session = Experiment::new(entry.name)
+            .k(2)
+            .backend(BackendKind::Native)
+            .session()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", entry.name));
+        let packer = Packer::new(&session.manifest).unwrap();
+        let n = packer.capacity();
+        let samples: Vec<_> = (0..n).map(|i| packer.synthetic_sample(i)).collect();
+
+        let batched = session.predict_batch(&samples)
+            .unwrap_or_else(|e| panic!("{}: batched predict: {e:#}", entry.name));
+        assert_eq!(batched.len(), n, "{}: one row per sample", entry.name);
+        for (i, row) in batched.iter().enumerate() {
+            assert_eq!(row.len(), packer.logits_per_sample(),
+                       "{}: row {i} length", entry.name);
+            assert!(row.iter().all(|v| v.is_finite()),
+                    "{}: non-finite logit in row {i}", entry.name);
+        }
+
+        // solo runs must reproduce the batched rows bit for bit
+        for (i, sample) in samples.iter().enumerate().take(2.min(n)) {
+            let solo = session.predict_batch(std::slice::from_ref(sample))
+                .unwrap_or_else(|e| panic!("{}: solo predict: {e:#}", entry.name));
+            let solo_bits: Vec<u32> = solo[0].iter().map(|v| v.to_bits()).collect();
+            let batch_bits: Vec<u32> = batched[i].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(solo_bits, batch_bits,
+                       "{}: sample {i} logits differ solo vs batched", entry.name);
+        }
+    }
+}
+
 #[test]
 fn eval_cadence_controls_curve_density() {
     let res = Experiment::new("mlp_tiny")

@@ -7,6 +7,7 @@
 //! shapes — empty outputs, single rows/columns, `seq = 1`, one sequence
 //! group — where partition bookkeeping is most likely to slip).
 
+use features_replay::checkpoint::{Checkpoint, Meta, ModuleState, RingState};
 use features_replay::coordinator::history::ReplayBuffer;
 use features_replay::coordinator::pipeline_sim::{
     bp_data_parallel_ms, bp_iteration_ms, decoupled_iteration_ms, CommModel,
@@ -416,6 +417,81 @@ fn replay_buffer_push_and_stale_are_zero_copy() {
             Ok(())
         } else {
             Err("ring push/stale must be refcount bumps".to_string())
+        }
+    });
+}
+
+/// A small but structurally complete checkpoint for the tamper property:
+/// two modules, params + momentum + a non-empty replay ring + one pending
+/// delta, so tampering can land in every section of the wire format.
+fn tamper_fixture() -> Checkpoint {
+    Checkpoint {
+        meta: Meta {
+            config: "mlp_tiny".to_string(),
+            k: 2,
+            algo: "FR".to_string(),
+            step: 7,
+            seed: 3,
+            schedule: "constant".to_string(),
+        },
+        data_rng: vec![0x1234_5678, 42, 7],
+        modules: (0..2usize).map(|m| ModuleState {
+            params: vec![
+                Tensor::from_f32(vec![2, 3],
+                    (0..6).map(|x| x as f32 * 0.5 - 1.0).collect()).unwrap(),
+                Tensor::from_f32(vec![3], vec![0.1, -0.2, 0.3]).unwrap(),
+            ],
+            velocity: vec![vec![0.25; 6], vec![-0.5; 3]],
+            history: RingState {
+                slots: vec![
+                    Tensor::from_f32(vec![4], vec![0.1, 0.2, 0.3, 0.4]).unwrap(),
+                ],
+                head: 0,
+                pushes: 1,
+            },
+            pending_delta: if m == 0 {
+                Some(Tensor::from_f32(vec![2], vec![1.5, -2.5]).unwrap())
+            } else {
+                None
+            },
+            train_steps: 7,
+        }).collect(),
+    }
+}
+
+/// Randomized tamper property over the checkpoint wire format: any
+/// truncation or bit-flip of a valid image must surface as a typed
+/// [`CheckpointError`] — never a panic in the decoder, never a silent
+/// success handing corrupted parameters to a resume. (The existing point
+/// tests in `checkpoint/` cover one truncation and one bit flip; this
+/// sweeps the whole format — header, meta strings, tensor dims, payload.)
+#[test]
+fn tampered_checkpoints_fail_typed_never_panic() {
+    let base = tamper_fixture().to_bytes();
+    Checkpoint::from_bytes(&base).expect("untampered fixture must decode");
+    check("ckpt_tamper", 300, |g| {
+        let mut bytes = base.clone();
+        if g.rng.below(2) == 0 {
+            bytes.truncate(g.rng.below(bytes.len()));
+        } else {
+            for _ in 0..g.usize_in(1, 8) {
+                let bit = g.rng.below(bytes.len() * 8);
+                bytes[bit / 8] ^= 1u8 << (bit % 8);
+            }
+        }
+        if bytes == base {
+            return Ok(()); // an even number of flips can cancel out
+        }
+        // FNV-1a's per-byte update is a bijection in the running hash, so
+        // every single-byte tamper is detected; multi-flip collisions are
+        // ~2^-64 and the seeds are deterministic, so this never flakes.
+        let decoded = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| Checkpoint::from_bytes(&bytes)));
+        match decoded {
+            Err(_) => Err(format!("decoder panicked ({} tampered bytes)",
+                                  bytes.len())),
+            Ok(Ok(_)) => Err("tampered checkpoint decoded silently".to_string()),
+            Ok(Err(_typed)) => Ok(()),
         }
     });
 }

@@ -1,0 +1,273 @@
+//! End-to-end tests of `frctl serve` over real sockets: the acceptance
+//! criterion that a coalesced micro-batch of N concurrent predict
+//! requests returns results bitwise identical to the same N served one
+//! at a time (at kernel threads 1 and max), plus endpoint coverage —
+//! typed 400s for malformed input, metrics/health bodies, and a
+//! background train-job lifecycle smoke.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use features_replay::experiment::Experiment;
+use features_replay::runtime::Packer;
+use features_replay::serve::http::MiniClient;
+use features_replay::serve::{ServeConfig, Server};
+use features_replay::util::json::Json;
+
+/// Bind an in-process server on an ephemeral port and run it on a
+/// background thread; returns (addr, stop-closure).
+fn start_server(mut cfg: ServeConfig) -> (String, impl FnOnce()) {
+    cfg.addr = "127.0.0.1:0".to_string();
+    let server = Server::bind(cfg).expect("bind");
+    let addr = server.local_addr().to_string();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    wait_healthy(&addr);
+    (addr, move || {
+        stop.store(true, Ordering::Relaxed);
+        handle.join().expect("server thread").expect("clean shutdown");
+    })
+}
+
+fn wait_healthy(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if let Ok((200, _)) = MiniClient::one_shot(addr, "GET", "/healthz", b"") {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server at {addr} never became healthy");
+}
+
+fn predict_body(packer: &Packer, i: usize) -> Vec<u8> {
+    use features_replay::runtime::Sample;
+    let mut out = String::new();
+    match packer.synthetic_sample(i) {
+        Sample::F32(v) => {
+            out.push_str("{\"input\":[");
+            let vals: Vec<String> = v.iter().map(|x| format!("{}", *x as f64)).collect();
+            out.push_str(&vals.join(","));
+        }
+        Sample::Tokens(v) => {
+            out.push_str("{\"tokens\":[");
+            let vals: Vec<String> = v.iter().map(|t| t.to_string()).collect();
+            out.push_str(&vals.join(","));
+        }
+    }
+    out.push_str("]}");
+    out.into_bytes()
+}
+
+/// Parse a 200 predict body into (logit bit patterns, batch field).
+fn parse_predict(body: &[u8]) -> (Vec<u64>, usize) {
+    let json = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+    let logits = json.get("logits").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_f64().unwrap().to_bits())
+        .collect();
+    let batch = json.get("batch").unwrap().as_usize().unwrap();
+    (logits, batch)
+}
+
+/// The tentpole acceptance test: N requests served solo (each its own
+/// micro-batch) must produce bitwise identical logits to the same N
+/// requests arriving concurrently and coalescing — at both the
+/// single-thread kernel reference and max threads.
+#[test]
+fn coalesced_batches_match_solo_bitwise() {
+    let n = 4usize;
+    let packer = Packer::new(
+        &Experiment::new("mlp_tiny").k(2).manifest().unwrap()).unwrap();
+    for threads in [1usize, 0] {
+        let mut cfg = ServeConfig::new("mlp_tiny");
+        cfg.k = 2;
+        cfg.threads = threads;
+        cfg.max_batch = n;
+        // long enough that concurrent requests coalesce; solo requests pay
+        // it once each and flush alone
+        cfg.max_wait_ms = 200;
+        cfg.jobs_dir = std::env::temp_dir()
+            .join(format!("frctl-serve-test-{}-{threads}", std::process::id()));
+        let (addr, shutdown) = start_server(cfg);
+
+        // phase 1: one at a time — every response must say batch=1
+        let mut solo: Vec<Vec<u64>> = Vec::new();
+        for i in 0..n {
+            let (status, body) = MiniClient::one_shot(
+                &addr, "POST", "/v1/predict", &predict_body(&packer, i)).unwrap();
+            assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+            let (logits, batch) = parse_predict(&body);
+            assert_eq!(batch, 1, "solo request must flush alone");
+            assert_eq!(logits.len(), packer.logits_per_sample());
+            solo.push(logits);
+        }
+
+        // phase 2: the same n requests at once, released by a barrier
+        let barrier = Arc::new(Barrier::new(n));
+        let handles: Vec<_> = (0..n).map(|i| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            let body = predict_body(&packer, i);
+            std::thread::spawn(move || {
+                let mut client = MiniClient::connect(&addr).unwrap();
+                barrier.wait();
+                let (status, resp) = client.request("POST", "/v1/predict", &body)
+                    .unwrap();
+                assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+                parse_predict(&resp)
+            })
+        }).collect();
+        let concurrent: Vec<(Vec<u64>, usize)> = handles.into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+
+        // any partition into micro-batches keeps logits bitwise identical;
+        // with a 200 ms hold the batcher must still have coalesced some
+        let max_batch = concurrent.iter().map(|(_, b)| *b).max().unwrap();
+        assert!(max_batch >= 2,
+                "threads={threads}: no coalescing observed (max batch {max_batch})");
+        for (i, (logits, _)) in concurrent.iter().enumerate() {
+            assert_eq!(logits, &solo[i],
+                       "threads={threads}: sample {i} differs between solo \
+                        and coalesced serving");
+        }
+        shutdown();
+    }
+}
+
+#[test]
+fn malformed_predicts_are_typed_400s() {
+    let mut cfg = ServeConfig::new("transformer_tiny");
+    cfg.k = 2;
+    cfg.max_wait_ms = 1;
+    cfg.jobs_dir = std::env::temp_dir()
+        .join(format!("frctl-serve-test-400-{}", std::process::id()));
+    let (addr, shutdown) = start_server(cfg);
+
+    // wrong input kind for a token model
+    let (status, body) = MiniClient::one_shot(
+        &addr, "POST", "/v1/predict", br#"{"input": [1.0, 2.0]}"#).unwrap();
+    assert_eq!(status, 400);
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(json.get("detail").unwrap().as_str().unwrap().contains("token"));
+
+    // wrong length
+    let (status, _) = MiniClient::one_shot(
+        &addr, "POST", "/v1/predict", br#"{"tokens": [1, 2, 3]}"#).unwrap();
+    assert_eq!(status, 400);
+
+    // out-of-vocab token (vocab 96) — must be a 400, not a kernel panic
+    let toks: Vec<String> = (0..32).map(|_| "500".to_string()).collect();
+    let body_bytes = format!("{{\"tokens\":[{}]}}", toks.join(","));
+    let (status, body) = MiniClient::one_shot(
+        &addr, "POST", "/v1/predict", body_bytes.as_bytes()).unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+
+    // malformed JSON
+    let (status, _) = MiniClient::one_shot(
+        &addr, "POST", "/v1/predict", b"{not json").unwrap();
+    assert_eq!(status, 400);
+
+    // unknown route and wrong method
+    let (status, _) = MiniClient::one_shot(&addr, "GET", "/nope", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = MiniClient::one_shot(&addr, "GET", "/v1/predict", b"").unwrap();
+    assert_eq!(status, 405);
+
+    // after all that abuse the server still answers health + metrics
+    let (status, body) = MiniClient::one_shot(&addr, "GET", "/v1/metrics", b"").unwrap();
+    assert_eq!(status, 200);
+    let metrics = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(metrics.get("predict_errors").unwrap().as_usize().unwrap() >= 4);
+    assert!(metrics.get("request_latency").unwrap().get("count").is_some());
+    shutdown();
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests() {
+    let mut cfg = ServeConfig::new("mlp_tiny");
+    cfg.k = 2;
+    cfg.max_wait_ms = 1;
+    cfg.jobs_dir = std::env::temp_dir()
+        .join(format!("frctl-serve-test-ka-{}", std::process::id()));
+    let packer = Packer::new(
+        &Experiment::new("mlp_tiny").k(2).manifest().unwrap()).unwrap();
+    let (addr, shutdown) = start_server(cfg);
+    let mut client = MiniClient::connect(&addr).unwrap();
+    for i in 0..5 {
+        let (status, _) = client
+            .request("POST", "/v1/predict", &predict_body(&packer, i)).unwrap();
+        assert_eq!(status, 200);
+        let (status, _) = client.request("GET", "/healthz", b"").unwrap();
+        assert_eq!(status, 200);
+    }
+    shutdown();
+}
+
+#[test]
+fn train_job_lifecycle_streams_metrics() {
+    let mut cfg = ServeConfig::new("mlp_tiny");
+    cfg.k = 2;
+    cfg.max_wait_ms = 1;
+    cfg.jobs_dir = std::env::temp_dir()
+        .join(format!("frctl-serve-test-jobs-{}", std::process::id()));
+    let (addr, shutdown) = start_server(cfg);
+
+    // bad spec → 400 before any thread spawns
+    let (status, _) = MiniClient::one_shot(
+        &addr, "POST", "/v1/train-jobs", br#"{"steps": 3}"#).unwrap();
+    assert_eq!(status, 400);
+
+    let (status, body) = MiniClient::one_shot(
+        &addr, "POST", "/v1/train-jobs",
+        br#"{"model": "mlp_tiny", "k": 2, "steps": 3, "threads": 1}"#).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let id = json.get("id").unwrap().as_usize().unwrap();
+
+    // poll the status endpoint until the job finishes (bounded)
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let final_state = loop {
+        let (status, body) = MiniClient::one_shot(
+            &addr, "GET", &format!("/v1/train-jobs/{id}"), b"").unwrap();
+        assert_eq!(status, 200);
+        let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let state = json.get("state").unwrap().as_str().unwrap().to_string();
+        if state != "running" {
+            break json;
+        }
+        assert!(Instant::now() < deadline, "job {id} never finished");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(final_state.get("state").unwrap().as_str(), Some("done"),
+               "{final_state:?}");
+    assert_eq!(final_state.get("step").unwrap().as_usize(), Some(3));
+    assert!(final_state.get("eval_loss").unwrap().as_f64().unwrap().is_finite());
+
+    // the NDJSON stream has one parseable line per step with a loss
+    let (status, body) = MiniClient::one_shot(
+        &addr, "GET", &format!("/v1/train-jobs/{id}/metrics"), b"").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 3, "{text}");
+    for (i, line) in lines.iter().enumerate() {
+        let step = Json::parse(line).unwrap();
+        assert_eq!(step.get("step").unwrap().as_usize(), Some(i));
+        assert!(step.get("loss").unwrap().as_f64().unwrap().is_finite());
+    }
+
+    // unknown job id
+    let (status, _) = MiniClient::one_shot(
+        &addr, "GET", "/v1/train-jobs/999", b"").unwrap();
+    assert_eq!(status, 404);
+
+    // list shows the job
+    let (status, body) = MiniClient::one_shot(
+        &addr, "GET", "/v1/train-jobs", b"").unwrap();
+    assert_eq!(status, 200);
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(json.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+    shutdown();
+}

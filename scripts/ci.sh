@@ -78,6 +78,71 @@ cargo run -q --features fault-inject --bin frctl -- parallel \
     --checkpoint-dir "$CKPT_DIR" --resume "$CKPT_DIR"
 rm -rf "$CKPT_DIR"
 
+# Serve smoke: stand up `frctl serve` on an ephemeral port, issue one
+# predict and one metrics request over /dev/tcp (no curl dependency), then
+# SIGTERM and require a clean exit 0. The deep coverage (bitwise batched
+# parity, typed 400s, train-job lifecycle) already ran in tier-1 via
+# tests/serve_api.rs; this step proves the shipped binary + flag surface.
+echo "== serve: frctl serve smoke (predict + metrics + SIGTERM) =="
+SERVE_DIR="$(mktemp -d)"
+# run the binary directly (not via `cargo run`): the SIGTERM below must
+# reach frctl itself, and cargo does not forward signals to its child
+cargo build -q --bin frctl
+target/debug/frctl serve \
+    --model transformer_tiny --k 2 --addr 127.0.0.1:0 \
+    --max-batch 4 --max-wait-ms 2 --jobs-dir "$SERVE_DIR/jobs" \
+    > "$SERVE_DIR/serve.log" 2>&1 &
+SERVE_PID=$!
+SERVE_ADDR=""
+for _ in $(seq 1 100); do
+    SERVE_ADDR="$(sed -n 's#.*listening on http://\([0-9.:]*\).*#\1#p' \
+        "$SERVE_DIR/serve.log")"
+    [ -n "$SERVE_ADDR" ] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "frctl serve died during startup:" >&2
+        cat "$SERVE_DIR/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.2
+done
+if [ -z "$SERVE_ADDR" ]; then
+    echo "frctl serve never printed its listen address" >&2
+    cat "$SERVE_DIR/serve.log" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+SERVE_HOST="${SERVE_ADDR%:*}"
+SERVE_PORT="${SERVE_ADDR##*:}"
+# one request per connection, bash /dev/tcp both ways
+serve_req() {  # method path body -> prints response (headers + body)
+    local method="$1" path="$2" body="$3"
+    exec 3<>"/dev/tcp/$SERVE_HOST/$SERVE_PORT"
+    printf '%s %s HTTP/1.1\r\nHost: ci\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: %d\r\n\r\n%s' \
+        "$method" "$path" "${#body}" "$body" >&3
+    cat <&3
+    exec 3<&- 3>&-
+}
+PREDICT_BODY="{\"tokens\":[$(seq -s, 0 31)]}"
+PREDICT_RESP="$(serve_req POST /v1/predict "$PREDICT_BODY")"
+echo "$PREDICT_RESP" | grep -q '"logits"' || {
+    echo "predict response lacks logits: $PREDICT_RESP" >&2; exit 1; }
+METRICS_RESP="$(serve_req GET /v1/metrics "")"
+echo "$METRICS_RESP" | grep -q '"predict_requests":1' || {
+    echo "metrics did not count the predict: $METRICS_RESP" >&2; exit 1; }
+kill -TERM "$SERVE_PID"
+set +e
+wait "$SERVE_PID"
+rc=$?
+set -e
+if [ "$rc" -ne 0 ]; then
+    echo "frctl serve: expected clean exit 0 after SIGTERM, got $rc" >&2
+    cat "$SERVE_DIR/serve.log" >&2
+    exit 1
+fi
+grep -q "clean shutdown" "$SERVE_DIR/serve.log" || {
+    echo "serve log missing clean-shutdown line" >&2; exit 1; }
+rm -rf "$SERVE_DIR"
+
 # Numpy mirrors: independent float32 re-derivations of the partition
 # schemes, runnable without cargo. Skip cleanly where python3/numpy are
 # absent (the Rust parity tests still cover the claim).
@@ -116,6 +181,10 @@ if [ "$BENCH" = 1 ]; then
     # perf trajectory.
     echo "== bench: kernel thread sweep (BENCH_kernels.json) =="
     cargo bench --bench bench_kernels
+    # Serving latency/throughput over real sockets (BENCH_serve.json —
+    # per-machine artifact, generated, not committed).
+    echo "== bench: serve latency sweep (BENCH_serve.json) =="
+    cargo bench --bench bench_serve
 fi
 
 # Probe the actual component, not `cargo` itself (which is trivially present
