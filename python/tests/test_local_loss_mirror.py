@@ -1,0 +1,184 @@
+"""Numpy finite-difference mirror of the local-loss backwards run by the
+DGL and BackLink strategies in `rust/src/coordinator/{dgl,backlink}.rs`.
+
+Each non-last module trains against an auxiliary classifier head —
+GlobalAvgPool + Dense at conv boundaries, Dense alone at flat boundaries —
+under softmax cross-entropy. The head's `loss_backward` must produce (a)
+gradients for the head's own parameters and (b) the boundary cotangent
+`delta_in` fed to the trunk; both are pinned here against central
+differences. BackLink additionally relies on a load-bearing identity: a
+module backward is linear in its cotangent, so running it twice (local
+delta, received delta) and summing the parameter gradients equals one
+backward on the summed delta — the exact scheme `backlink.rs` implements
+with `add_grads`, checked here both as linearity and against finite
+differences of the combined local + downstream objective.
+
+Only numpy is required (no jax), so this runs in the offline sandbox.
+"""
+import numpy as np
+
+import native_mirror as nm
+
+F = np.float32
+
+
+def gap(x, hw, c):
+    """Mirror of kernels::global_avgpool on NHWC rows flattened to
+    (b, hw*hw*c): mean over the hw*hw pixels per channel."""
+    b = x.shape[0]
+    return x.reshape(b, hw * hw, c).mean(axis=1, dtype=F).astype(F)
+
+
+def gap_bwd(dy, hw, c):
+    """Mirror of kernels::global_avgpool_bwd: broadcast dy/(hw*hw)."""
+    b = dy.shape[0]
+    inv = F(1.0 / (hw * hw))
+    return np.repeat((dy * inv)[:, None, :], hw * hw, axis=1) \
+        .reshape(b, hw * hw * c).astype(F)
+
+
+def aux_head_loss_backward(h, w, bias, labels, hw=None, c=None):
+    """One aux-head `loss_backward`: [GlobalAvgPool +] linear classifier +
+    fused softmax-xent. Returns (loss, dw, dbias, delta_in)."""
+    pooled = gap(h, hw, c) if hw is not None else h
+    logits = (nm.matmul(pooled, w) + bias).astype(F)
+    loss, dlogits = nm.softmax_xent(logits, labels)
+    dw = nm.matmul(pooled.T, dlogits)
+    dbias = dlogits.sum(axis=0, dtype=F)
+    dpooled = nm.matmul(dlogits, w.T)
+    dh = gap_bwd(dpooled, hw, c) if hw is not None else dpooled
+    return loss, dw, dbias, dh
+
+
+def _probe_indices(params, per_param=6):
+    idx = []
+    for p, arr in enumerate(params):
+        stride = max(1, arr.size // per_param)
+        idx.extend((p, i) for i in range(0, arr.size, stride))
+    return idx
+
+
+def test_flat_aux_head_backward_matches_finite_diff():
+    """MLP/transformer boundary: Dense-only aux head. Both the head grads
+    and delta_in (grad w.r.t. the incoming features) must match central
+    differences — delta_in is what DGL feeds the trunk backward."""
+    rng = np.random.default_rng(0)
+    b, d, classes = 4, 6, 5
+    h = (rng.normal(size=(b, d)) * 0.8).astype(F)
+    w = (rng.normal(size=(d, classes)) * 0.5).astype(F)
+    bias = (rng.normal(size=(classes,)) * 0.1).astype(F)
+    labels = rng.integers(0, classes, size=b)
+
+    _, dw, dbias, dh = aux_head_loss_backward(h, w, bias, labels)
+    params = [w, bias, h]
+    grads = [dw, dbias, dh]
+    f = lambda: float(aux_head_loss_backward(h, w, bias, labels)[0])
+    assert nm.finite_diff_check("flat_aux_head", f, params, grads,
+                                _probe_indices(params))
+
+
+def test_gap_aux_head_backward_matches_finite_diff():
+    """Conv boundary: GlobalAvgPool + Dense aux head over a (b, hw*hw*c)
+    feature map, the head shape `aux_head_spec` builds for resnet models."""
+    rng = np.random.default_rng(1)
+    b, hw, c, classes = 3, 3, 4, 5
+    h = (rng.normal(size=(b, hw * hw * c)) * 0.8).astype(F)
+    w = (rng.normal(size=(c, classes)) * 0.5).astype(F)
+    bias = (rng.normal(size=(classes,)) * 0.1).astype(F)
+    labels = rng.integers(0, classes, size=b)
+
+    _, dw, dbias, dh = aux_head_loss_backward(h, w, bias, labels, hw, c)
+    params = [w, bias, h]
+    grads = [dw, dbias, dh]
+    f = lambda: float(aux_head_loss_backward(h, w, bias, labels, hw, c)[0])
+    assert nm.finite_diff_check("gap_aux_head", f, params, grads,
+                                _probe_indices(params))
+
+
+def _dense_relu_bwd(w, bias, x, y, grad):
+    """Backward of y = relu(x @ w + bias) at fixed forward activations."""
+    plan = nm.Dense(relu=True)
+    g, dx = plan.bwd([w, bias], x, y, None, grad, True)
+    return g[0], g[1], dx
+
+
+def test_backlink_backward_is_linear_in_cotangent():
+    """backward(d_local) + backward(d_down) == backward(d_local + d_down)
+    for every output — the identity that makes backlink.rs's two-pass
+    `add_grads` scheme equal to one backward on the summed delta."""
+    rng = np.random.default_rng(2)
+    b, din, dout = 4, 5, 6
+    x = rng.normal(size=(b, din)).astype(F)
+    w = (rng.normal(size=(din, dout)) * 0.5).astype(F)
+    bias = (rng.normal(size=(dout,)) * 0.1).astype(F)
+    y = np.maximum(nm.matmul(x, w) + bias, 0).astype(F)
+    d_local = rng.normal(size=(b, dout)).astype(F)
+    d_down = rng.normal(size=(b, dout)).astype(F)
+
+    one = _dense_relu_bwd(w, bias, x, y, (d_local + d_down).astype(F))
+    a = _dense_relu_bwd(w, bias, x, y, d_local)
+    c = _dense_relu_bwd(w, bias, x, y, d_down)
+    for summed, whole in zip([p + q for p, q in zip(a, c)], one):
+        np.testing.assert_allclose(summed, whole, rtol=1e-5, atol=1e-6)
+
+
+def test_backlink_combined_objective_matches_summed_backwards():
+    """BackLink's module-k parameter update: grads from the local aux loss
+    plus grads from the received downstream delta must equal the true
+    gradient of L = xent(aux(y)) + <y, d_down> (d_down held constant) —
+    pinned by finite differences over the trunk weights."""
+    rng = np.random.default_rng(3)
+    b, din, dout, classes = 4, 5, 6, 3
+    x = rng.normal(size=(b, din)).astype(F)
+    w = (rng.normal(size=(din, dout)) * 0.5).astype(F)
+    bias = (rng.normal(size=(dout,)) * 0.1).astype(F)
+    aw = (rng.normal(size=(dout, classes)) * 0.5).astype(F)
+    ab = (rng.normal(size=(classes,)) * 0.1).astype(F)
+    labels = rng.integers(0, classes, size=b)
+    d_down = (rng.normal(size=(b, dout)) * 0.2).astype(F)
+
+    def forward():
+        return np.maximum(nm.matmul(x, w) + bias, 0).astype(F)
+
+    def combined_loss():
+        y = forward()
+        local = aux_head_loss_backward(y, aw, ab, labels)[0]
+        return float(local) + float((y.astype(np.float64)
+                                     * d_down.astype(np.float64)).sum())
+
+    y = forward()
+    _, _, _, d_local = aux_head_loss_backward(y, aw, ab, labels)
+    gw_l, gb_l, _ = _dense_relu_bwd(w, bias, x, y, d_local)
+    gw_d, gb_d, _ = _dense_relu_bwd(w, bias, x, y, d_down)
+
+    params = [w, bias]
+    grads = [gw_l + gw_d, gb_l + gb_d]
+    assert nm.finite_diff_check("backlink_combined", combined_loss,
+                                params, grads, _probe_indices(params))
+
+
+def main():
+    """Direct-run entry (ci.sh calls this without pytest)."""
+    tests = [
+        test_flat_aux_head_backward_matches_finite_diff,
+        test_gap_aux_head_backward_matches_finite_diff,
+        test_backlink_backward_is_linear_in_cotangent,
+        test_backlink_combined_objective_matches_summed_backwards,
+    ]
+    failures = 0
+    for t in tests:
+        try:
+            t()
+            print(f"OK  {t.__name__}")
+        except AssertionError as e:
+            failures += 1
+            print(f"FAIL {t.__name__}: {e}")
+    if failures:
+        print(f"\n{failures} failure(s)")
+        return 1
+    print("\nall local-loss backwards match finite differences")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,8 +44,9 @@ pub use wire::fnv1a64;
 
 /// Magic prefix of every checkpoint file.
 pub const MAGIC: [u8; 8] = *b"FRCKPT\0\0";
-/// Current format version; bump on any layout change.
-pub const VERSION: u32 = 1;
+/// Current format version; bump on any layout change. Version 2 added the
+/// per-module auxiliary-head sections (DGL/BackLink local-loss classifiers).
+pub const VERSION: u32 = 2;
 /// Header bytes before the payload: magic + version + length + checksum.
 pub const HEADER_LEN: usize = 28;
 
@@ -163,6 +164,12 @@ pub struct ModuleState {
     /// Backward steps this module has completed (drives the iteration-0
     /// "no delta yet" branch in the parallel workers).
     pub train_steps: usize,
+    /// Auxiliary local-loss head parameters attached at this module's output
+    /// boundary (DGL/BackLink; empty for global-loss methods and for the
+    /// last module, which uses the real loss head).
+    pub aux_params: Vec<Tensor>,
+    /// Momentum buffers of the aux-head optimizer (one per aux param).
+    pub aux_velocity: Vec<Vec<f32>>,
 }
 
 /// A full training snapshot: run identity + data RNG + per-module state.
@@ -208,6 +215,14 @@ impl Checkpoint {
                 None => w.u8(0),
             }
             w.usize(m.train_steps);
+            w.usize(m.aux_params.len());
+            for p in &m.aux_params {
+                w.tensor(p);
+            }
+            w.usize(m.aux_velocity.len());
+            for v in &m.aux_velocity {
+                w.f32s(v);
+            }
         }
         w.into_bytes()
     }
@@ -248,7 +263,14 @@ impl Checkpoint {
                 }
             };
             let train_steps = r.usize()?;
-            modules.push(ModuleState { params, velocity, history, pending_delta, train_steps });
+            let n_aux = r.usize()?;
+            let aux_params = (0..n_aux).map(|_| r.tensor()).collect::<Result<_, _>>()?;
+            let n_aux_vel = r.usize()?;
+            let aux_velocity = (0..n_aux_vel).map(|_| r.f32s()).collect::<Result<_, _>>()?;
+            modules.push(ModuleState {
+                params, velocity, history, pending_delta, train_steps,
+                aux_params, aux_velocity,
+            });
         }
         r.finish()?;
         Ok(Checkpoint { meta, data_rng, modules })
@@ -455,6 +477,9 @@ mod tests {
                     },
                     pending_delta: Some(Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap()),
                     train_steps: 5,
+                    aux_params: vec![Tensor::from_f32(vec![2, 1], vec![0.25, -0.75]).unwrap(),
+                                     Tensor::from_f32(vec![1], vec![0.125]).unwrap()],
+                    aux_velocity: vec![vec![0.01, -0.02], vec![0.0]],
                 },
                 ModuleState {
                     params: vec![Tensor::from_f32(vec![2], vec![4.0, 5.0]).unwrap()],
@@ -466,6 +491,8 @@ mod tests {
                     },
                     pending_delta: None,
                     train_steps: 5,
+                    aux_params: Vec::new(),
+                    aux_velocity: Vec::new(),
                 },
             ],
         }
@@ -486,6 +513,11 @@ mod tests {
         assert_eq!(r.modules[0].pending_delta.as_ref().unwrap().f32s(), &[0.5, -0.5]);
         assert!(r.modules[1].pending_delta.is_none());
         assert_eq!(r.modules[1].history.slots[0].i32s(), &[1, 2, 3]);
+        assert_eq!(r.modules[0].aux_params[0].f32s(), &[0.25, -0.75]);
+        assert_eq!(r.modules[0].aux_params[1].f32s(), &[0.125]);
+        assert_eq!(r.modules[0].aux_velocity, c.modules[0].aux_velocity);
+        assert!(r.modules[1].aux_params.is_empty());
+        assert!(r.modules[1].aux_velocity.is_empty());
         assert_eq!(params_hash(r.modules[0].params.iter()),
                    params_hash(c.modules[0].params.iter()));
     }

@@ -1,0 +1,229 @@
+//! BackLink baseline — local losses with short backward links
+//! (Guo & Eltawil, 2022).
+//!
+//! Like DGL, every non-last module carries an auxiliary classifier head and
+//! trains on its local loss. Unlike DGL, a gradient *does* cross each module
+//! boundary — but only one: module k additionally receives the gradient of
+//! module k+1's local loss, backpropagated through module k+1 and no
+//! further ([`Traffic::ActivationsAndLocalGrad`]). The weight update sums
+//! both signals, which restores some of the global objective's cross-module
+//! coupling while keeping the backward interconnect strictly
+//! nearest-neighbor.
+//!
+//! The two gradient contributions are computed with two `backward` calls on
+//! the same stored input — valid to sum because the backward map is linear
+//! in the output cotangent.
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::ModuleState;
+use crate::data::Batch;
+use crate::optim::SgdMomentum;
+use crate::runtime::{Engine, ModuleRuntime, Tensor};
+use crate::util::Timer;
+
+use super::dgl::{aux_head_bytes, restore_with_aux, snapshot_with_aux};
+use super::stack::ModuleStack;
+use super::strategy::{MemoryReport, StepStats, StepTiming, Traffic, Trainer};
+
+pub struct BacklinkTrainer {
+    stack: ModuleStack,
+    /// Auxiliary classifier heads, one per non-last module.
+    aux: Vec<ModuleRuntime>,
+    aux_opts: Vec<SgdMomentum>,
+}
+
+impl BacklinkTrainer {
+    pub fn new(engine: &Engine, stack: ModuleStack) -> Result<BacklinkTrainer> {
+        let kk = stack.k();
+        let mut aux = Vec::with_capacity(kk.saturating_sub(1));
+        for k in 0..kk.saturating_sub(1) {
+            aux.push(ModuleRuntime::load_aux(engine, &stack.manifest, k)
+                .with_context(|| format!("BackLink: building local-loss head {k}"))?);
+        }
+        let aux_opts = aux.iter()
+            .map(|h| SgdMomentum::new(&h.params,
+                                      stack.config.momentum,
+                                      stack.config.weight_decay))
+            .collect();
+        Ok(BacklinkTrainer { stack, aux, aux_opts })
+    }
+
+    /// The auxiliary heads (tests probe their parameters directly).
+    pub fn aux_heads(&self) -> &[ModuleRuntime] {
+        &self.aux
+    }
+}
+
+/// Elementwise sum of two same-shape gradient tensors.
+fn add_grads(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape != b.shape {
+        bail!("gradient shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+    }
+    let mut out = a.clone();
+    out.f32s_mut().iter_mut().zip(b.f32s()).for_each(|(x, &y)| *x += y);
+    Ok(out)
+}
+
+impl Trainer for BacklinkTrainer {
+    fn name(&self) -> &'static str {
+        "BackLink"
+    }
+
+    fn traffic(&self) -> Traffic {
+        Traffic::ActivationsAndLocalGrad
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let kk = self.stack.k();
+        let mut timing = StepTiming::new(kk);
+        let mut timer = Timer::new();
+
+        // forward, keeping every boundary activation (needed for the
+        // top-down pass below)
+        let mut hs: Vec<Tensor> = Vec::with_capacity(kk);
+        hs.push(batch.input.clone());
+        for k in 0..kk - 1 {
+            let h = self.stack.modules[k].forward(&hs[k])?;
+            timing.fwd_ms[k] = timer.lap_ms();
+            hs.push(h);
+        }
+
+        // The last module's local loss is the real one; its boundary
+        // gradient becomes the link into module K-2.
+        let out = self.stack.modules[kk - 1].loss_backward(&hs[kk - 1], &batch.labels)?;
+        self.stack.update(kk - 1, &out.grads, lr)?;
+        timing.bwd_ms[kk - 1] = timer.lap_ms();
+        let mut down = out.delta_in;
+
+        for k in (0..kk - 1).rev() {
+            // 1) local loss at this module's own boundary
+            let aux_out = self.aux[k].loss_backward(&hs[k + 1], &batch.labels)?;
+            let delta_local = aux_out.delta_in
+                .context("BackLink: aux head emitted no boundary gradient")?;
+            self.aux_opts[k].step_resident(&mut self.aux[k].params,
+                                           &aux_out.grads, lr)?;
+            timing.aux_ms[k] = timer.lap_ms();
+
+            // 2) two cotangents through the trunk: the local one (whose
+            //    delta_in continues one module down — the "short link") and
+            //    the one received from above (consumed here, never relayed)
+            let (g_local, din_local) = self.stack.modules[k]
+                .backward(&hs[k], &delta_local)?;
+            let received = down.take()
+                .context("BackLink: missing linked delta from above")?;
+            let (g_recv, _) = self.stack.modules[k].backward(&hs[k], &received)?;
+            let grads = g_local.iter().zip(&g_recv)
+                .map(|(a, b)| add_grads(a, b))
+                .collect::<Result<Vec<_>>>()?;
+            self.stack.update(k, &grads, lr)?;
+            timing.bwd_ms[k] = timer.lap_ms();
+            down = din_local;
+        }
+
+        Ok(StepStats { loss: out.loss, timing, history_bytes: 0 })
+    }
+
+    fn memory(&self) -> MemoryReport {
+        // One linked boundary gradient in flight per boundary, same shape
+        // as the forward activation crossing it.
+        let links = self.stack.modules[..self.stack.k() - 1].iter()
+            .map(|m| m.spec.out_bytes())
+            .sum();
+        MemoryReport {
+            activations: self.stack.activation_bytes(),
+            deltas: links,
+            aux_heads: aux_head_bytes(&self.aux),
+            ..Default::default()
+        }
+    }
+
+    fn stack(&self) -> &ModuleStack {
+        &self.stack
+    }
+
+    fn stack_mut(&mut self) -> &mut ModuleStack {
+        &mut self.stack
+    }
+
+    fn snapshot_modules(&self) -> Result<Vec<ModuleState>> {
+        Ok(snapshot_with_aux(&self.stack, &self.aux, &self.aux_opts))
+    }
+
+    fn restore_modules(&mut self, modules: &[ModuleState]) -> Result<()> {
+        restore_with_aux(&mut self.stack, &mut self.aux, &mut self.aux_opts, modules)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stack::TrainConfig;
+    use crate::runtime::NativeMlpSpec;
+
+    fn trainer(k: usize) -> BacklinkTrainer {
+        let manifest = NativeMlpSpec::tiny(k).manifest().unwrap();
+        let engine = Engine::native();
+        let stack = ModuleStack::load(&engine, manifest, TrainConfig::default()).unwrap();
+        BacklinkTrainer::new(&engine, stack).unwrap()
+    }
+
+    #[test]
+    fn traffic_and_memory_shape() {
+        let t = trainer(3);
+        assert_eq!(t.aux_heads().len(), 2);
+        assert_eq!(t.traffic(), Traffic::ActivationsAndLocalGrad);
+        let m = t.memory();
+        assert!(m.aux_heads > 0);
+        assert!(m.deltas > 0, "the backward links must be accounted");
+    }
+
+    #[test]
+    fn loss_decreases_over_steps() {
+        let mut t = trainer(2);
+        let mut data = crate::data::DataSource::for_manifest(
+            &t.stack().manifest, 17).unwrap();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for i in 0..20 {
+            let stats = t.train_step(&data.train_batch(), 0.05).unwrap();
+            assert!(stats.loss.is_finite());
+            if i == 0 {
+                first = stats.loss;
+            }
+            last = stats.loss;
+        }
+        assert!(last < first, "BackLink loss should decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn linked_gradient_changes_the_update() {
+        // Same seed, same data: DGL and BackLink agree on everything except
+        // the extra linked gradient, so trunk trajectories must diverge.
+        let manifest = NativeMlpSpec::tiny(2).manifest().unwrap();
+        let engine = Engine::native();
+        let mut dgl = super::super::dgl::DglTrainer::new(
+            &engine,
+            ModuleStack::load(&engine, manifest.clone(), TrainConfig::default()).unwrap(),
+        ).unwrap();
+        let mut bl = trainer(2);
+        let mut d1 = crate::data::DataSource::for_manifest(&manifest, 9).unwrap();
+        let mut d2 = crate::data::DataSource::for_manifest(&manifest, 9).unwrap();
+        for _ in 0..2 {
+            dgl.train_step(&d1.train_batch(), 0.05).unwrap();
+            bl.train_step(&d2.train_batch(), 0.05).unwrap();
+        }
+        let h_dgl = crate::checkpoint::params_hash(dgl.stack().modules[0].params.iter());
+        let h_bl = crate::checkpoint::params_hash(bl.stack().modules[0].params.iter());
+        assert_ne!(h_dgl, h_bl, "the short link must alter module 0's update");
+    }
+
+    #[test]
+    fn add_grads_sums_elementwise() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, -2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2], vec![0.5, 0.25]).unwrap();
+        assert_eq!(add_grads(&a, &b).unwrap().f32s(), &[1.5, -1.75]);
+        let bad = Tensor::from_f32(vec![3], vec![0.0; 3]).unwrap();
+        assert!(add_grads(&a, &bad).is_err());
+    }
+}

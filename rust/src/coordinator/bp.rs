@@ -86,6 +86,8 @@ impl Trainer for BpTrainer {
                 history: RingState { slots: Vec::new(), head: 0, pushes: 0 },
                 pending_delta: None,
                 train_steps: 0,
+                aux_params: Vec::new(),
+                aux_velocity: Vec::new(),
             })
             .collect())
     }

@@ -178,6 +178,8 @@ impl Trainer for FrTrainer {
                 },
                 pending_delta: (k + 1 < kk).then(|| self.pending_delta[k].clone()),
                 train_steps: self.step,
+                aux_params: Vec::new(),
+                aux_velocity: Vec::new(),
             })
             .collect())
     }

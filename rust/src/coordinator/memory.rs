@@ -10,12 +10,14 @@
 //! feature-map sizes (e.g. a 32×32×8 boundary map), not stand-in vector
 //! widths:
 //!
-//!   BP   O(L):        one in-flight batch of per-layer activations
-//!   FR   O(L + K^2):  + module-input history rings + K-1 pending deltas
-//!   DDG  O(LK + K^2): per-layer stash x (K-k) in-flight iterations
-//!   DNI  O(L + K L_s): + synthesizer params/activations per boundary
+//!   BP       O(L):        one in-flight batch of per-layer activations
+//!   FR       O(L + K^2):  + module-input history rings + K-1 pending deltas
+//!   DDG      O(LK + K^2): per-layer stash x (K-k) in-flight iterations
+//!   DNI      O(L + K L_s): + synthesizer params/activations per boundary
+//!   DGL      O(L + K):    + one auxiliary classifier head per boundary
+//!   BackLink O(L + K):    DGL + one in-flight link gradient per boundary
 
-use crate::runtime::spec::Manifest;
+use crate::runtime::spec::{aux_head_spec, Manifest};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
@@ -23,11 +25,19 @@ pub enum Algo {
     Fr,
     Ddg,
     Dni,
+    /// Decoupled Greedy Learning (Belilovsky et al.): per-module auxiliary
+    /// classifier + local cross-entropy, no backward inter-module traffic.
+    Dgl,
+    /// BackLink (Guo & Eltawil): local losses plus a short backward link
+    /// passing each module's input gradient one module upstream.
+    Backlink,
 }
 
 impl Algo {
-    /// All four methods in the paper's comparison order (Fig 4 / Table 2).
-    pub const ALL: [Algo; 4] = [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Fr];
+    /// Every registered method, in comparison order (the paper's four plus
+    /// the local-loss zoo). Grids and `frctl compare` iterate this.
+    pub const ALL: [Algo; 6] =
+        [Algo::Bp, Algo::Dni, Algo::Ddg, Algo::Dgl, Algo::Backlink, Algo::Fr];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -35,7 +45,42 @@ impl Algo {
             Algo::Fr => "FR",
             Algo::Ddg => "DDG",
             Algo::Dni => "DNI",
+            Algo::Dgl => "DGL",
+            Algo::Backlink => "BackLink",
         }
+    }
+
+    /// The CLI/API spelling — the single typed table `frctl --algo` and the
+    /// serve `"algo"` field both parse through ([`Algo::parse`]).
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            Algo::Bp => "bp",
+            Algo::Fr => "fr",
+            Algo::Ddg => "ddg",
+            Algo::Dni => "dni",
+            Algo::Dgl => "dgl",
+            Algo::Backlink => "backlink",
+        }
+    }
+
+    /// Comma-joined list of every valid CLI spelling (for error messages).
+    pub fn cli_names() -> String {
+        Self::ALL.iter()
+            .map(|a| a.cli_name())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Parse a CLI/API algorithm name (case-insensitive). The error names
+    /// every valid spelling, so an unknown `--algo` or train-job `"algo"`
+    /// always tells the caller what *would* parse.
+    pub fn parse(s: &str) -> Result<Algo, String> {
+        let lower = s.to_ascii_lowercase();
+        Self::ALL.iter()
+            .copied()
+            .find(|a| a.cli_name() == lower)
+            .ok_or_else(|| format!("unknown algorithm {s:?} (valid: {})",
+                                   Self::cli_names()))
     }
 }
 
@@ -87,7 +132,39 @@ pub fn predicted_bytes(m: &Manifest, algo: Algo) -> usize {
                 .sum();
             one_batch + synth
         }
+        Algo::Dgl => one_batch + aux_heads_bytes(m),
+        // BackLink adds one in-flight link gradient (the downstream
+        // module's input delta) per boundary on top of DGL's heads.
+        Algo::Backlink => {
+            let links: usize = m.modules.iter().take(kk.saturating_sub(1))
+                .map(|x| x.out_bytes())
+                .sum();
+            one_batch + aux_heads_bytes(m) + links
+        }
     }
+}
+
+/// Bytes of the K-1 auxiliary classifier heads (params + one in-flight
+/// batch of head activations), priced from the same op-graph signatures the
+/// runtime builds them with. AOT manifests carry no native op graph, so
+/// those fall back to a dense-head estimate from the boundary shape.
+fn aux_heads_bytes(m: &Manifest) -> usize {
+    m.modules.iter().take(m.k.saturating_sub(1))
+        .map(|trunk| match aux_head_spec(m, trunk.index) {
+            Ok(spec) => {
+                let params: usize = spec.param_shapes.iter()
+                    .map(|p| p.iter().product::<usize>() * 4)
+                    .sum();
+                params + spec.act_bytes
+            }
+            Err(_) => {
+                let rows = trunk.out_shape.first().copied().unwrap_or(1);
+                let width = trunk.out_shape.get(1).copied().unwrap_or(0);
+                let c = m.num_classes;
+                4 * (width * c + c) + 4 * rows * c * 2
+            }
+        })
+        .sum()
 }
 
 /// The Table 1 complexity row evaluated symbolically: returns (L-term
@@ -131,6 +208,35 @@ mod tests {
         // paper: DDG more than 2x BP at K=4; FR close to BP
         assert!(ddg as f64 > 1.8 * bp as f64, "DDG {ddg} vs BP {bp}");
         assert!((fr as f64) < 1.5 * bp as f64, "FR {fr} vs BP {bp}");
+    }
+
+    #[test]
+    fn algo_parse_round_trips_and_unknown_lists_all() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::parse(a.cli_name()).unwrap(), a);
+            assert_eq!(Algo::parse(&a.cli_name().to_uppercase()).unwrap(), a);
+            assert_eq!(Algo::parse(a.cli_name()).unwrap().name(), a.name());
+        }
+        let err = Algo::parse("sgd").unwrap_err();
+        for a in Algo::ALL {
+            assert!(err.contains(a.cli_name()),
+                    "error must list {:?}: {err}", a.cli_name());
+        }
+    }
+
+    #[test]
+    fn local_loss_methods_sit_between_bp_and_ddg() {
+        // Procedural manifest: no artifacts needed for the new formulas.
+        let m = crate::runtime::NativeMlpSpec::tiny(4).manifest().unwrap();
+        let bp = predicted_bytes(&m, Algo::Bp);
+        let dgl = predicted_bytes(&m, Algo::Dgl);
+        let backlink = predicted_bytes(&m, Algo::Backlink);
+        let ddg = predicted_bytes(&m, Algo::Ddg);
+        assert!(dgl > bp, "DGL adds aux heads over BP ({dgl} vs {bp})");
+        assert!(backlink > dgl, "BackLink adds link grads over DGL \
+                                 ({backlink} vs {dgl})");
+        assert!(backlink < ddg, "local-loss methods stay below DDG's stash \
+                                 ({backlink} vs {ddg})");
     }
 
     #[test]

@@ -4,14 +4,18 @@
 //! - [`parallel`]: the threaded K-worker FR deployment (one PJRT client per
 //!   module, channels for features/deltas)
 //! - [`bp`] / [`ddg`] / [`dni`]: the paper's comparison methods
+//! - [`dgl`] / [`backlink`]: local-loss strategies (auxiliary classifier
+//!   heads; no / one-module backward traffic)
 //! - [`history`]: replay ring buffers (the K-k+1 input history)
 //! - [`stack`]: shared module-runtime + optimizer state
 //! - [`memory`]: Table 1 / Fig 5 activation-memory model
 //! - [`sigma`]: Assumption 1 / Fig 3 sufficient-direction probe
 //! - [`pipeline_sim`]: K-device makespan model for the timing figures
 
+pub mod backlink;
 pub mod bp;
 pub mod ddg;
+pub mod dgl;
 pub mod dni;
 pub mod fr;
 pub mod history;
@@ -35,7 +39,7 @@ use crate::util::Timer;
 
 pub use memory::Algo;
 pub use stack::{ModuleStack, TrainConfig};
-pub use strategy::{MemoryReport, StepStats, StepTiming, Trainer};
+pub use strategy::{MemoryReport, StepStats, StepTiming, Traffic, Trainer};
 
 /// Build a trainer for `algo` from a manifest (loaded from an artifact
 /// directory, or built procedurally — see `runtime::NativeMlpSpec`) on the
@@ -48,17 +52,16 @@ pub fn make_trainer(engine: &Engine, manifest: &Manifest, algo: Algo,
         Algo::Fr => Box::new(fr::FrTrainer::new(stack)),
         Algo::Ddg => Box::new(ddg::DdgTrainer::new(stack)),
         Algo::Dni => Box::new(dni::DniTrainer::new(engine, stack)?),
+        Algo::Dgl => Box::new(dgl::DglTrainer::new(engine, stack)?),
+        Algo::Backlink => Box::new(backlink::BacklinkTrainer::new(engine, stack)?),
     })
 }
 
+/// Parse a CLI/API algorithm name — one typed table ([`Algo::parse`])
+/// shared by `frctl` and the serve layer, so both always list the same
+/// valid set.
 pub fn parse_algo(s: &str) -> Result<Algo> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "bp" => Algo::Bp,
-        "fr" => Algo::Fr,
-        "ddg" => Algo::Ddg,
-        "dni" => Algo::Dni,
-        other => bail!("unknown algorithm {other:?} (bp|fr|ddg|dni)"),
-    })
+    Algo::parse(s).map_err(anyhow::Error::msg)
 }
 
 /// Options for a recorded training run.

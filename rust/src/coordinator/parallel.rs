@@ -709,6 +709,8 @@ fn worker_loop(
                         },
                         pending_delta: (!is_last).then(|| pending_delta.clone()),
                         train_steps,
+                        aux_params: Vec::new(),
+                        aux_velocity: Vec::new(),
                     }))),
                 };
                 reply.send(msg).ok();

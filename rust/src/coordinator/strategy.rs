@@ -23,8 +23,9 @@ use crate::data::Batch;
 pub struct StepTiming {
     pub fwd_ms: Vec<f64>,
     pub bwd_ms: Vec<f64>,
-    /// Extra decoupling work that runs *on* the device, e.g. DNI's
-    /// synthesizer prediction + training (per module; zero otherwise).
+    /// Extra decoupling work that runs *on* the device: DNI's synthesizer
+    /// prediction + training, DGL/BackLink auxiliary-head local losses
+    /// (per module; zero otherwise).
     pub aux_ms: Vec<f64>,
 }
 
@@ -64,17 +65,45 @@ pub struct MemoryReport {
     pub synth: usize,
     /// Weight snapshot queues (DDG; the paper calls these negligible).
     pub weight_copies: usize,
+    /// Auxiliary local-loss classifier heads: parameters + their
+    /// activations (DGL/BackLink; zero otherwise).
+    pub aux_heads: usize,
 }
 
 impl MemoryReport {
     pub fn total(&self) -> usize {
-        self.activations + self.history + self.deltas + self.synth + self.weight_copies
+        self.activations + self.history + self.deltas + self.synth
+            + self.weight_copies + self.aux_heads
     }
 }
 
+/// What a strategy sends between adjacent modules each iteration — the
+/// communication contract that decides whether modules can live on devices
+/// with no backward interconnect (Table: README §Algorithms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Traffic {
+    /// Forward activations only; no gradient ever crosses a module
+    /// boundary (DGL — each module trains on its own auxiliary loss).
+    ActivationsOnly,
+    /// Forward activations down-stack plus a gradient signal back up the
+    /// full stack (BP exactly; FR/DDG/DNI with staleness/synthesis).
+    ActivationsAndGrad,
+    /// Forward activations plus a gradient link spanning exactly one module
+    /// boundary (BackLink — local losses with short backward connections).
+    ActivationsAndLocalGrad,
+}
+
 pub trait Trainer {
-    /// Short name used in tables/curves ("BP", "FR", "DDG", "DNI").
+    /// Short name used in tables/curves ("BP", "FR", "DDG", "DNI",
+    /// "DGL", "BackLink").
     fn name(&self) -> &'static str;
+
+    /// The inter-module communication pattern this strategy needs. Global
+    /// error feedback (full backward traffic) is the default; local-loss
+    /// strategies override it.
+    fn traffic(&self) -> Traffic {
+        Traffic::ActivationsAndGrad
+    }
 
     /// Run one iteration (forward + whatever decoupled backward the method
     /// prescribes + weight updates) at stepsize `lr`.

@@ -365,6 +365,46 @@ impl Session {
         &self.opts
     }
 
+    /// Stepsize for a given step under the experiment's schedule (manual
+    /// stepping; mirrors [`ParallelSession::lr_at`]).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        self.schedule.lr(step)
+    }
+
+    /// True when the checkpoint cadence says "write after this many
+    /// completed steps" (requires a checkpoint dir).
+    pub fn should_checkpoint(&self, completed_steps: usize) -> bool {
+        self.opts.checkpoint_dir.is_some()
+            && self.opts.checkpoint_every > 0
+            && completed_steps > 0
+            && completed_steps % self.opts.checkpoint_every == 0
+    }
+
+    /// Snapshot the trainer and atomically write `ckpt-<step>.fckpt` into
+    /// the configured checkpoint dir; returns the path written. The
+    /// sequential counterpart of [`ParallelSession::write_checkpoint`] —
+    /// works for every strategy whose `snapshot_modules` is implemented
+    /// (BP, FR, DGL, BackLink).
+    pub fn write_checkpoint(&mut self, completed_steps: usize) -> Result<PathBuf> {
+        let dir = self.opts.checkpoint_dir.clone()
+            .context("no checkpoint dir configured")?;
+        let ckpt = Checkpoint {
+            meta: crate::checkpoint::Meta {
+                config: self.manifest.config.clone(),
+                k: self.manifest.k,
+                algo: self.trainer.name().to_string(),
+                step: completed_steps,
+                seed: self.trainer.stack().config.seed,
+                schedule: self.schedule.fingerprint(),
+            },
+            data_rng: self.data.rng_state(),
+            modules: self.trainer.snapshot_modules()?,
+        };
+        let path = checkpoint::checkpoint_path(&dir, completed_steps);
+        ckpt.write_atomic(&path)?;
+        Ok(path)
+    }
+
     /// Run a micro-batch of up to `manifest.batch()` samples through the
     /// resident-parameter module chain and return each sample's logits.
     ///

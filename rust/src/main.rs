@@ -5,8 +5,8 @@
 //! ```text
 //! models                             list registered model names
 //! info     --model <cfg> --k <K>     inspect a manifest
-//! train    --model <cfg> --k <K> --algo <bp|fr|ddg|dni> [...]
-//! compare  --model <cfg> --k <K>     all four methods side by side
+//! train    --model <cfg> --k <K> --algo <bp|dni|ddg|dgl|backlink|fr> [...]
+//! compare  --model <cfg> --k <K>     every registered method side by side
 //! sigma    --model <cfg> --k <K>     Fig 3 sufficient-direction probe
 //! memory   --model <cfg>             Fig 5 / Table 1 memory model
 //! parallel --model <cfg> --k <K>     threaded K-worker FR deployment
@@ -77,7 +77,7 @@ fn opt_specs() -> Vec<(&'static str, &'static str)> {
     let mut opts = vec![
         ("model", "model config name (see `frctl models`; default mlp_tiny)"),
         ("k", "number of modules K (default 4)"),
-        ("algo", "bp | fr | ddg | dni (train only)"),
+        ("algo", "bp | dni | ddg | dgl | backlink | fr (train only; default fr)"),
         ("backend", "native | pjrt (default: auto — pjrt when artifacts exist)"),
         ("steps", "training steps (default 100)"),
         ("lr", "base stepsize (default 0.01)"),
@@ -256,8 +256,10 @@ fn cmd_train(exp: Experiment, out: Option<&str>) -> CmdResult {
     println!("\nfinal: train_loss {:.4}  best test_err {:.3}  diverged: {}",
              res.curve.final_train_loss(), res.curve.best_test_err(), res.diverged);
     let mem = &res.final_memory;
-    println!("memory: activations {} + history {} + deltas {} + synth {} = {} bytes",
-             mem.activations, mem.history, mem.deltas, mem.synth, mem.total());
+    println!("memory: activations {} + history {} + deltas {} + synth {} + \
+              aux {} = {} bytes",
+             mem.activations, mem.history, mem.deltas, mem.synth,
+             mem.aux_heads, mem.total());
     if let Some(path) = out {
         features_replay::metrics::write_report(
             std::path::Path::new(path), "train", &[res.curve], vec![])
@@ -308,8 +310,15 @@ fn cmd_sigma(exp: Experiment) -> CmdResult {
 }
 
 fn cmd_memory(exp: Experiment, model: &str) -> Result<()> {
-    let table = TablePrinter::new(&["K", "BP_MB", "FR_MB", "DDG_MB", "DNI_MB"],
-                                  &[3, 10, 10, 10, 10]);
+    // one column per registered method — the table grows with Algo::ALL
+    let headers: Vec<String> = std::iter::once("K".to_string())
+        .chain(Algo::ALL.iter().map(|a| format!("{}_MB", a.name())))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let widths: Vec<usize> = std::iter::once(3)
+        .chain(Algo::ALL.iter().map(|_| 10))
+        .collect();
+    let table = TablePrinter::new(&header_refs, &widths);
     let mut any = false;
     let mut last_err = None;
     for k in 1..=4 {
@@ -321,10 +330,12 @@ fn cmd_memory(exp: Experiment, model: &str) -> Result<()> {
             }
         };
         any = true;
-        let row: Vec<String> = [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni].iter()
-            .map(|&a| format!("{:.2}", memory::predicted_bytes(&m, a) as f64 / 1e6))
+        let row: Vec<String> = std::iter::once(k.to_string())
+            .chain(Algo::ALL.iter().map(
+                |&a| format!("{:.2}", memory::predicted_bytes(&m, a) as f64 / 1e6)))
             .collect();
-        table.row(&[&k.to_string(), &row[0], &row[1], &row[2], &row[3]]);
+        let cells: Vec<&str> = row.iter().map(String::as_str).collect();
+        table.row(&cells);
     }
     match (any, last_err) {
         (false, Some(e)) => Err(e.context(format!(

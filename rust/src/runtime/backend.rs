@@ -115,6 +115,17 @@ pub trait Backend {
 
     fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>>;
 
+    /// Compile an auxiliary local-loss head from a spec built by
+    /// [`crate::runtime::spec::aux_head_spec`] (DGL/BackLink classifier
+    /// heads — not part of the manifest's module list). Backends without
+    /// procedural op-graph support inherit this refusal.
+    fn load_aux_head(&self, manifest: &Manifest, spec: &super::spec::ModuleSpec)
+                     -> Result<Rc<dyn ModuleExec>> {
+        let _ = (manifest, spec);
+        anyhow::bail!("backend {:?} cannot build auxiliary local-loss heads",
+                      self.name())
+    }
+
     /// Initial parameter tensors for `stem` (e.g. "module0", "synth2").
     fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
                    -> Result<Vec<Tensor>>;

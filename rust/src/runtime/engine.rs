@@ -77,6 +77,13 @@ impl Engine {
         self.backend.load_synth(manifest, boundary)
     }
 
+    /// Compile a DGL/BackLink auxiliary classifier head (a spec from
+    /// [`crate::runtime::spec::aux_head_spec`]).
+    pub fn load_aux_head(&self, manifest: &Manifest, spec: &super::spec::ModuleSpec)
+                         -> Result<Rc<dyn ModuleExec>> {
+        self.backend.load_aux_head(manifest, spec)
+    }
+
     pub fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
                        -> Result<Vec<Tensor>> {
         self.backend.init_params(manifest, stem, shapes)

@@ -32,5 +32,5 @@ pub use module::{ModuleRuntime, SynthRuntime};
 pub use native::{NativeBackend, NativeConvSpec, NativeLmSpec, NativeMlpSpec};
 pub use pool::Pool;
 pub use predict::{Packer, PredictError, Sample};
-pub use spec::{Manifest, ModuleSpec, NativeOp, OpSig, SynthSpec};
+pub use spec::{aux_head_spec, Manifest, ModuleSpec, NativeOp, OpSig, SynthSpec};
 pub use tensor::{copy_metrics, DType, Tensor};

@@ -35,6 +35,20 @@ impl ModuleRuntime {
         Ok(ModuleRuntime { spec, params, exec })
     }
 
+    /// Load the auxiliary classifier head attached at trunk module `k`'s
+    /// output boundary (DGL/BackLink local losses). The spec comes from
+    /// [`crate::runtime::spec::aux_head_spec`]; parameters use the distinct
+    /// `aux<k>` stem, so head init never collides with trunk or synth init.
+    pub fn load_aux(engine: &Engine, manifest: &Manifest, k: usize) -> Result<ModuleRuntime> {
+        let spec = crate::runtime::spec::aux_head_spec(manifest, k)
+            .with_context(|| format!("building aux head for module {k}"))?;
+        let exec = engine.load_aux_head(manifest, &spec)
+            .with_context(|| format!("compiling aux head for module {k}"))?;
+        let params = ResidentParams::new(
+            engine.init_params(manifest, &format!("aux{k}"), &spec.param_shapes)?);
+        Ok(ModuleRuntime { spec, params, exec })
+    }
+
     pub fn is_first(&self) -> bool {
         self.spec.index == 0
     }
@@ -190,6 +204,27 @@ mod tests {
         assert_eq!(out.grads.len(), last.params.len());
         assert_eq!(out.logits.shape, m.logits_shape);
         assert!(out.delta_in.is_some());
+    }
+
+    #[test]
+    fn aux_head_loads_and_emits_boundary_gradient() {
+        let m = manifest();
+        let engine = Engine::native();
+        let trunk = ModuleRuntime::load(&engine, &m, 0).unwrap();
+        let aux = ModuleRuntime::load_aux(&engine, &m, 0).unwrap();
+        assert!(aux.has_loss_head());
+        assert!(!aux.is_first(), "aux head must not be the entry module");
+        assert_eq!(aux.spec.in_shape, trunk.spec.out_shape);
+
+        let x = Tensor::zeros(&trunk.spec.in_shape, trunk.spec.in_dtype);
+        let h = trunk.forward(&x).unwrap();
+        let labels = Tensor::from_i32(m.label_shape.clone(),
+                                      vec![0; m.label_shape.iter().product()]).unwrap();
+        let out = aux.loss_backward(&h, &labels).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.grads.len(), aux.params.len());
+        let din = out.delta_in.expect("aux head must emit the boundary gradient");
+        assert_eq!(din.shape, trunk.spec.out_shape);
     }
 
     #[test]

@@ -1636,6 +1636,14 @@ impl Backend for NativeBackend {
         Ok(Rc::new(NativeSynth::build(spec, Arc::clone(&self.pool))?))
     }
 
+    fn load_aux_head(&self, _manifest: &Manifest, spec: &ModuleSpec)
+                     -> Result<Rc<dyn ModuleExec>> {
+        // An aux head is an ordinary native op graph (GAP/Dense with its
+        // own loss head); it compiles through the same plan builder as a
+        // trunk module and shares the backend's kernel pool.
+        Ok(Rc::new(NativeModule::build(spec.clone(), Arc::clone(&self.pool))?))
+    }
+
     fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
                    -> Result<Vec<Tensor>> {
         // Prefer on-disk dumps when the artifact directory has them (exact

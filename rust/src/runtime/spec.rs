@@ -382,6 +382,99 @@ impl ModuleSpec {
     }
 }
 
+/// Build the auxiliary classifier head for trunk module `k` — the local
+/// cross-entropy head DGL/BackLink attach at each module boundary (see
+/// `coordinator::dgl` / `coordinator::backlink`).
+///
+/// The head's shape is derived from the trunk op graph via
+/// [`NativeOp::signature`] (the single shape authority), so it is
+/// registry-agnostic: an image-shaped boundary (`out_side > 1`) gets
+/// `GlobalAvgPool -> Dense(classes)` (the standard DGL auxiliary head), a
+/// flat boundary (transformer / post-pool) a bare `Dense(classes)`.
+///
+/// The returned spec is a full [`ModuleSpec`] with a loss head, executable
+/// by `Backend::load_aux_head`; its `index` is `k + 1` (never 0), so its
+/// backward emits the boundary input gradient BackLink's short link needs.
+pub fn aux_head_spec(manifest: &Manifest, k: usize) -> Result<ModuleSpec> {
+    let trunk = manifest.modules.get(k)
+        .with_context(|| format!("aux head: trunk module {k} out of range"))?;
+    if trunk.native_ops.is_empty() {
+        bail!("aux head: module {k} carries no native op graph (AOT \
+               artifacts cannot host local-loss heads yet)");
+    }
+    // Walk the trunk ops to recover the boundary's spatial side — the
+    // out_shape alone cannot distinguish a flat width from a flattened
+    // feature map.
+    let starts_with_embed = matches!(trunk.native_ops.first(), Some(NativeOp::Embed));
+    let rows = if starts_with_embed {
+        trunk.in_shape[0] * trunk.in_shape[1]
+    } else {
+        trunk.in_shape[0]
+    };
+    let mut width = if starts_with_embed { 0 } else { trunk.in_shape[1] };
+    let mut side = 0usize;
+    let mut pi = 0usize;
+    for op in &trunk.native_ops {
+        let n = op.param_tensors();
+        let run = trunk.param_shapes.get(pi..pi + n)
+            .with_context(|| format!("aux head: module {k} param list \
+                                      shorter than its op graph"))?;
+        let sig = op.signature(rows, width, run)?;
+        width = sig.out_width;
+        side = sig.out_side;
+        pi += n;
+    }
+    if trunk.out_shape != [rows, width] {
+        bail!("aux head: module {k} op walk ends at ({rows}, {width}), \
+               manifest says {:?}", trunk.out_shape);
+    }
+    let classes = manifest.num_classes;
+    let (ops, param_shapes, layers): (Vec<NativeOp>, Vec<Vec<usize>>, Vec<String>) =
+        if side > 1 {
+            let c = width / (side * side);
+            (vec![NativeOp::GlobalAvgPool { hw: side },
+                  NativeOp::Dense { relu: false }],
+             vec![vec![c, classes], vec![classes]],
+             vec![format!("aux{k}_gap"), format!("aux{k}_linear")])
+        } else {
+            (vec![NativeOp::Dense { relu: false }],
+             vec![vec![width, classes], vec![classes]],
+             vec![format!("aux{k}_linear")])
+        };
+    // Signature walk over the head itself for flops / act_bytes.
+    let mut h_width = width;
+    let mut flops = 0u64;
+    let mut act_bytes = 0usize;
+    let mut layer_act_bytes = Vec::with_capacity(ops.len());
+    let mut pi = 0usize;
+    for op in &ops {
+        let n = op.param_tensors();
+        let sig = op.signature(rows, h_width, &param_shapes[pi..pi + n])?;
+        h_width = sig.out_width;
+        flops += sig.flops;
+        act_bytes += sig.act_bytes;
+        layer_act_bytes.push(sig.act_bytes);
+        pi += n;
+    }
+    Ok(ModuleSpec {
+        // Never 0: the head is not the stack's entry module, so its
+        // backward must produce the boundary input gradient.
+        index: k + 1,
+        layers,
+        layer_act_bytes,
+        param_shapes,
+        in_shape: trunk.out_shape.clone(),
+        in_dtype: DType::F32,
+        out_shape: vec![rows, classes],
+        flops,
+        act_bytes,
+        fwd_file: "<native>".to_string(),
+        bwd_file: "<native>".to_string(),
+        loss_file: Some("<native>".to_string()),
+        native_ops: ops,
+    })
+}
+
 /// A DNI gradient synthesizer at one module boundary (see
 /// `coordinator::dni`): a small MLP predicting the error gradient from the
 /// boundary activation.

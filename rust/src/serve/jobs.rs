@@ -1,13 +1,15 @@
 //! Background training jobs for `frctl serve`.
 //!
-//! `POST /v1/train-jobs` lands here: each job gets its own thread that
-//! spawns a [`crate::coordinator::parallel::ParallelFr`] fleet via the usual
-//! [`Experiment`] builder, steps it to completion, and streams per-step
-//! metrics as incrementally flushed JSON lines (`job-<id>.jsonl` under the
-//! jobs dir) so a client can tail progress mid-run. Jobs share the serve
-//! metrics (per-step latency histogram, started/completed/failed
-//! counters) and honour the PR 6 checkpoint substrate when the spec asks
-//! for a cadence.
+//! `POST /v1/train-jobs` lands here: each job gets its own thread driven
+//! through the usual [`Experiment`] builder — a
+//! [`crate::coordinator::parallel::ParallelFr`] fleet for FR, a sequential
+//! [`crate::experiment::Session`] for every other algorithm — stepped to
+//! completion while streaming per-step metrics as incrementally flushed
+//! JSON lines (`job-<id>.jsonl` under the jobs dir) so a client can tail
+//! progress mid-run. Both paths share the same NDJSON schema, stop flag,
+//! checkpoint cadence and final eval. Jobs share the serve metrics
+//! (per-step latency histogram, started/completed/failed counters) and
+//! honour the PR 6 checkpoint substrate when the spec asks for a cadence.
 
 use std::io::Write;
 use std::path::PathBuf;
@@ -17,6 +19,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::Algo;
 use crate::experiment::Experiment;
 use crate::serve::ServeMetrics;
 use crate::util::json::{num, obj, s, Json};
@@ -26,6 +29,7 @@ use crate::util::json::{num, obj, s, Json};
 #[derive(Clone, Debug)]
 pub struct TrainJobSpec {
     pub model: String,
+    pub algo: Algo,
     pub k: usize,
     pub steps: usize,
     pub lr: f32,
@@ -38,6 +42,7 @@ impl TrainJobSpec {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("model", s(&self.model)),
+            ("algo", s(self.algo.cli_name())),
             ("k", num(self.k as f64)),
             ("steps", num(self.steps as f64)),
             ("lr", num(self.lr as f64)),
@@ -216,14 +221,16 @@ impl JobRegistry {
     }
 }
 
-/// The job thread body: spawn the fleet, step it (streaming one JSON line
-/// per step), checkpoint on cadence, eval at the end. Returns the final
-/// state (`Done` or `Stopped`); any error tears the fleet down and fails
-/// the job.
+/// The job thread body: build the experiment, then dispatch on algorithm —
+/// FR runs on the threaded K-worker fleet, every other strategy steps a
+/// sequential session. Both paths stream one JSON line per step,
+/// checkpoint on cadence, and eval at the end. Returns the final state
+/// (`Done` or `Stopped`); any error tears the run down and fails the job.
 fn run_job(job: &Job, jsonl: &std::path::Path, ckpt_dir: &std::path::Path,
            metrics: &ServeMetrics) -> Result<JobState> {
     let spec = &job.spec;
     let mut exp = Experiment::new(&spec.model)
+        .algo(spec.algo)
         .k(spec.k)
         .steps(spec.steps)
         .lr(spec.lr)
@@ -233,6 +240,16 @@ fn run_job(job: &Job, jsonl: &std::path::Path, ckpt_dir: &std::path::Path,
         exp = exp.checkpoint_every(spec.checkpoint_every)
             .checkpoint_dir(ckpt_dir);
     }
+    match spec.algo {
+        Algo::Fr => run_job_parallel(job, exp, jsonl, metrics),
+        _ => run_job_sequential(job, exp, jsonl, metrics),
+    }
+}
+
+/// FR's threaded deployment path (one worker per module).
+fn run_job_parallel(job: &Job, exp: Experiment, jsonl: &std::path::Path,
+                    metrics: &ServeMetrics) -> Result<JobState> {
+    let spec = &job.spec;
     let mut ps = exp.spawn_parallel()?;
     let mut out = std::io::BufWriter::new(std::fs::File::create(jsonl)
         .with_context(|| format!("creating {}", jsonl.display()))?);
@@ -289,5 +306,56 @@ fn run_job(job: &Job, jsonl: &std::path::Path, ckpt_dir: &std::path::Path,
         }
     }
     ps.par.shutdown().context("fleet shutdown")?;
+    Ok(if stopped { JobState::Stopped } else { JobState::Done })
+}
+
+/// Sequential path for every non-FR algorithm (BP/DDG/DNI/DGL/BackLink):
+/// same NDJSON schema, stop semantics, checkpoint cadence and final eval
+/// as the fleet path, driven through [`crate::experiment::Session`].
+fn run_job_sequential(job: &Job, exp: Experiment, jsonl: &std::path::Path,
+                      metrics: &ServeMetrics) -> Result<JobState> {
+    let spec = &job.spec;
+    let mut session = exp.session()?;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(jsonl)
+        .with_context(|| format!("creating {}", jsonl.display()))?);
+    let mut stopped = false;
+    for step in 0..spec.steps {
+        if job.stop.load(Ordering::Relaxed) {
+            stopped = true;
+            break;
+        }
+        let batch = session.data.train_batch();
+        let lr = session.lr_at(step);
+        let t0 = Instant::now();
+        let stats = session.trainer.train_step(&batch, lr)
+            .with_context(|| format!("train step {step}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.train_step_ms.record(t0.elapsed());
+        let line = obj(vec![
+            ("step", num(step as f64)),
+            ("loss", num(stats.loss as f64)),
+            ("ms", num(ms)),
+        ]).to_string_compact();
+        // flush per line: clients tail this file while the job runs
+        writeln!(out, "{line}")
+            .and_then(|()| out.flush())
+            .with_context(|| format!("writing {}", jsonl.display()))?;
+        {
+            let mut p = job.progress.lock().expect("job progress poisoned");
+            p.step = step + 1;
+            p.last_loss = stats.loss as f64;
+        }
+        if session.should_checkpoint(step + 1) {
+            session.write_checkpoint(step + 1)
+                .context("writing job checkpoint")?;
+        }
+    }
+    if !stopped {
+        let (loss, err) = session.trainer.stack()
+            .eval(&mut session.data, 1)
+            .context("final eval")?;
+        job.progress.lock().expect("job progress poisoned")
+            .eval = Some((loss, err));
+    }
     Ok(if stopped { JobState::Stopped } else { JobState::Done })
 }

@@ -6,6 +6,7 @@
 //! can never smuggle an absurd configuration into the batcher or the job
 //! fleet.
 
+use crate::coordinator::Algo;
 use crate::runtime::Sample;
 use crate::serve::jobs::TrainJobSpec;
 use crate::util::json::Json;
@@ -82,8 +83,8 @@ pub fn decode_train_job(body: &[u8]) -> Result<TrainJobSpec, String> {
     let Json::Obj(fields) = &json else {
         return Err("body must be a JSON object".to_string());
     };
-    const KNOWN: [&str; 7] = ["model", "k", "steps", "lr", "seed", "threads",
-                              "checkpoint_every"];
+    const KNOWN: [&str; 8] = ["model", "algo", "k", "steps", "lr", "seed",
+                              "threads", "checkpoint_every"];
     for key in fields.keys() {
         if !KNOWN.contains(&key.as_str()) {
             return Err(format!("unknown key \"{key}\" (expected one of {KNOWN:?})"));
@@ -93,6 +94,16 @@ pub fn decode_train_job(body: &[u8]) -> Result<TrainJobSpec, String> {
         .and_then(Json::as_str)
         .ok_or_else(|| "\"model\" (string) is required".to_string())?
         .to_string();
+    // same typed table as `frctl --algo`: an unknown name 400s with the
+    // full valid list, never a 500 from deep inside the job thread
+    let algo = match json.get("algo") {
+        None => Algo::Fr,
+        Some(v) => {
+            let name = v.as_str()
+                .ok_or_else(|| "\"algo\" must be a string".to_string())?;
+            Algo::parse(name)?
+        }
+    };
     let lr = match json.get("lr") {
         None => 0.01,
         Some(v) => {
@@ -115,6 +126,7 @@ pub fn decode_train_job(body: &[u8]) -> Result<TrainJobSpec, String> {
     };
     Ok(TrainJobSpec {
         model,
+        algo,
         k: bounded_usize(&json, "k", 4, 1, 16)?,
         steps: bounded_usize(&json, "steps", 100, 1, 1_000_000)?,
         lr: lr as f32,
@@ -166,6 +178,7 @@ mod tests {
     fn train_job_defaults_and_bounds() {
         let spec = decode_train_job(br#"{"model": "mlp_tiny"}"#).unwrap();
         assert_eq!(spec.model, "mlp_tiny");
+        assert_eq!(spec.algo, Algo::Fr, "algo defaults to FR");
         assert_eq!((spec.k, spec.steps, spec.threads, spec.checkpoint_every),
                    (4, 100, 1, 0));
         assert!((spec.lr - 0.01).abs() < 1e-9);
@@ -178,5 +191,23 @@ mod tests {
         assert!(err.contains("model"), "{err}");
         let err = decode_train_job(br#"{"model": "m", "stepz": 5}"#).unwrap_err();
         assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn train_job_parses_every_algo_and_rejects_unknown() {
+        for a in Algo::ALL {
+            let body = format!(r#"{{"model": "mlp_tiny", "algo": "{}"}}"#,
+                               a.cli_name());
+            assert_eq!(decode_train_job(body.as_bytes()).unwrap().algo, a);
+        }
+        let err = decode_train_job(br#"{"model": "mlp_tiny", "algo": "sgd"}"#)
+            .unwrap_err();
+        for a in Algo::ALL {
+            assert!(err.contains(a.cli_name()),
+                    "algo error must list {:?}: {err}", a.cli_name());
+        }
+        let err = decode_train_job(br#"{"model": "mlp_tiny", "algo": 3}"#)
+            .unwrap_err();
+        assert!(err.contains("string"), "{err}");
     }
 }

@@ -117,13 +117,14 @@ fn sigma_probe_produces_sane_values() {
     assert!(s.per_module[0] > -0.5, "sigma way off: {:?}", s.per_module);
 }
 
-/// Training must reduce the loss for every method on the tiny MLP.
+/// Training must reduce the loss for every method on the tiny MLP —
+/// the whole zoo, local-loss strategies (DGL, BackLink) included.
 #[test]
 fn short_training_reduces_loss_all_methods() {
     let m = manifest_k(4);
     let engine = Engine::native();
 
-    for algo in [Algo::Bp, Algo::Fr, Algo::Ddg, Algo::Dni] {
+    for algo in Algo::ALL {
         let mut t = make_trainer(&engine, &m, algo, TrainConfig::default()).unwrap();
         let mut data = DataSource::for_manifest(&m, 7).unwrap();
         let mut first = None;
@@ -307,6 +308,60 @@ fn sequential_checkpoint_resume_is_bit_identical() {
     assert_eq!(last_a.to_bits(), last_b.to_bits(),
                "final loss {last_a} vs resumed {last_b}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same keystone contract for the local-loss strategies, whose
+/// checkpoints additionally carry auxiliary-head parameters and optimizer
+/// velocity: interrupt + resume must be bit-identical to a straight run,
+/// with the hash taken over trunk *and* aux parameters so a dropped or
+/// stale aux head cannot hide.
+#[test]
+fn local_loss_checkpoint_resume_is_bit_identical() {
+    let aux_aware_hash = |t: &dyn Trainer| {
+        let modules = t.snapshot_modules().unwrap();
+        checkpoint::params_hash(modules.iter()
+            .flat_map(|ms| ms.params.iter().chain(ms.aux_params.iter())))
+    };
+
+    for algo in [Algo::Dgl, Algo::Backlink] {
+        let dir = tmpdir(&format!("seq-resume-{}", algo.cli_name()));
+        let exp = |steps: usize| {
+            Experiment::new("mlp_tiny").k(4).algo(algo).steps(steps).seed(3)
+                .schedule(ScheduleSpec::Constant).eval_every(4).eval_batches(1)
+        };
+
+        // uninterrupted reference
+        let mut a = exp(10).session().unwrap();
+        let ra = a.run().unwrap();
+        let hash_a = aux_aware_hash(a.trainer.as_ref());
+
+        // interrupted run: leg 1 stops after 6 steps, checkpointing at 3, 6
+        let mut b1 = exp(6).checkpoint_dir(&dir).checkpoint_every(3)
+            .session().unwrap();
+        b1.run().unwrap();
+        let ckpt = Checkpoint::read(
+            &checkpoint::checkpoint_path(&dir, 6)).unwrap();
+        let k = ckpt.modules.len();
+        assert!(ckpt.modules[..k - 1].iter().all(|ms| !ms.aux_params.is_empty()
+                    && ms.aux_velocity.len() == ms.aux_params.len()),
+                "{}: every non-last module must checkpoint its aux head",
+                algo.name());
+        assert!(ckpt.modules[k - 1].aux_params.is_empty(),
+                "{}: the last module has the real loss head, no aux state",
+                algo.name());
+
+        // leg 2: fresh everything, resume from the latest checkpoint
+        let mut b2 = exp(10).resume_from(&dir).session().unwrap();
+        let rb = b2.run().unwrap();
+        assert_eq!(hash_a, aux_aware_hash(b2.trainer.as_ref()),
+                   "{}: resumed trunk+aux params differ from uninterrupted run",
+                   algo.name());
+        let last_a = ra.curve.points.last().unwrap().train_loss;
+        let last_b = rb.curve.points.last().unwrap().train_loss;
+        assert_eq!(last_a.to_bits(), last_b.to_bits(),
+                   "{}: final loss {last_a} vs resumed {last_b}", algo.name());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 /// Keystone contract, threaded fleet: snapshot a live fleet to disk, tear

@@ -35,6 +35,61 @@ fn every_registered_model_trains_under_every_algo() {
     }
 }
 
+/// The local-loss strategies must actually *learn*, not merely run: over a
+/// modest budget the training loss must drop on both an MLP and a conv
+/// model (every registry model builds their aux heads — the grid above —
+/// but loss descent is the stronger claim worth a dedicated budget).
+#[test]
+fn local_loss_algos_decrease_training_loss() {
+    for model in ["mlp_tiny", "resnet_s"] {
+        for algo in [Algo::Dgl, Algo::Backlink] {
+            let mut session = Experiment::new(model)
+                .k(2)
+                .algo(algo)
+                .backend(BackendKind::Native)
+                .schedule(ScheduleSpec::Constant)
+                .lr(0.02)
+                .session()
+                .unwrap_or_else(|e| panic!("{model} x {}: {e:#}", algo.name()));
+            let mut losses = Vec::new();
+            for _ in 0..20 {
+                let b = session.data.train_batch();
+                let stats = session.trainer.train_step(&b, 0.02)
+                    .unwrap_or_else(|e| panic!("{model} x {}: {e:#}", algo.name()));
+                assert!(stats.loss.is_finite(),
+                        "{model} x {}: NaN/inf loss", algo.name());
+                losses.push(stats.loss);
+            }
+            let head: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+            let tail: f32 = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
+            assert!(tail < head,
+                    "{model} x {}: loss should decrease ({head:.4} -> {tail:.4})",
+                    algo.name());
+        }
+    }
+}
+
+/// The Trainer::traffic contract: global-feedback methods report full
+/// backward traffic, DGL reports none, BackLink reports the one-module
+/// link — checked through make_trainer so the dispatch stays honest.
+#[test]
+fn traffic_contract_matches_algorithm_family() {
+    use features_replay::coordinator::Traffic;
+
+    for (algo, want) in [
+        (Algo::Bp, Traffic::ActivationsAndGrad),
+        (Algo::Fr, Traffic::ActivationsAndGrad),
+        (Algo::Ddg, Traffic::ActivationsAndGrad),
+        (Algo::Dni, Traffic::ActivationsAndGrad),
+        (Algo::Dgl, Traffic::ActivationsOnly),
+        (Algo::Backlink, Traffic::ActivationsAndLocalGrad),
+    ] {
+        let session = tiny("mlp_tiny", algo).session().unwrap();
+        assert_eq!(session.trainer.traffic(), want,
+                   "{} reports the wrong traffic pattern", algo.name());
+    }
+}
+
 /// Predict-path smoke over the whole registry: every model must accept
 /// synthetic samples through `Session::predict_batch` at n = 1 and
 /// n = capacity, return one finite logits row per sample, and — the

@@ -403,6 +403,53 @@ fn transformer_tiny_trains_bitwise_identically_across_thread_counts() {
     }
 }
 
+/// Aux-head path parity: the local-loss strategies' per-module auxiliary
+/// heads (GAP + Dense forward, softmax-xent backward, and the local
+/// optimizer step) must be bitwise identical across thread counts
+/// {1, 2, max} — same loss trajectory, same trunk *and* aux parameter
+/// bits. A conv model is used so the heads exercise the pool-partitioned
+/// `global_avgpool(_bwd)` kernels, not just the matmuls.
+#[test]
+fn local_loss_aux_heads_train_bitwise_identically_across_thread_counts() {
+    use features_replay::checkpoint::params_hash;
+    use features_replay::coordinator::Algo;
+    use features_replay::experiment::{Experiment, ScheduleSpec};
+    use features_replay::runtime::BackendKind;
+
+    for algo in [Algo::Dgl, Algo::Backlink] {
+        let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+        for t in [1usize, 2, resolve_threads(0)] {
+            let mut session = Experiment::new("resnet_s")
+                .k(2)
+                .algo(algo)
+                .backend(BackendKind::Native)
+                .threads(t)
+                .seed(5)
+                .schedule(ScheduleSpec::Constant)
+                .session()
+                .unwrap();
+            let mut losses = Vec::with_capacity(3);
+            for _ in 0..3 {
+                let b = session.data.train_batch();
+                losses.push(session.trainer.train_step(&b, 0.01).unwrap()
+                    .loss.to_bits());
+            }
+            let modules = session.trainer.snapshot_modules().unwrap();
+            let hash = params_hash(modules.iter()
+                .flat_map(|ms| ms.params.iter().chain(ms.aux_params.iter())));
+            runs.push((losses, hash));
+        }
+        let (ref_losses, ref_hash) = runs[0].clone();
+        for (i, (losses, hash)) in runs.iter().enumerate().skip(1) {
+            assert_eq!(&ref_losses, losses,
+                       "{}: loss trajectory diverged (run {i})", algo.name());
+            assert_eq!(ref_hash, *hash,
+                       "{}: trunk+aux parameter hash diverged (run {i})",
+                       algo.name());
+        }
+    }
+}
+
 #[test]
 fn replay_buffer_push_and_stale_are_zero_copy() {
     check("replay_zero_copy", 100, |g| {
@@ -455,6 +502,15 @@ fn tamper_fixture() -> Checkpoint {
                 None
             },
             train_steps: 7,
+            // module 0 carries a local-loss aux head so tampering can land
+            // in the v2 aux sections of the wire format too
+            aux_params: if m == 0 {
+                vec![Tensor::from_f32(vec![3, 2],
+                    vec![0.5, -0.5, 1.0, -1.0, 0.25, -0.25]).unwrap()]
+            } else {
+                Vec::new()
+            },
+            aux_velocity: if m == 0 { vec![vec![0.125; 6]] } else { Vec::new() },
         }).collect(),
     }
 }

@@ -205,6 +205,83 @@ fn keep_alive_connection_serves_many_requests() {
     shutdown();
 }
 
+/// The `algo` field rides the same typed table as `frctl --algo`: an
+/// unknown name is a 400 whose detail lists every valid name (never a 500
+/// from deep inside a job thread), and a local-loss job (`dgl`) runs the
+/// sequential path to "done" with the same NDJSON stream the FR fleet
+/// path produces.
+#[test]
+fn train_job_algo_is_typed_and_dgl_runs_to_done() {
+    use features_replay::coordinator::Algo;
+
+    let mut cfg = ServeConfig::new("mlp_tiny");
+    cfg.k = 2;
+    cfg.max_wait_ms = 1;
+    cfg.jobs_dir = std::env::temp_dir()
+        .join(format!("frctl-serve-test-algo-{}", std::process::id()));
+    let (addr, shutdown) = start_server(cfg);
+
+    // unknown algo → typed 400 naming every valid choice
+    let (status, body) = MiniClient::one_shot(
+        &addr, "POST", "/v1/train-jobs",
+        br#"{"model": "mlp_tiny", "algo": "sgd"}"#).unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let detail = json.get("detail").unwrap().as_str().unwrap().to_string();
+    for a in Algo::ALL {
+        assert!(detail.contains(a.cli_name()),
+                "400 detail must list {:?}: {detail}", a.cli_name());
+    }
+
+    // a non-string algo is a 400 too, not a decoder panic
+    let (status, _) = MiniClient::one_shot(
+        &addr, "POST", "/v1/train-jobs",
+        br#"{"model": "mlp_tiny", "algo": 7}"#).unwrap();
+    assert_eq!(status, 400);
+
+    // a dgl job takes the sequential path end to end
+    let (status, body) = MiniClient::one_shot(
+        &addr, "POST", "/v1/train-jobs",
+        br#"{"model": "mlp_tiny", "algo": "dgl", "k": 2, "steps": 3}"#).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let id = json.get("id").unwrap().as_usize().unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let final_state = loop {
+        let (status, body) = MiniClient::one_shot(
+            &addr, "GET", &format!("/v1/train-jobs/{id}"), b"").unwrap();
+        assert_eq!(status, 200);
+        let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let state = json.get("state").unwrap().as_str().unwrap().to_string();
+        if state != "running" {
+            break json;
+        }
+        assert!(Instant::now() < deadline, "dgl job {id} never finished");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(final_state.get("state").unwrap().as_str(), Some("done"),
+               "{final_state:?}");
+    assert_eq!(final_state.get("step").unwrap().as_usize(), Some(3));
+    assert_eq!(final_state.get("spec").unwrap().get("algo").unwrap().as_str(),
+               Some("dgl"));
+    assert!(final_state.get("eval_loss").unwrap().as_f64().unwrap().is_finite());
+
+    // the sequential path streams the same NDJSON shape as the fleet path
+    let (status, body) = MiniClient::one_shot(
+        &addr, "GET", &format!("/v1/train-jobs/{id}/metrics"), b"").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 3, "{text}");
+    for (i, line) in lines.iter().enumerate() {
+        let step = Json::parse(line).unwrap();
+        assert_eq!(step.get("step").unwrap().as_usize(), Some(i));
+        assert!(step.get("loss").unwrap().as_f64().unwrap().is_finite());
+    }
+    shutdown();
+}
+
 #[test]
 fn train_job_lifecycle_streams_metrics() {
     let mut cfg = ServeConfig::new("mlp_tiny");

@@ -48,6 +48,14 @@ cargo test -q
 echo "== properties: target registered (runs under tier-1 cargo test) =="
 cargo test -q --test properties -- --list >/dev/null
 
+# Algorithm-zoo grid: every registered model × every Algo (BP/DNI/DDG/
+# DGL/BackLink/FR) trains on the native backend with decreasing loss and
+# no NaN, plus the Traffic contract and the local-loss checkpoint paths.
+# A named step so a grid regression is attributable at a glance even
+# though the target also ran under `cargo test -q` above.
+echo "== algo grid: every model x every algo (cargo test --test experiment_api) =="
+cargo test -q --test experiment_api
+
 # Crash-safety suite: the fault-injection hooks are compiled only under
 # --features fault-inject (tier-1 above carries none of that plumbing), and
 # tests/faults.rs is a required-features target, so it needs an explicit
@@ -150,6 +158,8 @@ if python3 -c "import numpy" >/dev/null 2>&1; then
     echo "== numpy mirrors: pool + attention group partitions =="
     python3 ../python/tests/test_pool_partition_mirror.py
     python3 ../python/tests/test_attn_group_partition_mirror.py
+    echo "== numpy mirrors: DGL/BackLink local-loss backwards =="
+    python3 ../python/tests/test_local_loss_mirror.py
 else
     echo "== numpy mirrors == skipped (python3/numpy unavailable)"
 fi
@@ -164,9 +174,11 @@ if [ "$SMOKE" = 1 ]; then
     # Every example is registered and runs offline through the Experiment
     # API; smoke the walkthrough plus one reproduce_* harness with tiny
     # budgets so CI stays fast.
-    echo "== examples: smoke (quickstart, fig4 @ 3 steps) =="
+    echo "== examples: smoke (quickstart, fig4 @ 3 steps, 6-way table2 @ 3 steps) =="
     FR_STEPS=3 cargo run --release --example quickstart
     cargo run --release --example reproduce_fig4_convergence -- 3 resnet_s
+    # the full zoo side by side: 6 algorithms x 6 model/dataset rows
+    cargo run --release --example reproduce_table2_generalization -- 3
 fi
 
 if [ "$PJRT" = 1 ]; then
