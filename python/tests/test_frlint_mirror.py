@@ -1,0 +1,857 @@
+"""Independent Python mirror of the frlint static-analysis pass
+(rust/src/lint/): the lexer, the eight rules, and the suppression
+directive grammar, ported statement-for-statement and run against the
+real Rust tree. Runnable without cargo or numpy -- this is the check
+that frlint's verdict ("the tree is clean") is not an artifact of a bug
+in frlint itself: two implementations must agree both on the clean tree
+and on a set of deliberately-broken fixtures.
+
+Also re-derives the two pinned constants frlint and the test suite rely
+on, from nothing but this file's own transliterations:
+
+  * the checkpoint wire fingerprint (FNV-1a64 over the lexed
+    encode_payload/decode_payload field sequence + VERSION), checked
+    against ``WIRE_FINGERPRINT`` in rust/src/checkpoint/mod.rs;
+  * the tiny-corpus content hash (splitmix64 + xoshiro256** + trigram
+    babbler), checked against the constant pinned in
+    rust/src/data/tiny_corpus.rs.
+
+Usage: python3 python/tests/test_frlint_mirror.py
+"""
+
+import os
+import re
+import sys
+
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+RUST = os.path.normpath(os.path.join(REPO, "rust"))
+
+# ---------------------------------------------------------------------------
+# Lexer (mirror of rust/src/lint/lexer.rs)
+
+IDENT, NUM, STR, CHAR, LIFETIME, PUNCT = range(6)
+
+
+def _scan_string(b, i, line):
+    start = i
+    n = len(b)
+    while i < n:
+        c = b[i]
+        if c == "\\":
+            if i + 1 < n and b[i + 1] == "\n":
+                line += 1
+            i = min(i + 2, n)
+        elif c == '"':
+            return "".join(b[start:i]), i + 1, line
+        elif c == "\n":
+            line += 1
+            i += 1
+        else:
+            i += 1
+    return "".join(b[start:i]), i, line
+
+
+def _scan_raw_string(b, i, line):
+    hashes = 0
+    n = len(b)
+    while i < n and b[i] == "#":
+        hashes += 1
+        i += 1
+    if i >= n or b[i] != '"':
+        return "", i, line
+    i += 1
+    start = i
+    while i < n:
+        if b[i] == "\n":
+            line += 1
+            i += 1
+            continue
+        if b[i] == '"':
+            tail = b[i + 1 : i + 1 + hashes]
+            if len(tail) == hashes and all(c == "#" for c in tail):
+                return "".join(b[start:i]), i + 1 + hashes, line
+        i += 1
+    return "".join(b[start:i]), i, line
+
+
+def _is_ident_ch(c):
+    return c == "_" or c.isascii() and c.isalnum()
+
+
+def lex(src):
+    """Tokenize to a list of (kind, text, line) triples."""
+    b = list(src)
+    toks = []
+    i = 0
+    line = 1
+    n = len(b)
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c.isspace():
+            i += 1
+        elif c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                i += 1
+        elif c == "/" and i + 1 < n and b[i + 1] == "*":
+            i += 2
+            depth = 1
+            while i < n and depth > 0:
+                if b[i] == "\n":
+                    line += 1
+                    i += 1
+                elif b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+        elif c == '"':
+            at = line
+            s, i, line = _scan_string(b, i + 1, line)
+            toks.append((STR, s, at))
+        elif c == "'":
+            if i + 1 < n and b[i + 1] == "\\":
+                i += 2
+                while i < n and b[i] != "'":
+                    if b[i] == "\n":
+                        line += 1
+                    i += 1
+                i = min(i + 1, n)
+                toks.append((CHAR, "", line))
+            elif i + 1 < n:
+                c1 = b[i + 1]
+                if i + 2 < n and b[i + 2] == "'":
+                    i += 3
+                    toks.append((CHAR, "", line))
+                elif c1 == "_" or (c1.isascii() and c1.isalpha()):
+                    i += 2
+                    while i < n and _is_ident_ch(b[i]):
+                        i += 1
+                    toks.append((LIFETIME, "", line))
+                else:
+                    i += 1
+                    toks.append((PUNCT, "'", line))
+            else:
+                i += 1
+                toks.append((PUNCT, "'", line))
+        elif c == "_" or (c.isascii() and c.isalpha()):
+            s0 = i
+            while i < n and _is_ident_ch(b[i]):
+                i += 1
+            ident = "".join(b[s0:i])
+            nxt = b[i] if i < n else ""
+            raw_prefix = ident in ("r", "br", "rb") and nxt in ('"', "#")
+            byte_prefix = ident == "b" and nxt == '"'
+            if raw_prefix:
+                at = line
+                s, ni, nl = _scan_raw_string(b, i, line)
+                if ni > i:
+                    toks.append((STR, s, at))
+                    i, line = ni, nl
+                else:
+                    toks.append((IDENT, ident, line))
+            elif byte_prefix:
+                at = line
+                s, i, line = _scan_string(b, i + 1, line)
+                toks.append((STR, s, at))
+            else:
+                toks.append((IDENT, ident, line))
+        elif c.isascii() and c.isdigit():
+            s0 = i
+            while i < n and _is_ident_ch(b[i]):
+                i += 1
+            if (
+                i < n
+                and b[i] == "."
+                and i + 1 < n
+                and b[i + 1].isascii()
+                and b[i + 1].isdigit()
+            ):
+                i += 1
+                while i < n and _is_ident_ch(b[i]):
+                    i += 1
+            toks.append((NUM, "".join(b[s0:i]), line))
+        else:
+            toks.append((PUNCT, c, line))
+            i += 1
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# Rule engine (mirror of rust/src/lint/rules.rs + mod.rs)
+
+RULES = [
+    "unbounded-recv",
+    "nondet-collections",
+    "thread-spawn",
+    "serve-unwrap",
+    "wallclock",
+    "wire-fingerprint",
+    "op-exhaustive",
+    "router-tested",
+]
+
+DET_PATHS = ("src/runtime/", "src/data/", "src/checkpoint/", "src/coordinator/", "src/optim")
+SPAWN_ALLOWED = ("src/runtime/pool.rs", "src/serve/", "src/coordinator/parallel.rs")
+WALLCLOCK_ALLOWED = ("src/serve/", "src/bench/", "src/util/mod.rs", "src/metrics")
+WIRE_METHODS = ("u8", "u32", "u64", "usize", "str", "u64s", "f32s", "tensor")
+
+
+def is_p(t, c):
+    return t[0] == PUNCT and t[1] == c
+
+
+def is_id(t, s):
+    return t[0] == IDENT and t[1] == s
+
+
+def brace_match(t, open_idx):
+    depth = 1
+    k = open_idx + 1
+    while k < len(t) and depth > 0:
+        if is_p(t[k], "{"):
+            depth += 1
+        elif is_p(t[k], "}"):
+            depth -= 1
+        k += 1
+    return max(k - 1, 0)
+
+
+def test_regions(t):
+    out = []
+    i = 0
+    while i + 6 < len(t):
+        attr = (
+            is_p(t[i], "#")
+            and is_p(t[i + 1], "[")
+            and is_id(t[i + 2], "cfg")
+            and is_p(t[i + 3], "(")
+            and is_id(t[i + 4], "test")
+            and is_p(t[i + 5], ")")
+            and is_p(t[i + 6], "]")
+        )
+        if not attr:
+            i += 1
+            continue
+        start_line = t[i][2]
+        j = i + 7
+        end_line = start_line
+        while j < len(t):
+            if is_p(t[j], ";"):
+                end_line = t[j][2]
+                break
+            if is_p(t[j], "{"):
+                close = brace_match(t, j)
+                end_line = t[close][2] if close < len(t) else start_line
+                j = close
+                break
+            j += 1
+        out.append((start_line, end_line))
+        i = max(j, i + 7)
+    return out
+
+
+class LexedFile:
+    def __init__(self, path, content):
+        self.path = path
+        self.toks = lex(content)
+        self.regions = test_regions(self.toks)
+
+    def in_tests(self, line):
+        return any(s <= line <= e for s, e in self.regions)
+
+
+def scoped(path, prefixes):
+    return any(path.startswith(p) for p in prefixes)
+
+
+def rule_unbounded_recv(f, out):
+    if not f.path.startswith("src/"):
+        return
+    t = f.toks
+    for i in range(max(len(t) - 3, 0)):
+        if (
+            is_p(t[i], ".")
+            and is_id(t[i + 1], "recv")
+            and is_p(t[i + 2], "(")
+            and is_p(t[i + 3], ")")
+            and not f.in_tests(t[i + 1][2])
+        ):
+            out.append(("unbounded-recv", f.path, t[i + 1][2], "unbounded recv"))
+
+
+def rule_nondet_collections(f, out):
+    if not scoped(f.path, DET_PATHS):
+        return
+    for t in f.toks:
+        if t[0] == IDENT and t[1] in ("HashMap", "HashSet") and not f.in_tests(t[2]):
+            out.append(("nondet-collections", f.path, t[2], "hash collection"))
+
+
+def rule_thread_spawn(f, out):
+    if not f.path.startswith("src/") or scoped(f.path, SPAWN_ALLOWED):
+        return
+    t = f.toks
+    for i in range(max(len(t) - 3, 0)):
+        hit = (
+            is_id(t[i], "thread")
+            and is_p(t[i + 1], ":")
+            and is_p(t[i + 2], ":")
+            and (is_id(t[i + 3], "spawn") or is_id(t[i + 3], "Builder"))
+        )
+        if hit and not f.in_tests(t[i][2]):
+            out.append(("thread-spawn", f.path, t[i][2], "stray thread"))
+
+
+def rule_serve_unwrap(f, out):
+    if not f.path.startswith("src/serve/"):
+        return
+    t = f.toks
+    for i in range(max(len(t) - 2, 0)):
+        if f.in_tests(t[i][2]):
+            continue
+        call = (
+            is_p(t[i], ".")
+            and (is_id(t[i + 1], "unwrap") or is_id(t[i + 1], "expect"))
+            and is_p(t[i + 2], "(")
+        )
+        if call:
+            out.append(("serve-unwrap", f.path, t[i + 1][2], "unwrap/expect"))
+            continue
+        mac = (
+            t[i][0] == IDENT
+            and t[i][1] in ("panic", "unreachable", "todo", "unimplemented")
+            and is_p(t[i + 1], "!")
+        )
+        if mac:
+            out.append(("serve-unwrap", f.path, t[i][2], "panicking macro"))
+
+
+def rule_wallclock(f, out):
+    if not f.path.startswith("src/") or scoped(f.path, WALLCLOCK_ALLOWED):
+        return
+    t = f.toks
+    for i in range(max(len(t) - 3, 0)):
+        hit = (
+            (is_id(t[i], "Instant") or is_id(t[i], "SystemTime"))
+            and is_p(t[i + 1], ":")
+            and is_p(t[i + 2], ":")
+            and is_id(t[i + 3], "now")
+        )
+        if hit and not f.in_tests(t[i][2]):
+            out.append(("wallclock", f.path, t[i][2], "wall-clock read"))
+
+
+def fn_body(t, name):
+    for i in range(max(len(t) - 1, 0)):
+        if is_id(t[i], "fn") and is_id(t[i + 1], name):
+            j = i + 2
+            while j < len(t) and not is_p(t[j], "{"):
+                j += 1
+            if j >= len(t):
+                return None
+            return (j + 1, brace_match(t, j))
+    return None
+
+
+def wire_calls(t, rng, recv):
+    out = []
+    end = min(rng[1], len(t))
+    for i in range(rng[0], max(end - 3, 0)):
+        if is_id(t[i], recv) and is_p(t[i + 1], "."):
+            if t[i + 2][0] == IDENT and t[i + 2][1] in WIRE_METHODS and is_p(t[i + 3], "("):
+                out.append(t[i + 2][1])
+    return out
+
+
+def parse_num(s):
+    s = s.replace("_", "")
+    for suffix in ("usize", "u64", "u32", "u16", "u8", "i64", "i32"):
+        if s.endswith(suffix) and len(s) > len(suffix):
+            s = s[: -len(suffix)]
+            break
+    try:
+        return int(s, 16) if s[:2] in ("0x", "0X") else int(s)
+    except ValueError:
+        return None
+
+
+def find_const_num(t, name):
+    for i in range(max(len(t) - 2, 0)):
+        if is_id(t[i], "const") and is_id(t[i + 1], name):
+            for j in range(i + 2, min(i + 10, len(t) - 1)):
+                if is_p(t[j], "="):
+                    if t[j + 1][0] == NUM:
+                        v = parse_num(t[j + 1][1])
+                        if v is not None:
+                            return (v, t[j + 1][2])
+    return None
+
+
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data):
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h ^= byte
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def wire_fingerprint_of(version, enc, dec):
+    s = "frckpt-wire|v%d|enc:%s|dec:%s" % (version, ",".join(enc), ",".join(dec))
+    return fnv1a64(s.encode())
+
+
+def rule_wire_fingerprint(files, out):
+    f = next((f for f in files if f.path == "src/checkpoint/mod.rs"), None)
+    if f is None:
+        return
+    enc_body = fn_body(f.toks, "encode_payload")
+    dec_body = fn_body(f.toks, "decode_payload")
+    if enc_body is None or dec_body is None:
+        out.append(("wire-fingerprint", f.path, 1, "lost codec anchor"))
+        return
+    enc = wire_calls(f.toks, enc_body, "w")
+    dec = wire_calls(f.toks, dec_body, "r")
+    if not enc or not dec:
+        out.append(("wire-fingerprint", f.path, 1, "no wire calls"))
+        return
+    ver = find_const_num(f.toks, "VERSION")
+    if ver is None:
+        out.append(("wire-fingerprint", f.path, 1, "lost VERSION anchor"))
+        return
+    computed = wire_fingerprint_of(ver[0], enc, dec)
+    declared = find_const_num(f.toks, "WIRE_FINGERPRINT")
+    if declared is None:
+        out.append(("wire-fingerprint", f.path, 1, "missing WIRE_FINGERPRINT (computes to %#018x)" % computed))
+    elif declared[0] != computed:
+        out.append(("wire-fingerprint", f.path, declared[1], "drift: computes to %#018x" % computed))
+
+
+def enum_variants(t, name):
+    for i in range(max(len(t) - 1, 0)):
+        if not (is_id(t[i], "enum") and is_id(t[i + 1], name)):
+            continue
+        j = i + 2
+        while j < len(t) and not is_p(t[j], "{"):
+            j += 1
+        if j >= len(t):
+            return []
+        close = brace_match(t, j)
+        out = []
+        depth = 1
+        k = j + 1
+        while k < close:
+            if is_p(t[k], "{"):
+                depth += 1
+            elif is_p(t[k], "}"):
+                depth = max(depth - 1, 0)
+            elif t[k][0] == IDENT and depth == 1:
+                if k + 1 < len(t) and t[k + 1][0] == PUNCT and t[k + 1][1] in ",{(}=":
+                    out.append((t[k][1], t[k][2]))
+            k += 1
+        return out
+    return []
+
+
+def const_str_list(t, name):
+    for i in range(len(t)):
+        if is_id(t[i], name):
+            j = i + 1
+            while j < len(t) and not is_p(t[j], "="):
+                j += 1
+            if j >= len(t):
+                return None
+            out = []
+            for tok in t[j + 1 :]:
+                if tok[0] == STR:
+                    out.append(tok[1])
+                elif is_p(tok, ";"):
+                    return out
+            return out
+    return None
+
+
+def has_ident(t, rng, name):
+    return any(is_id(x, name) for x in t[rng[0] : min(rng[1], len(t))])
+
+
+def rule_op_exhaustive(files, out):
+    spec = next((f for f in files if f.path == "src/runtime/spec.rs"), None)
+    if spec is None:
+        return
+    variants = enum_variants(spec.toks, "NativeOp")
+    if not variants:
+        out.append(("op-exhaustive", spec.path, 1, "lost enum anchor"))
+        return
+    names = const_str_list(spec.toks, "VARIANT_NAMES")
+    if names is None:
+        out.append(("op-exhaustive", spec.path, 1, "missing VARIANT_NAMES"))
+    elif [v for v, _ in variants] != names:
+        out.append(("op-exhaustive", spec.path, variants[0][1], "stale VARIANT_NAMES"))
+    sig = fn_body(spec.toks, "signature")
+    if sig is None:
+        out.append(("op-exhaustive", spec.path, 1, "lost signature anchor"))
+    native = next((f for f in files if f.path == "src/runtime/native.rs"), None)
+    if native is None:
+        out.append(("op-exhaustive", "src/runtime/native.rs", 1, "missing"))
+    props = next((f for f in files if f.path == "tests/properties.rs"), None)
+    if props is None:
+        out.append(("op-exhaustive", "tests/properties.rs", 1, "missing"))
+    for v, line in variants:
+        if sig is not None and not has_ident(spec.toks, sig, v):
+            out.append(("op-exhaustive", spec.path, line, "%s not in signature()" % v))
+        if native is not None:
+            nt = native.toks
+            constructed = any(
+                is_id(nt[i], "NativeOp")
+                and is_p(nt[i + 1], ":")
+                and is_p(nt[i + 2], ":")
+                and is_id(nt[i + 3], v)
+                for i in range(max(len(nt) - 3, 0))
+            )
+            if not constructed:
+                out.append(("op-exhaustive", native.path, line, "%s not in plan builder" % v))
+        if props is not None:
+            referenced = any(
+                (x[0] == IDENT and x[1] == v) or (x[0] == STR and x[1] == v)
+                for x in props.toks
+            )
+            if not referenced:
+                out.append(("op-exhaustive", props.path, line, "%s has no parity coverage" % v))
+
+
+def rule_router_tested(files, out):
+    router = next((f for f in files if f.path == "src/serve/router.rs"), None)
+    if router is None:
+        return
+    t = router.toks
+    pub_fns = []
+    for i in range(max(len(t) - 2, 0)):
+        if not is_id(t[i], "pub") or router.in_tests(t[i][2]):
+            continue
+        j = i + 1
+        if j < len(t) and is_p(t[j], "("):
+            while j < len(t) and not is_p(t[j], ")"):
+                j += 1
+            j += 1
+        if j < len(t) and is_id(t[j], "fn"):
+            if j + 1 < len(t) and t[j + 1][0] == IDENT:
+                pub_fns.append((t[j + 1][1], t[i][2]))
+    refs = set()
+    for tok in t:
+        if router.in_tests(tok[2]) and tok[0] == IDENT:
+            refs.add(tok[1])
+    for f in files:
+        if f.path.startswith("tests/"):
+            for tok in f.toks:
+                if tok[0] == IDENT:
+                    refs.add(tok[1])
+    for name, line in pub_fns:
+        if name not in refs:
+            out.append(("router-tested", router.path, line, "pub fn %s untested" % name))
+
+
+DASH_CHARS = "-—–:"
+
+
+def parse_directives(path, content, findings):
+    out = []
+    for idx, line in enumerate(content.split("\n")):
+        lineno = idx + 1
+        body = None
+        pos = line.find("//")
+        while pos != -1:
+            c = line[pos:].lstrip("/!").lstrip()
+            if c.startswith("frlint:"):
+                body = c[len("frlint:") :].lstrip()
+                break
+            pos = line.find("//", pos + 1)
+        if body is None or not body.startswith("allow("):
+            continue
+        rest = body[len("allow(") :]
+        close = rest.find(")")
+        if close == -1:
+            findings.append(("frlint-directive", path, lineno, "missing )"))
+            continue
+        rule = rest[:close].strip()
+        if rule not in RULES:
+            findings.append(("frlint-directive", path, lineno, "unknown rule %r" % rule))
+            continue
+        reason = rest[close + 1 :].lstrip(" \t" + DASH_CHARS).strip()
+        if not reason:
+            findings.append(("frlint-directive", path, lineno, "no reason"))
+            continue
+        out.append({"rule": rule, "file": path, "line": lineno, "reason": reason, "used": False})
+    return out
+
+
+def run_files(file_pairs):
+    """file_pairs: [(path, content)] -> (violations, suppressed, warnings)."""
+    lexed = [LexedFile(p, c) for p, c in file_pairs]
+    findings = []
+    for f in lexed:
+        rule_unbounded_recv(f, findings)
+        rule_nondet_collections(f, findings)
+        rule_thread_spawn(f, findings)
+        rule_serve_unwrap(f, findings)
+        rule_wallclock(f, findings)
+    rule_wire_fingerprint(lexed, findings)
+    rule_op_exhaustive(lexed, findings)
+    rule_router_tested(lexed, findings)
+    directives = []
+    for p, c in file_pairs:
+        directives.extend(parse_directives(p, c, findings))
+    violations, suppressed = [], []
+    for fd in findings:
+        rule, path, line = fd[0], fd[1], fd[2]
+        hit = next(
+            (
+                d
+                for d in directives
+                if d["file"] == path and d["rule"] == rule and d["line"] in (line, line - 1)
+            ),
+            None,
+        )
+        if hit is not None:
+            hit["used"] = True
+            suppressed.append((fd, hit["reason"]))
+        else:
+            violations.append(fd)
+    warnings = [
+        "unused suppression at %s:%d for rule %s" % (d["file"], d["line"], d["rule"])
+        for d in directives
+        if not d["used"]
+    ]
+    violations.sort(key=lambda f: (f[1], f[2], f[0]))
+    return violations, suppressed, warnings
+
+
+def load_repo():
+    pairs = []
+    for top in ("src", "tests"):
+        base = os.path.join(RUST, top)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    abspath = os.path.join(dirpath, fn)
+                    rel = os.path.relpath(abspath, RUST).replace(os.sep, "/")
+                    with open(abspath, encoding="utf-8") as fh:
+                        pairs.append((rel, fh.read()))
+    pairs.sort(key=lambda pc: pc[0])
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# Corpus pin (mirror of rust/src/util/rng.rs + rust/src/data/tiny_corpus.rs)
+
+
+class Rng:
+    def __init__(self, seed):
+        x = seed & MASK64
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & MASK64
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+
+        def rotl(v, k):
+            return ((v << k) | (v >> (64 - k))) & MASK64
+
+        result = (rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        return self.next_u64() % n if n else 0
+
+
+def generate_corpus(target_chars, seed):
+    src = open(os.path.join(RUST, "src", "data", "tiny_corpus.rs"), encoding="utf-8").read()
+    raw = re.search(r'const SEED_TEXT: &str = "(.*?)";', src, re.S).group(1)
+    seed_text = re.sub(r"\\\n\s*", "", raw)
+    assert "\\" not in seed_text and '"' not in seed_text
+    words = seed_text.split()
+    out = seed_text + " "
+    rng = Rng(seed)
+    table = {}
+    for i in range(len(words) - 2):
+        table.setdefault((words[i], words[i + 1]), []).append(words[i + 2])
+    a, b = words[0], words[1]
+    while len(out) < target_chars:
+        cands = table.get((a, b))
+        if cands is None:
+            i = rng.below(len(words) - 2)
+            a, b = words[i], words[i + 1]
+            continue
+        nxt = cands[rng.below(len(cands))]
+        out += nxt + " "
+        a, b = b, nxt
+    return out[:target_chars]
+
+
+# ---------------------------------------------------------------------------
+# Checks
+
+
+def check_fixtures():
+    """The mirror must agree with frlint's fixture tests: every rule has a
+    firing and a non-firing case here too."""
+    def hits(files):
+        return [v[0] for v in run_files(files)[0]]
+
+    allow = lambda rule, reason: "// frlint%s allow(%s) — %s" % (":", rule, reason)
+
+    # rule 1
+    assert hits([("src/coordinator/x.rs", "fn f(rx: R) { let _ = rx.recv(); }")]) == ["unbounded-recv"]
+    assert hits([("src/coordinator/x.rs", "fn f(rx: R, d: D) { let _ = rx.recv_timeout(d); }")]) == []
+    # suppression
+    code = "fn f(rx: R) {\n    %s\n    let _ = rx.recv();\n}" % allow("unbounded-recv", "idles by design")
+    v, s, w = run_files([("src/coordinator/x.rs", code)])
+    assert v == [] and len(s) == 1 and s[0][1] == "idles by design" and w == []
+    # wrong rule does not silence + unused warning
+    code = "fn f(rx: R) {\n    %s\n    let _ = rx.recv();\n}" % allow("wallclock", "wrong rule")
+    v, s, w = run_files([("src/coordinator/x.rs", code)])
+    assert [x[0] for x in v] == ["unbounded-recv"] and len(w) == 1
+    # malformed directives
+    assert hits([("src/a.rs", "// frlint%s allow(wallclock)" % ":")]) == ["frlint-directive"]
+    assert hits([("src/a.rs", "// frlint%s allow(no-such) — x" % ":")]) == ["frlint-directive"]
+    # rule 2
+    assert hits([("src/runtime/x.rs", "use std::collections::HashMap;")]) == ["nondet-collections"]
+    assert hits([("src/runtime/x.rs", "use std::collections::BTreeMap;")]) == []
+    assert hits([("src/lint/x.rs", "use std::collections::HashMap;")]) == []
+    # rule 3
+    assert hits([("src/data/x.rs", "fn f() { std::thread::spawn(|| {}); }")]) == ["thread-spawn"]
+    assert hits([("src/runtime/pool.rs", "fn f() { std::thread::spawn(|| {}); }")]) == []
+    # rule 4
+    assert hits([("src/serve/x.rs", "fn f(x: O) -> u32 { x.unwrap() }")]) == ["serve-unwrap"]
+    assert hits([("src/serve/x.rs", 'fn g() { panic!("boom"); }')]) == ["serve-unwrap"]
+    assert hits([("src/data/x.rs", "fn f(x: O) -> u32 { x.unwrap() }")]) == []
+    tests_only = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn t() { None.unwrap(); }\n}"
+    assert hits([("src/serve/x.rs", tests_only)]) == []
+    # rule 5
+    assert hits([("src/coordinator/x.rs", "fn f() { let _ = std::time::Instant::now(); }")]) == ["wallclock"]
+    assert hits([("src/bench/x.rs", "fn f() { let _ = std::time::Instant::now(); }")]) == []
+    # rule 6
+    good = wire_fingerprint_of(1, ["u32", "str"], ["u32", "str"])
+    ck = (
+        "pub const VERSION: u32 = 1;\n"
+        "pub const WIRE_FINGERPRINT: u64 = %#x;\n"
+        "impl C {\n"
+        "    fn encode_payload(&self) { let mut w = W::new(); w.u32(self.a); w.str(&self.b); }\n"
+        "    fn decode_payload(buf: &[u8]) { let mut r = R::new(buf); r.u32(); r.str(); }\n"
+        "}\n"
+    )
+    assert hits([("src/checkpoint/mod.rs", ck % good)]) == []
+    assert hits([("src/checkpoint/mod.rs", ck % 0xBAD)]) == ["wire-fingerprint"]
+    drifted = (ck % good).replace("r.u32(); r.str();", "r.str(); r.u32();")
+    assert hits([("src/checkpoint/mod.rs", drifted)]) == ["wire-fingerprint"]
+    # rule 7
+    spec_src = (
+        "pub enum NativeOp { A, B { x: usize } }\n"
+        "impl NativeOp {\n"
+        "    pub const VARIANT_NAMES: &'static [&'static str] = &[%s];\n"
+        "    pub fn signature(self) { match self { NativeOp::A => {}, NativeOp::B { x: _ } => {} } }\n"
+        "}\n"
+    )
+    full = [
+        ("src/runtime/spec.rs", spec_src % '"A", "B"'),
+        ("src/runtime/native.rs", "fn plan(op: &NativeOp) { match op { NativeOp::A => {}, NativeOp::B { .. } => {} } }"),
+        ("tests/properties.rs", 'const COVER: &[&str] = &["A", "B"];'),
+    ]
+    assert hits(full) == []
+    missing_plan = [full[0], ("src/runtime/native.rs", "fn plan(op: &NativeOp) { match op { NativeOp::A => {} } }"), full[2]]
+    assert hits(missing_plan) == ["op-exhaustive"]
+    no_cover = [full[0], full[1], ("tests/properties.rs", 'const COVER: &[&str] = &["A"];')]
+    assert hits(no_cover) == ["op-exhaustive"]
+    stale = [("src/runtime/spec.rs", spec_src % '"A"'), full[1], full[2]]
+    assert hits(stale) == ["op-exhaustive"]
+    # rule 8
+    r8 = [
+        ("src/serve/router.rs", "pub fn handle() {}\npub fn detail() {}"),
+        ("tests/serve_api.rs", "fn t() { handle(); }"),
+    ]
+    assert hits(r8) == ["router-tested"]
+    covered = [
+        ("src/serve/router.rs", "pub fn handle() {}\npub(crate) fn detail() {}\n#[cfg(test)]\nmod tests {\n    fn t() { detail(); }\n}"),
+        ("tests/serve_api.rs", "fn t() { handle(); }"),
+    ]
+    assert hits(covered) == []
+    print("fixture agreement: ok (8 rules, firing + quiet + suppression)")
+
+
+def check_repo_clean():
+    pairs = load_repo()
+    assert len(pairs) > 30, "scan set suspiciously small: %d files" % len(pairs)
+    violations, suppressed, warnings = run_files(pairs)
+    for v in violations:
+        print("VIOLATION %s:%d [%s] %s" % (v[1], v[2], v[0], v[3]))
+    for w in warnings:
+        print("WARNING " + w)
+    assert not violations, "%d violations on the real tree" % len(violations)
+    assert suppressed, "expected at least one justified suppression in the tree"
+    for fd, reason in suppressed:
+        assert reason.strip(), "empty suppression reason at %s:%d" % (fd[1], fd[2])
+    print("repo tree: clean (%d files, %d suppressed findings, %d warnings)"
+          % (len(pairs), len(suppressed), len(warnings)))
+
+
+def check_wire_fingerprint():
+    path = os.path.join(RUST, "src", "checkpoint", "mod.rs")
+    with open(path, encoding="utf-8") as fh:
+        toks = lex(fh.read())
+    enc = wire_calls(toks, fn_body(toks, "encode_payload"), "w")
+    dec = wire_calls(toks, fn_body(toks, "decode_payload"), "r")
+    ver = find_const_num(toks, "VERSION")
+    declared = find_const_num(toks, "WIRE_FINGERPRINT")
+    assert enc and dec and ver, "checkpoint codec anchors missing"
+    computed = wire_fingerprint_of(ver[0], enc, dec)
+    print("wire: VERSION=%d enc=%d dec=%d fingerprint=%#018x" % (ver[0], len(enc), len(dec), computed))
+    assert declared is not None, "WIRE_FINGERPRINT missing (should be %#018x)" % computed
+    assert declared[0] == computed, "WIRE_FINGERPRINT %#018x != computed %#018x" % (declared[0], computed)
+
+
+def check_corpus_pin():
+    src = open(os.path.join(RUST, "src", "data", "tiny_corpus.rs"), encoding="utf-8").read()
+    m = re.search(r"0x[0-9a-fA-F_]{10,}", src)
+    assert m, "pinned corpus hash constant not found"
+    pinned = int(m.group(0).replace("_", ""), 16)
+    text = generate_corpus(5000, 9)
+    h = fnv1a64(text.encode())
+    assert h == pinned, "corpus hash %#018x != pinned %#018x" % (h, pinned)
+    assert text[4800:4860] == " first entering a neighbourhood, this truth is so well fixed"
+    print("corpus pin: %#018x over %d chars — ok" % (h, len(text)))
+
+
+def main():
+    check_fixtures()
+    check_wire_fingerprint()
+    check_corpus_pin()
+    check_repo_clean()
+    print("frlint mirror: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,7 @@ fn run_scenario(addr: &str, sample_len: usize, clients: usize,
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
+            // frlint: allow(thread-spawn) — bench harness load generator, joined before results are read
             std::thread::spawn(move || -> Result<Vec<f64>> {
                 let mut client = MiniClient::connect(&addr)
                     .context("connecting bench client")?;
@@ -108,6 +109,7 @@ pub fn run_serve_bench(out: &Path) -> Result<()> {
     let server = Server::bind(cfg)?;
     let addr = server.local_addr().to_string();
     let stop = server.stop_handle();
+    // frlint: allow(thread-spawn) — bench harness server thread, stopped and joined at scenario end
     let server_thread = std::thread::spawn(move || server.run());
     wait_healthy(&addr)?;
 

@@ -1,0 +1,80 @@
+//! `frlint` — run the repo-invariant static-analysis pass over this
+//! crate's `src/` and `tests/` trees and fail (exit 1) on violations.
+//!
+//! An enforced step in `scripts/ci.sh`: unlike fmt/clippy it needs no
+//! toolchain components, so it runs everywhere `cargo run` does.
+//!
+//! ```text
+//! frlint                          lint the crate this binary was built from
+//! frlint --root <dir>             lint a different crate root
+//! frlint --print-wire-fingerprint print the checkpoint codec's computed
+//!                                 fingerprint (what WIRE_FINGERPRINT must
+//!                                 declare after a deliberate layout change)
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations, 2 usage/scan error.
+
+use std::path::PathBuf;
+
+use features_replay::lint;
+
+fn usage(code: i32) -> ! {
+    eprintln!(
+        "usage: frlint [--root <dir>] [--print-wire-fingerprint]\n\
+         rules:"
+    );
+    for (name, what) in lint::rules::RULES {
+        eprintln!("  {name:<20} {what}");
+    }
+    std::process::exit(code)
+}
+
+fn main() {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut print_fingerprint = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("frlint: --root needs a directory");
+                    usage(2)
+                }
+            },
+            "--print-wire-fingerprint" => print_fingerprint = true,
+            "--help" | "-h" => usage(0),
+            other => {
+                eprintln!("frlint: unknown argument {other:?}");
+                usage(2)
+            }
+        }
+    }
+
+    if print_fingerprint {
+        match lint::computed_wire_fingerprint(&root) {
+            Ok(Some((version, fp))) => {
+                println!("VERSION={version} WIRE_FINGERPRINT={fp:#018x}");
+                std::process::exit(0)
+            }
+            Ok(None) => {
+                eprintln!("frlint: checkpoint codec anchors not found under {}", root.display());
+                std::process::exit(2)
+            }
+            Err(e) => {
+                eprintln!("frlint: cannot read checkpoint module: {e}");
+                std::process::exit(2)
+            }
+        }
+    }
+
+    let report = match lint::run_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("frlint: cannot scan {}: {e}", root.display());
+            std::process::exit(2)
+        }
+    };
+    print!("{}", report.render());
+    std::process::exit(if report.clean() { 0 } else { 1 })
+}

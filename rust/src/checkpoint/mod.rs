@@ -47,6 +47,14 @@ pub const MAGIC: [u8; 8] = *b"FRCKPT\0\0";
 /// Current format version; bump on any layout change. Version 2 added the
 /// per-module auxiliary-head sections (DGL/BackLink local-loss classifiers).
 pub const VERSION: u32 = 2;
+/// Fingerprint of the serialized-field *sequence* of
+/// [`Checkpoint::encode_payload`] / decode, pinned together with
+/// [`VERSION`]: FNV-1a64 over the lexed wire-call order (see frlint's
+/// `wire-fingerprint` rule, which recomputes it from this file's source
+/// on every CI run). Reordering, adding or removing a field moves the
+/// computed value — on a deliberate layout change, bump [`VERSION`] and
+/// refresh this constant via `cargo run --bin frlint -- --print-wire-fingerprint`.
+pub const WIRE_FINGERPRINT: u64 = 0x799e86cfabac1376;
 /// Header bytes before the payload: magic + version + length + checksum.
 pub const HEADER_LEN: usize = 28;
 

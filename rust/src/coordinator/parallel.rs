@@ -567,9 +567,11 @@ fn worker_loop(
     }
 
     loop {
+        // frlint: allow(unbounded-recv) — worker idles for the leader's next command; channel close (leader drop) unblocks and shuts the worker down
         match cmd_rx.recv() {
             Err(_) | Ok(Command::Shutdown) => return Ok(()),
             Ok(Command::Forward { eval }) => {
+                // frlint: allow(unbounded-recv) — activation feed: the leader already issued Forward, so the upstream send is in flight; bounded waits live on the leader side
                 let (h, lbl) = act_rx.recv().context("activation feed closed")?;
                 // Start the clock only once the input is here: fwd_ms is
                 // this module's compute, not upstream pipeline wait.
@@ -648,6 +650,7 @@ fn worker_loop(
                         if delta_prefetched {
                             delta_prefetched = false;
                         } else if let Some(rx) = &delta_rx {
+                            // frlint: allow(unbounded-recv) — FIFO delta discipline: exactly one delta per Backward, emitted by the upper worker in the same iteration; a timeout would break Algorithm 1's staleness contract
                             pending_delta = rx.recv()
                                 .context("delta feed closed")?;
                         }

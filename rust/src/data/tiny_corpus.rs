@@ -53,9 +53,14 @@ pub fn generate_corpus(target_chars: usize, seed: u64) -> String {
     out.push_str(SEED_TEXT);
     out.push(' ');
     let mut rng = Rng::new(seed);
-    // trigram successor table: (w_i, w_i+1) -> candidate w_i+2 list
-    let mut table: std::collections::HashMap<(&str, &str), Vec<&str>> =
-        std::collections::HashMap::new();
+    // trigram successor table: (w_i, w_i+1) -> candidate w_i+2 list.
+    // BTreeMap, not HashMap: this sits on the deterministic data path, and
+    // the ordered map keeps the whole structure order-stable by construction
+    // (candidate lists are insertion-ordered either way, but the btree makes
+    // the invariant auditable — and frlint's nondet-collections rule enforces
+    // it).
+    let mut table: std::collections::BTreeMap<(&str, &str), Vec<&str>> =
+        std::collections::BTreeMap::new();
     for w in words.windows(3) {
         table.entry((w[0], w[1])).or_default().push(w[2]);
     }
@@ -177,6 +182,27 @@ mod tests {
     fn corpus_deterministic() {
         assert_eq!(generate_corpus(5000, 9), generate_corpus(5000, 9));
         assert_ne!(generate_corpus(5000, 9), generate_corpus(5000, 10));
+    }
+
+    /// Pins the corpus byte-for-byte across platforms and releases: the
+    /// constant was computed by an independent reimplementation of the
+    /// babbler (splitmix64 + xoshiro256** + trigram walk). If this moves,
+    /// every char-LM run and checkpointed RNG stream in the wild silently
+    /// trains on different data — bump it only with a deliberate corpus
+    /// version change. It is also the regression guard for the ordered
+    /// trigram table: a nondeterministic map here shows up as a hash flake.
+    #[test]
+    fn corpus_content_is_pinned() {
+        let text = generate_corpus(5000, 9);
+        assert_eq!(
+            crate::checkpoint::fnv1a64(text.as_bytes()),
+            0xb55a2b8f020d7fc2,
+            "corpus bytes drifted — deterministic-data contract broken"
+        );
+        assert_eq!(
+            &text[4800..4860],
+            " first entering a neighbourhood, this truth is so well fixed"
+        );
     }
 
     #[test]

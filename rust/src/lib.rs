@@ -32,6 +32,7 @@ pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
 pub mod experiment;
+pub mod lint;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;

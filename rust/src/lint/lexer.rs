@@ -1,0 +1,311 @@
+//! A lightweight Rust lexer for `frlint` — just enough tokenization to
+//! walk source files without `syn`: identifiers, numbers, string/char
+//! literals, lifetimes, and single-character punctuation, with comments
+//! and literal *contents* removed from the token stream (so a `.recv()`
+//! inside a doc comment or a fixture string never trips a rule).
+//!
+//! Deliberately NOT a full Rust lexer: multi-character operators arrive as
+//! runs of [`Tok::Punct`] (`::` is two `:` tokens), and numeric literals
+//! are scanned loosely (good enough to read `2` and `0xDEAD_BEEF`, while
+//! never eating the `..` range operator). What it must get right — and
+//! has unit tests for — are the boundary cases that break naive scanners:
+//! nested block comments, raw/byte strings (`r#"…"#`), escaped quotes,
+//! and the `'a'` char literal vs `'a` lifetime ambiguity.
+//!
+//! The Python mirror `python/tests/test_frlint_mirror.py` ports this
+//! algorithm statement-for-statement; keep the two in sync.
+
+/// One lexical token. String contents are retained (rule 7 matches enum
+/// variant names inside coverage-table string literals); char literals and
+/// lifetimes carry no payload because no rule needs one.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(String),
+    Str(String),
+    Char,
+    Lifetime,
+    Punct(char),
+}
+
+impl Tok {
+    /// Convenience: the identifier text, if this is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, Tok::Ident(i) if i == s)
+    }
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Scan an escaped string body starting just after the opening quote.
+/// Returns (contents, index after closing quote, line after scan).
+fn scan_string(src: &str, mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let b = src.as_bytes();
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                // keep escapes raw; a `\<newline>` continuation still
+                // advances the line counter
+                if b.get(i + 1) == Some(&b'\n') {
+                    line += 1;
+                }
+                i = (i + 2).min(b.len());
+            }
+            b'"' => {
+                return (src[start..i].to_string(), i + 1, line);
+            }
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (src[start..i].to_string(), i, line) // unterminated: tolerate
+}
+
+/// Scan a raw string body: `i` points at the first `#` or the opening
+/// quote. Returns (contents, index after closing delimiter, line).
+fn scan_raw_string(src: &str, mut i: usize, mut line: usize) -> (String, usize, usize) {
+    let b = src.as_bytes();
+    let mut hashes = 0usize;
+    while b.get(i) == Some(&b'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        // `r#foo` raw identifier, not a string: caller re-lexes from here
+        return (String::new(), i, line);
+    }
+    i += 1;
+    let start = i;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == b'"' {
+            let tail = &b[i + 1..];
+            if tail.len() >= hashes && tail[..hashes].iter().all(|&c| c == b'#') {
+                return (src[start..i].to_string(), i + 1 + hashes, line);
+            }
+        }
+        i += 1;
+    }
+    (src[start..i].to_string(), i, line)
+}
+
+/// Tokenize one source file. Never fails: unrecognized bytes become
+/// [`Tok::Punct`] tokens, and unterminated literals are tolerated (the
+/// rules only ever under-match on malformed input; rustc rejects it).
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let at = line;
+            let (s, ni, nl) = scan_string(src, i + 1, line);
+            toks.push(Token { tok: Tok::Str(s), line: at });
+            i = ni;
+            line = nl;
+        } else if c == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                // escaped char literal: skip to the closing quote
+                i += 2;
+                while i < b.len() && b[i] != b'\'' {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i = (i + 1).min(b.len());
+                toks.push(Token { tok: Tok::Char, line });
+            } else if let Some(&c1) = b.get(i + 1) {
+                if b.get(i + 2) == Some(&b'\'') {
+                    i += 3; // 'a' — a closing quote right after one char
+                    toks.push(Token { tok: Tok::Char, line });
+                } else if c1 == b'_' || c1.is_ascii_alphabetic() {
+                    i += 2; // 'ident with no closing quote — a lifetime
+                    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                        i += 1;
+                    }
+                    toks.push(Token { tok: Tok::Lifetime, line });
+                } else {
+                    i += 1;
+                    toks.push(Token { tok: Tok::Punct('\''), line });
+                }
+            } else {
+                i += 1;
+                toks.push(Token { tok: Tok::Punct('\''), line });
+            }
+        } else if c == b'_' || c.is_ascii_alphabetic() {
+            let s0 = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            let id = &src[s0..i];
+            let raw_prefix = matches!(id, "r" | "br" | "rb")
+                && matches!(b.get(i), Some(b'"') | Some(b'#'));
+            let byte_prefix = id == "b" && b.get(i) == Some(&b'"');
+            if raw_prefix {
+                let at = line;
+                let (s, ni, nl) = scan_raw_string(src, i, line);
+                if ni > i {
+                    toks.push(Token { tok: Tok::Str(s), line: at });
+                    i = ni;
+                    line = nl;
+                } else {
+                    toks.push(Token { tok: Tok::Ident(id.to_string()), line });
+                }
+            } else if byte_prefix {
+                let at = line;
+                let (s, ni, nl) = scan_string(src, i + 1, line);
+                toks.push(Token { tok: Tok::Str(s), line: at });
+                i = ni;
+                line = nl;
+            } else {
+                toks.push(Token { tok: Tok::Ident(id.to_string()), line });
+            }
+        } else if c.is_ascii_digit() {
+            let s0 = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            // one fractional part, but never the `..` range operator
+            if i < b.len()
+                && b[i] == b'.'
+                && b.get(i + 1).is_some_and(|d| d.is_ascii_digit())
+            {
+                i += 1;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            toks.push(Token { tok: Tok::Num(src[s0..i].to_string()), line });
+        } else {
+            // multibyte UTF-8 arrives as one punct per byte; no rule
+            // matches non-ASCII punctuation so this is harmless
+            toks.push(Token { tok: Tok::Punct(c as char), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let toks = lex("foo.bar()\nbaz");
+        assert_eq!(toks[0].tok, Tok::Ident("foo".into()));
+        assert!(toks[1].tok.is_punct('.'));
+        assert_eq!(toks[4].tok, Tok::Ident("baz".into()));
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[4].line, 2);
+    }
+
+    #[test]
+    fn comments_are_skipped_including_nested_blocks() {
+        assert_eq!(kinds("a // b.recv()\nc"), kinds("a\nc"));
+        assert_eq!(kinds("a /* x /* y */ z.recv() */ c"), kinds("a c"));
+        // line counting survives block comments
+        let toks = lex("/* one\ntwo */ x");
+        assert_eq!(toks[0].line, 2);
+    }
+
+    #[test]
+    fn string_contents_are_one_token() {
+        let toks = lex(r#"let s = "a.recv() \" done";"#);
+        assert_eq!(
+            toks.iter().filter(|t| matches!(t.tok, Tok::Str(_))).count(),
+            1
+        );
+        assert!(!toks.iter().any(|t| t.tok.is_ident("recv")));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = lex(r###"let s = r#"quote " inside"#; let b = b"bytes";"###);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["quote \" inside", "bytes"]);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let toks = lex("let c = 'a'; fn f<'a>(x: &'a str) {} let n = '\\n';");
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        let lifetimes = toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        assert_eq!(chars, 2);
+        assert_eq!(lifetimes, 2);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let toks = lex("for i in 0..10 { let x = 1.5; let h = 0xFF_AA; }");
+        assert_eq!(toks[3].tok, Tok::Num("0".into()));
+        assert!(toks[4].tok.is_punct('.'));
+        assert!(toks[5].tok.is_punct('.'));
+        assert_eq!(toks[6].tok, Tok::Num("10".into()));
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("1.5".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("0xFF_AA".into())));
+    }
+}

@@ -1,0 +1,250 @@
+//! `frlint` — the repo-invariant static-analysis pass.
+//!
+//! The reproduction's verification story rests on contracts that rustc
+//! cannot check: bitwise-identical kernels at every thread count, bounded
+//! leader/service waits, typed (never panicking) serve request paths, and
+//! a versioned checkpoint wire format. One stray `HashMap` iteration or
+//! unbounded `recv()` silently breaks them. This module scans `src/` and
+//! `tests/` with the token lexer in [`lexer`] and fails CI (`cargo run
+//! --bin frlint`, wired into `scripts/ci.sh` as an enforced step) on any
+//! violation of the rules in [`rules::RULES`] — see DESIGN.md §Enforced
+//! invariants for the rule ↔ contract table.
+//!
+//! ## Suppressions
+//!
+//! A finding can be silenced where the flagged construct is intentional,
+//! with a mandatory reason that the report surfaces:
+//!
+//! ```text
+//! rx.recv()  [plus a trailing or preceding line comment of the form
+//!            `frlint: allow(unbounded-recv) — worker idles by design`]
+//! ```
+//!
+//! The directive must start the comment (`//` then `frlint: allow(…)`),
+//! names exactly one rule, and covers its own line plus the next one — so
+//! it can trail the flagged expression or sit on the line above it. A
+//! directive naming an unknown rule, or carrying no reason, is itself a
+//! violation; a directive that suppresses nothing is reported as a
+//! warning so stale allows get cleaned up.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One input to the lint pass: a path relative to the crate root (forward
+/// slashes, e.g. `src/serve/batcher.rs`) plus the file contents. The rules
+/// scope themselves by path prefix, which is what makes them testable on
+/// synthetic fixture trees.
+pub struct SourceFile {
+    pub path: String,
+    pub content: String,
+}
+
+/// A single rule hit, before suppression handling.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A finding silenced by an inline `frlint: allow(...)` directive; the
+/// mandatory reason rides along so the report can surface it.
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+struct Directive {
+    rule: String,
+    file: String,
+    line: usize,
+    reason: String,
+    used: bool,
+}
+
+/// Outcome of a lint pass. `violations` empty ⇔ the tree is clean (exit 0).
+pub struct Report {
+    pub files_scanned: usize,
+    pub violations: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    /// Non-fatal notes: currently only unused suppressions.
+    pub warnings: Vec<String>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report: suppressed findings (with their reasons),
+    /// warnings, then violations and the verdict line.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "frlint: {} files scanned, {} rules",
+            self.files_scanned,
+            rules::RULES.len()
+        );
+        if !self.suppressed.is_empty() {
+            let _ = writeln!(s, "suppressed findings (inline allows):");
+            for sup in &self.suppressed {
+                let _ = writeln!(
+                    s,
+                    "  {}:{} [{}] — {}",
+                    sup.finding.file, sup.finding.line, sup.finding.rule, sup.reason
+                );
+            }
+        }
+        for w in &self.warnings {
+            let _ = writeln!(s, "warning: {w}");
+        }
+        if self.violations.is_empty() {
+            let _ = writeln!(s, "frlint: clean");
+        } else {
+            for v in &self.violations {
+                let _ = writeln!(s, "  {}:{} [{}] {}", v.file, v.line, v.rule, v.msg);
+            }
+            let _ = writeln!(s, "frlint: {} violation(s)", self.violations.len());
+        }
+        s
+    }
+}
+
+/// Scan one file's raw lines for suppression directives. Malformed
+/// directives (unknown rule, missing reason, unclosed paren) become
+/// findings — a typo must not silently disable enforcement.
+fn parse_directives(file: &SourceFile, findings: &mut Vec<Finding>) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (idx, line) in file.content.lines().enumerate() {
+        let lineno = idx + 1;
+        // A directive must *start* its comment: prose that merely mentions
+        // the syntax mid-sentence is not a directive.
+        let Some(body) = line.match_indices("//").find_map(|(p, _)| {
+            let c = line[p..].trim_start_matches(['/', '!']).trim_start();
+            c.strip_prefix("frlint:").map(|r| r.trim_start())
+        }) else {
+            continue;
+        };
+        let Some(rest) = body.strip_prefix("allow(") else {
+            continue; // "frlint: ..." prose, not a directive
+        };
+        let mut bad = |msg: String| {
+            findings.push(Finding {
+                rule: "frlint-directive",
+                file: file.path.clone(),
+                line: lineno,
+                msg,
+            });
+        };
+        let Some(close) = rest.find(')') else {
+            bad("malformed suppression: missing ')'".into());
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !rules::RULES.iter().any(|(name, _)| *name == rule) {
+            bad(format!("suppression names unknown rule {rule:?}"));
+            continue;
+        }
+        let reason = rest[close + 1..]
+            .trim_start_matches(|c: char| c.is_whitespace() || matches!(c, '-' | '—' | '–' | ':'))
+            .trim()
+            .to_string();
+        if reason.is_empty() {
+            bad(format!(
+                "suppression of `{rule}` has no reason — every allow must say why"
+            ));
+            continue;
+        }
+        out.push(Directive { rule, file: file.path.clone(), line: lineno, reason, used: false });
+    }
+    out
+}
+
+/// Run every rule over an in-memory file set and apply suppressions.
+/// The entry point both for the real tree ([`run_repo`]) and for the
+/// fixture tests in [`rules`].
+pub fn run_files(files: &[SourceFile]) -> Report {
+    let lexed: Vec<rules::LexedFile> =
+        files.iter().map(|f| rules::LexedFile::new(&f.path, &f.content)).collect();
+    let mut findings = Vec::new();
+    rules::check_all(&lexed, &mut findings);
+    let mut directives = Vec::new();
+    for f in files {
+        directives.extend(parse_directives(f, &mut findings));
+    }
+    let mut violations = Vec::new();
+    let mut suppressed = Vec::new();
+    for finding in findings {
+        // A directive covers its own line and the next one, so it can
+        // trail the flagged expression or sit on the line above it.
+        let hit = directives.iter_mut().find(|d| {
+            d.file == finding.file
+                && d.rule == finding.rule
+                && (d.line == finding.line || d.line + 1 == finding.line)
+        });
+        match hit {
+            Some(d) => {
+                d.used = true;
+                suppressed.push(Suppressed { reason: d.reason.clone(), finding });
+            }
+            None => violations.push(finding),
+        }
+    }
+    let warnings = directives
+        .iter()
+        .filter(|d| !d.used)
+        .map(|d| format!("unused suppression at {}:{} for rule `{}`", d.file, d.line, d.rule))
+        .collect();
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    suppressed.sort_by(|a, b| {
+        (&a.finding.file, a.finding.line).cmp(&(&b.finding.file, b.finding.line))
+    });
+    Report { files_scanned: files.len(), violations, suppressed, warnings }
+}
+
+/// Load every `.rs` file under `<root>/src` and `<root>/tests` (sorted
+/// traversal — the report order is deterministic) and lint them.
+pub fn run_repo(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for top in ["src", "tests"] {
+        collect(root, Path::new(top), &mut files)?;
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(run_files(&files))
+}
+
+fn collect(root: &Path, rel: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let abs = root.join(rel);
+    if !abs.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<_> =
+        std::fs::read_dir(&abs)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = rel.join(e.file_name());
+        if e.file_type()?.is_dir() {
+            collect(root, &p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let path = p.to_string_lossy().replace('\\', "/");
+            out.push(SourceFile { path, content: std::fs::read_to_string(root.join(&p))? });
+        }
+    }
+    Ok(())
+}
+
+/// The wire fingerprint the current `src/checkpoint/mod.rs` encodes to —
+/// what `WIRE_FINGERPRINT` must be set to after a deliberate layout
+/// change (`frlint --print-wire-fingerprint`).
+pub fn computed_wire_fingerprint(root: &Path) -> std::io::Result<Option<(u32, u64)>> {
+    let rel = "src/checkpoint/mod.rs";
+    let content = std::fs::read_to_string(root.join(rel))?;
+    let lexed = rules::LexedFile::new(rel, &content);
+    Ok(rules::computed_wire_fingerprint(&[lexed]))
+}

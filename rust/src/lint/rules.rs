@@ -1,0 +1,984 @@
+//! The frlint rule set: eight token-level checks, each guarding one
+//! written contract of this reproduction (see DESIGN.md §Enforced
+//! invariants for the rule ↔ contract table).
+//!
+//! Rules 1–5 are per-file pattern walks scoped by path prefix; rules 6–8
+//! are cross-file consistency checks anchored on specific files (the
+//! checkpoint wire codec, the `NativeOp` authority, the serve router).
+//! Anchors are guarded: if a rule cannot find the construct it exists to
+//! protect (e.g. `fn encode_payload` was renamed), that is itself a
+//! violation — a refactor must move the guard along, never silently
+//! disable it.
+//!
+//! Rules 1–5 skip `#[cfg(test)]` regions: tests may block, panic and
+//! time freely; the contracts constrain shipped paths.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, Tok, Token};
+use super::Finding;
+
+/// Every rule name with a one-line summary, in report order. The
+/// suppression parser validates `frlint: allow(<rule>)` names against
+/// this list.
+pub const RULES: &[(&str, &str)] = &[
+    ("unbounded-recv", "channel waits must be bounded (recv_timeout) or justified"),
+    ("nondet-collections", "no HashMap/HashSet in deterministic paths"),
+    ("thread-spawn", "threads spawn only in the sanctioned fleet/serve modules"),
+    ("serve-unwrap", "serve request paths return typed ApiErrors, never panic"),
+    ("wallclock", "wall-clock reads live in timing modules only"),
+    ("wire-fingerprint", "checkpoint wire layout matches the declared fingerprint"),
+    ("op-exhaustive", "every NativeOp variant wired through signature/plan/parity"),
+    ("router-tested", "every pub fn on the serve router has a test reference"),
+];
+
+/// Paths whose runtime behavior must be bit-reproducible: kernels, data
+/// generation, checkpoint codec, the training fleet, the optimizer.
+const DET_PATHS: &[&str] =
+    &["src/runtime/", "src/data/", "src/checkpoint/", "src/coordinator/", "src/optim"];
+
+/// The only modules allowed to create threads: the kernel pool, the serve
+/// stack (listener/batcher/jobs), and the module-worker fleet.
+const SPAWN_ALLOWED: &[&str] = &["src/runtime/pool.rs", "src/serve/", "src/coordinator/parallel.rs"];
+
+/// Modules sanctioned to read wall clocks: serve (latency metrics and
+/// batching deadlines), benches, and the `util::Timer` wrapper everything
+/// else is supposed to go through. `src/metrics` holds derived counters
+/// but may grow direct reads.
+const WALLCLOCK_ALLOWED: &[&str] = &["src/serve/", "src/bench/", "src/util/mod.rs", "src/metrics"];
+
+/// A lexed input file: tokens plus the line spans of `#[cfg(test)]` items.
+pub struct LexedFile {
+    pub path: String,
+    pub toks: Vec<Token>,
+    test_regions: Vec<(usize, usize)>,
+}
+
+impl LexedFile {
+    pub fn new(path: &str, content: &str) -> LexedFile {
+        let toks = lex(content);
+        let test_regions = test_regions(&toks);
+        LexedFile { path: path.to_string(), toks, test_regions }
+    }
+
+    fn in_tests(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|(s, e)| line >= *s && line <= *e)
+    }
+}
+
+/// Line spans of items annotated `#[cfg(test)]`: the attribute through
+/// the end of the following `{ … }` block (a `mod tests`) or `…;` item,
+/// whichever delimiter comes first.
+fn test_regions(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let attr = toks[i].tok.is_punct('#')
+            && toks[i + 1].tok.is_punct('[')
+            && toks[i + 2].tok.is_ident("cfg")
+            && toks[i + 3].tok.is_punct('(')
+            && toks[i + 4].tok.is_ident("test")
+            && toks[i + 5].tok.is_punct(')')
+            && toks[i + 6].tok.is_punct(']');
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        let mut end_line = start_line;
+        while j < toks.len() {
+            if toks[j].tok.is_punct(';') {
+                end_line = toks[j].line;
+                break;
+            }
+            if toks[j].tok.is_punct('{') {
+                let close = brace_match(toks, j);
+                end_line = toks.get(close).map_or(start_line, |t| t.line);
+                j = close;
+                break;
+            }
+            j += 1;
+        }
+        out.push((start_line, end_line));
+        i = j.max(i + 7);
+    }
+    out
+}
+
+/// Index of the `}` closing the `{` at `open` (or the last token on
+/// unbalanced input — the lexer guarantees literals/comments are gone, so
+/// braces here are structural).
+fn brace_match(toks: &[Token], open: usize) -> usize {
+    let mut depth = 1usize;
+    let mut k = open + 1;
+    while k < toks.len() && depth > 0 {
+        if toks[k].tok.is_punct('{') {
+            depth += 1;
+        } else if toks[k].tok.is_punct('}') {
+            depth -= 1;
+        }
+        k += 1;
+    }
+    k.saturating_sub(1)
+}
+
+fn scoped(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+/// Run every rule over the file set, appending findings.
+pub fn check_all(files: &[LexedFile], out: &mut Vec<Finding>) {
+    for f in files {
+        rule_unbounded_recv(f, out);
+        rule_nondet_collections(f, out);
+        rule_thread_spawn(f, out);
+        rule_serve_unwrap(f, out);
+        rule_wallclock(f, out);
+    }
+    rule_wire_fingerprint(files, out);
+    rule_op_exhaustive(files, out);
+    rule_router_tested(files, out);
+}
+
+// ---------------------------------------------------------------------------
+// Rules 1–5: scoped pattern walks
+
+/// Rule 1: `.recv()` blocks forever; a dead peer turns a bug into a hang.
+/// The bounded-wait contract requires `recv_timeout` everywhere a timeout
+/// is meaningful; the few intentionally-infinite waits (idle workers
+/// parked on a command channel) carry inline allows explaining why.
+fn rule_unbounded_recv(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("src/") {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len().saturating_sub(3) {
+        if t[i].tok.is_punct('.')
+            && t[i + 1].tok.is_ident("recv")
+            && t[i + 2].tok.is_punct('(')
+            && t[i + 3].tok.is_punct(')')
+            && !f.in_tests(t[i + 1].line)
+        {
+            out.push(Finding {
+                rule: "unbounded-recv",
+                file: f.path.clone(),
+                line: t[i + 1].line,
+                msg: "unbounded channel recv() — use recv_timeout (bounded-wait \
+                      contract) or justify the infinite wait with an inline allow"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 2: `HashMap`/`HashSet` iterate in randomized order, so any walk
+/// over one inside a deterministic path can fork bit-reproducibility.
+/// Rather than prove no iteration happens, deterministic paths ban the
+/// types outright — `BTreeMap`/`BTreeSet` iterate in key order.
+fn rule_nondet_collections(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !scoped(&f.path, DET_PATHS) {
+        return;
+    }
+    for t in &f.toks {
+        let hit = matches!(&t.tok, Tok::Ident(id) if id == "HashMap" || id == "HashSet");
+        if hit && !f.in_tests(t.line) {
+            out.push(Finding {
+                rule: "nondet-collections",
+                file: f.path.clone(),
+                line: t.line,
+                msg: "HashMap/HashSet in a deterministic path — iteration order is \
+                      randomized; use BTreeMap/BTreeSet"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 3: thread creation concentrated in the kernel pool, the serve
+/// stack and the worker fleet keeps the shutdown/panic story auditable;
+/// a stray thread elsewhere escapes all of those lifecycles.
+fn rule_thread_spawn(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("src/") || scoped(&f.path, SPAWN_ALLOWED) {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len().saturating_sub(3) {
+        let hit = t[i].tok.is_ident("thread")
+            && t[i + 1].tok.is_punct(':')
+            && t[i + 2].tok.is_punct(':')
+            && (t[i + 3].tok.is_ident("spawn") || t[i + 3].tok.is_ident("Builder"));
+        if hit && !f.in_tests(t[i].line) {
+            out.push(Finding {
+                rule: "thread-spawn",
+                file: f.path.clone(),
+                line: t[i].line,
+                msg: "thread spawned outside the sanctioned modules (runtime/pool, \
+                      serve/, coordinator/parallel) — route it through one of them"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 4: everything under `src/serve/` sits on a request path; a panic
+/// there kills a connection (or the server) where a typed `ApiError`
+/// response was owed. Poisoned-lock recovery goes through `serve::lock`.
+fn rule_serve_unwrap(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("src/serve/") {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len().saturating_sub(2) {
+        if f.in_tests(t[i].line) {
+            continue;
+        }
+        let call = t[i].tok.is_punct('.')
+            && (t[i + 1].tok.is_ident("unwrap") || t[i + 1].tok.is_ident("expect"))
+            && t[i + 2].tok.is_punct('(');
+        if call {
+            out.push(Finding {
+                rule: "serve-unwrap",
+                file: f.path.clone(),
+                line: t[i + 1].line,
+                msg: "unwrap/expect on a serve path — map the failure to a typed \
+                      ApiError (or serve::lock for mutexes)"
+                    .into(),
+            });
+            continue;
+        }
+        let mac = matches!(&t[i].tok, Tok::Ident(id)
+                if matches!(id.as_str(), "panic" | "unreachable" | "todo" | "unimplemented"))
+            && t[i + 1].tok.is_punct('!');
+        if mac {
+            out.push(Finding {
+                rule: "serve-unwrap",
+                file: f.path.clone(),
+                line: t[i].line,
+                msg: "panicking macro on a serve path — return a typed ApiError"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 5: wall-clock reads outside the timing modules are how
+/// nondeterminism sneaks into training decisions (retry loops, schedule
+/// nudges). Everything else times itself through `util::Timer`.
+fn rule_wallclock(f: &LexedFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("src/") || scoped(&f.path, WALLCLOCK_ALLOWED) {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len().saturating_sub(3) {
+        let hit = (t[i].tok.is_ident("Instant") || t[i].tok.is_ident("SystemTime"))
+            && t[i + 1].tok.is_punct(':')
+            && t[i + 2].tok.is_punct(':')
+            && t[i + 3].tok.is_ident("now");
+        if hit && !f.in_tests(t[i].line) {
+            out.push(Finding {
+                rule: "wallclock",
+                file: f.path.clone(),
+                line: t[i].line,
+                msg: "wall-clock read outside the timing modules — use util::Timer, \
+                      or move the timing into serve//bench/"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: checkpoint wire-format guard
+
+/// Writer/Reader method names that emit/consume wire fields, i.e. the
+/// vocabulary of `checkpoint/wire.rs`.
+const WIRE_METHODS: &[&str] = &["u8", "u32", "u64", "usize", "str", "u64s", "f32s", "tensor"];
+
+/// Token index range (exclusive of braces) of the body of `fn <name>`.
+fn fn_body(t: &[Token], name: &str) -> Option<(usize, usize)> {
+    for i in 0..t.len().saturating_sub(1) {
+        if t[i].tok.is_ident("fn") && t[i + 1].tok.is_ident(name) {
+            let mut j = i + 2;
+            while j < t.len() && !t[j].tok.is_punct('{') {
+                j += 1;
+            }
+            if j >= t.len() {
+                return None;
+            }
+            return Some((j + 1, brace_match(t, j)));
+        }
+    }
+    None
+}
+
+/// Ordered wire-method calls on receiver `recv` within a token range —
+/// the source-order field sequence of a codec function.
+fn wire_calls(t: &[Token], range: (usize, usize), recv: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let end = range.1.min(t.len());
+    for i in range.0..end.saturating_sub(3) {
+        if t[i].tok.is_ident(recv) && t[i + 1].tok.is_punct('.') {
+            if let Tok::Ident(m) = &t[i + 2].tok {
+                if WIRE_METHODS.contains(&m.as_str()) && t[i + 3].tok.is_punct('(') {
+                    out.push(m.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Value (and line) of `const <name>: … = <number>;`.
+fn find_const_num(t: &[Token], name: &str) -> Option<(u64, usize)> {
+    for i in 0..t.len().saturating_sub(2) {
+        if t[i].tok.is_ident("const") && t[i + 1].tok.is_ident(name) {
+            for j in i + 2..(i + 10).min(t.len().saturating_sub(1)) {
+                if t[j].tok.is_punct('=') {
+                    if let Tok::Num(n) = &t[j + 1].tok {
+                        return parse_num(n).map(|v| (v, t[j + 1].line));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+fn parse_num(s: &str) -> Option<u64> {
+    let mut s = s.replace('_', "");
+    for suffix in ["usize", "u64", "u32", "u16", "u8", "i64", "i32"] {
+        if let Some(stripped) = s.strip_suffix(suffix) {
+            if !stripped.is_empty() {
+                s = stripped.to_string();
+            }
+            break;
+        }
+    }
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// The fingerprint a given (version, encode sequence, decode sequence)
+/// hashes to: FNV-1a-64 over a canonical string. Public so a deliberate
+/// layout change can recompute the constant (`frlint
+/// --print-wire-fingerprint`) and so the fixture tests can build matching
+/// fixtures.
+pub fn wire_fingerprint_of(version: u64, enc: &[String], dec: &[String]) -> u64 {
+    let s = format!("frckpt-wire|v{version}|enc:{}|dec:{}", enc.join(","), dec.join(","));
+    crate::checkpoint::fnv1a64(s.as_bytes())
+}
+
+/// (VERSION, computed fingerprint) of the checkpoint codec in the file
+/// set, if its anchors are all present.
+pub fn computed_wire_fingerprint(files: &[LexedFile]) -> Option<(u32, u64)> {
+    let f = files.iter().find(|f| f.path == "src/checkpoint/mod.rs")?;
+    let enc = wire_calls(&f.toks, fn_body(&f.toks, "encode_payload")?, "w");
+    let dec = wire_calls(&f.toks, fn_body(&f.toks, "decode_payload")?, "r");
+    if enc.is_empty() || dec.is_empty() {
+        return None;
+    }
+    let (version, _) = find_const_num(&f.toks, "VERSION")?;
+    Some((version as u32, wire_fingerprint_of(version, &enc, &dec)))
+}
+
+/// Rule 6: the serialized-field sequence of `encode_payload` /
+/// `decode_payload` is fingerprinted together with `VERSION` and pinned
+/// by `WIRE_FINGERPRINT`. Reordering, adding or removing a wire call
+/// moves the computed value, so a layout change cannot ship without a
+/// deliberate constant (and version) update.
+fn rule_wire_fingerprint(files: &[LexedFile], out: &mut Vec<Finding>) {
+    let Some(f) = files.iter().find(|f| f.path == "src/checkpoint/mod.rs") else {
+        return; // fixture runs without a checkpoint module
+    };
+    let mut fail = |line: usize, msg: String| {
+        out.push(Finding { rule: "wire-fingerprint", file: f.path.clone(), line, msg });
+    };
+    let (Some(enc_body), Some(dec_body)) =
+        (fn_body(&f.toks, "encode_payload"), fn_body(&f.toks, "decode_payload"))
+    else {
+        fail(1, "cannot locate encode_payload/decode_payload — the wire guard \
+                 lost its anchor; re-point it at the codec functions".into());
+        return;
+    };
+    let enc = wire_calls(&f.toks, enc_body, "w");
+    let dec = wire_calls(&f.toks, dec_body, "r");
+    if enc.is_empty() || dec.is_empty() {
+        fail(1, "no wire calls found in the codec bodies — receiver renamed? \
+                 the wire guard expects `w.<field>(…)` / `r.<field>(…)`".into());
+        return;
+    }
+    let Some((version, _)) = find_const_num(&f.toks, "VERSION") else {
+        fail(1, "cannot locate `const VERSION` — the wire guard lost its anchor".into());
+        return;
+    };
+    let computed = wire_fingerprint_of(version, &enc, &dec);
+    match find_const_num(&f.toks, "WIRE_FINGERPRINT") {
+        None => fail(
+            1,
+            format!(
+                "missing `pub const WIRE_FINGERPRINT: u64` — the current layout \
+                 fingerprints to {computed:#018x}"
+            ),
+        ),
+        Some((declared, line)) if declared != computed => fail(
+            line,
+            format!(
+                "wire layout drifted: field sequence fingerprints to \
+                 {computed:#018x} under VERSION={version}, but WIRE_FINGERPRINT \
+                 declares {declared:#018x} — bump VERSION and update the \
+                 constant together"
+            ),
+        ),
+        Some(_) => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 7: NativeOp cross-file exhaustiveness
+
+/// Variant names (with lines) declared at depth 1 of `enum <name> { … }`.
+fn enum_variants(t: &[Token], name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(1) {
+        if !(t[i].tok.is_ident("enum") && t[i + 1].tok.is_ident(name)) {
+            continue;
+        }
+        let mut j = i + 2;
+        while j < t.len() && !t[j].tok.is_punct('{') {
+            j += 1;
+        }
+        if j >= t.len() {
+            return out;
+        }
+        let close = brace_match(t, j);
+        let mut depth = 1usize;
+        let mut k = j + 1;
+        while k < close {
+            match &t[k].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => depth = depth.saturating_sub(1),
+                Tok::Ident(id) if depth == 1 => {
+                    let next = t.get(k + 1).map(|x| &x.tok);
+                    let delim = matches!(
+                        next,
+                        Some(Tok::Punct(',' | '{' | '(' | '}' | '='))
+                    );
+                    if delim {
+                        out.push((id.clone(), t[k].line));
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        return out;
+    }
+    out
+}
+
+/// String elements of `const <name>: … = &[ "…", … ];`.
+fn const_str_list(t: &[Token], name: &str) -> Option<Vec<String>> {
+    for i in 0..t.len() {
+        if t[i].tok.is_ident(name) {
+            let mut j = i + 1;
+            while j < t.len() && !t[j].tok.is_punct('=') {
+                j += 1;
+            }
+            if j >= t.len() {
+                return None;
+            }
+            let mut out = Vec::new();
+            for tok in &t[j + 1..] {
+                match &tok.tok {
+                    Tok::Str(s) => out.push(s.clone()),
+                    Tok::Punct(';') => return Some(out),
+                    _ => {}
+                }
+            }
+            return Some(out);
+        }
+    }
+    None
+}
+
+fn has_ident(t: &[Token], range: (usize, usize), name: &str) -> bool {
+    t[range.0..range.1.min(t.len())].iter().any(|x| x.tok.is_ident(name))
+}
+
+/// Rule 7: every `NativeOp` variant must flow through the whole stack —
+/// the `signature()` shape authority in `runtime/spec.rs`, the plan
+/// construction in `runtime/native.rs` (which owns the forward+backward
+/// arms), the `VARIANT_NAMES` mirror, and the parity-coverage table in
+/// `tests/properties.rs`. An op that exists but is not parity-tested is
+/// exactly the gap this reproduction cannot afford.
+fn rule_op_exhaustive(files: &[LexedFile], out: &mut Vec<Finding>) {
+    let Some(spec) = files.iter().find(|f| f.path == "src/runtime/spec.rs") else {
+        return; // fixture runs without a runtime
+    };
+    let mut fail = |file: &str, line: usize, msg: String| {
+        out.push(Finding { rule: "op-exhaustive", file: file.into(), line, msg });
+    };
+    let variants = enum_variants(&spec.toks, "NativeOp");
+    if variants.is_empty() {
+        fail(&spec.path, 1, "cannot locate `enum NativeOp` — the exhaustiveness \
+                             guard lost its anchor".into());
+        return;
+    }
+    match const_str_list(&spec.toks, "VARIANT_NAMES") {
+        None => fail(&spec.path, 1, "missing `NativeOp::VARIANT_NAMES` — the \
+                                     declared-variant mirror is gone".into()),
+        Some(names) => {
+            let declared: Vec<&str> = variants.iter().map(|(v, _)| v.as_str()).collect();
+            let listed: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            if declared != listed {
+                fail(
+                    &spec.path,
+                    variants[0].1,
+                    format!(
+                        "VARIANT_NAMES {listed:?} does not match the enum \
+                         declaration {declared:?}"
+                    ),
+                );
+            }
+        }
+    }
+    let sig = fn_body(&spec.toks, "signature");
+    if sig.is_none() {
+        fail(&spec.path, 1, "cannot locate `fn signature` — the shape authority \
+                             anchor is gone".into());
+    }
+    let native = files.iter().find(|f| f.path == "src/runtime/native.rs");
+    if native.is_none() {
+        fail("src/runtime/native.rs", 1, "missing from the scan set — the plan \
+                                          arms cannot be checked".into());
+    }
+    let props = files.iter().find(|f| f.path == "tests/properties.rs");
+    if props.is_none() {
+        fail("tests/properties.rs", 1, "missing from the scan set — parity \
+                                        coverage cannot be checked".into());
+    }
+    for (v, line) in &variants {
+        if let Some(range) = sig {
+            if !has_ident(&spec.toks, range, v) {
+                fail(&spec.path, *line,
+                     format!("NativeOp::{v} missing from the signature() shape authority"));
+            }
+        }
+        if let Some(n) = native {
+            let constructed = (0..n.toks.len().saturating_sub(3)).any(|i| {
+                n.toks[i].tok.is_ident("NativeOp")
+                    && n.toks[i + 1].tok.is_punct(':')
+                    && n.toks[i + 2].tok.is_punct(':')
+                    && n.toks[i + 3].tok.is_ident(v)
+            });
+            if !constructed {
+                fail(&n.path, *line,
+                     format!("NativeOp::{v} never matched in the native plan \
+                              builder (forward/backward arms)"));
+            }
+        }
+        if let Some(p) = props {
+            let referenced = p.toks.iter().any(|x| match &x.tok {
+                Tok::Ident(id) => id == v,
+                Tok::Str(s) => s == v,
+                _ => false,
+            });
+            if !referenced {
+                fail(&p.path, *line,
+                     format!("NativeOp::{v} has no parity-coverage reference in \
+                              tests/properties.rs"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 8: serve-router test coverage
+
+/// Rule 8: the router is the serve API surface; every `pub fn` on it must
+/// be exercised somewhere — its own `#[cfg(test)]` mod or an integration
+/// test under `tests/`. Surface growth without tests fails here.
+fn rule_router_tested(files: &[LexedFile], out: &mut Vec<Finding>) {
+    let Some(router) = files.iter().find(|f| f.path == "src/serve/router.rs") else {
+        return; // fixture runs without a serve stack
+    };
+    let t = &router.toks;
+    let mut pub_fns: Vec<(String, usize)> = Vec::new();
+    for i in 0..t.len().saturating_sub(2) {
+        if !t[i].tok.is_ident("pub") || router.in_tests(t[i].line) {
+            continue;
+        }
+        let mut j = i + 1;
+        if t[j].tok.is_punct('(') {
+            // pub(crate) / pub(super)
+            while j < t.len() && !t[j].tok.is_punct(')') {
+                j += 1;
+            }
+            j += 1;
+        }
+        if t.get(j).is_some_and(|x| x.tok.is_ident("fn")) {
+            if let Some(Tok::Ident(name)) = t.get(j + 1).map(|x| &x.tok) {
+                pub_fns.push((name.clone(), t[i].line));
+            }
+        }
+    }
+    let mut refs: BTreeSet<&str> = BTreeSet::new();
+    for tok in t {
+        if router.in_tests(tok.line) {
+            if let Tok::Ident(id) = &tok.tok {
+                refs.insert(id.as_str());
+            }
+        }
+    }
+    for f in files.iter().filter(|f| f.path.starts_with("tests/")) {
+        for tok in &f.toks {
+            if let Tok::Ident(id) = &tok.tok {
+                refs.insert(id.as_str());
+            }
+        }
+    }
+    for (name, line) in &pub_fns {
+        if !refs.contains(name.as_str()) {
+            out.push(Finding {
+                rule: "router-tested",
+                file: router.path.clone(),
+                line: *line,
+                msg: format!(
+                    "pub fn {name} on the serve router has no test reference \
+                     (neither router.rs #[cfg(test)] nor tests/)"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{run_files, Report, SourceFile};
+
+    fn run(files: &[(&str, &str)]) -> Report {
+        let files: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, c)| SourceFile { path: p.to_string(), content: c.to_string() })
+            .collect();
+        run_files(&files)
+    }
+
+    fn rules_hit(r: &Report) -> Vec<&str> {
+        r.violations.iter().map(|f| f.rule).collect()
+    }
+
+    /// Build a suppression directive at test time so frlint's self-scan of
+    /// this file never sees a directive-shaped raw line.
+    fn allow(rule: &str, reason: &str) -> String {
+        format!("// frlint{} allow({rule}) — {reason}", ':')
+    }
+
+    // -- rule 1: unbounded-recv --------------------------------------------
+
+    #[test]
+    fn unbounded_recv_fires() {
+        let r = run(&[(
+            "src/coordinator/x.rs",
+            "fn f(rx: std::sync::mpsc::Receiver<u32>) { let _ = rx.recv(); }",
+        )]);
+        assert_eq!(rules_hit(&r), vec!["unbounded-recv"]);
+    }
+
+    #[test]
+    fn bounded_recv_is_quiet() {
+        let r = run(&[(
+            "src/coordinator/x.rs",
+            "fn f(rx: R, d: std::time::Duration) { let _ = rx.recv_timeout(d); }",
+        )]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    #[test]
+    fn suppression_silences_and_surfaces_reason() {
+        let code = format!(
+            "fn f(rx: R) {{\n    {}\n    let _ = rx.recv();\n}}",
+            allow("unbounded-recv", "worker idles by design")
+        );
+        let files = [("src/coordinator/x.rs", code.as_str())];
+        let r = run(&files);
+        assert!(r.violations.is_empty(), "{}", r.render());
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].reason, "worker idles by design");
+        assert!(r.warnings.is_empty(), "suppression should count as used");
+    }
+
+    #[test]
+    fn suppression_of_wrong_rule_does_not_silence() {
+        let code = format!(
+            "fn f(rx: R) {{\n    {}\n    let _ = rx.recv();\n}}",
+            allow("wallclock", "names the wrong rule")
+        );
+        let files = [("src/coordinator/x.rs", code.as_str())];
+        let r = run(&files);
+        assert_eq!(rules_hit(&r), vec!["unbounded-recv"]);
+        assert_eq!(r.warnings.len(), 1, "the mismatched allow is unused");
+    }
+
+    #[test]
+    fn directive_without_reason_is_a_violation() {
+        let code = format!("fn f(x: u32) {{}}\n// frlint{} allow(wallclock)", ':');
+        let files = [("src/coordinator/x.rs", code.as_str())];
+        let r = run(&files);
+        assert_eq!(rules_hit(&r), vec!["frlint-directive"]);
+    }
+
+    #[test]
+    fn directive_with_unknown_rule_is_a_violation() {
+        let code = format!("// frlint{} allow(no-such-rule) — typo", ':');
+        let files = [("src/coordinator/x.rs", code.as_str())];
+        let r = run(&files);
+        assert_eq!(rules_hit(&r), vec!["frlint-directive"]);
+    }
+
+    // -- rule 2: nondet-collections ----------------------------------------
+
+    #[test]
+    fn hashmap_in_deterministic_path_fires() {
+        let r = run(&[(
+            "src/runtime/x.rs",
+            "use std::collections::HashMap;\nfn f() -> HashMap<u32, u32> { HashMap::new() }",
+        )]);
+        assert!(rules_hit(&r).iter().all(|&x| x == "nondet-collections"));
+        assert!(!r.violations.is_empty());
+    }
+
+    #[test]
+    fn btreemap_and_out_of_scope_hashmap_are_quiet() {
+        let r = run(&[
+            (
+                "src/runtime/x.rs",
+                "use std::collections::BTreeMap;\nfn f() -> BTreeMap<u32, u32> { BTreeMap::new() }",
+            ),
+            (
+                "src/lint/x.rs",
+                "use std::collections::HashMap;\nfn f() -> HashMap<u32, u32> { HashMap::new() }",
+            ),
+        ]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    // -- rule 3: thread-spawn ----------------------------------------------
+
+    #[test]
+    fn spawn_outside_sanctioned_modules_fires() {
+        let r = run(&[("src/data/x.rs", "fn f() { std::thread::spawn(|| {}); }")]);
+        assert_eq!(rules_hit(&r), vec!["thread-spawn"]);
+    }
+
+    #[test]
+    fn spawn_in_pool_and_serve_is_quiet() {
+        let r = run(&[
+            ("src/runtime/pool.rs", "fn f() { std::thread::spawn(|| {}); }"),
+            ("src/serve/x.rs", "fn f() { std::thread::Builder::new(); }"),
+        ]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    // -- rule 4: serve-unwrap ----------------------------------------------
+
+    #[test]
+    fn serve_unwrap_and_panic_fire() {
+        let r = run(&[(
+            "src/serve/x.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g() { panic!(\"boom\"); }",
+        )]);
+        assert_eq!(rules_hit(&r), vec!["serve-unwrap", "serve-unwrap"]);
+    }
+
+    #[test]
+    fn serve_unwrap_in_tests_and_elsewhere_is_quiet() {
+        let r = run(&[
+            (
+                "src/serve/x.rs",
+                "fn ok() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u32>.unwrap(); }\n}",
+            ),
+            ("src/data/x.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }"),
+        ]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    // -- rule 5: wallclock --------------------------------------------------
+
+    #[test]
+    fn wallclock_outside_timing_modules_fires() {
+        let r = run(&[(
+            "src/coordinator/x.rs",
+            "fn f() { let _ = std::time::Instant::now(); }",
+        )]);
+        assert_eq!(rules_hit(&r), vec!["wallclock"]);
+    }
+
+    #[test]
+    fn wallclock_in_bench_and_timer_is_quiet() {
+        let r = run(&[
+            ("src/bench/x.rs", "fn f() { let _ = std::time::Instant::now(); }"),
+            ("src/util/mod.rs", "fn f() { let _ = std::time::SystemTime::now(); }"),
+        ]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    // -- rule 6: wire-fingerprint -------------------------------------------
+
+    fn checkpoint_fixture(fingerprint: u64) -> String {
+        format!(
+            "pub const VERSION: u32 = 1;\n\
+             pub const WIRE_FINGERPRINT: u64 = {fingerprint:#x};\n\
+             impl C {{\n\
+                 fn encode_payload(&self) {{ let mut w = W::new(); w.u32(self.a); w.str(&self.b); }}\n\
+                 fn decode_payload(buf: &[u8]) {{ let mut r = R::new(buf); r.u32(); r.str(); }}\n\
+             }}\n"
+        )
+    }
+
+    #[test]
+    fn wire_fingerprint_mismatch_fires_with_computed_value() {
+        let code = checkpoint_fixture(0xBAD);
+        let files = [("src/checkpoint/mod.rs", code.as_str())];
+        let r = run(&files);
+        assert_eq!(rules_hit(&r), vec!["wire-fingerprint"]);
+        let expected =
+            wire_fingerprint_of(1, &["u32".into(), "str".into()], &["u32".into(), "str".into()]);
+        assert!(
+            r.violations[0].msg.contains(&format!("{expected:#018x}")),
+            "message must carry the computed value: {}",
+            r.violations[0].msg
+        );
+    }
+
+    #[test]
+    fn wire_fingerprint_match_is_quiet_and_drift_is_not() {
+        let good =
+            wire_fingerprint_of(1, &["u32".into(), "str".into()], &["u32".into(), "str".into()]);
+        let code = checkpoint_fixture(good);
+        let files = [("src/checkpoint/mod.rs", code.as_str())];
+        let r = run(&files);
+        assert!(r.violations.is_empty(), "{}", r.render());
+        // same constant, reordered decode = drift
+        let drifted = code.replace("r.u32(); r.str();", "r.str(); r.u32();");
+        let files = [("src/checkpoint/mod.rs", drifted.as_str())];
+        let r = run(&files);
+        assert_eq!(rules_hit(&r), vec!["wire-fingerprint"]);
+    }
+
+    #[test]
+    fn wire_guard_losing_its_anchor_is_a_violation() {
+        let r = run(&[("src/checkpoint/mod.rs", "pub const VERSION: u32 = 1;")]);
+        assert_eq!(rules_hit(&r), vec!["wire-fingerprint"]);
+    }
+
+    // -- rule 7: op-exhaustive ----------------------------------------------
+
+    fn op_fixture(native_match: &str, names: &str, props: &str) -> Vec<(String, String)> {
+        vec![
+            (
+                "src/runtime/spec.rs".to_string(),
+                format!(
+                    "pub enum NativeOp {{ A, B {{ x: usize }} }}\n\
+                     impl NativeOp {{\n\
+                         pub const VARIANT_NAMES: &'static [&'static str] = &[{names}];\n\
+                         pub fn signature(self) {{\n\
+                             match self {{ NativeOp::A => {{}}, NativeOp::B {{ x: _ }} => {{}} }}\n\
+                         }}\n\
+                     }}\n"
+                ),
+            ),
+            (
+                "src/runtime/native.rs".to_string(),
+                format!("fn plan(op: &NativeOp) {{ match op {{ {native_match} }} }}"),
+            ),
+            ("tests/properties.rs".to_string(), props.to_string()),
+        ]
+    }
+
+    fn run_owned(files: &[(String, String)]) -> Report {
+        let files: Vec<SourceFile> = files
+            .iter()
+            .map(|(p, c)| SourceFile { path: p.clone(), content: c.clone() })
+            .collect();
+        run_files(&files)
+    }
+
+    #[test]
+    fn op_exhaustive_full_wiring_is_quiet() {
+        let files = op_fixture(
+            "NativeOp::A => {}, NativeOp::B { .. } => {}",
+            "\"A\", \"B\"",
+            "const COVER: &[&str] = &[\"A\", \"B\"];",
+        );
+        let r = run_owned(&files);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+
+    #[test]
+    fn op_missing_from_plan_builder_fires() {
+        let files = op_fixture(
+            "NativeOp::A => {}",
+            "\"A\", \"B\"",
+            "const COVER: &[&str] = &[\"A\", \"B\"];",
+        );
+        let r = run_owned(&files);
+        assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
+        assert!(r.violations[0].msg.contains("NativeOp::B"));
+    }
+
+    #[test]
+    fn op_missing_parity_coverage_fires() {
+        let files = op_fixture(
+            "NativeOp::A => {}, NativeOp::B { .. } => {}",
+            "\"A\", \"B\"",
+            "const COVER: &[&str] = &[\"A\"];",
+        );
+        let r = run_owned(&files);
+        assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
+    }
+
+    #[test]
+    fn stale_variant_names_mirror_fires() {
+        let files = op_fixture(
+            "NativeOp::A => {}, NativeOp::B { .. } => {}",
+            "\"A\"",
+            "const COVER: &[&str] = &[\"A\", \"B\"];",
+        );
+        let r = run_owned(&files);
+        assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
+        assert!(r.violations[0].msg.contains("does not match"));
+    }
+
+    // -- rule 8: router-tested ----------------------------------------------
+
+    #[test]
+    fn untested_router_pub_fn_fires() {
+        let r = run(&[
+            ("src/serve/router.rs", "pub fn handle() {}\npub fn detail() {}"),
+            ("tests/serve_api.rs", "fn t() { handle(); }"),
+        ]);
+        assert_eq!(rules_hit(&r), vec!["router-tested"]);
+        assert!(r.violations[0].msg.contains("detail"));
+    }
+
+    #[test]
+    fn router_fns_referenced_anywhere_are_quiet() {
+        let r = run(&[
+            (
+                "src/serve/router.rs",
+                "pub fn handle() {}\npub(crate) fn detail() {}\n\
+                 #[cfg(test)]\nmod tests {\n    fn t() { detail(); }\n}",
+            ),
+            ("tests/serve_api.rs", "fn t() { handle(); }"),
+        ]);
+        assert!(r.violations.is_empty(), "{}", r.render());
+    }
+}

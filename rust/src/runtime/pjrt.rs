@@ -14,7 +14,7 @@
 //! real bindings the code is unchanged.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -110,13 +110,13 @@ fn run_resident(
 
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, Rc<Compiled>>>,
+    cache: RefCell<BTreeMap<PathBuf, Rc<Compiled>>>,
 }
 
 impl PjrtBackend {
     pub fn cpu() -> Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtBackend { client, cache: RefCell::new(HashMap::new()) })
+        Ok(PjrtBackend { client, cache: RefCell::new(BTreeMap::new()) })
     }
 
     pub fn platform(&self) -> String {

@@ -138,6 +138,38 @@ pub struct OpSig {
 }
 
 impl NativeOp {
+    /// Every variant name, in declaration order — the authority frlint's
+    /// `op-exhaustive` rule checks the enum, the executor plan arms, and the
+    /// parity-property coverage table against. The compiler pins this list
+    /// to the enum via [`NativeOp::name`]: add a variant and the match below
+    /// stops compiling until both are updated.
+    pub const VARIANT_NAMES: &'static [&'static str] = &[
+        "Dense",
+        "ResidualPair",
+        "LayerNorm",
+        "Embed",
+        "Conv2d",
+        "ConvResidualPair",
+        "AvgPool2d",
+        "GlobalAvgPool",
+        "Attention",
+    ];
+
+    /// The variant's bare name (no fields) — see [`NativeOp::VARIANT_NAMES`].
+    pub fn name(self) -> &'static str {
+        match self {
+            NativeOp::Dense { .. } => "Dense",
+            NativeOp::ResidualPair => "ResidualPair",
+            NativeOp::LayerNorm => "LayerNorm",
+            NativeOp::Embed => "Embed",
+            NativeOp::Conv2d { .. } => "Conv2d",
+            NativeOp::ConvResidualPair { .. } => "ConvResidualPair",
+            NativeOp::AvgPool2d { .. } => "AvgPool2d",
+            NativeOp::GlobalAvgPool { .. } => "GlobalAvgPool",
+            NativeOp::Attention { .. } => "Attention",
+        }
+    }
+
     /// How many parameter tensors this op consumes from the module's
     /// `param_shapes` run — the single authority for walking op graphs
     /// against parameter lists (executor plans, init, tests). Distinct from

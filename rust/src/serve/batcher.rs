@@ -22,7 +22,14 @@ use anyhow::{anyhow, Result};
 
 use crate::experiment::Experiment;
 use crate::runtime::Sample;
-use crate::serve::ServeMetrics;
+use crate::serve::{lock, ServeMetrics};
+
+/// Upper bound on waiting for the batcher thread to build (and optionally
+/// warm-start) its session. Generous — model build is seconds even for the
+/// largest registry entries — but bounded, per the bounded-wait contract:
+/// a hung build must surface as a typed startup error, not a silent hang
+/// before the listener ever binds.
+const STARTUP_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// One coalesced predict result: the caller's logits plus the size of the
 /// micro-batch it rode in (surfaced in the response so tests and clients
@@ -118,9 +125,20 @@ impl Batcher {
                 batch_loop(&worker_shared, &session, &metrics);
             })
             .map_err(|e| anyhow!("spawning batcher thread: {e}"))?;
-        ready_rx.recv()
-            .map_err(|_| anyhow!("batcher thread died during startup"))?
-            .map_err(|e| anyhow!(e))?;
+        match ready_rx.recv_timeout(STARTUP_TIMEOUT) {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow!(e)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                return Err(anyhow!(
+                    "batcher session build exceeded {}s — refusing to serve \
+                     an unready model",
+                    STARTUP_TIMEOUT.as_secs()
+                ))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("batcher thread died during startup"))
+            }
+        }
         Ok(Batcher { shared, worker: Mutex::new(Some(worker)) })
     }
 
@@ -129,7 +147,7 @@ impl Batcher {
     pub fn submit(&self, sample: Sample)
                   -> Result<mpsc::Receiver<Result<BatchResult, String>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        let mut q = self.shared.queue.lock().expect("batcher queue poisoned");
+        let mut q = lock(&self.shared.queue);
         if q.shutdown {
             return Err(SubmitError::ShuttingDown);
         }
@@ -146,11 +164,11 @@ impl Batcher {
     /// served; new submits are refused.
     pub fn shutdown(&self) {
         {
-            let mut q = self.shared.queue.lock().expect("batcher queue poisoned");
+            let mut q = lock(&self.shared.queue);
             q.shutdown = true;
         }
         self.shared.cv.notify_all();
-        if let Some(h) = self.worker.lock().expect("worker handle poisoned").take() {
+        if let Some(h) = lock(&self.worker).take() {
             let _ = h.join();
         }
     }
@@ -163,9 +181,12 @@ fn batch_loop(shared: &Shared, session: &crate::experiment::Session,
               metrics: &ServeMetrics) {
     loop {
         let batch: Vec<Pending> = {
-            let mut q = shared.queue.lock().expect("batcher queue poisoned");
+            let mut q = lock(&shared.queue);
             while q.jobs.is_empty() && !q.shutdown {
-                q = shared.cv.wait(q).expect("batcher queue poisoned");
+                q = match shared.cv.wait(q) {
+                    Ok(guard) => guard,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
             }
             if q.jobs.is_empty() && q.shutdown {
                 return;
@@ -177,9 +198,10 @@ fn batch_loop(shared: &Shared, session: &crate::experiment::Session,
                 if now >= deadline {
                     break;
                 }
-                let (guard, _timeout) = shared.cv
-                    .wait_timeout(q, deadline - now)
-                    .expect("batcher queue poisoned");
+                let (guard, _timeout) = match shared.cv.wait_timeout(q, deadline - now) {
+                    Ok(woke) => woke,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
                 q = guard;
             }
             let n = q.jobs.len().min(shared.max_batch);

@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::Algo;
 use crate::experiment::Experiment;
-use crate::serve::ServeMetrics;
+use crate::serve::{lock, ServeMetrics};
 use crate::util::json::{num, obj, s, Json};
 
 /// Validated request for one background training run (bounds enforced by
@@ -91,12 +91,12 @@ struct Job {
 
 impl Job {
     fn set_state(&self, next: JobState) {
-        *self.state.lock().expect("job state poisoned") = next;
+        *lock(&self.state) = next;
     }
 
     fn to_json(&self) -> Json {
-        let state = *self.state.lock().expect("job state poisoned");
-        let p = self.progress.lock().expect("job progress poisoned");
+        let state = *lock(&self.state);
+        let p = lock(&self.progress);
         let mut fields = vec![
             ("id", num(self.id as f64)),
             ("state", s(state.as_str())),
@@ -141,8 +141,10 @@ impl JobRegistry {
 
     /// Start a job thread and return its id immediately; model resolution
     /// happens on the thread, so a bad model shows up as a failed job, not
-    /// a blocked submit.
-    pub fn submit(&self, spec: TrainJobSpec) -> usize {
+    /// a blocked submit. Failing to spawn the thread at all (resource
+    /// exhaustion) is the one submit-time error — typed, so the router can
+    /// answer 503 instead of the old panic.
+    pub fn submit(&self, spec: TrainJobSpec) -> Result<usize> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Arc::new(Job {
             id,
@@ -152,7 +154,6 @@ impl JobRegistry {
             progress: Mutex::new(Progress::default()),
             handle: Mutex::new(None),
         });
-        self.metrics.jobs_started.inc();
         let worker_job = Arc::clone(&job);
         let worker_metrics = Arc::clone(&self.metrics);
         let jsonl = self.metrics_path(id);
@@ -162,6 +163,7 @@ impl JobRegistry {
             .spawn(move || {
                 let outcome = run_job(&worker_job, &jsonl, &ckpt_dir, &worker_metrics);
                 match outcome {
+                    // frlint: allow(serve-unwrap) — logic-bug guard, no client input
                     Ok(JobState::Running) => unreachable!("run_job returns a final state"),
                     Ok(done) => {
                         if done == JobState::Done {
@@ -171,25 +173,25 @@ impl JobRegistry {
                     }
                     Err(e) => {
                         worker_metrics.jobs_failed.inc();
-                        worker_job.progress.lock().expect("job progress poisoned")
-                            .error = Some(format!("{e:#}"));
+                        lock(&worker_job.progress).error = Some(format!("{e:#}"));
                         worker_job.set_state(JobState::Failed);
                     }
                 }
             })
-            .expect("spawning job thread");
-        *job.handle.lock().expect("job handle poisoned") = Some(handle);
-        self.jobs.lock().expect("job list poisoned").push(job);
-        id
+            .context("spawning job thread")?;
+        self.metrics.jobs_started.inc();
+        *lock(&job.handle) = Some(handle);
+        lock(&self.jobs).push(job);
+        Ok(id)
     }
 
     pub fn list(&self) -> Json {
-        let jobs = self.jobs.lock().expect("job list poisoned");
+        let jobs = lock(&self.jobs);
         obj(vec![("jobs", Json::Arr(jobs.iter().map(|j| j.to_json()).collect()))])
     }
 
     pub fn get(&self, id: usize) -> Option<Json> {
-        self.jobs.lock().expect("job list poisoned").iter()
+        lock(&self.jobs).iter()
             .find(|j| j.id == id)
             .map(|j| j.to_json())
     }
@@ -197,8 +199,7 @@ impl JobRegistry {
     /// Raw NDJSON step stream for a job (what the thread has flushed so
     /// far). None if the id is unknown.
     pub fn read_metrics(&self, id: usize) -> Option<Vec<u8>> {
-        let known = self.jobs.lock().expect("job list poisoned").iter()
-            .any(|j| j.id == id);
+        let known = lock(&self.jobs).iter().any(|j| j.id == id);
         if !known {
             return None;
         }
@@ -208,13 +209,12 @@ impl JobRegistry {
 
     /// Ask every job to stop after its current step, then join them.
     pub fn shutdown(&self) {
-        let jobs: Vec<Arc<Job>> = self.jobs.lock().expect("job list poisoned")
-            .clone();
+        let jobs: Vec<Arc<Job>> = lock(&self.jobs).clone();
         for job in &jobs {
             job.stop.store(true, Ordering::Relaxed);
         }
         for job in &jobs {
-            if let Some(h) = job.handle.lock().expect("job handle poisoned").take() {
+            if let Some(h) = lock(&job.handle).take() {
                 let _ = h.join();
             }
         }
@@ -281,7 +281,7 @@ fn run_job_parallel(job: &Job, exp: Experiment, jsonl: &std::path::Path,
             .and_then(|()| out.flush())
             .with_context(|| format!("writing {}", jsonl.display()))?;
         {
-            let mut p = job.progress.lock().expect("job progress poisoned");
+            let mut p = lock(&job.progress);
             p.step = step + 1;
             p.last_loss = stats.loss as f64;
         }
@@ -296,8 +296,7 @@ fn run_job_parallel(job: &Job, exp: Experiment, jsonl: &std::path::Path,
         let eval = ps.data.test_batch(0);
         match ps.par.eval_batch(&eval) {
             Ok((loss, err)) => {
-                job.progress.lock().expect("job progress poisoned")
-                    .eval = Some((loss, err));
+                lock(&job.progress).eval = Some((loss, err));
             }
             Err(e) => {
                 let _ = ps.par.shutdown();
@@ -341,7 +340,7 @@ fn run_job_sequential(job: &Job, exp: Experiment, jsonl: &std::path::Path,
             .and_then(|()| out.flush())
             .with_context(|| format!("writing {}", jsonl.display()))?;
         {
-            let mut p = job.progress.lock().expect("job progress poisoned");
+            let mut p = lock(&job.progress);
             p.step = step + 1;
             p.last_loss = stats.loss as f64;
         }
@@ -354,8 +353,7 @@ fn run_job_sequential(job: &Job, exp: Experiment, jsonl: &std::path::Path,
         let (loss, err) = session.trainer.stack()
             .eval(&mut session.data, 1)
             .context("final eval")?;
-        job.progress.lock().expect("job progress poisoned")
-            .eval = Some((loss, err));
+        lock(&job.progress).eval = Some((loss, err));
     }
     Ok(if stopped { JobState::Stopped } else { JobState::Done })
 }

@@ -132,7 +132,8 @@ fn predict(app: &App, req: &Request) -> Result<Response, ApiError> {
 
 fn submit_job(app: &App, req: &Request) -> Result<Response, ApiError> {
     let spec = body::decode_train_job(&req.body).map_err(ApiError::BadRequest)?;
-    let id = app.jobs.submit(spec);
+    let id = app.jobs.submit(spec)
+        .map_err(|e| ApiError::Unavailable(format!("{e:#}")))?;
     Ok(Response::json(202, &obj(vec![
         ("id", num(id as f64)),
         ("state", s("running")),
@@ -164,6 +165,63 @@ fn job_route(app: &App, path: &str) -> Result<Response, ApiError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiment::Experiment;
+
+    /// A real App over the tiny registry model — exercises the same
+    /// construction path as `Server::bind`, minus the listener.
+    fn test_app(tag: &str) -> App {
+        let exp = Experiment::new("mlp_tiny").k(2).threads(1).seed(0);
+        let manifest = exp.manifest().expect("mlp_tiny manifest");
+        let packer = Packer::new(&manifest).expect("packer");
+        let metrics = Arc::new(ServeMetrics::default());
+        let batcher = Batcher::spawn(
+            exp, None, 4, Duration::from_millis(1), Arc::clone(&metrics))
+            .expect("batcher");
+        let dir = std::env::temp_dir()
+            .join(format!("fr-router-test-{}-{tag}", std::process::id()));
+        let jobs = JobRegistry::new(dir, Arc::clone(&metrics)).expect("jobs");
+        App {
+            model: "mlp_tiny".to_string(),
+            manifest,
+            packer,
+            batcher,
+            jobs,
+            metrics,
+            started: Instant::now(),
+            max_batch: 4,
+            max_wait_ms: 1,
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn handle_dispatches_and_maps_errors() {
+        let app = test_app("dispatch");
+        let ok = handle(&app, &get("/healthz"));
+        assert_eq!(ok.status, 200);
+        let body = Json::parse(std::str::from_utf8(&ok.body).unwrap()).unwrap();
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("mlp_tiny"));
+
+        assert_eq!(handle(&app, &get("/nope")).status, 404);
+        assert_eq!(handle(&app, &get("/v1/predict")).status, 405);
+        assert_eq!(handle(&app, &get("/v1/train-jobs/oops")).status, 400);
+        app.batcher.shutdown();
+    }
+
+    #[test]
+    fn detail_carries_the_message_verbatim() {
+        let e = ApiError::Unavailable("predict queue full (64 waiting)".into());
+        assert_eq!(e.detail(), "predict queue full (64 waiting)");
+        assert_eq!(ApiError::MethodNotAllowed("use GET").detail(), "use GET");
+    }
 
     #[test]
     fn api_errors_map_to_statuses() {

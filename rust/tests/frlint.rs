@@ -1,0 +1,57 @@
+//! frlint self-check: the shipped tree must lint clean, with every
+//! suppression justified. This is the same scan `scripts/ci.sh` runs via
+//! `cargo run --bin frlint`, wired into `cargo test` so a violation also
+//! fails the plain tier-1 suite (and shows the full report).
+
+use std::path::Path;
+
+use features_replay::lint;
+
+#[test]
+fn repo_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::run_repo(root).expect("scanning the source tree");
+    // A scan that saw almost nothing would pass vacuously; the crate has
+    // dozens of sources, so a tiny count means the walker broke.
+    assert!(
+        report.files_scanned > 30,
+        "suspiciously small scan set: {} files",
+        report.files_scanned
+    );
+    assert!(report.clean(), "frlint violations:\n{}", report.render());
+    assert!(
+        report.warnings.is_empty(),
+        "stale suppressions must be removed:\n{}",
+        report.render()
+    );
+    // The tree carries deliberate, documented infinite waits (the fleet
+    // workers' command channels) — if the suppression set is empty, the
+    // directives were lost, not fixed.
+    assert!(
+        !report.suppressed.is_empty(),
+        "expected justified suppressions in the tree"
+    );
+    for sup in &report.suppressed {
+        assert!(
+            !sup.reason.trim().is_empty(),
+            "empty suppression reason at {}:{}",
+            sup.finding.file,
+            sup.finding.line
+        );
+    }
+}
+
+#[test]
+fn wire_fingerprint_helper_matches_the_declared_constant() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let computed = lint::computed_wire_fingerprint(root)
+        .expect("reading checkpoint/mod.rs")
+        .expect("codec anchors present");
+    assert_eq!(computed.0, features_replay::checkpoint::VERSION);
+    assert_eq!(
+        computed.1,
+        features_replay::checkpoint::WIRE_FINGERPRINT,
+        "declared WIRE_FINGERPRINT is stale (computed {:#018x})",
+        computed.1
+    );
+}

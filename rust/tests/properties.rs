@@ -450,6 +450,39 @@ fn local_loss_aux_heads_train_bitwise_identically_across_thread_counts() {
     }
 }
 
+/// The parity-coverage table frlint's `op-exhaustive` rule audits: every
+/// [`NativeOp`] variant maps to the property test that pins its kernels'
+/// thread-count parity (or, for the graph-level ops, the end-to-end
+/// bitwise-trajectory test whose model contains the op). The entries are
+/// function *pointers*, so renaming a test without updating this table is
+/// a compile error, and a new enum variant without a row fails the
+/// assertion (and frlint) until it is genuinely covered.
+#[test]
+fn native_op_parity_coverage_is_exhaustive() {
+    use features_replay::runtime::NativeOp;
+    let coverage: &[(&str, fn())] = &[
+        // dense forward/backward are the matmul/matmul_nt/matmul_tn family
+        ("Dense", pool_matmul_family_bitwise_parity),
+        // two square dense layers + skip: same matmul family
+        ("ResidualPair", pool_matmul_family_bitwise_parity),
+        // exercised end-to-end by the transformer_tiny op graph
+        ("LayerNorm", transformer_tiny_trains_bitwise_identically_across_thread_counts),
+        ("Embed", transformer_tiny_trains_bitwise_identically_across_thread_counts),
+        // conv forward/backward are im2col + matmul + col2im
+        ("Conv2d", pool_im2col_col2im_bitwise_parity),
+        ("ConvResidualPair", pool_im2col_col2im_bitwise_parity),
+        ("AvgPool2d", pool_pooling_kernels_bitwise_parity),
+        ("GlobalAvgPool", pool_pooling_kernels_bitwise_parity),
+        ("Attention", pool_attention_kernels_bitwise_parity),
+    ];
+    let covered: Vec<&str> = coverage.iter().map(|(v, _)| *v).collect();
+    assert_eq!(
+        covered,
+        NativeOp::VARIANT_NAMES,
+        "every NativeOp variant needs a parity-coverage row (in declaration order)"
+    );
+}
+
 #[test]
 fn replay_buffer_push_and_stale_are_zero_copy() {
     check("replay_zero_copy", 100, |g| {

@@ -37,6 +37,13 @@ done
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
+# Enforced static analysis: the repo-invariant lint pass (src/lint/) — the
+# determinism, bounded-wait, serve-no-panic and wire-format contracts as
+# executable rules. Std-only, needs no clippy/fmt components, so unlike the
+# hygiene block below it runs (and fails the build) on every toolchain.
+echo "== frlint: repo-invariant static analysis (enforced) =="
+cargo run -q --release --bin frlint
+
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
@@ -151,6 +158,16 @@ grep -q "clean shutdown" "$SERVE_DIR/serve.log" || {
     echo "serve log missing clean-shutdown line" >&2; exit 1; }
 rm -rf "$SERVE_DIR"
 
+# frlint mirror: an independent Python port of the lexer + all eight rules,
+# run against the same tree — the check that "clean" is not an artifact of a
+# bug in frlint itself. Needs only python3 (no numpy).
+if command -v python3 >/dev/null 2>&1; then
+    echo "== frlint mirror: independent Python re-implementation =="
+    python3 ../python/tests/test_frlint_mirror.py
+else
+    echo "== frlint mirror == skipped (python3 unavailable)"
+fi
+
 # Numpy mirrors: independent float32 re-derivations of the partition
 # schemes, runnable without cargo. Skip cleanly where python3/numpy are
 # absent (the Rust parity tests still cover the claim).
@@ -220,6 +237,45 @@ hygiene() {
 }
 
 hygiene "cargo fmt --check" fmt cargo fmt --all -- --check
-hygiene "cargo clippy -D warnings" clippy cargo clippy --all-targets -- -D warnings
+# The clippy.toml disallowed lists are -A'd here: clippy cannot express
+# frlint's path allowlists, so their enforced form is the frlint step above
+# and they run advisorily below.
+hygiene "cargo clippy -D warnings" clippy cargo clippy --all-targets -- \
+    -D warnings -A clippy::disallowed-methods -A clippy::disallowed-types
+
+# Advisory mirror of frlint rules 1/2/5 through clippy's type-resolved
+# lens (clippy.toml disallowed lists): catches aliased imports the
+# token-level pass cannot, but cannot scope by path, so findings here are
+# informational — frlint above is the enforced verdict.
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== clippy disallowed lists (advisory; frlint is the enforced form) =="
+    cargo clippy -q --all-targets -- -A warnings \
+        -W clippy::disallowed-methods -W clippy::disallowed-types || true
+else
+    echo "== clippy disallowed lists == skipped (clippy unavailable)"
+fi
+
+# Advisory Miri probe over the lint engine's own unit tests (pure, std-only
+# code — the one corner of the crate Miri can interpret quickly). Absent on
+# stable toolchains; skips cleanly.
+if cargo miri --version >/dev/null 2>&1; then
+    echo "== miri (advisory): src/lint unit tests under the interpreter =="
+    cargo miri test -q --lib lint:: || echo "miri: advisory findings (non-fatal)"
+else
+    echo "== miri == skipped (cargo miri unavailable on this toolchain)"
+fi
+
+# Advisory ThreadSanitizer probe over the serve unit tests (batcher
+# condvar/queue handoff). Needs a rustup nightly with the tsan runtime;
+# skips cleanly everywhere else.
+if command -v rustup >/dev/null 2>&1 \
+    && rustup toolchain list 2>/dev/null | grep -q nightly; then
+    echo "== tsan (advisory): serve unit tests under ThreadSanitizer =="
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -q --lib serve:: -- --test-threads=1 \
+        || echo "tsan: advisory findings (non-fatal)"
+else
+    echo "== tsan == skipped (no rustup nightly toolchain)"
+fi
 
 echo "== ci.sh done =="
