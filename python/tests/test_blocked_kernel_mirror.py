@@ -1,0 +1,201 @@
+"""Mirror of the cache-blocked matmul rewrite (rust/src/runtime/blocked.rs).
+
+The blocked kernels claim bit-identity with the naive ikj loops they
+replaced, resting on three order-preservation arguments:
+
+  1. k-panel store/reload is exact: an f32 stored to the output tile and
+     reloaded by the next panel is the same bit pattern.
+  2. packing B into a (KC, NR) panel is a layout transformation — the
+     values multiplied are identical, zero-filled dead lanes are never
+     stored back.
+  3. register tiling gives every output element its OWN scalar accumulator
+     walking p in increasing order — no cross-element or cross-p
+     reassociation anywhere.
+
+This mirror re-derives one blocked tile reduction in numpy float32 —
+pack, micro-tile load/accumulate/store, panel seams — and checks it
+bit-for-bit against the naive per-element chain, independently of the
+Rust implementation. It also mirrors the Fast-tier lane-split reduction
+(the one kernel ALLOWED to reassociate) and checks both its determinism
+and the documented error bound |fast - exact| <= 2 k eps sum|a_i b_i|.
+
+Run: python3 test_blocked_kernel_mirror.py
+"""
+
+import numpy as np
+
+F = np.float32
+
+# tile constants transliterated from blocked.rs
+MR, NR, KC = 4, 16, 256
+FAST_LANES = 8
+
+
+# -- naive references (the pre-rewrite native.rs loops, f32 ops) ----------
+
+def matmul_naive_ref(a, b, m, k, n):
+    """ikj loop: each out[i, j] is one scalar f32 chain over p ascending."""
+    out = np.zeros((m, n), F)
+    for i in range(m):
+        for p in range(k):
+            out[i] += F(a[i, p]) * b[p]
+    return out
+
+
+def matmul_nt_exact_ref(a, bt, m, k, n):
+    """a @ bT with a single scalar accumulator per element (Exact tier)."""
+    out = np.zeros((m, n), F)
+    for i in range(m):
+        for j in range(n):
+            acc = F(0.0)
+            for p in range(k):
+                acc = F(acc + F(a[i, p] * bt[j, p]))
+            out[i, j] = acc
+    return out
+
+
+# -- blocked mirror (pack + micro-tile, transliterated) -------------------
+
+def pack_b_block(b, n, p0, pc, j0):
+    """(KC, NR) panel of B: rows p0..p0+pc of the NR-wide block at j0,
+    dead lanes past n zero-filled (they feed accumulators that are never
+    stored back)."""
+    dst = np.zeros((pc, NR), F)
+    jw = min(NR, n - j0)
+    dst[:, :jw] = b[p0:p0 + pc, j0:j0 + jw]
+    return dst, jw
+
+
+def matmul_blocked_mirror(a, b, m, k, n):
+    """matmul_blocked_into: k-panels -> NR column blocks -> MR row tiles.
+
+    The micro-tile loads the output tile into register accumulators,
+    walks the panel in increasing p (each element its own f32 chain,
+    vectorized along the NR lane axis — elementwise f32 ops, so identical
+    to the scalar chain), and stores the live lanes back. The p0 seam is
+    where store/reload exactness is exercised.
+    """
+    out = np.zeros((m, n), F)
+    p0 = 0
+    while p0 < k:
+        pc = min(KC, k - p0)
+        j0 = 0
+        while j0 < n:
+            packed, jw = pack_b_block(b, n, p0, pc, j0)
+            i0 = 0
+            while i0 < m:
+                mr = min(MR, m - i0)
+                acc = np.zeros((mr, NR), F)
+                acc[:, :jw] = out[i0:i0 + mr, j0:j0 + jw]  # load tile
+                for p in range(pc):
+                    for r in range(mr):
+                        acc[r] += F(a[i0 + r, p0 + p]) * packed[p]
+                out[i0:i0 + mr, j0:j0 + jw] = acc[:, :jw]  # store live lanes
+                i0 += mr
+            j0 += jw
+        p0 += pc
+    return out
+
+
+def matmul_blocked_reassociated(a, b, m, k, n):
+    """Control: the SAME blocking but with per-panel accumulators summed at
+    the end instead of store/reload chaining — the reassociation the real
+    kernel carefully avoids. Must NOT bitwise-match the naive chain (else
+    this mirror could not detect an ordering bug)."""
+    out = np.zeros((m, n), F)
+    p0 = 0
+    while p0 < k:
+        pc = min(KC, k - p0)
+        partial = np.zeros((m, n), F)
+        for i in range(m):
+            for p in range(pc):
+                partial[i] += F(a[i, p0 + p]) * b[p0 + p]
+        out += partial  # f32 tree of panel partials, not one chain
+        p0 += pc
+    return out
+
+
+def matmul_nt_fast_mirror(a, bt, m, k, n):
+    """matmul_nt_fast_into: FAST_LANES interleaved partial sums per dot
+    product (lane l takes elements l, l+8, ...), combined by the fixed
+    balanced tree ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))."""
+    L = FAST_LANES
+    out = np.zeros((m, n), F)
+    kk = (k // L) * L
+    for i in range(m):
+        for j in range(n):
+            lane = np.zeros(L, F)
+            for c in range(0, kk, L):
+                lane += a[i, c:c + L] * bt[j, c:c + L]
+            rem = k - kk
+            if rem:
+                lane[:rem] += a[i, kk:] * bt[j, kk:]
+            s01, s23 = F(lane[0] + lane[1]), F(lane[2] + lane[3])
+            s45, s67 = F(lane[4] + lane[5]), F(lane[6] + lane[7])
+            out[i, j] = F(F(s01 + s23) + F(s45 + s67))
+    return out
+
+
+def main():
+    rng = np.random.default_rng(7)
+    failures = 0
+
+    def norm(shape):
+        return rng.standard_normal(shape).astype(F)
+
+    def check(name, ok, detail=""):
+        nonlocal failures
+        if ok:
+            print(f"ok   {name}")
+        else:
+            print(f"FAIL {name}{': ' + detail if detail else ''}")
+            failures += 1
+
+    def bits_eq(x, y):
+        return x.shape == y.shape and np.array_equal(
+            x.view(np.uint32), y.view(np.uint32))
+
+    # shapes straddle every boundary: partial tiles (m % MR, n % NR != 0),
+    # single k-panel, and multi-panel (k > KC) where the store/reload seam
+    # between panels is live
+    shapes = [(1, 1, 1), (3, 7, 5), (5, 64, NR), (2, KC + 3, NR + 1),
+              (7, 2 * KC + 5, 33)]
+    for (m, k, n) in shapes:
+        a, b = norm((m, k)), norm((k, n))
+        naive = matmul_naive_ref(a, b, m, k, n)
+        check(f"blocked matmul {m}x{k}x{n} bitwise == naive",
+              bits_eq(matmul_blocked_mirror(a, b, m, k, n), naive))
+
+    # the control must differ for multi-panel k — if panel-partial
+    # reassociation were bitwise invisible this mirror would prove nothing
+    m, k, n = 7, 2 * KC + 5, 33
+    a, b = norm((m, k)), norm((k, n))
+    check("reassociated control differs from naive (mirror has teeth)",
+          not bits_eq(matmul_blocked_reassociated(a, b, m, k, n),
+                      matmul_naive_ref(a, b, m, k, n)))
+
+    # Fast tier: deterministic (same input -> same bits) and ULP-bounded
+    for (m, k, n) in [(3, 5, 4), (4, FAST_LANES * 3 + 2, 6), (2, 70, 9)]:
+        a, bt = norm((m, k)), norm((n, k))
+        fast1 = matmul_nt_fast_mirror(a, bt, m, k, n)
+        fast2 = matmul_nt_fast_mirror(a, bt, m, k, n)
+        check(f"nt_fast {m}x{k}x{n} deterministic", bits_eq(fast1, fast2))
+        exact = matmul_nt_exact_ref(a, bt, m, k, n)
+        # sum_p |a_ip * b_jp| evaluated in f64, per output element
+        mag = np.abs(a.astype(np.float64)) @ np.abs(bt.astype(np.float64)).T
+        bound = 2.0 * k * float(np.finfo(np.float32).eps) * mag
+        diff = np.abs(fast1.astype(np.float64) - exact.astype(np.float64))
+        check(f"nt_fast {m}x{k}x{n} within 2k*eps*sum|ab| of exact",
+              bool(np.all(diff <= bound)),
+              f"max diff {diff.max():e} vs bound {bound.min():e}")
+
+    if failures:
+        print(f"\n{failures} failure(s)")
+        return 1
+    print("\nblocked reduction order re-derived: bitwise == naive; "
+          "Fast tier deterministic and within its documented bound")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -526,6 +526,20 @@ def rule_op_exhaustive(files, out):
             )
             if not referenced:
                 out.append(("op-exhaustive", props.path, line, "%s has no parity coverage" % v))
+    blocked = next((f for f in files if f.path == "src/runtime/blocked.rs"), None)
+    if blocked is None:
+        out.append(("op-exhaustive", "src/runtime/blocked.rs", 1, "missing"))
+        return
+    kvars = const_str_list(blocked.toks, "KERNEL_VARIANTS")
+    if kvars is None:
+        out.append(("op-exhaustive", blocked.path, 1, "missing KERNEL_VARIANTS"))
+    elif props is not None:
+        for name in kvars:
+            if not any(x[0] == STR and x[1] == name for x in props.toks):
+                out.append(
+                    ("op-exhaustive", props.path, 1,
+                     "kernel variant %s has no parity coverage" % name)
+                )
 
 
 def rule_router_tested(files, out):
@@ -776,18 +790,26 @@ def check_fixtures():
         "    pub fn signature(self) { match self { NativeOp::A => {}, NativeOp::B { x: _ } => {} } }\n"
         "}\n"
     )
+    kv_blocked = ("src/runtime/blocked.rs", 'pub const KERNEL_VARIANTS: &[&str] = &["kv_x", "kv_y"];')
     full = [
         ("src/runtime/spec.rs", spec_src % '"A", "B"'),
         ("src/runtime/native.rs", "fn plan(op: &NativeOp) { match op { NativeOp::A => {}, NativeOp::B { .. } => {} } }"),
-        ("tests/properties.rs", 'const COVER: &[&str] = &["A", "B"];'),
+        kv_blocked,
+        ("tests/properties.rs", 'const COVER: &[&str] = &["A", "B", "kv_x", "kv_y"];'),
     ]
     assert hits(full) == []
-    missing_plan = [full[0], ("src/runtime/native.rs", "fn plan(op: &NativeOp) { match op { NativeOp::A => {} } }"), full[2]]
+    missing_plan = [full[0], ("src/runtime/native.rs", "fn plan(op: &NativeOp) { match op { NativeOp::A => {} } }"), full[2], full[3]]
     assert hits(missing_plan) == ["op-exhaustive"]
-    no_cover = [full[0], full[1], ("tests/properties.rs", 'const COVER: &[&str] = &["A"];')]
+    no_cover = [full[0], full[1], full[2], ("tests/properties.rs", 'const COVER: &[&str] = &["A", "kv_x", "kv_y"];')]
     assert hits(no_cover) == ["op-exhaustive"]
-    stale = [("src/runtime/spec.rs", spec_src % '"A"'), full[1], full[2]]
+    stale = [("src/runtime/spec.rs", spec_src % '"A"'), full[1], full[2], full[3]]
     assert hits(stale) == ["op-exhaustive"]
+    # kernel-variant extension: a variant string missing from properties.rs
+    # fires, and losing the KERNEL_VARIANTS mirror itself fires
+    kv_gap = [full[0], full[1], full[2], ("tests/properties.rs", 'const COVER: &[&str] = &["A", "B", "kv_x"];')]
+    assert hits(kv_gap) == ["op-exhaustive"]
+    kv_lost = [full[0], full[1], ("src/runtime/blocked.rs", "pub const MR: usize = 4;"), full[3]]
+    assert hits(kv_lost) == ["op-exhaustive"]
     # rule 8
     r8 = [
         ("src/serve/router.rs", "pub fn handle() {}\npub fn detail() {}"),

@@ -20,16 +20,21 @@ use crate::util::json::{arr, num, obj};
 use super::{write_bench_json, BenchResult, Bencher};
 
 /// Result of one sweep: every timed point plus the max-thread speedup per
-/// benched kernel (mean_ms at threads=1 divided by mean_ms at threads=max).
+/// benched kernel (mean_ms at threads=1 divided by mean_ms at threads=max)
+/// and the serial blocked-vs-naive trajectory speedups.
 pub struct SweepReport {
     pub results: Vec<BenchResult>,
     pub threads: Vec<usize>,
     pub speedups: Vec<(String, f64)>,
+    /// `(variant, t1 naive mean_ms / variant mean_ms)` for the serial
+    /// matmul trajectory rows (blocked_scalar, blocked_simd).
+    pub blocked_vs_naive: Vec<(String, f64)>,
 }
 
-/// Deterministic pseudo-random operand (no RNG dependency in benches; the
-/// values only need to be non-uniform so the ReLU-zero skip in `matmul_tn`
-/// sees a realistic mix).
+/// Deterministic pseudo-random *weight-like* operand (no RNG dependency in
+/// benches): dense ±0.5 values with ~10% exact zeros so sparsity paths see
+/// some hits without dominating. Activations that sit behind a ReLU are a
+/// different population — use [`post_relu_operand`] for those.
 fn operand(n: usize, seed: u32) -> Vec<f32> {
     let mut state = seed | 1;
     (0..n)
@@ -37,6 +42,22 @@ fn operand(n: usize, seed: u32) -> Vec<f32> {
             state = state.wrapping_mul(1664525).wrapping_add(1013904223);
             let v = (state >> 8) as f32 / (1 << 24) as f32 - 0.5;
             if v.abs() < 0.05 { 0.0 } else { v }
+        })
+        .collect()
+}
+
+/// Deterministic post-ReLU activation operand: `max(v, 0)` over the same
+/// symmetric ±0.5 stream, so ~half the entries are **exact zeros** — the
+/// population the `matmul_tn` ReLU-zero skip actually sees in training.
+/// (The old weight-like `operand` zeroed only ~10%, flattering the naive
+/// dW kernel in exactly the rows meant to rank it against the blocked one.)
+fn post_relu_operand(n: usize, seed: u32) -> Vec<f32> {
+    let mut state = seed | 1;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+            let v = (state >> 8) as f32 / (1 << 24) as f32 - 0.5;
+            if v <= 0.0 { 0.0 } else { v }
         })
         .collect()
 }
@@ -62,7 +83,7 @@ fn bench_at(b: &mut Bencher, t: usize) -> Result<Vec<(String, f64)>> {
 
     // dW shape: (rows, m)ᵀ @ (rows, n) with post-ReLU zeros in `a`
     let (rows, tm, tn) = (1024usize, 512usize, 256usize);
-    let at = operand(rows * tm, 3);
+    let at = post_relu_operand(rows * tm, 3);
     let dy = operand(rows * tn, 4);
     let r = b.bench(&format!("t{t}/matmul_tn {rows}x{tm}x{tn}"), || {
         let _ = kernels::matmul_tn_p(&pool, &at, &dy, rows, tm, tn);
@@ -170,6 +191,33 @@ pub fn run_kernel_sweep(out: &Path) -> Result<SweepReport> {
         threads.push(max_t);
     }
     let mut b = Bencher::new();
+
+    // Serial matmul trajectory at threads=1 on the ledger shape: naive →
+    // blocked (scalar) → blocked+SIMD. The default "matmul" rows below
+    // already run the blocked+SIMD kernel; these three rows isolate what
+    // each rewrite stage bought with no pool in the frame.
+    let (m, k, n) = (256usize, 1024usize, 256usize);
+    let a = operand(m * k, 1);
+    let w = operand(k * n, 2);
+    println!("-- serial matmul trajectory @ threads=1 --");
+    let naive = b.bench(&format!("t1/matmul_naive {m}x{k}x{n}"), || {
+        let _ = kernels::matmul_naive(&a, &w, m, k, n);
+    });
+    let blocked_scalar = b.bench(&format!("t1/matmul_blocked {m}x{k}x{n}"), || {
+        let _ = kernels::matmul_blocked_scalar(&a, &w, m, k, n);
+    });
+    let blocked_simd = b.bench(&format!("t1/matmul_blocked_simd {m}x{k}x{n}"), || {
+        let _ = kernels::matmul(&a, &w, m, k, n);
+    });
+    let blocked_vs_naive = vec![
+        ("blocked_scalar".to_string(), naive.mean_ms / blocked_scalar.mean_ms),
+        ("blocked_simd".to_string(), naive.mean_ms / blocked_simd.mean_ms),
+    ];
+    println!("speedup vs naive serial:");
+    for (name, sp) in &blocked_vs_naive {
+        println!("  {name:<24} {sp:>5.2}x");
+    }
+
     let mut per_thread: Vec<Vec<(String, f64)>> = Vec::new();
     for &t in &threads {
         println!("-- native kernels @ threads={t} --");
@@ -195,10 +243,12 @@ pub fn run_kernel_sweep(out: &Path) -> Result<SweepReport> {
         ("parallelism_available", num(max_t as f64)),
         ("speedup_at_max_threads",
          obj(speedups.iter().map(|(nm, v)| (nm.as_str(), num(*v))).collect())),
+        ("speedup_blocked_vs_naive",
+         obj(blocked_vs_naive.iter().map(|(nm, v)| (nm.as_str(), num(*v))).collect())),
     ];
     write_bench_json(out, "kernels", &b.results, extra)?;
     println!("wrote {}", out.display());
-    Ok(SweepReport { results: b.results, threads, speedups })
+    Ok(SweepReport { results: b.results, threads, speedups, blocked_vs_naive })
 }
 
 #[cfg(test)]
@@ -212,5 +262,21 @@ mod tests {
         assert_ne!(a, operand(1000, 8));
         assert!(a.iter().any(|&v| v == 0.0), "tn skip path needs zeros");
         assert!(a.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn tn_bench_operand_matches_post_relu_population() {
+        // The matmul_tn dW rows feed their `at` operand through this
+        // generator; post-ReLU activations are ~half exact zeros, and the
+        // old weight-like operand's ~10% zero rate mis-ranked kernels on
+        // exactly the skip path the rows exist to measure.
+        let (rows, tm) = (1024usize, 512usize);
+        let at = post_relu_operand(rows * tm, 3);
+        assert_eq!(at, post_relu_operand(rows * tm, 3), "bench inputs are pinned");
+        let zeros = at.iter().filter(|&&v| v == 0.0).count() as f64 / at.len() as f64;
+        assert!((0.4..=0.6).contains(&zeros),
+                "post-ReLU operand must be ~50% exact zeros, got {zeros:.3}");
+        assert!(at.iter().all(|&v| v >= 0.0), "ReLU output is non-negative");
+        assert!(at.iter().any(|&v| v > 0.0));
     }
 }

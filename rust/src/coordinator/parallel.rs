@@ -522,7 +522,7 @@ fn worker_loop(
     } else {
         config.threads
     };
-    let engine = backend.engine_with_threads(worker_threads)?;
+    let engine = backend.engine_with_opts(worker_threads, config.precision)?;
     let mut module = ModuleRuntime::load(&engine, &manifest, k)?;
     let mut opt = SgdMomentum::new(&module.params, config.momentum, config.weight_decay);
     let lag = kk - 1 - k;

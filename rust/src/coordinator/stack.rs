@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 use crate::data::Batch;
 use crate::metrics::xent_and_acc;
 use crate::optim::SgdMomentum;
-use crate::runtime::{Engine, Manifest, ModuleRuntime, Tensor};
+use crate::runtime::{Engine, Manifest, ModuleRuntime, Precision, Tensor};
 use crate::util::rng::Rng;
 
 /// Hyper-parameters shared by all strategies (the paper's recipe defaults).
@@ -24,6 +24,12 @@ pub struct TrainConfig {
     /// kernels are bitwise identical to `threads = 1` — the knob only
     /// changes wall-clock, never the trajectory.
     pub threads: usize,
+    /// Kernel precision tier. `Exact` (default) keeps the bitwise
+    /// contract above; `Fast` lets the `dx` backward matmuls use
+    /// multi-accumulator reductions — still deterministic at every thread
+    /// count, but bit-different from `Exact` within a documented ULP
+    /// bound (see `runtime::blocked`).
+    pub precision: Precision,
     /// How long the threaded coordinator waits for any worker's done (or
     /// snapshot) message before diagnosing a stalled fleet. The leader
     /// retries one more window (a single slow kernel on a loaded box is not
@@ -45,6 +51,7 @@ impl Default for TrainConfig {
             weight_decay: 5e-4,
             seed: 0,
             threads: 0,
+            precision: Precision::Exact,
             recv_timeout_ms: 30_000,
             #[cfg(feature = "fault-inject")]
             fault: None,

@@ -40,7 +40,7 @@ use crate::coordinator::{
 };
 use crate::data::DataSource;
 use crate::optim::{ConstantLr, InverseT, LrSchedule, StepDecay};
-use crate::runtime::{BackendKind, Manifest};
+use crate::runtime::{BackendKind, Manifest, Precision};
 
 /// Which LR schedule [`Experiment::run`] drives (built from the
 /// experiment's base `lr` and step budget at run time).
@@ -138,6 +138,18 @@ impl Experiment {
     /// this knob changes wall-clock only — never the training trajectory.
     pub fn threads(mut self, threads: usize) -> Self {
         self.config.threads = threads;
+        self
+    }
+
+    /// Kernel precision tier (default [`Precision::Exact`]). `Exact` keeps
+    /// the bitwise thread-count guarantee above; `Fast` lets the backward
+    /// `dx` matmuls reassociate their k-reductions across multiple
+    /// accumulators — still deterministic run-to-run and across thread
+    /// counts, but bit-different from `Exact` within the ULP bound
+    /// documented in `runtime::blocked` (so `Fast` trajectories are only
+    /// comparable to other `Fast` trajectories).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.config.precision = precision;
         self
     }
 
@@ -269,7 +281,8 @@ impl Experiment {
     /// `session()?.run()`.
     pub fn session(&self) -> Result<Session> {
         let resolved = self.resolve()?;
-        let engine = resolved.backend.engine_with_threads(self.config.threads)?;
+        let engine = resolved.backend.engine_with_opts(self.config.threads,
+                                                       self.config.precision)?;
         let trainer = make_trainer(&engine, &resolved.manifest, self.algo,
                                    self.config.clone())?;
         let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;
@@ -292,7 +305,8 @@ impl Experiment {
     /// not `dyn Trainer`). Ignores `algo`.
     pub fn build_fr(&self) -> Result<FrSession> {
         let resolved = self.resolve()?;
-        let engine = resolved.backend.engine_with_threads(self.config.threads)?;
+        let engine = resolved.backend.engine_with_opts(self.config.threads,
+                                                       self.config.precision)?;
         let stack = ModuleStack::load(&engine, resolved.manifest.clone(),
                                       self.config.clone())?;
         let data = DataSource::for_manifest(&resolved.manifest, self.config.seed)?;

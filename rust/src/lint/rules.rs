@@ -28,7 +28,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("serve-unwrap", "serve request paths return typed ApiErrors, never panic"),
     ("wallclock", "wall-clock reads live in timing modules only"),
     ("wire-fingerprint", "checkpoint wire layout matches the declared fingerprint"),
-    ("op-exhaustive", "every NativeOp variant wired through signature/plan/parity"),
+    ("op-exhaustive", "every NativeOp + kernel variant wired through signature/plan/parity"),
     ("router-tested", "every pub fn on the serve router has a test reference"),
 ];
 
@@ -515,6 +515,13 @@ fn has_ident(t: &[Token], range: (usize, usize), name: &str) -> bool {
 /// arms), the `VARIANT_NAMES` mirror, and the parity-coverage table in
 /// `tests/properties.rs`. An op that exists but is not parity-tested is
 /// exactly the gap this reproduction cannot afford.
+///
+/// The cache-blocked kernel layer rides the same guard: the
+/// `KERNEL_VARIANTS` mirror in `runtime/blocked.rs` anchors a second
+/// coverage table — every variant string (naive references, blocked and
+/// SIMD-shaped rewrites, the `Fast`-tier reduction, the fused conv) must
+/// appear in `tests/properties.rs`, since those kernels are exactly where
+/// a silent bitwise-parity gap would hide.
 fn rule_op_exhaustive(files: &[LexedFile], out: &mut Vec<Finding>) {
     let Some(spec) = files.iter().find(|f| f.path == "src/runtime/spec.rs") else {
         return; // fixture runs without a runtime
@@ -591,6 +598,30 @@ fn rule_op_exhaustive(files: &[LexedFile], out: &mut Vec<Finding>) {
                 fail(&p.path, *line,
                      format!("NativeOp::{v} has no parity-coverage reference in \
                               tests/properties.rs"));
+            }
+        }
+    }
+    let Some(blocked) = files.iter().find(|f| f.path == "src/runtime/blocked.rs") else {
+        fail("src/runtime/blocked.rs", 1,
+             "missing from the scan set — the blocked-kernel variant \
+              coverage cannot be checked".into());
+        return;
+    };
+    match const_str_list(&blocked.toks, "KERNEL_VARIANTS") {
+        None => fail(&blocked.path, 1,
+                     "missing `KERNEL_VARIANTS` — the blocked-kernel variant \
+                      mirror is gone".into()),
+        Some(names) => {
+            if let Some(p) = props {
+                for name in &names {
+                    let referenced = p.toks.iter()
+                        .any(|x| matches!(&x.tok, Tok::Str(s) if s == name));
+                    if !referenced {
+                        fail(&p.path, 1,
+                             format!("kernel variant {name:?} has no \
+                                      parity-coverage row in tests/properties.rs"));
+                    }
+                }
             }
         }
     }
@@ -899,9 +930,18 @@ mod tests {
                 "src/runtime/native.rs".to_string(),
                 format!("fn plan(op: &NativeOp) {{ match op {{ {native_match} }} }}"),
             ),
+            (
+                "src/runtime/blocked.rs".to_string(),
+                "pub const KERNEL_VARIANTS: &[&str] = &[\"kv_x\", \"kv_y\"];"
+                    .to_string(),
+            ),
             ("tests/properties.rs".to_string(), props.to_string()),
         ]
     }
+
+    /// A properties.rs fixture body covering both kernel variants, so the
+    /// NativeOp-focused tests stay quiet on the kernel-variant check.
+    const KV_COVER: &str = "const KCOVER: &[&str] = &[\"kv_x\", \"kv_y\"];";
 
     fn run_owned(files: &[(String, String)]) -> Report {
         let files: Vec<SourceFile> = files
@@ -916,7 +956,7 @@ mod tests {
         let files = op_fixture(
             "NativeOp::A => {}, NativeOp::B { .. } => {}",
             "\"A\", \"B\"",
-            "const COVER: &[&str] = &[\"A\", \"B\"];",
+            &format!("const COVER: &[&str] = &[\"A\", \"B\"];\n{KV_COVER}"),
         );
         let r = run_owned(&files);
         assert!(r.violations.is_empty(), "{}", r.render());
@@ -927,7 +967,7 @@ mod tests {
         let files = op_fixture(
             "NativeOp::A => {}",
             "\"A\", \"B\"",
-            "const COVER: &[&str] = &[\"A\", \"B\"];",
+            &format!("const COVER: &[&str] = &[\"A\", \"B\"];\n{KV_COVER}"),
         );
         let r = run_owned(&files);
         assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
@@ -939,7 +979,7 @@ mod tests {
         let files = op_fixture(
             "NativeOp::A => {}, NativeOp::B { .. } => {}",
             "\"A\", \"B\"",
-            "const COVER: &[&str] = &[\"A\"];",
+            &format!("const COVER: &[&str] = &[\"A\"];\n{KV_COVER}"),
         );
         let r = run_owned(&files);
         assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
@@ -950,11 +990,41 @@ mod tests {
         let files = op_fixture(
             "NativeOp::A => {}, NativeOp::B { .. } => {}",
             "\"A\"",
-            "const COVER: &[&str] = &[\"A\", \"B\"];",
+            &format!("const COVER: &[&str] = &[\"A\", \"B\"];\n{KV_COVER}"),
         );
         let r = run_owned(&files);
         assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
         assert!(r.violations[0].msg.contains("does not match"));
+    }
+
+    #[test]
+    fn kernel_variant_missing_parity_coverage_fires() {
+        let files = op_fixture(
+            "NativeOp::A => {}, NativeOp::B { .. } => {}",
+            "\"A\", \"B\"",
+            "const COVER: &[&str] = &[\"A\", \"B\"];\n\
+             const KCOVER: &[&str] = &[\"kv_x\"];",
+        );
+        let r = run_owned(&files);
+        assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
+        assert!(r.violations[0].msg.contains("kv_y"));
+    }
+
+    #[test]
+    fn missing_kernel_variants_mirror_fires() {
+        let mut files = op_fixture(
+            "NativeOp::A => {}, NativeOp::B { .. } => {}",
+            "\"A\", \"B\"",
+            &format!("const COVER: &[&str] = &[\"A\", \"B\"];\n{KV_COVER}"),
+        );
+        for (path, content) in &mut files {
+            if path.as_str() == "src/runtime/blocked.rs" {
+                *content = "pub const MR: usize = 4;".to_string();
+            }
+        }
+        let r = run_owned(&files);
+        assert_eq!(rules_hit(&r), vec!["op-exhaustive"]);
+        assert!(r.violations[0].msg.contains("KERNEL_VARIANTS"));
     }
 
     // -- rule 8: router-tested ----------------------------------------------

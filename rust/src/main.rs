@@ -36,7 +36,7 @@ use features_replay::checkpoint;
 use features_replay::coordinator::{memory, parse_algo, sigma, Algo};
 use features_replay::experiment::{Experiment, ModelRegistry};
 use features_replay::metrics::TablePrinter;
-use features_replay::runtime::{BackendKind, Manifest};
+use features_replay::runtime::{BackendKind, Manifest, Precision};
 use features_replay::serve::{ServeConfig, Server};
 use features_replay::util::cli::{Args, CliError};
 
@@ -84,6 +84,9 @@ fn opt_specs() -> Vec<(&'static str, &'static str)> {
         ("seed", "data/init seed (default 0)"),
         ("threads", "native kernel threads per engine (default 0 = auto, 1 = \
                      single-thread reference; results are bitwise identical)"),
+        ("precision", "exact | fast (default exact = bitwise-reproducible \
+                       kernels; fast = multi-accumulator dx reductions, \
+                       deterministic but only ULP-close to exact)"),
         ("eval-every", "eval cadence in steps (default 25)"),
         ("artifacts", "artifacts root (default ./artifacts)"),
         ("out", "write a JSON report to this path"),
@@ -161,6 +164,10 @@ fn run() -> CmdResult {
         .verbose(args.flag("verbose"));
     if let Some(b) = args.get("backend") {
         exp = exp.backend(BackendKind::parse(b).map_err(config_err)?);
+    }
+    if let Some(p) = args.get("precision") {
+        let p = Precision::parse(p).map_err(|e| config_err(anyhow!(e)))?;
+        exp = exp.precision(p);
     }
     if let Some(root) = args.get("artifacts") {
         exp = exp.artifacts_root(root);

@@ -79,7 +79,9 @@ impl Histogram {
     }
 
     pub fn record_ms(&self, ms: f64) {
-        self.record_micros((ms.max(0.0) * 1e3) as u64);
+        // Round to nearest µs: truncation dropped every sub-µs fraction
+        // from `sum_micros` and biased `mean_ms` low (~0.5 µs per sample).
+        self.record_micros((ms.max(0.0) * 1e3).round() as u64);
     }
 
     pub fn count(&self) -> u64 {
@@ -180,6 +182,51 @@ mod tests {
         assert_eq!(Histogram::bucket_index(3), 2);
         assert_eq!(Histogram::bucket_index(4), 3);
         assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn power_of_two_boundaries_open_a_new_bucket() {
+        // bucket i covers [2^(i-1), 2^i) µs, so 2^i itself is the first
+        // value of bucket i+1 — pin several boundaries explicitly
+        for i in [3u32, 6, 10, 20, 30] {
+            let edge = 1u64 << i;
+            assert_eq!(Histogram::bucket_index(edge), i as usize + 1, "2^{i}");
+            assert_eq!(Histogram::bucket_index(edge - 1), i as usize, "2^{i}-1");
+        }
+        // and the cap: anything past bucket 39's range stays in bucket 39
+        assert_eq!(Histogram::bucket_index(1u64 << 39), BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(1u64 << 63), BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_ms_rounds_to_nearest_micro() {
+        // Regression: `(ms * 1e3) as u64` truncated, so 0.6 µs counted as
+        // 0 and the mean collapsed toward zero for sub-µs samples.
+        let h = Histogram::new();
+        h.record_ms(0.0006); // 0.6 µs -> 1 µs (truncation gave 0)
+        h.record_ms(0.0014); // 1.4 µs -> 1 µs
+        h.record_ms(0.0015); // 1.5 µs -> 2 µs
+        assert_eq!(h.count(), 3);
+        let mean = h.mean_ms();
+        let want = (1.0 + 1.0 + 2.0) / 3.0 / 1e3;
+        assert!((mean - want).abs() < 1e-12,
+                "mean {mean} should be {want} (truncation gives {})",
+                (0.0 + 1.0 + 1.0) / 3.0 / 1e3);
+        // the 0.6 µs sample must land in the 1 µs bucket, not bucket 0
+        assert_eq!(h.quantile_ms(0.01), 0.002);
+    }
+
+    #[test]
+    fn quantile_reports_bucket_upper_edges() {
+        // a single sample at exactly 1024 µs sits in bucket 11
+        // ([1024, 2048) µs), whose upper edge is 2.048 ms
+        let h = Histogram::new();
+        h.record_micros(1024);
+        assert_eq!(h.quantile_ms(1.0), 2.048);
+        // bucket 0 (< 1 µs) reports its 1 µs upper edge
+        let h0 = Histogram::new();
+        h0.record_micros(0);
+        assert_eq!(h0.quantile_ms(0.5), 0.001);
     }
 
     #[test]

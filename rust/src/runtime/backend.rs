@@ -161,12 +161,21 @@ impl BackendKind {
     /// backend only; 0 = auto, 1 = the exact single-thread reference).
     /// PJRT ignores the knob — its parallelism lives in the XLA runtime.
     pub fn engine_with_threads(self, threads: usize) -> Result<super::engine::Engine> {
+        self.engine_with_opts(threads, super::blocked::Precision::Exact)
+    }
+
+    /// [`BackendKind::engine_with_threads`] with an explicit kernel
+    /// [`Precision`](super::blocked::Precision) tier (native backend only;
+    /// PJRT ignores both knobs).
+    pub fn engine_with_opts(self, threads: usize,
+                            precision: super::blocked::Precision)
+                            -> Result<super::engine::Engine> {
         match self {
             BackendKind::Native =>
-                Ok(super::engine::Engine::native_with_threads(threads)),
+                Ok(super::engine::Engine::native_with_opts(threads, precision)),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
-                let _ = threads;
+                let _ = (threads, precision);
                 super::engine::Engine::pjrt_cpu()
             }
         }

@@ -1,0 +1,454 @@
+//! Cache-blocked, register-tiled matmul micro-kernels and the [`Precision`]
+//! tier they expose.
+//!
+//! # The bitwise contract, kept under blocking
+//!
+//! Every kernel in the repo owes `tests/properties.rs` one invariant: the
+//! value of each output element is a *single* f32 accumulation chain in a
+//! *fixed* order, independent of thread count and of which code path ran.
+//! The naive ikj matmul realizes `out[i][j]` as
+//!
+//! ```text
+//! ((((0 + a[i][0]·b[0][j]) + a[i][1]·b[1][j]) + …) + a[i][k-1]·b[k-1][j])
+//! ```
+//!
+//! The blocked kernels here preserve that exact chain while reordering
+//! everything float arithmetic is *not* sensitive to:
+//!
+//! - **k-panel blocking** (`KC` rows of B at a time): the output tile is
+//!   held in registers for the duration of a panel and stored/reloaded
+//!   between panels. An f32 store + load is exact, so splitting the chain
+//!   across panels — in increasing-p order — reassociates nothing.
+//! - **packing B** into `(panel, NR-lane)` blocks: a pure layout change;
+//!   the same products are formed from the same operands.
+//! - **register tiling** (`MR` output rows) and **`f32x`-style lane
+//!   unrolling** (`NR` output columns as a fixed-size array the compiler
+//!   vectorizes on stable Rust): each output element keeps its own scalar
+//!   accumulator; lanes never share a chain.
+//!
+//! The one transformation that *does* pay on top of this — splitting the
+//! k-reduction of the dot-product-shaped `matmul_nt` across several
+//! accumulators — necessarily reassociates the sum, so it is gated behind
+//! [`Precision::Fast`] and never chosen by default.
+//!
+//! # The `Fast` tier's error contract
+//!
+//! `matmul_nt_fast` computes each output element with [`FAST_LANES`]
+//! interleaved partial sums combined by a fixed balanced tree. The split
+//! depends only on `k` — never on threads or chunking — so `Fast` is still
+//! run-to-run and thread-count deterministic (asserted in
+//! `tests/properties.rs`). Against the `Exact` kernel the standard
+//! forward-error analysis bounds both variants by `γ_k·Σ|aᵢ·bᵢ|` with
+//! `γ_k ≈ k·ε`, giving the documented bound
+//!
+//! ```text
+//! |fast − exact|  ≤  2·k·ε·Σᵢ|aᵢ·bᵢ|      (ε = f32::EPSILON = 2⁻²³)
+//! ```
+//!
+//! which `tests/properties.rs` asserts with the Σ term evaluated in f64.
+//! In ULP terms the bound is ~`2k` ULP of the reduction magnitude — tight
+//! in pathological cancellation, typically ≤ 2 ULP on activations.
+//!
+//! Tile sizes: `MR = 4` output rows × `NR = 16` f32 lanes per register
+//! tile (64 live accumulators — within the 16 × 256-bit vector register
+//! budget of the AVX2-class cores this repo targets), `KC = 256` panel
+//! rows so a packed `256 × 16` B block (16 KiB) stays L1-resident while a
+//! row tile streams over it. See docs/DESIGN.md § Perf ledger, entry L2.
+
+/// Numeric tier for the matmul-family kernels.
+///
+/// `Exact` (the default) keeps every kernel bit-identical to the naive
+/// serial reference — blocking and lane unrolling never reassociate a
+/// reduction. `Fast` additionally enables multi-accumulator k-splitting
+/// where it wins (currently the dot-product-shaped `matmul_nt`, the
+/// backward `dx = dy·Wᵀ` kernel); results remain deterministic across
+/// runs and thread counts but differ from `Exact` within the documented
+/// ULP bound (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    #[default]
+    Exact,
+    Fast,
+}
+
+impl Precision {
+    /// Parse a CLI/config spelling (`exact` | `fast`).
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "exact" => Ok(Precision::Exact),
+            "fast" => Ok(Precision::Fast),
+            other => Err(format!(
+                "unknown precision {other:?} (expected \"exact\" or \"fast\")")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
+        }
+    }
+}
+
+/// Every kernel variant the blocked rewrite introduced, by its stable name.
+/// `tests/properties.rs` keeps one parity (or ULP-bound) row per entry and
+/// frlint's `op-exhaustive` rule audits that the table stays exhaustive —
+/// adding a variant here without a test row fails the lint and the test.
+pub const KERNEL_VARIANTS: &[&str] = &[
+    "matmul_naive",
+    "matmul_blocked_scalar",
+    "matmul_blocked_simd",
+    "matmul_tn_naive",
+    "matmul_tn_blocked",
+    "matmul_nt_naive",
+    "matmul_nt_blocked",
+    "matmul_nt_fast",
+    "conv2d_fused",
+];
+
+/// Register-tile rows (output rows held in accumulators per micro-kernel).
+pub const MR: usize = 4;
+/// Register-tile f32 lanes (output columns per micro-kernel; a `[f32; NR]`
+/// the compiler lowers to vector registers on stable Rust).
+pub const NR: usize = 16;
+/// k-panel depth: rows of B packed per panel (`KC · NR` f32 = 16 KiB,
+/// L1-resident while every row tile streams over it).
+pub const KC: usize = 256;
+
+/// Number of interleaved partial sums in the `Fast` k-split reduction.
+pub const FAST_LANES: usize = 8;
+
+/// Pack panel rows `p0..p0+pc` of the `NR`-wide column block starting at
+/// `j0` from row-major `b (k, n)` into `dst[(p, lane)]`, zero-filling
+/// lanes past `n` (those lanes are never stored back, so the zeros only
+/// feed dead accumulators).
+#[inline]
+fn pack_b_block(b: &[f32], n: usize, p0: usize, pc: usize, j0: usize,
+                dst: &mut [f32]) {
+    let jw = NR.min(n - j0);
+    for p in 0..pc {
+        let src = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jw];
+        let d = &mut dst[p * NR..p * NR + NR];
+        d[..jw].copy_from_slice(src);
+        d[jw..].fill(0.0);
+    }
+}
+
+/// Cache-blocked + register-tiled + lane-unrolled `out += a @ b`
+/// (`a (m, k)`, `b (k, n)`, row-major). **Bit-identical** to the naive
+/// ikj loop: every `out[i][j]` is accumulated over `p` in increasing
+/// order through a single scalar chain (see the module docs for why
+/// panel store/reload, packing, and lane unrolling preserve this).
+pub fn matmul_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+                           out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // One packed (KC, NR) block, reused across every row tile of the panel.
+    let mut packed = [0.0f32; KC * NR];
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = NR.min(n - j0);
+            pack_b_block(b, n, p0, pc, j0, &mut packed);
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                micro_tile(a, k, n, out, &packed, p0, pc, i0, mr, j0, jw);
+                i0 += mr;
+            }
+            j0 += jw;
+        }
+        p0 += pc;
+    }
+}
+
+/// The register micro-kernel: accumulate panel `p0..p0+pc` into the
+/// `(mr ≤ MR) × (jw ≤ NR)` output tile at `(i0, j0)`. The tile is loaded
+/// once, updated in increasing-p order (each element its own scalar
+/// chain), and stored once — the panel-boundary store/reload is exact.
+#[inline]
+fn micro_tile(a: &[f32], k: usize, n: usize, out: &mut [f32], packed: &[f32],
+              p0: usize, pc: usize, i0: usize, mr: usize, j0: usize, jw: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+        accr[..jw].copy_from_slice(&out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw]);
+    }
+    for p in 0..pc {
+        let bp = &packed[p * NR..(p + 1) * NR];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + r) * k + p0 + p];
+            for (l, acv) in accr.iter_mut().enumerate() {
+                *acv += av * bp[l];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw]
+            .copy_from_slice(&accr[..jw]);
+    }
+}
+
+/// The blocking-only midpoint (k-panels + packed B, no register tile, no
+/// lane unrolling) — kept so `BENCH_kernels.json` can report the
+/// naive → blocked → blocked+SIMD trajectory. Bit-identical to the naive
+/// kernel for the same reason [`matmul_blocked_into`] is.
+pub fn matmul_blocked_scalar_into(a: &[f32], b: &[f32], m: usize, k: usize,
+                                  n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut packed = [0.0f32; KC * NR];
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = NR.min(n - j0);
+            pack_b_block(b, n, p0, pc, j0, &mut packed);
+            for i in 0..m {
+                let orow = &mut out[i * n + j0..i * n + j0 + jw];
+                for p in 0..pc {
+                    let av = a[i * k + p0 + p];
+                    let bp = &packed[p * NR..p * NR + jw];
+                    for (o, &bv) in orow.iter_mut().zip(bp) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            j0 += jw;
+        }
+        p0 += pc;
+    }
+}
+
+/// Blocked `aᵀ @ b` restricted to output rows `i0..i1` (`a (rows, m)`,
+/// `b (rows, n)`), accumulating into a zeroed `(i1-i0, n)` buffer — the
+/// `dW = xᵀ·dy` kernel with the post-ReLU `a == 0.0` row skip. The
+/// accumulation over `r` runs in the same increasing order as the naive
+/// kernel and the skip fires on the same elements *before* the lane loop,
+/// so the 8-lane unrolled inner loop never changes an output bit.
+pub fn matmul_tn_blocked_cols(a: &[f32], b: &[f32], rows: usize, m: usize,
+                              n: usize, i0: usize, i1: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), (i1 - i0) * n);
+    const L: usize = 8;
+    for r in 0..rows {
+        let arow = &a[r * m + i0..r * m + i1];
+        let brow = &b[r * n..(r + 1) * n];
+        for (ii, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[ii * n..(ii + 1) * n];
+            let mut oc = orow.chunks_exact_mut(L);
+            let mut bc = brow.chunks_exact(L);
+            for (o8, b8) in (&mut oc).zip(&mut bc) {
+                for l in 0..L {
+                    o8[l] += av * b8[l];
+                }
+            }
+            for (o, &bv) in oc.into_remainder().iter_mut().zip(bc.remainder()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Register-tiled `out = a @ bᵀ` (`a (m, k)`, `b (n, k)`): a `4 × 4` tile
+/// of output elements, each with its **own** scalar accumulator walking
+/// `p` in increasing order — instruction-level parallelism without
+/// reassociating any reduction, so bit-identical to the naive kernel.
+pub fn matmul_nt_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize,
+                              n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    const T: usize = 4;
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = T.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = T.min(n - j0);
+            let mut acc = [[0.0f32; T]; T];
+            for p in 0..k {
+                for (r, accr) in acc.iter_mut().enumerate().take(tm) {
+                    let av = a[(i0 + r) * k + p];
+                    for (c, acv) in accr.iter_mut().enumerate().take(tn) {
+                        *acv += av * b[(j0 + c) * k + p];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(tm) {
+                for (c, &acv) in accr.iter().enumerate().take(tn) {
+                    out[(i0 + r) * n + j0 + c] = acv;
+                }
+            }
+            j0 += tn;
+        }
+        i0 += tm;
+    }
+}
+
+/// The `Fast`-tier `out = a @ bᵀ`: each dot product runs [`FAST_LANES`]
+/// interleaved partial sums (lane `l` takes elements `l, l+8, l+16, …`)
+/// combined by a fixed balanced tree. The split depends only on `k`, so
+/// results are deterministic across runs and thread counts; they differ
+/// from the `Exact` chain within the module-level ULP bound.
+pub fn matmul_nt_fast_into(a: &[f32], b: &[f32], m: usize, k: usize,
+                           n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    const L: usize = FAST_LANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut lane = [0.0f32; L];
+            let mut ac = arow.chunks_exact(L);
+            let mut bc = brow.chunks_exact(L);
+            for (a8, b8) in (&mut ac).zip(&mut bc) {
+                for l in 0..L {
+                    lane[l] += a8[l] * b8[l];
+                }
+            }
+            for (l, (&av, &bv)) in ac.remainder().iter()
+                .zip(bc.remainder()).enumerate() {
+                lane[l] += av * bv;
+            }
+            // fixed balanced reduction tree (independent of everything
+            // but k): ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))
+            let s01 = lane[0] + lane[1];
+            let s23 = lane[2] + lane[3];
+            let s45 = lane[4] + lane[5];
+            let s67 = lane[6] + lane[7];
+            *o = (s01 + s23) + (s45 + s67);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn lcg_vec(n: usize, mut state: u32) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+                (state >> 8) as f32 / (1 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_matmul_bitwise_matches_naive_chain() {
+        // shapes straddle every tile boundary: < MR/NR, exact multiples,
+        // ragged tails, and k crossing a KC panel boundary
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 16, 16), (5, 17, 19),
+                            (3, KC, 7), (2, KC + 3, NR + 1), (7, 2 * KC + 5, 33)] {
+            let a = lcg_vec(m * k, 1);
+            let b = lcg_vec(k * n, 2);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let mut simd = vec![0.0f32; m * n];
+            matmul_blocked_into(&a, &b, m, k, n, &mut simd);
+            let mut scalar = vec![0.0f32; m * n];
+            matmul_blocked_scalar_into(&a, &b, m, k, n, &mut scalar);
+            for i in 0..m * n {
+                assert_eq!(simd[i].to_bits(), want[i].to_bits(),
+                           "simd {m}x{k}x{n} elem {i}");
+                assert_eq!(scalar[i].to_bits(), want[i].to_bits(),
+                           "scalar {m}x{k}x{n} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_accumulates_into_existing_output() {
+        // `out += a@b` semantics (the attention context kernel relies on it)
+        let (m, k, n) = (3usize, 40usize, 9usize);
+        let a = lcg_vec(m * k, 5);
+        let b = lcg_vec(k * n, 6);
+        let seed = lcg_vec(m * n, 7);
+        let mut want = seed.clone();
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    want[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        let mut got = seed;
+        matmul_blocked_into(&a, &b, m, k, n, &mut got);
+        assert_eq!(got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   want.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nt_fast_is_deterministic_and_near_exact() {
+        let (m, k, n) = (5usize, 203usize, 7usize);
+        let a = lcg_vec(m * k, 11);
+        let b = lcg_vec(n * k, 12);
+        let mut exact = vec![0.0f32; m * n];
+        matmul_nt_blocked_into(&a, &b, m, k, n, &mut exact);
+        let mut fast = vec![0.0f32; m * n];
+        matmul_nt_fast_into(&a, &b, m, k, n, &mut fast);
+        let mut fast2 = vec![0.0f32; m * n];
+        matmul_nt_fast_into(&a, &b, m, k, n, &mut fast2);
+        assert_eq!(fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   fast2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   "fast must be run-to-run deterministic");
+        for i in 0..m {
+            for j in 0..n {
+                let sum_abs: f64 = (0..k)
+                    .map(|p| (a[i * k + p] as f64 * b[j * k + p] as f64).abs())
+                    .sum();
+                let bound = 2.0 * k as f64 * f32::EPSILON as f64 * sum_abs;
+                let err = (fast[i * n + j] as f64 - exact[i * n + j] as f64).abs();
+                assert!(err <= bound,
+                        "({i},{j}): |fast-exact| {err} above bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn precision_parses_and_names() {
+        assert_eq!(Precision::parse("exact").unwrap(), Precision::Exact);
+        assert_eq!(Precision::parse("fast").unwrap(), Precision::Fast);
+        assert!(Precision::parse("fastest").is_err());
+        assert_eq!(Precision::default(), Precision::Exact);
+        assert_eq!(Precision::Fast.name(), "fast");
+    }
+
+    #[test]
+    fn kernel_variants_are_unique_and_nonempty() {
+        let mut names: Vec<&str> = KERNEL_VARIANTS.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), KERNEL_VARIANTS.len(), "duplicate variant name");
+        assert!(!KERNEL_VARIANTS.is_empty());
+    }
+}

@@ -15,6 +15,7 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use super::backend::{Backend, BackendKind, ModuleExec, SynthExec};
+use super::blocked::Precision;
 use super::native::NativeBackend;
 use super::spec::Manifest;
 use super::tensor::Tensor;
@@ -36,8 +37,18 @@ impl Engine {
     /// The native CPU backend with an explicit kernel thread count
     /// (0 = auto, 1 = the exact single-thread reference path).
     pub fn native_with_threads(threads: usize) -> Engine {
+        Engine::native_with_opts(threads, Precision::Exact)
+    }
+
+    /// The native CPU backend with an explicit thread count *and*
+    /// [`Precision`] tier. `Exact` (the default everywhere else) keeps
+    /// gradients bit-identical to the single-thread naive reference;
+    /// `Fast` lets the `dx` k-reductions use multiple accumulators —
+    /// still deterministic at every thread count, ULP-bounded (see
+    /// [`crate::runtime::blocked`]).
+    pub fn native_with_opts(threads: usize, precision: Precision) -> Engine {
         Engine {
-            backend: Rc::new(NativeBackend::new(threads)),
+            backend: Rc::new(NativeBackend::with_opts(threads, precision)),
             kind: BackendKind::Native,
         }
     }

@@ -6,6 +6,8 @@
 //! - [`backend`]: the `Backend`/`ModuleExec`/`SynthExec` traits and the
 //!   resident-parameter buffer
 //! - [`native`]: pure-Rust CPU backend (default; fully offline)
+//! - [`blocked`]: cache-blocked, register-tiled matmul micro-kernels the
+//!   native backend delegates to, plus the [`Precision`] tier contract
 //! - [`pool`]: dependency-free scoped worker pool the native kernels
 //!   partition over — output rows, per-image slabs, or whole sequence
 //!   groups (bitwise-identical at every thread count)
@@ -16,6 +18,7 @@
 //! - [`module`]: per-module fwd/bwd/loss runtime and DNI synthesizers
 
 pub mod backend;
+pub mod blocked;
 pub mod engine;
 pub mod module;
 pub mod native;
@@ -27,6 +30,7 @@ pub mod spec;
 pub mod tensor;
 
 pub use backend::{Backend, BackendKind, LossOutput, ModuleExec, ResidentParams, SynthExec};
+pub use blocked::Precision;
 pub use engine::Engine;
 pub use module::{ModuleRuntime, SynthRuntime};
 pub use native::{NativeBackend, NativeConvSpec, NativeLmSpec, NativeMlpSpec};

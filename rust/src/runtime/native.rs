@@ -36,6 +36,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::rng::Rng;
 
 use super::backend::{Backend, LossOutput, ModuleExec, ResidentParams, SynthExec};
+use super::blocked::Precision;
 use super::pool::Pool;
 use super::spec::{Manifest, ModuleSpec, NativeOp, SynthSpec};
 use super::tensor::{DType, Tensor};
@@ -53,6 +54,7 @@ use super::tensor::{DType, Tensor};
 /// (below the pool's work threshold) fall back to the reference path
 /// outright.
 pub mod kernels {
+    use crate::runtime::blocked::{self, Precision};
     use crate::runtime::pool::Pool;
 
     /// Shared output pointer for pool-partitioned kernels. Each pool task
@@ -78,18 +80,25 @@ pub mod kernels {
         }
     }
 
-    /// `(m, k) @ (k, n) -> (m, n)`, row-major, fresh output (ikj order).
+    /// `(m, k) @ (k, n) -> (m, n)`, row-major, fresh output. Runs the
+    /// cache-blocked, register-tiled, lane-unrolled kernel from
+    /// [`crate::runtime::blocked`] — **bit-identical** to [`matmul_naive`]
+    /// (each output element keeps the naive increasing-p accumulation
+    /// chain; see the blocked module docs for the argument, and
+    /// `tests/properties.rs` for the randomized proof).
     pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; m * n];
         matmul_into(a, b, m, k, n, &mut out);
         out
     }
 
-    /// [`matmul`] into a zeroed caller buffer (the row-chunk work unit).
-    fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    /// The pre-blocking ikj loop, kept as the parity baseline the blocked
+    /// kernels are tested against and as the `BENCH_kernels.json` naive
+    /// reference row.
+    pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
-        debug_assert_eq!(out.len(), m * n);
+        let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
@@ -100,6 +109,23 @@ pub mod kernels {
                 }
             }
         }
+        out
+    }
+
+    /// The blocking-only midpoint (k-panels + packed B, scalar inner loop)
+    /// — the middle row of the naive → blocked → blocked+SIMD bench
+    /// trajectory. Bit-identical to both neighbors.
+    pub fn matmul_blocked_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                                 -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        blocked::matmul_blocked_scalar_into(a, b, m, k, n, &mut out);
+        out
+    }
+
+    /// [`matmul`] accumulating into a caller buffer (the row-chunk work
+    /// unit): `out += a @ b` via the blocked micro-kernel.
+    fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        blocked::matmul_blocked_into(a, b, m, k, n, out);
     }
 
     /// [`matmul`] with output rows partitioned across `pool` — bitwise
@@ -110,7 +136,7 @@ pub mod kernels {
             return matmul(a, b, m, k, n);
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.chunks(m);
+        let (tasks, chunk) = pool.chunks_aligned(m, n);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
@@ -134,18 +160,15 @@ pub mod kernels {
         out
     }
 
-    /// [`matmul_tn`] restricted to columns `i0..i1` of `a` — i.e. output
-    /// rows `i0..i1` — into a zeroed `(i1-i0, n)` buffer. The accumulation
-    /// over `r` runs in the same increasing order as the full kernel (and
-    /// the `a == 0.0` skip fires on the same elements), so restricting the
-    /// column range never changes an output bit.
-    fn matmul_tn_cols(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize,
-                      i0: usize, i1: usize, out: &mut [f32]) {
+    /// The pre-blocking [`matmul_tn`] loop (rolled inner `j`), kept as the
+    /// parity baseline and the naive bench reference row.
+    pub fn matmul_tn_naive(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize)
+                           -> Vec<f32> {
         debug_assert_eq!(a.len(), rows * m);
         debug_assert_eq!(b.len(), rows * n);
-        debug_assert_eq!(out.len(), (i1 - i0) * n);
+        let mut out = vec![0.0f32; m * n];
         for r in 0..rows {
-            let arow = &a[r * m + i0..r * m + i1];
+            let arow = &a[r * m..(r + 1) * m];
             let brow = &b[r * n..(r + 1) * n];
             for (ii, &av) in arow.iter().enumerate() {
                 if av == 0.0 {
@@ -157,6 +180,19 @@ pub mod kernels {
                 }
             }
         }
+        out
+    }
+
+    /// [`matmul_tn`] restricted to columns `i0..i1` of `a` — i.e. output
+    /// rows `i0..i1` — into a zeroed `(i1-i0, n)` buffer. Delegates to the
+    /// lane-unrolled kernel in [`crate::runtime::blocked`]; the
+    /// accumulation over `r` runs in the same increasing order as the
+    /// naive kernel (and the `a == 0.0` skip fires on the same elements),
+    /// so neither the unrolling nor the column restriction changes an
+    /// output bit.
+    fn matmul_tn_cols(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize,
+                      i0: usize, i1: usize, out: &mut [f32]) {
+        blocked::matmul_tn_blocked_cols(a, b, rows, m, n, i0, i1, out);
     }
 
     /// [`matmul_tn`] with output rows partitioned across `pool` — bitwise
@@ -167,7 +203,7 @@ pub mod kernels {
             return matmul_tn(a, b, rows, m, n);
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.chunks(m);
+        let (tasks, chunk) = pool.chunks_aligned(m, n);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
@@ -187,11 +223,13 @@ pub mod kernels {
         out
     }
 
-    /// [`matmul_nt`] into a caller buffer (the row-chunk work unit).
-    fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    /// The pre-blocking [`matmul_nt`] loop (single scalar accumulator per
+    /// output, no register tile), kept as the parity baseline and the
+    /// naive bench reference row.
+    pub fn matmul_nt_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
-        debug_assert_eq!(out.len(), m * n);
+        let mut out = vec![0.0f32; m * n];
         for i in 0..m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
@@ -204,24 +242,63 @@ pub mod kernels {
                 *o = acc;
             }
         }
+        out
+    }
+
+    /// [`matmul_nt`] into a caller buffer (the row-chunk work unit).
+    /// Register-tiled in [`crate::runtime::blocked`]; every output keeps
+    /// its own single scalar accumulator over increasing `k`, so the tile
+    /// is bit-identical to [`matmul_nt_naive`].
+    fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        blocked::matmul_nt_blocked_into(a, b, m, k, n, out);
+    }
+
+    /// The `Precision::Fast` variant of [`matmul_nt`]: 8-way interleaved
+    /// partial sums folded by a fixed balanced tree. Reassociates the
+    /// k-reduction (so it is *not* bit-equal to the exact kernel) but the
+    /// split depends only on `k`, so it is still deterministic run-to-run
+    /// and across thread counts. Error bound vs the exact kernel:
+    /// `|fast − exact| ≤ 2·k·ε·Σᵢ|aᵢ·bᵢ|` with `ε = f32::EPSILON`
+    /// (asserted in `tests/properties.rs`).
+    pub fn matmul_nt_fast(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        blocked::matmul_nt_fast_into(a, b, m, k, n, &mut out);
+        out
     }
 
     /// [`matmul_nt`] with output rows partitioned across `pool` — bitwise
     /// equal to the reference at every thread count.
     pub fn matmul_nt_p(pool: &Pool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
                        -> Vec<f32> {
+        matmul_nt_p_prec(pool, Precision::Exact, a, b, m, k, n)
+    }
+
+    /// [`matmul_nt_p`] with an explicit [`Precision`] tier. `Exact` runs
+    /// the blocked kernel (bit-identical to [`matmul_nt_naive`]); `Fast`
+    /// runs [`matmul_nt_fast`] per row chunk. Both are deterministic at
+    /// every thread count: the per-element reduction order depends only on
+    /// `k`, never on which worker owns the row.
+    pub fn matmul_nt_p_prec(pool: &Pool, precision: Precision, a: &[f32], b: &[f32],
+                            m: usize, k: usize, n: usize) -> Vec<f32> {
+        let row_kernel: fn(&[f32], &[f32], usize, usize, usize, &mut [f32]) =
+            match precision {
+                Precision::Exact => blocked::matmul_nt_blocked_into,
+                Precision::Fast => blocked::matmul_nt_fast_into,
+            };
         if m < 2 || !pool.should_par(m * k * n) {
-            return matmul_nt(a, b, m, k, n);
+            let mut out = vec![0.0f32; m * n];
+            row_kernel(a, b, m, k, n, &mut out);
+            return out;
         }
         let mut out = vec![0.0f32; m * n];
-        let (tasks, chunk) = pool.chunks(m);
+        let (tasks, chunk) = pool.chunks_aligned(m, n);
         let optr = OutPtr(out.as_mut_ptr());
         pool.run(tasks, &|t| {
             let i0 = t * chunk;
             let i1 = (i0 + chunk).min(m);
             // SAFETY: task t exclusively owns output rows i0..i1.
             let orows = unsafe { optr.rows(i0, i1, n) };
-            matmul_nt_into(&a[i0 * k..i1 * k], b, i1 - i0, k, n, orows);
+            row_kernel(&a[i0 * k..i1 * k], b, i1 - i0, k, n, orows);
         });
         out
     }
@@ -418,6 +495,48 @@ pub mod kernels {
             im2col_image(img, hw, c, k, stride, pad, ohw, dst);
         });
         cols
+    }
+
+    /// Fused conv2d forward: `im2col(x) @ w` without materializing the
+    /// whole-batch patch matrix. Each per-image task im2cols into a
+    /// task-local scratch slab (`ohw² × k²·cin`) and runs the blocked
+    /// matmul straight into that image's rows of the `(b·ohw², cout)`
+    /// output. Per output element the accumulation chain is identical to
+    /// `matmul_p(im2col_p(x), w)` — the scratch holds exactly the same
+    /// patch rows, and batch partitioning never changes an element's inner
+    /// loop — so the fusion is **bitwise invisible** (asserted in
+    /// `tests/properties.rs`). Bias/ReLU stay separate, as before.
+    pub fn conv2d_fused_p(pool: &Pool, x: &[f32], w: &[f32], b: usize, hw: usize,
+                          cin: usize, k: usize, stride: usize, pad: usize,
+                          cout: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), b * hw * hw * cin);
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let patch = k * k * cin;
+        debug_assert_eq!(w.len(), patch * cout);
+        let img_rows = ohw * ohw;
+        let mut out = vec![0.0f32; b * img_rows * cout];
+        let fused_image = |bi: usize, scratch: &mut [f32], dst: &mut [f32]| {
+            let img = &x[bi * hw * hw * cin..(bi + 1) * hw * hw * cin];
+            scratch.fill(0.0); // zero-padding taps must stay 0 across reuses
+            im2col_image(img, hw, cin, k, stride, pad, ohw, scratch);
+            matmul_into(scratch, w, img_rows, patch, cout, dst);
+        };
+        if b < 2 || !pool.should_par(b * img_rows * patch * cout) {
+            let mut scratch = vec![0.0f32; img_rows * patch];
+            for bi in 0..b {
+                let dst = &mut out[bi * img_rows * cout..(bi + 1) * img_rows * cout];
+                fused_image(bi, &mut scratch, dst);
+            }
+            return out;
+        }
+        let optr = OutPtr(out.as_mut_ptr());
+        pool.run(b, &|bi| {
+            let mut scratch = vec![0.0f32; img_rows * patch];
+            // SAFETY: task bi exclusively owns image bi's output rows.
+            let dst = unsafe { optr.rows(bi * img_rows, (bi + 1) * img_rows, cout) };
+            fused_image(bi, &mut scratch, dst);
+        });
+        out
     }
 
     /// Adjoint of [`im2col`]: scatter-add a `(b·ohw·ohw, k·k·c)` patch
@@ -1049,10 +1168,15 @@ pub struct NativeModule {
     /// The backend's kernel worker pool (size 1 = the exact single-thread
     /// reference; larger pools are bitwise identical by row ownership).
     pool: Arc<Pool>,
+    /// Kernel precision tier: `Exact` (default) keeps the bitwise
+    /// contract; `Fast` reassociates the `dx` k-reductions (still
+    /// deterministic, ULP-bounded — see [`crate::runtime::blocked`]).
+    precision: Precision,
 }
 
 impl NativeModule {
-    fn build(spec: ModuleSpec, pool: Arc<Pool>) -> Result<NativeModule> {
+    fn build(spec: ModuleSpec, pool: Arc<Pool>, precision: Precision)
+             -> Result<NativeModule> {
         if spec.native_ops.is_empty() {
             bail!("module {}: manifest carries no native op graph — AOT \
                    artifacts need the `pjrt` backend (cargo feature), or use \
@@ -1137,7 +1261,7 @@ impl NativeModule {
                    out {:?}", spec.index, spec.out_shape);
         }
         let is_first = spec.index == 0;
-        Ok(NativeModule { spec, plans, offsets, batch, is_first, pool })
+        Ok(NativeModule { spec, plans, offsets, batch, is_first, pool, precision })
     }
 
     /// Forward keeping per-plan activations when `traced`: `outs[p]` is the
@@ -1191,10 +1315,13 @@ impl NativeModule {
                     let y = kernels::embed(h_in.i32s(), pp[0].f32s(), vocab, d);
                     (y, Aux::Embed)
                 }
-                Plan::Conv { hw, cin, cout, k, stride, pad, ohw, relu } => {
-                    let cols = kernels::im2col_p(pool, cur, b, hw, cin, k, stride, pad);
-                    let mut y = kernels::matmul_p(pool, &cols, pp[0].f32s(),
-                                                  b * ohw * ohw, k * k * cin, cout);
+                Plan::Conv { hw, cin, cout, k, stride, pad, ohw: _, relu } => {
+                    // Fused im2col+matmul: per-image scratch instead of a
+                    // whole-batch patch matrix — bit-identical to the
+                    // unfused im2col_p + matmul_p pipeline. The backward
+                    // still materializes cols (it needs them for dW).
+                    let mut y = kernels::conv2d_fused_p(pool, cur, pp[0].f32s(),
+                                                        b, hw, cin, k, stride, pad, cout);
                     kernels::add_bias(&mut y, pp[1].f32s());
                     if relu {
                         kernels::relu(&mut y);
@@ -1202,13 +1329,12 @@ impl NativeModule {
                     (y, Aux::Conv)
                 }
                 Plan::ConvPair { hw, c } => {
-                    let rows = b * hw * hw;
-                    let cols1 = kernels::im2col_p(pool, cur, b, hw, c, 3, 1, 1);
-                    let mut h1 = kernels::matmul_p(pool, &cols1, pp[0].f32s(), rows, 9 * c, c);
+                    let mut h1 = kernels::conv2d_fused_p(pool, cur, pp[0].f32s(),
+                                                         b, hw, c, 3, 1, 1, c);
                     kernels::add_bias(&mut h1, pp[1].f32s());
                     kernels::relu(&mut h1);
-                    let cols2 = kernels::im2col_p(pool, &h1, b, hw, c, 3, 1, 1);
-                    let mut y = kernels::matmul_p(pool, &cols2, pp[2].f32s(), rows, 9 * c, c);
+                    let mut y = kernels::conv2d_fused_p(pool, &h1, pp[2].f32s(),
+                                                        b, hw, c, 3, 1, 1, c);
                     kernels::add_bias(&mut y, pp[3].f32s());
                     for (v, &xv) in y.iter_mut().zip(cur.iter()) {
                         *v += xv;
@@ -1267,6 +1393,9 @@ impl NativeModule {
                 dout: Vec<f32>) -> (Vec<Tensor>, Option<Vec<f32>>) {
         let b = self.batch;
         let pool = &*self.pool;
+        // dx propagation honors the precision tier; dW/db stay Exact (the
+        // optimizer step is the hot consumer of reproducibility audits).
+        let prec = self.precision;
         let mut grads: Vec<Option<Tensor>> = (0..params.len()).map(|_| None).collect();
         let mut grad = dout;
         for (pi, plan) in self.plans.iter().enumerate().rev() {
@@ -1290,7 +1419,7 @@ impl NativeModule {
                     grads[off] = Some(tensor2(din, dout, dw));
                     grads[off + 1] = Some(tensor1(db));
                     grad = if need_dx {
-                        kernels::matmul_nt_p(pool, &dz, pp[0].f32s(), b, dout, din)
+                        kernels::matmul_nt_p_prec(pool, prec, &dz, pp[0].f32s(), b, dout, din)
                     } else {
                         Vec::new()
                     };
@@ -1301,7 +1430,8 @@ impl NativeModule {
                     // upper dense: z2 = h1 w2 + b2
                     let dw2 = kernels::matmul_tn_p(pool, h1, &ds, b, d, d);
                     let db2 = kernels::bias_grad(&ds, d);
-                    let mut dz1 = kernels::matmul_nt_p(pool, &ds, pp[2].f32s(), b, d, d);
+                    let mut dz1 =
+                        kernels::matmul_nt_p_prec(pool, prec, &ds, pp[2].f32s(), b, d, d);
                     kernels::relu_bwd(&mut dz1, h1);
                     // lower dense: z1 = x w1 + b1
                     let dw1 = kernels::matmul_tn_p(pool, x, &dz1, b, d, d);
@@ -1311,7 +1441,8 @@ impl NativeModule {
                     grads[off + 2] = Some(tensor2(d, d, dw2));
                     grads[off + 3] = Some(tensor1(db2));
                     grad = if need_dx {
-                        let mut dx = kernels::matmul_nt_p(pool, &dz1, pp[0].f32s(), b, d, d);
+                        let mut dx =
+                            kernels::matmul_nt_p_prec(pool, prec, &dz1, pp[0].f32s(), b, d, d);
                         for (v, &sv) in dx.iter_mut().zip(&ds) {
                             *v += sv; // skip connection
                         }
@@ -1349,8 +1480,8 @@ impl NativeModule {
                     grads[off] = Some(tensor_shaped(vec![k, k, cin, cout], dw));
                     grads[off + 1] = Some(tensor1(db));
                     grad = if need_dx {
-                        let dcols = kernels::matmul_nt_p(pool, &dz, pp[0].f32s(),
-                                                         rows, cout, k * k * cin);
+                        let dcols = kernels::matmul_nt_p_prec(pool, prec, &dz, pp[0].f32s(),
+                                                              rows, cout, k * k * cin);
                         kernels::col2im_p(pool, &dcols, b, hw, cin, k, stride, pad)
                     } else {
                         Vec::new()
@@ -1364,7 +1495,8 @@ impl NativeModule {
                     let cols2 = kernels::im2col_p(pool, h1, b, hw, c, 3, 1, 1);
                     let dw2 = kernels::matmul_tn_p(pool, &cols2, &ds, rows, 9 * c, c);
                     let db2 = kernels::bias_grad(&ds, c);
-                    let dcols2 = kernels::matmul_nt_p(pool, &ds, pp[2].f32s(), rows, c, 9 * c);
+                    let dcols2 =
+                        kernels::matmul_nt_p_prec(pool, prec, &ds, pp[2].f32s(), rows, c, 9 * c);
                     let mut dz1 = kernels::col2im_p(pool, &dcols2, b, hw, c, 3, 1, 1);
                     kernels::relu_bwd(&mut dz1, h1);
                     // lower conv: z1 = conv(x, w1) + b1
@@ -1376,8 +1508,8 @@ impl NativeModule {
                     grads[off + 2] = Some(tensor_shaped(vec![3, 3, c, c], dw2));
                     grads[off + 3] = Some(tensor1(db2));
                     grad = if need_dx {
-                        let dcols1 = kernels::matmul_nt_p(pool, &dz1, pp[0].f32s(),
-                                                          rows, c, 9 * c);
+                        let dcols1 = kernels::matmul_nt_p_prec(pool, prec, &dz1, pp[0].f32s(),
+                                                               rows, c, 9 * c);
                         let mut dx = kernels::col2im_p(pool, &dcols1, b, hw, c, 3, 1, 1);
                         for (v, &sv) in dx.iter_mut().zip(&ds) {
                             *v += sv; // skip connection
@@ -1407,7 +1539,7 @@ impl NativeModule {
                     // output projection: y = x + ctx wo + bo
                     let dwo = kernels::matmul_tn_p(pool, ctx, &dy, b, d, d);
                     let dbo = kernels::bias_grad(&dy, d);
-                    let dctx = kernels::matmul_nt_p(pool, &dy, pp[6].f32s(), b, d, d);
+                    let dctx = kernels::matmul_nt_p_prec(pool, prec, &dy, pp[6].f32s(), b, d, d);
                     let scale = 1.0 / (d as f32).sqrt();
                     // per-group backward, group-partitioned like the
                     // forward: context backward (da, dv) then the
@@ -1426,9 +1558,9 @@ impl NativeModule {
                     grads[off + 6] = Some(tensor2(d, d, dwo));
                     grads[off + 7] = Some(tensor1(dbo));
                     // dx = dy (skip) + dq wqᵀ + dk wkᵀ + dv wvᵀ
-                    let mut dx = kernels::matmul_nt_p(pool, &dq, pp[0].f32s(), b, d, d);
-                    let dxk = kernels::matmul_nt_p(pool, &dk, pp[2].f32s(), b, d, d);
-                    let dxv = kernels::matmul_nt_p(pool, &dv, pp[4].f32s(), b, d, d);
+                    let mut dx = kernels::matmul_nt_p_prec(pool, prec, &dq, pp[0].f32s(), b, d, d);
+                    let dxk = kernels::matmul_nt_p_prec(pool, prec, &dk, pp[2].f32s(), b, d, d);
+                    let dxv = kernels::matmul_nt_p_prec(pool, prec, &dv, pp[4].f32s(), b, d, d);
                     for i in 0..dx.len() {
                         dx[i] += dxk[i] + dxv[i] + dy[i];
                     }
@@ -1588,27 +1720,42 @@ impl SynthExec for NativeSynth {
 }
 
 /// The native backend object: programs are built per load and share the
-/// backend's kernel worker [`Pool`].
+/// backend's kernel worker [`Pool`] and [`Precision`] tier.
 pub struct NativeBackend {
     pool: Arc<Pool>,
+    precision: Precision,
 }
 
 impl NativeBackend {
     /// Backend with a kernel pool of `threads` total workers (0 = auto:
-    /// available parallelism; 1 = the exact single-thread reference).
+    /// available parallelism; 1 = the exact single-thread reference) at
+    /// the default `Precision::Exact` tier.
     pub fn new(threads: usize) -> NativeBackend {
-        NativeBackend { pool: Arc::new(Pool::new(threads)) }
+        NativeBackend::with_opts(threads, Precision::Exact)
+    }
+
+    /// Backend with an explicit [`Precision`] tier. `Fast` trades the
+    /// bitwise-vs-naive guarantee on the `dx` k-reductions for multiple
+    /// accumulators (still deterministic at every thread count, error
+    /// ULP-bounded — see [`crate::runtime::blocked`]).
+    pub fn with_opts(threads: usize, precision: Precision) -> NativeBackend {
+        NativeBackend { pool: Arc::new(Pool::new(threads)), precision }
     }
 
     /// Backend over an existing pool (tests use this to force the parallel
     /// path on tiny shapes via [`Pool::with_min_work`]).
     pub fn with_pool(pool: Arc<Pool>) -> NativeBackend {
-        NativeBackend { pool }
+        NativeBackend { pool, precision: Precision::Exact }
     }
 
     /// Total kernel parallelism (calling thread included).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The backend's kernel precision tier.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 }
 
@@ -1627,7 +1774,7 @@ impl Backend for NativeBackend {
         let spec = manifest.modules.get(k)
             .with_context(|| format!("module {k} out of range"))?
             .clone();
-        Ok(Rc::new(NativeModule::build(spec, Arc::clone(&self.pool))?))
+        Ok(Rc::new(NativeModule::build(spec, Arc::clone(&self.pool), self.precision)?))
     }
 
     fn load_synth(&self, manifest: &Manifest, boundary: usize) -> Result<Rc<dyn SynthExec>> {
@@ -1641,7 +1788,8 @@ impl Backend for NativeBackend {
         // An aux head is an ordinary native op graph (GAP/Dense with its
         // own loss head); it compiles through the same plan builder as a
         // trunk module and shares the backend's kernel pool.
-        Ok(Rc::new(NativeModule::build(spec.clone(), Arc::clone(&self.pool))?))
+        Ok(Rc::new(NativeModule::build(spec.clone(), Arc::clone(&self.pool),
+                                       self.precision)?))
     }
 
     fn init_params(&self, manifest: &Manifest, stem: &str, shapes: &[Vec<usize>])
@@ -2454,7 +2602,7 @@ mod tests {
         let m = NativeLmSpec::tiny(2).manifest().unwrap();
         let mut bad = m.modules[1].clone();
         bad.native_ops.insert(0, NativeOp::Embed);
-        assert!(NativeModule::build(bad, Arc::new(Pool::new(1))).is_err());
+        assert!(NativeModule::build(bad, Arc::new(Pool::new(1)), Precision::Exact).is_err());
     }
 
     #[test]

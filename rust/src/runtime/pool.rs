@@ -155,6 +155,29 @@ impl Pool {
         (units.div_ceil(chunk), chunk)
     }
 
+    /// [`Pool::chunks`] rounded so each task span covers a whole number of
+    /// 64-byte cache lines when `elems_per_unit` f32 elements make up one
+    /// unit (a matmul output row of `n` floats, say). Adjacent tasks then
+    /// never write the same line — no false sharing at chunk seams, and on
+    /// multi-socket boxes each task's span stays within whole lines of its
+    /// first-touch node. The chunk size depends only on
+    /// `(units, threads, elems_per_unit)`, never on timing, so the
+    /// partition — and therefore every output bit — is reproducible.
+    pub fn chunks_aligned(&self, units: usize, elems_per_unit: usize) -> (usize, usize) {
+        let (tasks, chunk) = self.chunks(units);
+        if tasks <= 1 || elems_per_unit == 0 {
+            return (tasks, chunk);
+        }
+        // 16 f32 = one 64-byte line; the smallest power-of-two row multiple
+        // that lands chunk boundaries on line boundaries.
+        let mut align = 1usize;
+        while align < 16 && (align * elems_per_unit) % 16 != 0 {
+            align *= 2;
+        }
+        let chunk = chunk.next_multiple_of(align);
+        (units.div_ceil(chunk), chunk)
+    }
+
     fn ensure_spawned(&self) {
         self.spawn_once.call_once(|| {
             let mut hs = self.handles.lock().unwrap();
@@ -349,6 +372,29 @@ mod tests {
             assert!(tasks >= 1 && (tasks - 1) * chunk < units && tasks * chunk >= units,
                     "units {units}: tasks {tasks} chunk {chunk}");
         }
+    }
+
+    #[test]
+    fn aligned_chunking_covers_units_and_lands_on_cache_lines() {
+        let pool = Pool::new(4);
+        for units in [1usize, 2, 7, 16, 129, 1000] {
+            for epu in [1usize, 3, 4, 8, 16, 33, 256] {
+                let (tasks, chunk) = pool.chunks_aligned(units, epu);
+                assert!(tasks >= 1 && (tasks - 1) * chunk < units && tasks * chunk >= units,
+                        "units {units} epu {epu}: tasks {tasks} chunk {chunk}");
+                if tasks > 1 {
+                    // every seam between adjacent tasks sits on a 16-f32
+                    // (64-byte) boundary, so no two tasks share a line
+                    assert_eq!((chunk * epu) % 16, 0,
+                               "units {units} epu {epu}: chunk {chunk}");
+                }
+                // deterministic in its inputs alone
+                assert_eq!((tasks, chunk), pool.chunks_aligned(units, epu));
+            }
+        }
+        // degenerate inputs fall back to the plain split
+        assert_eq!(pool.chunks_aligned(0, 8), (0, 1));
+        assert_eq!(pool.chunks_aligned(100, 0), pool.chunks(100));
     }
 
     #[test]

@@ -191,18 +191,24 @@ fn batch_loop(shared: &Shared, session: &crate::experiment::Session,
             if q.jobs.is_empty() && q.shutdown {
                 return;
             }
-            // batch opens now; hold it open for late arrivals
-            let deadline = Instant::now() + shared.max_wait;
-            while q.jobs.len() < shared.max_batch && !q.shutdown {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
+            // batch opens now; hold it open for late arrivals — unless
+            // the operator disabled the hold window outright
+            if !shared.max_wait.is_zero() {
+                let deadline = Instant::now() + shared.max_wait;
+                while q.jobs.len() < shared.max_batch && !q.shutdown {
+                    // check the deadline *before* subtracting from it: an
+                    // expired batch flushes immediately instead of
+                    // re-spinning through a zero-duration wait_timeout
+                    let left = match deadline.checked_duration_since(Instant::now()) {
+                        Some(left) if !left.is_zero() => left,
+                        _ => break,
+                    };
+                    let (guard, _timeout) = match shared.cv.wait_timeout(q, left) {
+                        Ok(woke) => woke,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    q = guard;
                 }
-                let (guard, _timeout) = match shared.cv.wait_timeout(q, deadline - now) {
-                    Ok(woke) => woke,
-                    Err(poisoned) => poisoned.into_inner(),
-                };
-                q = guard;
             }
             let n = q.jobs.len().min(shared.max_batch);
             q.jobs.drain(..n).collect()
@@ -234,5 +240,44 @@ fn batch_loop(shared: &Shared, session: &crate::experiment::Session,
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Packer;
+
+    #[test]
+    fn zero_max_wait_flushes_partial_batches_immediately() {
+        let exp = Experiment::new("mlp_tiny").k(2).threads(1).seed(0);
+        let manifest = exp.manifest().expect("mlp_tiny manifest");
+        let packer = Packer::new(&manifest).expect("packer");
+        let metrics = Arc::new(ServeMetrics::default());
+        // Regression for the hold-open loop's deadline handling: max_batch
+        // far above the submitter count means nothing here can flush on
+        // the batch-full condition — every flush must come from the
+        // max_wait = 0 deadline path. A loop that only checks the deadline
+        // after computing `deadline - now` (or that waits a zero-duration
+        // timeout before re-checking) strands these submitters.
+        let batcher = Arc::new(Batcher::spawn(
+            exp, None, 64, Duration::ZERO, Arc::clone(&metrics)).expect("batcher"));
+        let workers: Vec<_> = (0..4)
+            .map(|i| {
+                let b = Arc::clone(&batcher);
+                let sample = packer.synthetic_sample(i);
+                std::thread::spawn(move || {
+                    let rx = b.submit(sample).expect("submit while running");
+                    rx.recv_timeout(Duration::from_secs(30))
+                        .expect("batcher must answer despite the unfilled batch")
+                })
+            })
+            .collect();
+        for w in workers {
+            let res = w.join().expect("submitter thread").expect("predict ok");
+            assert!(!res.logits.is_empty());
+            assert!((1..=64).contains(&res.batch_size));
+        }
+        batcher.shutdown();
     }
 }

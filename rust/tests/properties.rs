@@ -18,7 +18,7 @@ use features_replay::data::DataSource;
 use features_replay::optim::SgdMomentum;
 use features_replay::runtime::native::kernels;
 use features_replay::runtime::pool::resolve_threads;
-use features_replay::runtime::{DType, Engine, NativeLmSpec, Tensor};
+use features_replay::runtime::{blocked, DType, Engine, NativeLmSpec, Precision, Tensor};
 use features_replay::testing::check;
 use features_replay::util::json::Json;
 
@@ -263,6 +263,121 @@ fn pool_matmul_family_bitwise_parity() {
     });
 }
 
+/// The cache-blocked rewrite's core claim: blocking, B-panel packing and
+/// register tiling are *layout* transformations — every output element
+/// keeps its single scalar accumulator chain over `p` ascending, so the
+/// blocked kernels are bitwise identical to the naive loops they replaced.
+/// `k` ranges past [`blocked::KC`] so the k-panel loop takes more than one
+/// panel (the store/reload seam between panels is where reassociation
+/// would first show up).
+#[test]
+fn blocked_matmul_variants_bitwise_match_naive() {
+    check("blocked_vs_naive", 60, |g| {
+        let (m, n) = (g.dim(24), g.dim(40));
+        let k = g.usize_in(1, blocked::KC + 40);
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(k * n, -1.0, 1.0);
+        let naive = kernels::matmul_naive(&a, &b, m, k, n);
+        if !bits_eq(&kernels::matmul_blocked_scalar(&a, &b, m, k, n), &naive) {
+            return Err(format!("matmul_blocked_scalar {m}x{k}x{n}"));
+        }
+        if !bits_eq(&kernels::matmul(&a, &b, m, k, n), &naive) {
+            return Err(format!("matmul_blocked_simd {m}x{k}x{n}"));
+        }
+        let bt = g.vec_f32(n * k, -1.0, 1.0);
+        if !bits_eq(&kernels::matmul_nt(&a, &bt, m, k, n),
+                    &kernels::matmul_nt_naive(&a, &bt, m, k, n)) {
+            return Err(format!("matmul_nt_blocked {m}x{k}x{n}"));
+        }
+        // tn: exact zeros exercise the ReLU-skip against the unrolled lanes
+        let mut az = a;
+        for v in az.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let dy = g.vec_f32(m * n, -1.0, 1.0);
+        if !bits_eq(&kernels::matmul_tn(&az, &dy, m, k, n),
+                    &kernels::matmul_tn_naive(&az, &dy, m, k, n)) {
+            return Err(format!("matmul_tn_blocked {m}x{k}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+/// The one kernel allowed to reassociate: `matmul_nt_fast` splits each dot
+/// product into [`blocked::FAST_LANES`] interleaved partial sums. The
+/// `Fast` tier's contract is (a) still fully deterministic — the split
+/// depends only on `k`, so the pool-partitioned result is bitwise equal to
+/// the serial one at every thread count — and (b) within the documented
+/// bound `|fast - exact| <= 2 k eps sum_i |a_i b_i|` of the exact chain,
+/// with the bound evaluated in f64.
+#[test]
+fn matmul_nt_fast_is_thread_deterministic_and_ulp_bounded() {
+    check("nt_fast_det_ulp", 60, |g| {
+        let pool = g.pool();
+        let tag = format!("threads={} min_work={}", pool.threads(), pool.min_work());
+        let (m, n) = (g.dim(16), g.dim(16));
+        let k = g.usize_in(1, 2 * blocked::FAST_LANES * 8);
+        let a = g.vec_f32(m * k, -1.0, 1.0);
+        let b = g.vec_f32(n * k, -1.0, 1.0);
+        let fast = kernels::matmul_nt_fast(&a, &b, m, k, n);
+        if !bits_eq(&kernels::matmul_nt_p_prec(&pool, Precision::Fast, &a, &b, m, k, n),
+                    &fast) {
+            return Err(format!("Fast pool result diverged from serial {m}x{k}x{n} {tag}"));
+        }
+        // and Exact through the same entry point is still the naive chain
+        if !bits_eq(&kernels::matmul_nt_p_prec(&pool, Precision::Exact, &a, &b, m, k, n),
+                    &kernels::matmul_nt_naive(&a, &b, m, k, n)) {
+            return Err(format!("Exact pool result diverged from naive {m}x{k}x{n} {tag}"));
+        }
+        let exact = kernels::matmul_nt_naive(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut mag = 0.0f64;
+                for p in 0..k {
+                    mag += (a[i * k + p] as f64 * b[j * k + p] as f64).abs();
+                }
+                let bound = 2.0 * k as f64 * f32::EPSILON as f64 * mag;
+                let diff = (fast[i * n + j] as f64 - exact[i * n + j] as f64).abs();
+                if diff > bound {
+                    return Err(format!(
+                        "({i},{j}) of {m}x{k}x{n}: |fast-exact| = {diff:e} > {bound:e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The fused conv forward (task-local im2col scratch feeding the blocked
+/// matmul directly) must be bitwise identical to the unfused pipeline it
+/// replaced — materialize cols with `im2col_p`, then `matmul_p` — across
+/// randomized shapes, paddings, and pool configurations.
+#[test]
+fn conv2d_fused_bitwise_matches_unfused() {
+    check("conv_fused_parity", 60, |g| {
+        let pool = g.pool();
+        let (b, cin, cout) = (g.dim1(4), g.dim1(4), g.dim1(5));
+        let k = g.usize_in(1, 3);
+        let stride = g.usize_in(1, 2);
+        let pad = g.usize_in(0, 1);
+        let hw = g.usize_in(k.saturating_sub(2 * pad).max(1), 8);
+        let tag = format!("b{b} hw{hw} cin{cin} cout{cout} k{k} s{stride} p{pad} \
+                           threads={} min_work={}", pool.threads(), pool.min_work());
+        let x = g.vec_f32(b * hw * hw * cin, -1.0, 1.0);
+        let w = g.vec_f32(k * k * cin * cout, -1.0, 1.0);
+        let fused = kernels::conv2d_fused_p(&pool, &x, &w, b, hw, cin, k, stride, pad, cout);
+        let ohw = (hw + 2 * pad - k) / stride + 1;
+        let cols = kernels::im2col_p(&pool, &x, b, hw, cin, k, stride, pad);
+        let unfused = kernels::matmul_p(&pool, &cols, &w,
+                                        b * ohw * ohw, k * k * cin, cout);
+        if bits_eq(&fused, &unfused) {
+            Ok(())
+        } else {
+            Err(format!("conv2d_fused {tag}"))
+        }
+    });
+}
+
 #[test]
 fn pool_im2col_col2im_bitwise_parity() {
     check("im2col_parity", 100, |g| {
@@ -480,6 +595,34 @@ fn native_op_parity_coverage_is_exhaustive() {
         covered,
         NativeOp::VARIANT_NAMES,
         "every NativeOp variant needs a parity-coverage row (in declaration order)"
+    );
+}
+
+/// The kernel-variant twin of the table above, audited by the same frlint
+/// rule: every entry of [`blocked::KERNEL_VARIANTS`] — naive references,
+/// blocked rewrites, the SIMD-shaped unrolls, the `Fast`-tier reduction and
+/// the fused conv — maps to the property test that pins its contract
+/// (bitwise parity with the naive chain at `Exact`, determinism plus the
+/// documented ULP bound for `Fast`). A new variant string without a row
+/// here fails the assertion until it is genuinely covered.
+#[test]
+fn blocked_kernel_parity_coverage_is_exhaustive() {
+    let coverage: &[(&str, fn())] = &[
+        ("matmul_naive", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_blocked_scalar", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_blocked_simd", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_tn_naive", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_tn_blocked", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_nt_naive", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_nt_blocked", blocked_matmul_variants_bitwise_match_naive),
+        ("matmul_nt_fast", matmul_nt_fast_is_thread_deterministic_and_ulp_bounded),
+        ("conv2d_fused", conv2d_fused_bitwise_matches_unfused),
+    ];
+    let covered: Vec<&str> = coverage.iter().map(|(v, _)| *v).collect();
+    assert_eq!(
+        covered,
+        blocked::KERNEL_VARIANTS,
+        "every blocked-kernel variant needs a parity-coverage row (in declaration order)"
     );
 }
 

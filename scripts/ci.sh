@@ -177,6 +177,8 @@ if python3 -c "import numpy" >/dev/null 2>&1; then
     python3 ../python/tests/test_attn_group_partition_mirror.py
     echo "== numpy mirrors: DGL/BackLink local-loss backwards =="
     python3 ../python/tests/test_local_loss_mirror.py
+    echo "== numpy mirrors: blocked-kernel reduction order =="
+    python3 ../python/tests/test_blocked_kernel_mirror.py
 else
     echo "== numpy mirrors == skipped (python3/numpy unavailable)"
 fi
@@ -210,6 +212,43 @@ if [ "$BENCH" = 1 ]; then
     # perf trajectory.
     echo "== bench: kernel thread sweep (BENCH_kernels.json) =="
     cargo bench --bench bench_kernels
+    # Baseline compare: the fresh blocked-vs-naive serial speedups against
+    # the last committed entry in BENCH_kernels.trajectory.json. With an
+    # empty trajectory (bootstrap) this records and passes; otherwise a
+    # variant landing below 80% of its committed speedup fails the run —
+    # the blocked rewrite is not allowed to silently rot back toward naive.
+    if command -v python3 >/dev/null 2>&1; then
+        echo "== bench: blocked-vs-naive trajectory compare =="
+        python3 - <<'PYEOF'
+import json, sys
+
+fresh = json.load(open("../BENCH_kernels.json"))["speedup_blocked_vs_naive"]
+traj = json.load(open("../BENCH_kernels.trajectory.json"))["entries"]
+print("fresh speedups:", json.dumps(fresh, sort_keys=True))
+if not traj:
+    print("trajectory empty (bootstrap) — record-only pass; append an entry "
+          "to BENCH_kernels.trajectory.json to arm the regression gate")
+    sys.exit(0)
+committed = traj[-1]["speedup_blocked_vs_naive"]
+print("committed (%s):" % traj[-1].get("label", "?"),
+      json.dumps(committed, sort_keys=True))
+failed = False
+for variant, base in sorted(committed.items()):
+    got = fresh.get(variant)
+    if got is None:
+        print("FAIL %s: missing from fresh BENCH_kernels.json" % variant)
+        failed = True
+    elif got < 0.8 * base:
+        print("FAIL %s: %.2fx is a >20%% regression from committed %.2fx"
+              % (variant, got, base))
+        failed = True
+    else:
+        print("ok   %s: %.2fx vs committed %.2fx" % (variant, got, base))
+sys.exit(1 if failed else 0)
+PYEOF
+    else
+        echo "== bench trajectory compare == skipped (python3 unavailable)"
+    fi
     # Serving latency/throughput over real sockets (BENCH_serve.json —
     # per-machine artifact, generated, not committed).
     echo "== bench: serve latency sweep (BENCH_serve.json) =="
